@@ -1,0 +1,136 @@
+//! Quickstart: SplitQuant on a single layer and on a whole model, no
+//! artifacts required (pure-Rust path).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the paper's §1 dilemma and §4 resolution:
+//! 1. an outlier destroys INT2 resolution under min-max quantization,
+//! 2. percentile clipping rescues the bulk but destroys the outlier,
+//! 3. SplitQuant keeps both.
+
+use splitquant::baselines;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::{QConfig, QParams, QTensor};
+use splitquant::report::{pct, Table};
+use splitquant::splitquant as sq;
+use splitquant::tensor::Tensor;
+use splitquant::util::rng::Rng;
+
+fn mse(a: &Tensor, b: &Tensor) -> f64 {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.numel() as f64
+}
+
+fn main() -> splitquant::Result<()> {
+    println!("== 1. The outlier dilemma (paper §1) ==\n");
+    let mut rng = Rng::new(42);
+    let mut values: Vec<f32> = (0..4095).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    values.push(500.0); // one strong signal
+    let t = Tensor::new(&[4096], values)?;
+
+    let bits = 2;
+    // (a) keep the outlier: min-max INT2
+    let minmax = QTensor::quantize(&t, &QConfig::baseline(bits))?.dequantize();
+    // (b) clip the outlier: 99th-percentile INT2
+    let clipped = QTensor::quantize(&t, &QConfig::percentile(bits, 99.0))?.dequantize();
+    // (c) SplitQuant: cluster, split, per-cluster scales
+    let mut sq_rng = Rng::new(0);
+    let split = sq::split_quantize(&t, &sq::SplitQuantConfig::new(bits), &mut sq_rng)?;
+    let sqt = split.qtensor.dequantize();
+
+    let bulk_mse = |x: &Tensor| -> f64 {
+        x.data()
+            .iter()
+            .zip(t.data())
+            .take(4095)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / 4095.0
+    };
+    let outlier_err = |x: &Tensor| (x.data()[4095] - 500.0).abs();
+
+    let mut tab = Table::new(
+        "INT2 on N(0,1) + one outlier at 500",
+        &["method", "bulk MSE", "outlier |err|"],
+    );
+    tab.row(vec![
+        "min-max (keep)".into(),
+        format!("{:.4}", bulk_mse(&minmax)),
+        format!("{:.1}", outlier_err(&minmax)),
+    ]);
+    tab.row(vec![
+        "pct99 (clip)".into(),
+        format!("{:.4}", bulk_mse(&clipped)),
+        format!("{:.1}", outlier_err(&clipped)),
+    ]);
+    tab.row(vec![
+        "SplitQuant".into(),
+        format!("{:.4}", bulk_mse(&sqt)),
+        format!("{:.1}", outlier_err(&sqt)),
+    ]);
+    println!("{}", tab.render());
+    println!("cluster centroids (lower/middle/upper): {:?}", split.centroids);
+    println!(
+        "per-cluster quantization steps: {:?}\n",
+        split.qtensor.params().iter().map(QParams::step).collect::<Vec<_>>()
+    );
+
+    println!("== 2. Whole-model PTQ (pure-Rust executor) ==\n");
+    // a small randomly-initialized BERT: quantization *reconstruction* is
+    // meaningful even untrained (for accuracy-level results see
+    // examples/train_and_quantize.rs)
+    let cfg = BertConfig {
+        vocab_size: 2048,
+        hidden: 64,
+        layers: 2,
+        heads: 2,
+        ffn: 128,
+        max_len: 32,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(1);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = sq::default_quantizable(&store);
+    println!(
+        "model: {} params in {} tensors ({} quantizable)",
+        store.numel(),
+        store.len(),
+        quantizable.len()
+    );
+
+    let mut tab = Table::new(
+        "weight reconstruction MSE across the model",
+        &["bits", "baseline (min-max)", "SplitQuant", "improvement"],
+    );
+    for bits in [2u8, 4, 8] {
+        let (base, _) =
+            baselines::quantize_store_baseline(&store, &quantizable, &QConfig::baseline(bits))?;
+        let (sq_store, _) =
+            sq::quantize_store(&store, &quantizable, &sq::SplitQuantConfig::new(bits))?;
+        let m_base: f64 =
+            quantizable.iter().map(|n| mse(store.get(n).unwrap(), base.get(n).unwrap())).sum();
+        let m_sq: f64 = quantizable
+            .iter()
+            .map(|n| mse(store.get(n).unwrap(), sq_store.get(n).unwrap()))
+            .sum();
+        tab.row(vec![
+            format!("INT{bits}"),
+            format!("{m_base:.3e}"),
+            format!("{m_sq:.3e}"),
+            pct(1.0 - m_sq / m_base),
+        ]);
+    }
+    println!("{}", tab.render());
+    println!(
+        "next: cargo run --release --example train_and_quantize  (full Table 1 on trained models)"
+    );
+    Ok(())
+}

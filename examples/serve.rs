@@ -1,0 +1,94 @@
+//! Serving demo: batched classification through the coordinator + PJRT
+//! executables, reporting latency percentiles and throughput.
+//!
+//! ```sh
+//! cargo run --release --example serve -- [requests] [workers] [ckpt]
+//! ```
+//!
+//! Uses `checkpoints/emotion.bin` when present (train one with the
+//! `train_and_quantize` example), otherwise serves a randomly initialized
+//! model — the serving path is identical either way.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
+use splitquant::data::{emotion, HashTokenizer};
+use splitquant::model::params::ParamStore;
+use splitquant::report::Table;
+use splitquant::runtime::Runtime;
+use splitquant::util::rng::Rng;
+
+fn main() -> splitquant::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ckpt = args.get(2).cloned().unwrap_or_else(|| "checkpoints/emotion.bin".to_string());
+
+    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+    let cfg = rt.manifest.bert.clone();
+    let store = if Path::new(&ckpt).exists() {
+        println!("[serve] loading checkpoint {ckpt}");
+        ParamStore::load(Path::new(&ckpt))?
+    } else {
+        println!("[serve] no checkpoint at {ckpt}; serving random weights");
+        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(7))
+    };
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+
+    // compile b1/b8/b32 forward executables up front
+    let t0 = Instant::now();
+    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32])?);
+    println!("[serve] compiled {} executables in {:?}", rt.compiled_count(), t0.elapsed());
+
+    let (_, requests_pool) = emotion::load_small(1, 10, 2048);
+
+    let mut report = Table::new(
+        "serving: latency/throughput vs offered concurrency",
+        &["mode", "requests", "wall", "QPS", "p50", "p95", "p99", "pad%", "batches"],
+    );
+
+    // ---- closed-loop (one at a time): latency floor, batch size 1
+    for (mode, inflight) in [("closed-loop", 1usize), ("burst", 256)] {
+        let server = Server::start(
+            exec.clone(),
+            tok.clone(),
+            ServeConfig { max_wait: Duration::from_millis(2), workers, queue_cap: 8192 },
+        );
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        let mut i = 0usize;
+        while done < requests {
+            let window = inflight.min(requests - done);
+            let rxs: Vec<_> = (0..window)
+                .map(|k| {
+                    let text = &requests_pool.texts[(i + k) % requests_pool.len()];
+                    server.submit(text)
+                })
+                .collect::<splitquant::Result<Vec<_>>>()?;
+            i += window;
+            for rx in rxs {
+                rx.recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| splitquant::Error::Coordinator("timeout".into()))?;
+                done += 1;
+            }
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown();
+        report.row(vec![
+            mode.to_string(),
+            requests.to_string(),
+            format!("{wall:.2?}"),
+            format!("{:.0}", requests as f64 / wall.as_secs_f64()),
+            format!("{:.1}ms", m.latency.quantile_us(0.50) as f64 / 1000.0),
+            format!("{:.1}ms", m.latency.quantile_us(0.95) as f64 / 1000.0),
+            format!("{:.1}ms", m.latency.quantile_us(0.99) as f64 / 1000.0),
+            format!("{:.0}%", m.padding_fraction() * 100.0),
+            format!("{:?}", m.batches_by_size),
+        ]);
+    }
+    println!("\n{}", report.render());
+    println!("(markdown)\n{}", report.render_markdown());
+    Ok(())
+}

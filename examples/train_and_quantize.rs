@@ -1,0 +1,116 @@
+//! **End-to-end driver** (the EXPERIMENTS.md E2E run): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. Rust generates the synthetic emotion corpus and initializes BERT-Tiny.
+//! 2. The coordinator drives the AOT `bert_train_step_b32` executable
+//!    (L2 JAX graph, fwd+bwd+Adam fused) for several hundred steps, logging
+//!    the loss curve.
+//! 3. The trained checkpoint is PTQ-quantized at INT2/4/8 with the baseline
+//!    quantizer and with SplitQuant, and evaluated on the 2000-sample test
+//!    set → a Table-1-shaped report.
+//!
+//! ```sh
+//! cargo run --release --example train_and_quantize -- [steps] [task]
+//! ```
+
+use std::path::Path;
+
+use splitquant::data::{emotion, pad_to_batches, spam, HashTokenizer, TextBatcher};
+use splitquant::eval::{accuracy_rust, prepare_store, WeightMethod};
+use splitquant::model::params::ParamStore;
+use splitquant::quant::QConfig;
+use splitquant::report::{pct, pct_delta, Table};
+use splitquant::runtime::Runtime;
+use splitquant::splitquant::SplitQuantConfig;
+use splitquant::train::{LrSchedule, Trainer};
+use splitquant::util::rng::Rng;
+
+fn main() -> splitquant::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let task = args.get(1).cloned().unwrap_or_else(|| "emotion".to_string());
+    let seed = 0u64;
+
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let cfg = rt.manifest.bert.clone();
+    println!("[e2e] BERT-Tiny: {:?}", cfg);
+
+    // ---- data
+    let (train_set, test_set) = match task.as_str() {
+        "spam" => {
+            let d = spam::load(seed);
+            (d.clone(), d)
+        }
+        _ => emotion::load(seed),
+    };
+    println!(
+        "[e2e] task={task}: {} train / {} eval samples, {} classes",
+        train_set.len(),
+        test_set.len(),
+        train_set.num_classes
+    );
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let mut batcher = TextBatcher::new(&train_set, &tok, 32);
+
+    // ---- train through PJRT (L3 drives L2's AOT graph; Python is not running)
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let mut trainer = Trainer::new(&rt, "bert_train_step_b32", store)?;
+    let schedule =
+        LrSchedule::WarmupLinear { peak: 3e-4, warmup: steps / 10 + 1, floor: 3e-5 };
+    println!("[e2e] training {steps} steps (loss curve):");
+    let t0 = std::time::Instant::now();
+    let losses = trainer.train_text(&mut batcher, steps, &schedule, &mut rng, 0, |_| {})?;
+    // print a compact loss curve: every ~steps/20
+    let stride = (steps / 20).max(1);
+    for (i, chunk) in losses.chunks(stride).enumerate() {
+        let avg: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        let bar = "#".repeat((avg * 25.0) as usize);
+        println!("  steps {:4}-{:4}  loss {avg:.4} {bar}", i * stride + 1, i * stride + chunk.len());
+    }
+    let spent = t0.elapsed();
+    println!(
+        "[e2e] trained in {spent:?} ({:.2} s/step); loss {:.3} -> {:.3}",
+        spent.as_secs_f64() / steps as f64,
+        losses.first().unwrap(),
+        trainer.final_loss(20),
+    );
+
+    // ---- evaluate FP32
+    let (batches, n) = pad_to_batches(&test_set, &tok, 32);
+    let store = trainer.store.clone();
+    let fp32 = accuracy_rust(&cfg, &store, &batches, n, None)?;
+    println!("[e2e] FP32 accuracy: {}", pct(fp32));
+
+    // ---- PTQ sweep: the paper's Table 1 protocol
+    let mut table = Table::new(
+        &format!("Table-1 row — {task} (FP32 {})", pct(fp32)),
+        &["Bits", "Baseline", "SplitQuant", "Diff", "Percentile99", "OCS"],
+    );
+    for bits in [2u8, 4, 8] {
+        let acc = |m: &WeightMethod| -> splitquant::Result<f64> {
+            let (s, _) = prepare_store(&store, m)?;
+            accuracy_rust(&cfg, &s, &batches, n, None)
+        };
+        let base = acc(&WeightMethod::Baseline(QConfig::baseline(bits)))?;
+        let sq = acc(&WeightMethod::SplitQuant(SplitQuantConfig::new(bits)))?;
+        let pctl = acc(&WeightMethod::Baseline(QConfig::percentile(bits, 99.0)))?;
+        let ocs = acc(&WeightMethod::Ocs(QConfig::baseline(bits), 0.05))?;
+        table.row(vec![
+            format!("INT{bits}"),
+            pct(base),
+            pct(sq),
+            pct_delta(sq - base),
+            pct(pctl),
+            pct(ocs),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!("(markdown for EXPERIMENTS.md)\n{}", table.render_markdown());
+
+    // ---- persist the checkpoint for `splitquant serve` / benches
+    let out = format!("checkpoints/{task}.bin");
+    trainer.store.save(Path::new(&out))?;
+    println!("[e2e] checkpoint -> {out}");
+    Ok(())
+}

@@ -1,0 +1,318 @@
+"""AOT export: lower every L2 graph to HLO *text* + a JSON manifest.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+This module runs ONCE (`make artifacts`).  The manifest gives the Rust side
+everything it needs to allocate, feed and interpret executables without
+importing Python: input/output names, shapes, dtypes, the flat parameter
+ordering, activation-site table and model hyper-parameters.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import BertConfig, CnnConfig, act_sites, chunk_bounds
+from . import model as M
+from . import cnn as C
+from .kernels.fake_quant import fake_quant
+from .kernels.split_matmul import split_matmul
+from .kernels.cluster_assign import cluster_assign
+
+F32, I32, I8 = jnp.float32, jnp.int32, jnp.int8
+_DTYPE_NAME = {jnp.dtype("float32"): "f32", jnp.dtype("int32"): "i32", jnp.dtype("int8"): "i8"}
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_entry(name: str, s: jax.ShapeDtypeStruct):
+    return {"name": name, "shape": list(s.shape), "dtype": _DTYPE_NAME[s.dtype]}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"executables": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, inputs: List[Tuple[str, jax.ShapeDtypeStruct]],
+               outputs: List[Tuple[str, jax.ShapeDtypeStruct]], meta=None):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [_io_entry(n, s) for n, s in inputs],
+            "outputs": [_io_entry(n, s) for n, s in outputs],
+        }
+        if meta:
+            entry["meta"] = meta
+        self.manifest["executables"][name] = entry
+        print(f"  {name}: {len(text)} chars, {len(inputs)} inputs, {len(outputs)} outputs")
+
+    def finish(self, extra):
+        self.manifest.update(extra)
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  manifest.json written ({len(self.manifest['executables'])} executables)")
+
+
+def bert_param_specs(cfg: BertConfig):
+    return [(name, spec(shape)) for name, shape in cfg.param_order()]
+
+
+def cnn_param_specs(cfg: CnnConfig):
+    return [(name, spec(shape)) for name, shape in cfg.param_order()]
+
+
+def export_bert(ex: Exporter, cfg: BertConfig, fwd_batches, train_batch, actquant_batch):
+    P = bert_param_specs(cfg)
+    nclasses = cfg.num_classes
+    L = cfg.max_len
+
+    # ---- forward (eval / serving) at several batch sizes
+    for b in fwd_batches:
+        ins = P + [("input_ids", spec((b, L), I32)), ("attention_mask", spec((b, L)))]
+        outs = [("logits", spec((b, nclasses)))]
+        fn = functools.partial(_bert_fwd_entry, cfg, len(P))
+        ex.export(f"bert_fwd_b{b}", fn, ins, outs, meta={"kind": "bert_fwd", "batch": b})
+
+    # ---- fused train step
+    b = train_batch
+    ins = (
+        P
+        + [(f"adam_m.{n}", s) for n, s in P]
+        + [(f"adam_v.{n}", s) for n, s in P]
+        + [
+            ("step", spec((1,), I32)),
+            ("input_ids", spec((b, L), I32)),
+            ("attention_mask", spec((b, L))),
+            ("labels", spec((b,), I32)),
+            ("lr", spec((1,))),
+        ]
+    )
+    outs = (
+        [(f"new.{n}", s) for n, s in P]
+        + [(f"new_m.{n}", s) for n, s in P]
+        + [(f"new_v.{n}", s) for n, s in P]
+        + [("loss", spec((1,)))]
+    )
+    fn = functools.partial(_bert_train_entry, cfg, len(P))
+    ex.export(f"bert_train_step_b{b}", fn, ins, outs, meta={"kind": "bert_train", "batch": b})
+
+    # ---- activation-quantized forward (chunked scales = §4.2 act splitting)
+    if not actquant_batch:
+        return
+    b = actquant_batch
+    S = len(act_sites(cfg))
+    ins = P + [
+        ("input_ids", spec((b, L), I32)),
+        ("attention_mask", spec((b, L))),
+        ("act_scales", spec((S, 3))),
+        ("act_zps", spec((S, 3))),
+        ("qmin", spec((1,))),
+        ("qmax", spec((1,))),
+    ]
+    outs = [("logits", spec((b, nclasses)))]
+    fn = functools.partial(_bert_actquant_entry, cfg, len(P))
+    ex.export(
+        f"bert_fwd_actquant_b{b}", fn, ins, outs,
+        meta={"kind": "bert_fwd_actquant", "batch": b, "num_sites": S},
+    )
+
+
+def _bert_fwd_entry(cfg, nparams, *args):
+    return M.bert_forward(cfg, list(args[:nparams]), args[nparams], args[nparams + 1])
+
+
+def _bert_train_entry(cfg, nparams, *args):
+    p = list(args[:nparams])
+    m = list(args[nparams : 2 * nparams])
+    v = list(args[2 * nparams : 3 * nparams])
+    step, ids, mask, labels, lr = args[3 * nparams :]
+    return M.bert_train_step(cfg, p, m, v, step, ids, mask, labels, lr)
+
+
+def _bert_actquant_entry(cfg, nparams, *args):
+    p = list(args[:nparams])
+    ids, mask, scales, zps, qmin, qmax = args[nparams:]
+    return M.bert_forward_actquant(cfg, p, ids, mask, scales, zps, qmin, qmax)
+
+
+def export_cnn(ex: Exporter, cfg: CnnConfig, batch: int):
+    P = cnn_param_specs(cfg)
+    img = spec((batch, cfg.in_ch, cfg.image, cfg.image))
+
+    ins = P + [("images", img)]
+    outs = [("logits", spec((batch, cfg.num_classes)))]
+    ex.export(
+        f"cnn_fwd_b{batch}",
+        functools.partial(_cnn_fwd_entry, cfg, len(P)),
+        ins, outs, meta={"kind": "cnn_fwd", "batch": batch},
+    )
+
+    ins = (
+        P
+        + [(f"adam_m.{n}", s) for n, s in P]
+        + [(f"adam_v.{n}", s) for n, s in P]
+        + [
+            ("step", spec((1,), I32)),
+            ("images", img),
+            ("labels", spec((batch,), I32)),
+            ("lr", spec((1,))),
+        ]
+    )
+    outs = (
+        [(f"new.{n}", s) for n, s in P]
+        + [(f"new_m.{n}", s) for n, s in P]
+        + [(f"new_v.{n}", s) for n, s in P]
+        + [("loss", spec((1,)))]
+    )
+    ex.export(
+        f"cnn_train_step_b{batch}",
+        functools.partial(_cnn_train_entry, cfg, len(P)),
+        ins, outs, meta={"kind": "cnn_train", "batch": batch},
+    )
+
+
+def _cnn_fwd_entry(cfg, nparams, *args):
+    return C.cnn_forward(cfg, list(args[:nparams]), args[nparams])
+
+
+def _cnn_train_entry(cfg, nparams, *args):
+    p = list(args[:nparams])
+    m = list(args[nparams : 2 * nparams])
+    v = list(args[2 * nparams : 3 * nparams])
+    step, images, labels, lr = args[3 * nparams :]
+    return C.cnn_train_step(cfg, p, m, v, step, images, labels, lr)
+
+
+def export_kernels(ex: Exporter):
+    """Standalone kernel executables for the serving hot path + benches."""
+    # fake_quant over a 2-D plane, runtime bit-width
+    r, c = 256, 512
+    ins = [
+        ("x", spec((r, c))),
+        ("scale", spec((1, 1))),
+        ("zp", spec((1, 1))),
+        ("qmin", spec((1, 1))),
+        ("qmax", spec((1, 1))),
+    ]
+    ex.export(
+        "fake_quant_256x512",
+        lambda x, s, z, lo, hi: (fake_quant(x, s, z, lo, hi),),
+        ins,
+        [("y", spec((r, c)))],
+        meta={"kind": "fake_quant"},
+    )
+
+    # split matmul hot path at the two BERT-Tiny linear shapes
+    for (m, k, n) in [(32, 128, 128), (32, 128, 512)]:
+        ins = [
+            ("x", spec((m, k))),
+            ("qw", spec((k, n), I8)),
+            ("cid", spec((k, n), I8)),
+            ("scales", spec((1, 3))),
+            ("zps", spec((1, 3))),
+        ]
+        ex.export(
+            f"split_linear_{m}x{k}x{n}",
+            lambda x, qw, cid, s, z: (split_matmul(x, qw, cid, s, z),),
+            ins,
+            [("y", spec((m, n)))],
+            meta={"kind": "split_linear", "m": m, "k": k, "n": n},
+        )
+
+    # k-means assignment plane
+    r, c = 128, 128
+    ins = [("x", spec((r, c))), ("centroids", spec((1, 3)))]
+    ex.export(
+        "cluster_assign_128x128",
+        lambda x, cent: (cluster_assign(x, cent),),
+        ins,
+        [("cid", spec((r, c), I32))],
+        meta={"kind": "cluster_assign"},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fwd-batches", default="1,8,32")
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--skip-actquant", action="store_true")
+    args = ap.parse_args()
+
+    bert = BertConfig()
+    cnn = CnnConfig()
+    ex = Exporter(args.out_dir)
+
+    print("[aot] exporting BERT graphs...")
+    fwd_batches = [int(b) for b in args.fwd_batches.split(",")]
+    export_bert(ex, bert, fwd_batches, args.train_batch,
+                actquant_batch=0 if args.skip_actquant else 32)
+    print("[aot] exporting CNN graphs...")
+    export_cnn(ex, cnn, batch=32)
+    print("[aot] exporting standalone kernels...")
+    export_kernels(ex)
+
+    sites = act_sites(bert)
+    ex.finish(
+        {
+            "bert_config": {
+                "vocab_size": bert.vocab_size,
+                "hidden": bert.hidden,
+                "layers": bert.layers,
+                "heads": bert.heads,
+                "ffn": bert.ffn,
+                "max_len": bert.max_len,
+                "num_classes": bert.num_classes,
+                "ln_eps": bert.ln_eps,
+            },
+            "cnn_config": {
+                "image": cnn.image,
+                "in_ch": cnn.in_ch,
+                "ch1": cnn.ch1,
+                "ch2": cnn.ch2,
+                "kernel": cnn.kernel,
+                "num_classes": cnn.num_classes,
+                "bn_eps": cnn.bn_eps,
+            },
+            "bert_param_order": [[n, list(s)] for n, s in bert.param_order()],
+            "cnn_param_order": [[n, list(s)] for n, s in cnn.param_order()],
+            "act_sites": [
+                {"name": n, "width": w, "bounds": chunk_bounds(w)} for n, w in sites
+            ],
+            "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        }
+    )
+    print("[aot] done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""L2: tiny CNN for the conv-splitting (Figure 3) and BN-folding (§4.1) path.
+
+conv1(3x3) → BN → ReLU → maxpool2 → conv2(3x3) → BN → ReLU → maxpool2 → FC.
+
+Two graphs are exported:
+  * ``cnn_forward``    — eval-mode forward (BN uses running statistics).
+    BN params are ordinary inputs, so Rust can evaluate both the original
+    model and the BN-folded model through the SAME executable (folded models
+    pass gamma=1, beta=0, mean=0, var=1-eps').
+  * ``cnn_train_step`` — fwd+bwd+Adam with batch-stat BN; running stats are
+    updated with momentum 0.9 inside the graph and returned.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .config import CnnConfig
+from .model import ADAM_B1, ADAM_B2, ADAM_EPS
+
+BN_MOMENTUM = 0.9
+
+
+def params_to_dict(cfg: CnnConfig, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    order = cfg.param_order()
+    assert len(flat) == len(order), (len(flat), len(order))
+    return {name: arr for (name, _), arr in zip(order, flat)}
+
+
+def _conv(x, w, b):
+    # x: NCHW, w: OIHW, SAME padding, stride 1
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _bn_eval(x, gamma, beta, mean, var, eps):
+    inv = jax.lax.rsqrt(var + eps)[None, :, None, None]
+    return (x - mean[None, :, None, None]) * inv * gamma[None, :, None, None] + beta[
+        None, :, None, None
+    ]
+
+
+def _bn_train(x, gamma, beta, eps):
+    """Batch-stat BN; returns (y, batch_mean, batch_var)."""
+    mean = jnp.mean(x, axis=(0, 2, 3))
+    var = jnp.mean((x - mean[None, :, None, None]) ** 2, axis=(0, 2, 3))
+    inv = jax.lax.rsqrt(var + eps)[None, :, None, None]
+    y = (x - mean[None, :, None, None]) * inv * gamma[None, :, None, None] + beta[
+        None, :, None, None
+    ]
+    return y, mean, var
+
+
+def cnn_forward(cfg: CnnConfig, flat_params: List[jax.Array], images):
+    """logits f32[B, C] = f(params, images f32[B, 1, 16, 16]); eval-mode BN."""
+    p = params_to_dict(cfg, flat_params)
+    x = _conv(images, p["conv1.weight"], p["conv1.bias"])
+    x = _bn_eval(x, p["bn1.gamma"], p["bn1.beta"], p["bn1.mean"], p["bn1.var"], cfg.bn_eps)
+    x = jax.nn.relu(x)
+    x = _maxpool2(x)
+    x = _conv(x, p["conv2.weight"], p["conv2.bias"])
+    x = _bn_eval(x, p["bn2.gamma"], p["bn2.beta"], p["bn2.mean"], p["bn2.var"], cfg.bn_eps)
+    x = jax.nn.relu(x)
+    x = _maxpool2(x)
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    logits = flat @ p["fc.weight"] + p["fc.bias"]
+    return (logits,)
+
+
+def _cnn_train_forward(cfg: CnnConfig, p: Dict[str, jax.Array], images):
+    x = _conv(images, p["conv1.weight"], p["conv1.bias"])
+    x, m1, v1 = _bn_train(x, p["bn1.gamma"], p["bn1.beta"], cfg.bn_eps)
+    x = jax.nn.relu(x)
+    x = _maxpool2(x)
+    x = _conv(x, p["conv2.weight"], p["conv2.bias"])
+    x, m2, v2 = _bn_train(x, p["bn2.gamma"], p["bn2.beta"], cfg.bn_eps)
+    x = jax.nn.relu(x)
+    x = _maxpool2(x)
+    b = x.shape[0]
+    logits = x.reshape(b, -1) @ p["fc.weight"] + p["fc.bias"]
+    return logits, (m1, v1, m2, v2)
+
+
+def cnn_train_step(
+    cfg: CnnConfig,
+    flat_params: List[jax.Array],
+    adam_m: List[jax.Array],
+    adam_v: List[jax.Array],
+    step,  # i32[1]
+    images,  # f32[B, 1, 16, 16]
+    labels,  # i32[B]
+    lr,  # f32[1]
+):
+    """One fused fwd+bwd+Adam update with BN running-stat tracking.
+
+    BN running mean/var receive zero gradient (batch-stat BN is used in the
+    loss), pass through Adam unchanged, and are then overwritten by the
+    momentum update — mirroring torch.nn.BatchNorm2d semantics.
+    """
+    order = [name for name, _ in cfg.param_order()]
+    stat_idx = {order.index(n) for n in ("bn1.mean", "bn1.var", "bn2.mean", "bn2.var")}
+
+    def loss_fn(fp):
+        p = params_to_dict(cfg, fp)
+        logits, stats = _cnn_train_forward(cfg, p, images)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(nll), stats
+
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(list(flat_params))
+    m1, v1, m2, v2 = stats
+    t = (step.reshape(()) + 1).astype(jnp.float32)
+    lr_s = lr.reshape(())
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for idx, (pi, mi, vi, gi) in enumerate(zip(flat_params, adam_m, adam_v, grads)):
+        if idx in stat_idx:
+            new_p.append(pi)  # replaced below
+            new_m.append(mi)
+            new_v.append(vi)
+            continue
+        m2_ = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+        v2_ = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+        new_p.append(pi - lr_s * (m2_ / bc1) / (jnp.sqrt(v2_ / bc2) + ADAM_EPS))
+        new_m.append(m2_)
+        new_v.append(v2_)
+    # running-stat momentum update
+    upd = {
+        "bn1.mean": m1, "bn1.var": v1, "bn2.mean": m2, "bn2.var": v2,
+    }
+    for name, val in upd.items():
+        i = order.index(name)
+        new_p[i] = BN_MOMENTUM * flat_params[i] + (1.0 - BN_MOMENTUM) * val
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss.reshape(1),)

@@ -1,0 +1,137 @@
+"""Shared model configuration for the SplitQuant reproduction.
+
+This module is the single source of truth for model hyper-parameters and the
+deterministic flat parameter ordering.  The same ordering is exported to
+``artifacts/manifest.json`` so the Rust coordinator (L3) can build, feed and
+update parameter lists without ever importing Python at runtime.
+
+BERT-Tiny follows Turc et al. (2019): 2 layers, hidden 128, 2 heads, FFN 512.
+The vocabulary is the synthetic hash-tokenizer vocabulary used by the Rust
+data generators (see ``rust/src/data/tokenizer.rs``).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class BertConfig:
+    vocab_size: int = 8192
+    hidden: int = 128
+    layers: int = 2
+    heads: int = 2
+    ffn: int = 512
+    max_len: int = 64
+    num_classes: int = 6  # emotion has 6; spam uses the first 2 logits
+    ln_eps: float = 1e-12
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def param_order(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Deterministic flat (name, shape) list — the ABI between L2 and L3."""
+        h, f, v, l, c = self.hidden, self.ffn, self.vocab_size, self.max_len, self.num_classes
+        out: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embeddings.token", (v, h)),
+            ("embeddings.position", (l, h)),
+            ("embeddings.ln.gamma", (h,)),
+            ("embeddings.ln.beta", (h,)),
+        ]
+        for i in range(self.layers):
+            p = f"encoder.{i}"
+            out += [
+                (f"{p}.attn.q.weight", (h, h)),
+                (f"{p}.attn.q.bias", (h,)),
+                (f"{p}.attn.k.weight", (h, h)),
+                (f"{p}.attn.k.bias", (h,)),
+                (f"{p}.attn.v.weight", (h, h)),
+                (f"{p}.attn.v.bias", (h,)),
+                (f"{p}.attn.out.weight", (h, h)),
+                (f"{p}.attn.out.bias", (h,)),
+                (f"{p}.attn.ln.gamma", (h,)),
+                (f"{p}.attn.ln.beta", (h,)),
+                (f"{p}.ffn.in.weight", (h, f)),
+                (f"{p}.ffn.in.bias", (f,)),
+                (f"{p}.ffn.out.weight", (f, h)),
+                (f"{p}.ffn.out.bias", (h,)),
+                (f"{p}.ffn.ln.gamma", (h,)),
+                (f"{p}.ffn.ln.beta", (h,)),
+            ]
+        out += [
+            ("pooler.weight", (h, h)),
+            ("pooler.bias", (h,)),
+            ("classifier.weight", (h, c)),
+            ("classifier.bias", (c,)),
+        ]
+        return out
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    """Tiny CNN for the conv-splitting / BN-folding experiments (Figure 3)."""
+
+    image: int = 16
+    in_ch: int = 1
+    ch1: int = 8
+    ch2: int = 16
+    kernel: int = 3
+    num_classes: int = 4
+    bn_eps: float = 1e-5
+
+    @property
+    def flat(self) -> int:
+        # two stride-2 max-pools: 16 -> 8 -> 4
+        return self.ch2 * (self.image // 4) * (self.image // 4)
+
+    def param_order(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        k = self.kernel
+        out: List[Tuple[str, Tuple[int, ...]]] = [
+            ("conv1.weight", (self.ch1, self.in_ch, k, k)),
+            ("conv1.bias", (self.ch1,)),
+            ("bn1.gamma", (self.ch1,)),
+            ("bn1.beta", (self.ch1,)),
+            ("bn1.mean", (self.ch1,)),
+            ("bn1.var", (self.ch1,)),
+            ("conv2.weight", (self.ch2, self.ch1, k, k)),
+            ("conv2.bias", (self.ch2,)),
+            ("bn2.gamma", (self.ch2,)),
+            ("bn2.beta", (self.ch2,)),
+            ("bn2.mean", (self.ch2,)),
+            ("bn2.var", (self.ch2,)),
+            ("fc.weight", (self.flat, self.num_classes)),
+            ("fc.bias", (self.num_classes,)),
+        ]
+        return out
+
+
+# Activation fake-quant sites in the exported act-quant forward, in order.
+# Each site gets 3 chunks (SplitQuant activation splitting, paper §4.2) with an
+# independent (scale, zero_point) pair per chunk.  Equal triples reproduce the
+# per-tensor baseline exactly.
+def act_sites(cfg: BertConfig) -> List[Tuple[str, int]]:
+    """(site name, channel width) for every activation quantization point."""
+    sites: List[Tuple[str, int]] = [("embeddings.out", cfg.hidden)]
+    for i in range(cfg.layers):
+        sites += [
+            (f"encoder.{i}.attn.out", cfg.hidden),
+            (f"encoder.{i}.ffn.gelu", cfg.ffn),
+            (f"encoder.{i}.ffn.out", cfg.hidden),
+        ]
+    sites.append(("pooler.out", cfg.hidden))
+    return sites
+
+
+def chunk_bounds(n: int, parts: int = 3) -> List[int]:
+    """Split points for positional activation splitting (paper §4.2).
+
+    Returns the interior boundaries for ``jnp.split`` /  Rust chunking such
+    that chunk sizes differ by at most one element.
+    """
+    base, rem = divmod(n, parts)
+    sizes = [base + (1 if i < rem else 0) for i in range(parts)]
+    bounds, acc = [], 0
+    for s in sizes[:-1]:
+        acc += s
+        bounds.append(acc)
+    return bounds

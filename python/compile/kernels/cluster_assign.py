@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: 1-D k-means assignment step.
+
+SplitQuant clusters each layer's weights/biases into lower / middle / upper
+groups (paper §4.1).  The assignment step — nearest centroid per element — is
+the data-parallel half of Lloyd's algorithm and the only part worth a kernel
+(the k centroid updates are tiny reductions).
+
+k is static and small (=3), so the argmin is an unrolled compare+select chain
+(ties break to the lowest index, matching ``jnp.argmin`` and the Rust
+implementation).  ``interpret=True`` as everywhere (see fake_quant.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cluster_assign_kernel(k_clusters, x_ref, cent_ref, o_ref):
+    x = x_ref[...]
+    best_d = jnp.full(x.shape, jnp.inf, jnp.float32)
+    best_i = jnp.zeros(x.shape, jnp.int32)
+    for c in range(k_clusters):
+        d = (x - cent_ref[0, c]) ** 2
+        better = d < best_d
+        best_i = jnp.where(better, c, best_i)
+        best_d = jnp.where(better, d, best_d)
+    o_ref[...] = best_i
+
+
+def _pick_block(n: int, target: int) -> int:
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def cluster_assign(x, centroids, *, block_rows: int = 256, block_cols: int = 512):
+    """Nearest-centroid assignment for a 2-D value plane.
+
+    Args:
+      x: f32[R, C] values (a weight tensor viewed 2-D).
+      centroids: f32[1, k] current cluster centers.
+
+    Returns: int32[R, C] cluster index per element.
+    """
+    r, c = x.shape
+    k_clusters = centroids.shape[1]
+    br = _pick_block(r, block_rows)
+    bc = _pick_block(c, block_cols)
+    grid = (r // br, c // bc)
+    kernel = functools.partial(_cluster_assign_kernel, k_clusters)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, k_clusters), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=True,
+    )(x, centroids)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: tiled quantize-dequantize (fake quantization).
+
+This is the PTQ-simulation primitive: ``dq(Q(x))`` with runtime scale /
+zero-point / clip range, so one compiled executable serves INT2 / INT4 / INT8.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the tensor is streamed
+HBM→VMEM in (block_rows × block_cols) tiles via ``BlockSpec``; the body is
+pure VPU elementwise work (mul, round, clip, sub, div).  The scalar
+parameters ride along as (1,1) blocks that every grid step maps to the same
+origin — on real hardware they would live in SMEM.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated analytically (DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fake_quant_kernel(x_ref, scale_ref, zp_ref, qmin_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    scale = scale_ref[0, 0]
+    zp = zp_ref[0, 0]
+    qmin = qmin_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+    q = jnp.clip(jnp.round(scale * x) + zp, qmin, qmax)
+    o_ref[...] = (q - zp) / scale
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (keeps the grid exact)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_cols"))
+def fake_quant(x, scale, zp, qmin, qmax, *, block_rows: int = 256, block_cols: int = 512):
+    """Quantize-dequantize a 2-D f32 tensor.
+
+    Args:
+      x: f32[R, C].
+      scale, zp, qmin, qmax: f32[1, 1] runtime quantization parameters
+        (paper Eq. 1-3; qmin/qmax select the bit-width).
+      block_rows/block_cols: VMEM tile shape (clamped to divisors of R/C).
+
+    Returns: f32[R, C], ``dq(Q(x))``.
+    """
+    r, c = x.shape
+    br = _pick_block(r, block_rows)
+    bc = _pick_block(c, block_cols)
+    grid = (r // br, c // bc)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            scalar_spec,
+            scalar_spec,
+            scalar_spec,
+            scalar_spec,
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(x, scale, zp, qmin, qmax)
+
+
+def fake_quant_scalar(x, scale: float, zp: float, bits: int):
+    """Convenience wrapper with python-scalar parameters (tests)."""
+    qmin = float(-(2 ** (bits - 1)))
+    qmax = float(2 ** (bits - 1) - 1)
+    one = lambda v: jnp.full((1, 1), v, jnp.float32)
+    return fake_quant(x, one(scale), one(zp), one(qmin), one(qmax))

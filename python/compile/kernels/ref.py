@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+The quantization math follows the paper's Eq. (1)-(3):
+
+    S = (2^b - 1) / (alpha - beta)
+    Z = -2^(b-1) - INT(S * beta)
+    Q(x) = clip(INT(S*x) + Z,  -2^(b-1),  2^(b-1) - 1)
+    dq(q) = (q - Z) / S
+
+``INT`` is round-half-to-even (jnp.round), matching the Rust implementation
+(`f32::round_ties_even`).
+"""
+
+import jax.numpy as jnp
+
+
+def qrange(bits: int):
+    """(qmin, qmax) for signed b-bit integers."""
+    return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+
+
+def qparams(beta, alpha, bits: int):
+    """Affine quantization parameters for original range [beta, alpha].
+
+    Degenerate ranges (alpha == beta, e.g. a constant tensor) are widened to
+    1e-8 so the scale stays finite; this matches `quant::affine` on the Rust
+    side bit-for-bit.
+    """
+    span = jnp.maximum(alpha - beta, 1e-8)
+    scale = (2.0**bits - 1.0) / span
+    zp = -(2.0 ** (bits - 1)) - jnp.round(scale * beta)
+    return scale, zp
+
+
+def fake_quant_ref(x, scale, zp, qmin, qmax):
+    """Quantize-dequantize (PTQ simulation): dq(Q(x))."""
+    q = jnp.clip(jnp.round(scale * x) + zp, qmin, qmax)
+    return (q - zp) / scale
+
+
+def fake_quant_bits_ref(x, scale, zp, bits: int):
+    qmin, qmax = qrange(bits)
+    return fake_quant_ref(x, scale, zp, float(qmin), float(qmax))
+
+
+def split_dequant_ref(qw, cid, scales, zps):
+    """Per-element dequant through the cluster-id plane.
+
+    ``qw`` int8 codes, ``cid`` int8 cluster ids in [0, k), ``scales``/``zps``
+    f32[k].  Equivalent to materializing the paper's three zero-padded split
+    layers and summing them — without ever materializing the zeros.
+    """
+    k = scales.shape[0]
+    qf = qw.astype(jnp.float32)
+    cidf = cid.astype(jnp.int32)
+    w = jnp.zeros_like(qf)
+    for c in range(k):
+        w = w + jnp.where(cidf == c, (qf - zps[c]) / scales[c], 0.0)
+    return w
+
+
+def split_matmul_ref(x, qw, cid, scales, zps):
+    """y = x @ dq_split(qw)  — the SplitQuant deployment hot path."""
+    w = split_dequant_ref(qw, cid, scales, zps)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def cluster_assign_ref(x, centroids):
+    """1-D k-means assignment: nearest centroid index (ties -> lowest index)."""
+    d = (x[..., None] - centroids) ** 2
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def chunked_fake_quant_ref(x, scales, zps, qmin, qmax, bounds):
+    """Activation splitting (paper §4.2) as per-chunk fake-quant on last dim.
+
+    Splitting an activation layer of width n into 3 layers and concatenating
+    the results is mathematically identical to quantizing 3 chunks with
+    independent (scale, zp); this is the oracle for that identity.
+    """
+    chunks = jnp.split(x, bounds, axis=-1)
+    outs = [
+        fake_quant_ref(c, scales[i], zps[i], qmin, qmax) for i, c in enumerate(chunks)
+    ]
+    return jnp.concatenate(outs, axis=-1)

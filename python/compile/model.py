@@ -1,0 +1,217 @@
+"""L2: BERT-Tiny forward / training / activation-quantized graphs in JAX.
+
+Everything here runs ONCE at build time (`make artifacts`): the functions are
+jitted, lowered to HLO text by ``aot.py`` and executed from Rust through PJRT.
+Parameters are passed as a flat list of arrays in the deterministic order of
+``config.BertConfig.param_order()`` so the Rust coordinator can own parameter
+storage, initialization, checkpointing and quantization.
+
+Three graphs are exported:
+  * ``bert_forward``       — logits for evaluation/serving.
+  * ``bert_train_step``    — fused fwd+bwd+Adam; Rust drives the loop.
+  * ``bert_forward_actquant`` — forward with chunked activation fake-quant
+    (the L1 Pallas kernel) at every activation site: 3 chunks per site with
+    independent (scale, zp) == the paper's §4.2 activation splitting; equal
+    triples == the per-tensor baseline.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .config import BertConfig, act_sites, chunk_bounds
+from .kernels.fake_quant import fake_quant
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+NEG_INF = -1e9
+
+
+def params_to_dict(cfg: BertConfig, flat: List[jax.Array]) -> Dict[str, jax.Array]:
+    order = cfg.param_order()
+    assert len(flat) == len(order), (len(flat), len(order))
+    return {name: arr for (name, _), arr in zip(order, flat)}
+
+
+def _layer_norm(x, gamma, beta, eps):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def _gelu(x):
+    # tanh approximation; the Rust executor uses the same formula and the
+    # cross-runtime tolerance is asserted in integration tests.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _attention(cfg: BertConfig, p: Dict[str, jax.Array], prefix: str, x, mask):
+    b, l, h = x.shape
+    a, hd = cfg.heads, cfg.head_dim
+
+    def proj(name):
+        w = p[f"{prefix}.attn.{name}.weight"]
+        bb = p[f"{prefix}.attn.{name}.bias"]
+        y = jnp.einsum("blh,hd->bld", x, w) + bb
+        return y.reshape(b, l, a, hd).transpose(0, 2, 1, 3)  # (B, A, L, hd)
+
+    q, k, v = proj("q"), proj("k"), proj("v")
+    scores = jnp.einsum("bald,bamd->balm", q, k) / jnp.sqrt(float(hd))
+    # mask: f32[B, L], 1 for real tokens, 0 for padding
+    scores = scores + (1.0 - mask)[:, None, None, :] * NEG_INF
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("balm,bamd->bald", attn, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, l, h)
+    out = jnp.einsum("blh,hd->bld", ctx, p[f"{prefix}.attn.out.weight"])
+    out = out + p[f"{prefix}.attn.out.bias"]
+    return out
+
+
+def _fq_site(x, scales3, zps3, qmin, qmax, bounds):
+    """Chunked activation fake-quant through the L1 Pallas kernel.
+
+    x: f32[..., n]; scales3/zps3: f32[3]; bounds: static chunk boundaries.
+    Reshapes to 2-D (pallas kernels are 2-D), quantizes each chunk with its
+    own (scale, zp) and concatenates — the paper's activation split.
+    """
+    shape = x.shape
+    n = shape[-1]
+    x2 = x.reshape(-1, n)
+    lo = [0] + list(bounds)
+    hi = list(bounds) + [n]
+    outs = []
+    for i, (a, b) in enumerate(zip(lo, hi)):
+        chunk = x2[:, a:b]
+        outs.append(
+            fake_quant(
+                chunk,
+                scales3[i].reshape(1, 1),
+                zps3[i].reshape(1, 1),
+                qmin.reshape(1, 1),
+                qmax.reshape(1, 1),
+            )
+        )
+    return jnp.concatenate(outs, axis=-1).reshape(shape)
+
+
+def _bert_body(cfg: BertConfig, p: Dict[str, jax.Array], ids, mask, fq=None):
+    """Shared forward body; ``fq(site_index, x)`` optionally fake-quants."""
+    b, l = ids.shape
+    x = p["embeddings.token"][ids] + p["embeddings.position"][None, :l, :]
+    x = _layer_norm(x, p["embeddings.ln.gamma"], p["embeddings.ln.beta"], cfg.ln_eps)
+    site = 0
+    if fq is not None:
+        x = fq(site, x)
+    site += 1
+    for i in range(cfg.layers):
+        prefix = f"encoder.{i}"
+        attn = _attention(cfg, p, prefix, x, mask)
+        x = _layer_norm(
+            x + attn, p[f"{prefix}.attn.ln.gamma"], p[f"{prefix}.attn.ln.beta"], cfg.ln_eps
+        )
+        if fq is not None:
+            x = fq(site, x)
+        site += 1
+        hmid = _gelu(
+            jnp.einsum("blh,hf->blf", x, p[f"{prefix}.ffn.in.weight"])
+            + p[f"{prefix}.ffn.in.bias"]
+        )
+        if fq is not None:
+            hmid = fq(site, hmid)
+        site += 1
+        ff = (
+            jnp.einsum("blf,fh->blh", hmid, p[f"{prefix}.ffn.out.weight"])
+            + p[f"{prefix}.ffn.out.bias"]
+        )
+        x = _layer_norm(
+            x + ff, p[f"{prefix}.ffn.ln.gamma"], p[f"{prefix}.ffn.ln.beta"], cfg.ln_eps
+        )
+        if fq is not None:
+            x = fq(site, x)
+        site += 1
+    pooled = jnp.tanh(
+        jnp.einsum("bh,hd->bd", x[:, 0, :], p["pooler.weight"]) + p["pooler.bias"]
+    )
+    if fq is not None:
+        pooled = fq(site, pooled)
+    site += 1
+    logits = jnp.einsum("bd,dc->bc", pooled, p["classifier.weight"]) + p["classifier.bias"]
+    return logits
+
+
+def bert_forward(cfg: BertConfig, flat_params: List[jax.Array], ids, mask):
+    """logits f32[B, C] = f(params, ids i32[B,L], mask f32[B,L])."""
+    p = params_to_dict(cfg, flat_params)
+    return (_bert_body(cfg, p, ids, mask),)
+
+
+def bert_forward_actquant(
+    cfg: BertConfig,
+    flat_params: List[jax.Array],
+    ids,
+    mask,
+    act_scales,  # f32[S, 3]
+    act_zps,  # f32[S, 3]
+    qmin,  # f32[1]
+    qmax,  # f32[1]
+):
+    """Forward with per-site chunked activation fake-quant (paper §4.2).
+
+    ``act_scales[s, c]``/``act_zps[s, c]`` are the quantization parameters of
+    chunk ``c`` at activation site ``s`` (sites enumerated by
+    ``config.act_sites``).  Rust computes them from calibration data — equal
+    per-site triples reproduce per-tensor activation quantization (baseline),
+    distinct triples implement SplitQuant activation splitting.
+    """
+    p = params_to_dict(cfg, flat_params)
+    sites = act_sites(cfg)
+    qmin2 = qmin.reshape(1)[0]
+    qmax2 = qmax.reshape(1)[0]
+
+    def fq(site_idx, x):
+        width = sites[site_idx][1]
+        assert x.shape[-1] == width, (site_idx, x.shape, width)
+        bounds = tuple(chunk_bounds(width))
+        return _fq_site(x, act_scales[site_idx], act_zps[site_idx], qmin2, qmax2, bounds)
+
+    return (_bert_body(cfg, p, ids, mask, fq=fq),)
+
+
+def _loss(cfg: BertConfig, flat_params, ids, mask, labels):
+    logits = bert_forward(cfg, flat_params, ids, mask)[0]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def bert_train_step(
+    cfg: BertConfig,
+    flat_params: List[jax.Array],
+    adam_m: List[jax.Array],
+    adam_v: List[jax.Array],
+    step,  # i32[1], 0-based step count BEFORE this update
+    ids,
+    mask,
+    labels,  # i32[B]
+    lr,  # f32[1]
+):
+    """One fused fwd+bwd+Adam update.  Returns (params', m', v', loss[1])."""
+    loss, grads = jax.value_and_grad(lambda fp: _loss(cfg, fp, ids, mask, labels))(
+        list(flat_params)
+    )
+    t = (step.reshape(()) + 1).astype(jnp.float32)
+    lr_s = lr.reshape(())
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(flat_params, adam_m, adam_v, grads):
+        m2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * gi
+        v2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * gi * gi
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_p.append(pi - lr_s * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss.reshape(1),)

@@ -1,0 +1,79 @@
+"""Exporter machinery tests: HLO text emission + manifest bookkeeping on a
+trivial function (fast — no model lowering)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.aot import Exporter, spec, to_hlo_text
+from compile.kernels.fake_quant import _pick_block
+
+
+def test_pick_block_divides():
+    for n in (1, 7, 64, 100, 2048):
+        for target in (1, 32, 128, 512):
+            b = _pick_block(n, target)
+            assert n % b == 0
+            assert 1 <= b <= max(1, min(n, target))
+
+
+def test_to_hlo_text_produces_parseable_module():
+    import jax
+
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(spec((2, 3)))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # return_tuple=True: the root is a tuple
+    assert "tuple" in text.lower()
+
+
+def test_exporter_writes_files_and_manifest(tmp_path):
+    ex = Exporter(str(tmp_path))
+    ins = [("x", spec((2, 2)))]
+    outs = [("y", spec((2, 2)))]
+    ex.export("double", lambda x: (x + x,), ins, outs, meta={"kind": "demo"})
+    ex.finish({"extra": {"a": 1}})
+
+    assert (tmp_path / "double.hlo.txt").exists()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["executables"]["double"]["file"] == "double.hlo.txt"
+    assert man["executables"]["double"]["inputs"] == [
+        {"name": "x", "shape": [2, 2], "dtype": "f32"}
+    ]
+    assert man["executables"]["double"]["meta"]["kind"] == "demo"
+    assert man["extra"] == {"a": 1}
+
+
+def test_exporter_dtype_names(tmp_path):
+    ex = Exporter(str(tmp_path))
+    ins = [
+        ("a", spec((2,), jnp.int32)),
+        ("b", spec((2, 2), jnp.int8)),
+        ("c", spec((1,), jnp.float32)),
+    ]
+    outs = [("y", spec((2,), jnp.int32))]
+    ex.export(
+        "mixed",
+        lambda a, b, c: (a + jnp.sum(b.astype(jnp.int32), axis=0) + c.astype(jnp.int32),),
+        ins,
+        outs,
+    )
+    ex.finish({})
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    dts = [i["dtype"] for i in man["executables"]["mixed"]["inputs"]]
+    assert dts == ["i32", "i8", "f32"]
+
+
+def test_bert_param_specs_match_config():
+    from compile.config import BertConfig
+
+    cfg = BertConfig()
+    specs = aot.bert_param_specs(cfg)
+    assert len(specs) == len(cfg.param_order())
+    for (name, s), (n2, shape) in zip(specs, cfg.param_order()):
+        assert name == n2
+        assert s.shape == tuple(shape)
+        assert s.dtype == jnp.float32

@@ -1,0 +1,61 @@
+"""Kernel-vs-oracle tests for the 1-D k-means assignment kernel."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cluster_assign import cluster_assign
+
+
+@pytest.mark.parametrize("shape", [(8, 8), (128, 128), (3, 5), (1, 1)])
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_matches_ref(shape, k):
+    rng = np.random.default_rng(shape[0] * 31 + k)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    cents = jnp.asarray(np.sort(rng.normal(size=(1, k)).astype(np.float32), axis=1))
+    out = cluster_assign(x, cents)
+    exp = ref.cluster_assign_ref(x, cents[0])
+    assert np.array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_tie_breaks_to_lowest_index():
+    """Value equidistant from two centroids goes to the lower index, like
+    jnp.argmin and the Rust kmeans."""
+    x = jnp.asarray(np.array([[0.0]], np.float32))
+    cents = jnp.asarray(np.array([[-1.0, 1.0]], np.float32))
+    out = np.asarray(cluster_assign(x, cents))
+    assert out[0, 0] == 0
+
+
+def test_sorted_centroids_give_monotone_assignment():
+    """With sorted centroids, assignments are monotone in the value — this is
+    the lower/middle/upper cluster structure SplitQuant relies on (§4.1)."""
+    x = jnp.asarray(np.linspace(-3, 3, 256, dtype=np.float32).reshape(1, 256))
+    cents = jnp.asarray(np.array([[-2.0, 0.0, 2.0]], np.float32))
+    out = np.asarray(cluster_assign(x, cents))[0]
+    assert (np.diff(out) >= 0).all()
+    assert set(np.unique(out)) == {0, 1, 2}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 70),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(rows, cols, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-10, 10, size=(rows, cols)).astype(np.float32))
+    cents = jnp.asarray(rng.uniform(-10, 10, size=(1, k)).astype(np.float32))
+    out = np.asarray(cluster_assign(x, cents))
+    exp = np.asarray(ref.cluster_assign_ref(x, cents[0]))
+    assert np.array_equal(out, exp)
+    # invariant: every element is genuinely nearest to its assigned centroid
+    c = np.asarray(cents)[0]
+    xn = np.asarray(x)
+    d_assigned = (xn - c[out]) ** 2
+    d_all = (xn[..., None] - c) ** 2
+    assert (d_assigned <= d_all.min(axis=-1) + 1e-12).all()

@@ -1,0 +1,107 @@
+"""CNN (conv + BN) model tests — the Figure 3 / BN-folding substrate."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.config import CnnConfig
+from compile import cnn as C
+
+CFG = CnnConfig()
+
+
+def init_params(cfg: CnnConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.param_order():
+        if name.endswith((".gamma",)) or name.endswith(".var"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".beta", ".bias")) or name.endswith(".mean"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(0, 0.1, size=shape).astype(np.float32)))
+    return out
+
+
+def images(b, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, CFG.in_ch, CFG.image, CFG.image)).astype(np.float32))
+
+
+def test_forward_shape():
+    p = init_params(CFG)
+    (logits,) = C.cnn_forward(CFG, p, images(7))
+    assert logits.shape == (7, CFG.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_flat_dim():
+    assert CFG.flat == 16 * 4 * 4
+
+
+def test_bn_folding_identity():
+    """BN folded into the preceding conv (paper §4.1) == original network.
+
+    fold: w' = w * gamma / sqrt(var + eps) (per out-channel),
+          b' = (b - mean) * gamma / sqrt(var + eps) + beta.
+    Evaluated through the SAME eval-mode graph with identity BN params.
+    """
+    rng = np.random.default_rng(42)
+    p = init_params(CFG, seed=1)
+    order = [n for n, _ in CFG.param_order()]
+
+    def idx(n):
+        return order.index(n)
+
+    # randomize BN params so folding is non-trivial
+    for bn in ("bn1", "bn2"):
+        ch = CFG.ch1 if bn == "bn1" else CFG.ch2
+        p[idx(f"{bn}.gamma")] = jnp.asarray(rng.uniform(0.5, 2.0, ch).astype(np.float32))
+        p[idx(f"{bn}.beta")] = jnp.asarray(rng.normal(0, 0.3, ch).astype(np.float32))
+        p[idx(f"{bn}.mean")] = jnp.asarray(rng.normal(0, 0.5, ch).astype(np.float32))
+        p[idx(f"{bn}.var")] = jnp.asarray(rng.uniform(0.2, 3.0, ch).astype(np.float32))
+
+    x = images(5, seed=3)
+    (orig,) = C.cnn_forward(CFG, p, x)
+
+    folded = list(p)
+    for conv, bn in (("conv1", "bn1"), ("conv2", "bn2")):
+        w = np.asarray(p[idx(f"{conv}.weight")])
+        b = np.asarray(p[idx(f"{conv}.bias")])
+        g = np.asarray(p[idx(f"{bn}.gamma")])
+        be = np.asarray(p[idx(f"{bn}.beta")])
+        mu = np.asarray(p[idx(f"{bn}.mean")])
+        var = np.asarray(p[idx(f"{bn}.var")])
+        s = g / np.sqrt(var + CFG.bn_eps)
+        folded[idx(f"{conv}.weight")] = jnp.asarray(w * s[:, None, None, None])
+        folded[idx(f"{conv}.bias")] = jnp.asarray((b - mu) * s + be)
+        ch = len(g)
+        folded[idx(f"{bn}.gamma")] = jnp.ones(ch, jnp.float32)
+        folded[idx(f"{bn}.beta")] = jnp.zeros(ch, jnp.float32)
+        folded[idx(f"{bn}.mean")] = jnp.zeros(ch, jnp.float32)
+        folded[idx(f"{bn}.var")] = jnp.full(ch, 1.0 - CFG.bn_eps, jnp.float32)
+
+    (fold,) = C.cnn_forward(CFG, folded, x)
+    np.testing.assert_allclose(np.asarray(orig), np.asarray(fold), atol=1e-4, rtol=1e-4)
+
+
+def test_train_step_reduces_loss_and_updates_stats():
+    p = init_params(CFG, seed=2)
+    m = [jnp.zeros_like(t) for t in p]
+    v = [jnp.zeros_like(t) for t in p]
+    rng = np.random.default_rng(9)
+    x = images(16, seed=8)
+    labels = jnp.asarray(rng.integers(0, CFG.num_classes, size=(16,)).astype(np.int32))
+    lr = jnp.asarray([1e-2], jnp.float32)
+    order = [n for n, _ in CFG.param_order()]
+    mean_before = np.asarray(p[order.index("bn1.mean")]).copy()
+    losses = []
+    for step in range(25):
+        out = C.cnn_train_step(CFG, p, m, v, jnp.asarray([step], jnp.int32), x, labels, lr)
+        n = len(p)
+        p = list(out[:n])
+        m = list(out[n : 2 * n])
+        v = list(out[2 * n : 3 * n])
+        losses.append(float(out[-1][0]))
+    assert losses[-1] < losses[0] * 0.5, losses
+    mean_after = np.asarray(p[order.index("bn1.mean")])
+    assert not np.allclose(mean_before, mean_after)

@@ -1,0 +1,108 @@
+"""Kernel-vs-oracle tests for the fake-quant Pallas kernel (L1 correctness)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant, fake_quant_scalar
+
+
+def _rand(shape, seed=0, lo=-4.0, hi=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(8, 16), (64, 96), (256, 512), (1, 1), (3, 7)])
+def test_matches_ref(bits, shape):
+    x = _rand(shape, seed=bits)
+    scale, zp = ref.qparams(float(x.min()), float(x.max()), bits)
+    out = fake_quant_scalar(x, float(scale), float(zp), bits)
+    exp = ref.fake_quant_bits_ref(x, scale, zp, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_idempotent(bits):
+    """fq(fq(x)) == fq(x): quantization is a projection."""
+    x = _rand((32, 48), seed=11)
+    scale, zp = ref.qparams(float(x.min()), float(x.max()), bits)
+    once = fake_quant_scalar(x, float(scale), float(zp), bits)
+    twice = fake_quant_scalar(once, float(scale), float(zp), bits)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_codebook_size():
+    """INT-b fake-quant emits at most 2^b distinct values."""
+    x = _rand((128, 128), seed=5)
+    for bits in (2, 4):
+        scale, zp = ref.qparams(float(x.min()), float(x.max()), bits)
+        out = np.asarray(fake_quant_scalar(x, float(scale), float(zp), bits))
+        assert len(np.unique(out)) <= 2**bits
+
+
+def test_outlier_crushes_resolution():
+    """The paper's §1 motivating example: one huge outlier collapses the rest."""
+    base = np.array([[-1000.0, -500.0, 0.0, 500.0, 1000.0]], np.float32)
+    x_clean = jnp.asarray(base)
+    x_dirty = jnp.asarray(np.array([[-1000.0, -500.0, 0.0, 500.0, 1e8]], np.float32))
+    bits = 4
+    s1, z1 = ref.qparams(float(x_clean.min()), float(x_clean.max()), bits)
+    s2, z2 = ref.qparams(float(x_dirty.min()), float(x_dirty.max()), bits)
+    clean = np.unique(np.asarray(fake_quant_scalar(x_clean, float(s1), float(z1), bits)))
+    dirty = np.asarray(fake_quant_scalar(x_dirty, float(s2), float(z2), bits))[0]
+    assert len(clean) == 5  # all distinct without the outlier
+    # with the outlier the four small values collapse onto <= 2 codes
+    assert len(np.unique(dirty[:4])) <= 2
+
+
+def test_degenerate_range():
+    """Constant tensors quantize without inf/nan (span widened to 1e-8)."""
+    x = jnp.full((4, 4), 1.234, jnp.float32)
+    scale, zp = ref.qparams(1.234, 1.234, 8)
+    out = np.asarray(fake_quant_scalar(x, float(scale), float(zp), 8))
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 65),
+    cols=st.integers(1, 130),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    lo=st.floats(-100.0, -0.01),
+    span=st.floats(0.02, 1000.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(rows, cols, bits, lo, span, seed):
+    """Property sweep: arbitrary shapes / ranges / bit-widths match the oracle
+    and stay inside the dequantized codebook range."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(lo, lo + span, size=(rows, cols)).astype(np.float32))
+    scale, zp = ref.qparams(float(x.min()), float(x.max()), bits)
+    out = fake_quant_scalar(x, float(scale), float(zp), bits)
+    exp = ref.fake_quant_bits_ref(x, scale, zp, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+    qmin, qmax = ref.qrange(bits)
+    lo_dq = (qmin - float(zp)) / float(scale)
+    hi_dq = (qmax - float(zp)) / float(scale)
+    assert np.asarray(out).min() >= lo_dq - 1e-4
+    assert np.asarray(out).max() <= hi_dq + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantization_error_bound(bits, seed):
+    """In-range values reconstruct within half a quantization step."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2.0, 2.0, size=(16, 16)).astype(np.float32))
+    scale, zp = ref.qparams(float(x.min()), float(x.max()), bits)
+    out = np.asarray(fake_quant_scalar(x, float(scale), float(zp), bits))
+    step = 1.0 / float(scale)
+    # interior values (not clipped) are within step/2 (+ float slack)
+    err = np.abs(out - np.asarray(x))
+    assert err.max() <= step / 2 + step * 1e-3

@@ -1,0 +1,73 @@
+"""Manifest / artifact consistency checks (the L2 ⇄ L3 ABI)."""
+
+import json
+import os
+
+import pytest
+
+from compile.config import BertConfig, CnnConfig, act_sites, chunk_bounds
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_hlo_files_exist_and_parse_headers():
+    man = load()
+    for name, entry in man["executables"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+def test_bert_io_counts():
+    man = load()
+    cfg = BertConfig()
+    nparams = len(cfg.param_order())
+    for b in (1, 8, 32):
+        e = man["executables"][f"bert_fwd_b{b}"]
+        assert len(e["inputs"]) == nparams + 2
+        assert e["inputs"][-2]["name"] == "input_ids"
+        assert e["inputs"][-2]["shape"] == [b, cfg.max_len]
+        assert e["outputs"][0]["shape"] == [b, cfg.num_classes]
+    t = man["executables"]["bert_train_step_b32"]
+    assert len(t["inputs"]) == 3 * nparams + 5
+    assert len(t["outputs"]) == 3 * nparams + 1
+    assert t["outputs"][-1]["name"] == "loss"
+
+
+def test_param_order_roundtrip():
+    man = load()
+    cfg = BertConfig()
+    got = [(n, tuple(s)) for n, s in man["bert_param_order"]]
+    assert got == cfg.param_order()
+    ccfg = CnnConfig()
+    got = [(n, tuple(s)) for n, s in man["cnn_param_order"]]
+    assert got == ccfg.param_order()
+
+
+def test_act_sites_table():
+    man = load()
+    cfg = BertConfig()
+    sites = act_sites(cfg)
+    assert len(man["act_sites"]) == len(sites) == 3 * cfg.layers + 2
+    for entry, (name, width) in zip(man["act_sites"], sites):
+        assert entry["name"] == name
+        assert entry["width"] == width
+        assert entry["bounds"] == chunk_bounds(width)
+
+
+def test_manifest_dtypes_are_known():
+    man = load()
+    for e in man["executables"].values():
+        for io in e["inputs"] + e["outputs"]:
+            assert io["dtype"] in ("f32", "i32", "i8")

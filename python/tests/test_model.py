@@ -1,0 +1,135 @@
+"""L2 model tests: shapes, training dynamics, activation-split identities."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.config import BertConfig, act_sites, chunk_bounds
+from compile import model as M
+from compile.kernels import ref
+
+TINY = BertConfig(vocab_size=64, hidden=16, layers=2, heads=2, ffn=32, max_len=12, num_classes=4)
+
+
+def init_params(cfg: BertConfig, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in cfg.param_order():
+        if name.endswith(".gamma"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".beta", ".bias")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(0, 0.05, size=shape).astype(np.float32)))
+    return out
+
+
+def batch(cfg, b, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, cfg.max_len)).astype(np.int32))
+    lens = rng.integers(3, cfg.max_len + 1, size=b)
+    mask = np.zeros((b, cfg.max_len), np.float32)
+    for i, l in enumerate(lens):
+        mask[i, :l] = 1.0
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, size=(b,)).astype(np.int32))
+    return ids, jnp.asarray(mask), labels
+
+
+def test_forward_shape_and_finite():
+    p = init_params(TINY)
+    ids, mask, _ = batch(TINY, 5)
+    (logits,) = M.bert_forward(TINY, p, ids, mask)
+    assert logits.shape == (5, TINY.num_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_ignores_padding_tokens():
+    """Changing token ids under the padding mask must not change logits."""
+    p = init_params(TINY)
+    ids, mask, _ = batch(TINY, 4, seed=3)
+    (logits1,) = M.bert_forward(TINY, p, ids, mask)
+    noise = np.asarray(ids).copy()
+    m = np.asarray(mask) == 0.0
+    noise[m] = (noise[m] + 17) % TINY.vocab_size
+    (logits2,) = M.bert_forward(TINY, p, jnp.asarray(noise), mask)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2), atol=1e-4)
+
+
+def test_train_step_reduces_loss():
+    """A few Adam steps on a fixed batch must drive the loss down hard."""
+    cfg = TINY
+    p = init_params(cfg, seed=1)
+    m = [jnp.zeros_like(t) for t in p]
+    v = [jnp.zeros_like(t) for t in p]
+    ids, mask, labels = batch(cfg, 8, seed=2)
+    lr = jnp.asarray([5e-3], jnp.float32)
+    losses = []
+    for step in range(30):
+        out = M.bert_train_step(cfg, p, m, v, jnp.asarray([step], jnp.int32), ids, mask, labels, lr)
+        n = len(p)
+        p = list(out[:n])
+        m = list(out[n : 2 * n])
+        v = list(out[2 * n : 3 * n])
+        losses.append(float(out[-1][0]))
+    assert losses[-1] < losses[0] * 0.25, losses
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_actquant_equal_triples_match_per_tensor_ref():
+    """Equal (scale, zp) triples at a site == per-tensor fake-quant of the
+    whole activation: the baseline path is exactly recoverable (§4.2)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(6, 15)).astype(np.float32))
+    scale, zp = ref.qparams(float(x.min()), float(x.max()), 4)
+    bounds = chunk_bounds(15)
+    scales = jnp.full((3,), scale, jnp.float32)
+    zps = jnp.full((3,), zp, jnp.float32)
+    qmin, qmax = ref.qrange(4)
+    out = ref.chunked_fake_quant_ref(x, scales, zps, float(qmin), float(qmax), bounds)
+    exp = ref.fake_quant_bits_ref(x, scale, zp, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_actquant_graph_runs_and_fq_actually_bites():
+    p = init_params(TINY, seed=4)
+    ids, mask, _ = batch(TINY, 3, seed=5)
+    S = len(act_sites(TINY))
+    # generous ranges -> near-identity at 8 bits; tight INT2 must differ
+    scales8 = jnp.full((S, 3), (2**8 - 1) / 20.0, jnp.float32)
+    zps = jnp.zeros((S, 3), jnp.float32)
+    (plain,) = M.bert_forward(TINY, p, ids, mask)
+
+    def run(bits, scales):
+        qmin = jnp.asarray([float(-(2 ** (bits - 1)))], jnp.float32)
+        qmax = jnp.asarray([float(2 ** (bits - 1) - 1)], jnp.float32)
+        (lq,) = M.bert_forward_actquant(TINY, p, ids, mask, scales, zps, qmin, qmax)
+        return np.asarray(lq)
+
+    l8 = run(8, scales8)
+    np.testing.assert_allclose(l8, np.asarray(plain), atol=0.2)
+    scales2 = jnp.full((S, 3), (2**2 - 1) / 20.0, jnp.float32)
+    l2 = run(2, scales2)
+    assert not np.allclose(l2, np.asarray(plain), atol=0.05)
+
+
+def test_chunk_bounds():
+    assert chunk_bounds(128) == [43, 86]
+    assert chunk_bounds(512) == [171, 342]
+    assert chunk_bounds(3) == [1, 2]
+    # reconstructed sizes differ by at most 1
+    for n in (3, 7, 16, 43, 128, 512, 513):
+        b = chunk_bounds(n)
+        sizes = np.diff([0] + b + [n])
+        assert sizes.sum() == n and sizes.max() - sizes.min() <= 1
+
+
+def test_param_order_is_stable():
+    """The flat parameter ABI shared with Rust must never silently change."""
+    cfg = BertConfig()
+    order = cfg.param_order()
+    assert len(order) == 40
+    assert order[0] == ("embeddings.token", (8192, 128))
+    assert order[-1] == ("classifier.bias", (6,))
+    total = sum(int(np.prod(s)) for _, s in order)
+    assert total == 1_470_854, total

@@ -1,0 +1,73 @@
+//! Bench A3 (ablation): activation quantization — none vs per-tensor vs
+//! SplitQuant activation splitting (§4.2), on top of SplitQuant weights.
+//! Includes the §4.2 note: weight-only quantizers (Quanto default) should
+//! skip activation splitting entirely.
+//!
+//! When artifacts are present, the per-tensor and split rows are also run
+//! through the AOT act-quant executable (the L1 Pallas fake-quant kernel on
+//! the request path) to cross-check the two engines.
+//!
+//! ```sh
+//! cargo bench --bench ablation_act
+//! ```
+
+use std::path::Path;
+
+use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+use splitquant::eval::{accuracy_pjrt_actquant, accuracy_rust, calibrate, prepare_store, WeightMethod};
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::report::{pct, Table};
+use splitquant::runtime::Runtime;
+use splitquant::splitquant::{ActQuantMode, SplitQuantConfig};
+use splitquant::util::rng::Rng;
+
+fn main() {
+    let cfg = BertConfig::default();
+    let store = if Path::new("checkpoints/emotion.bin").exists() {
+        ParamStore::load(Path::new("checkpoints/emotion.bin")).unwrap()
+    } else {
+        eprintln!("[ablation_act] no checkpoint; using random init");
+        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(0))
+    };
+    let (_, test) = emotion::load(0);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, n) = pad_to_batches(&test, &tok, 32);
+    let rt = Runtime::new(Path::new("artifacts")).ok();
+    if rt.is_none() {
+        eprintln!("[ablation_act] no artifacts: PJRT cross-check disabled");
+    }
+
+    // calibrate on 8 batches of the test distribution (paper's setup uses
+    // whatever data is at hand; ranges are what matters)
+    let cal = calibrate(&cfg, &store, &batches[..8.min(batches.len())]).unwrap();
+
+    let mut t = Table::new(
+        "A3 — activation quantization on emotion (weights: SplitQuant at same bits)",
+        &["bits", "act=none", "act per-tensor", "act split (§4.2)", "pjrt split"],
+    );
+    for bits in [2u8, 4, 8] {
+        let (wq, _) =
+            prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(bits)))
+                .unwrap();
+        let none = accuracy_rust(&cfg, &wq, &batches, n, None).unwrap();
+        let pt = cal.to_params(bits, ActQuantMode::PerTensor);
+        let acc_pt = accuracy_rust(&cfg, &wq, &batches, n, Some(&pt)).unwrap();
+        let sp = cal.to_params(bits, ActQuantMode::Split);
+        let acc_sp = accuracy_rust(&cfg, &wq, &batches, n, Some(&sp)).unwrap();
+        let pjrt = match &rt {
+            Some(rt) => {
+                let a = accuracy_pjrt_actquant(rt, &wq, &batches, n, &sp).unwrap();
+                pct(a)
+            }
+            None => "-".into(),
+        };
+        t.row(vec![format!("INT{bits}"), pct(none), pct(acc_pt), pct(acc_sp), pjrt]);
+    }
+    println!("{}", t.render());
+    println!("{}", t.render_markdown());
+    println!(
+        "shape expectation: act splitting >= per-tensor act quant, gap largest at\n\
+         INT2; act=none is the §4.2 weight-only regime (skip splitting there)."
+    );
+}

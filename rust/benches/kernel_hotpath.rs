@@ -1,0 +1,128 @@
+//! Bench P0 (§Perf): microbenchmarks of the L3 hot paths that dominate the
+//! Table-1 sweep and the serving loop — blocked matmul, quantize/dequantize,
+//! 1-D k-means (fast vs generic), packing, and the BERT executor forward.
+//!
+//! ```sh
+//! cargo bench --bench kernel_hotpath
+//! ```
+
+use std::time::Instant;
+
+use splitquant::clustering::init::greedy_kmeanspp;
+use splitquant::clustering::kmeans::lloyd_generic;
+use splitquant::clustering::kmeans1d::lloyd_fast;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::model::BertModel;
+use splitquant::quant::{QConfig, QTensor};
+use splitquant::report::Table;
+use splitquant::tensor::{ops, IntTensor, Tensor};
+use splitquant::util::rng::Rng;
+
+fn time_n(n: usize, mut f: impl FnMut()) -> std::time::Duration {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed() / n as u32
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut t = Table::new("§Perf — L3 hot-path microbenchmarks", &["op", "time", "rate"]);
+
+    // ---- matmul (the executor's dominant op)
+    for &(m, k, n) in &[(2048usize, 128usize, 128usize), (2048, 128, 512), (2048, 512, 128)] {
+        let a = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 0.0, 1.0, &mut rng);
+        let d = time_n(5, || {
+            std::hint::black_box(ops::matmul(&a, &b));
+        });
+        let gflops = 2.0 * (m * k * n) as f64 / d.as_secs_f64() / 1e9;
+        t.row(vec![format!("matmul {m}x{k}x{n}"), format!("{d:.2?}"), format!("{gflops:.2} GFLOP/s")]);
+    }
+
+    // ---- quantize / dequantize a 1M-element tensor
+    let big = Tensor::randn(&[1024, 1024], 0.0, 1.0, &mut rng);
+    for bits in [2u8, 8] {
+        let cfg = QConfig::baseline(bits);
+        let d = time_n(5, || {
+            std::hint::black_box(QTensor::quantize(&big, &cfg).unwrap());
+        });
+        t.row(vec![
+            format!("quantize 1M INT{bits}"),
+            format!("{d:.2?}"),
+            format!("{:.0} Melem/s", 1.048_576 / d.as_secs_f64()),
+        ]);
+        let q = QTensor::quantize(&big, &cfg).unwrap();
+        let d = time_n(5, || {
+            std::hint::black_box(q.dequantize());
+        });
+        t.row(vec![
+            format!("dequantize 1M INT{bits}"),
+            format!("{d:.2?}"),
+            format!("{:.0} Melem/s", 1.048_576 / d.as_secs_f64()),
+        ]);
+    }
+
+    // ---- k-means on the embedding-table scale (1M values)
+    let values: Vec<f32> = (0..1_048_576).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let init = greedy_kmeanspp(&values[..65536], 3, &mut rng); // seed on a sample
+    let d_fast = time_n(3, || {
+        std::hint::black_box(lloyd_fast(&values, &init, 50));
+    });
+    t.row(vec!["kmeans1d fast 1M k=3".into(), format!("{d_fast:.2?}"), "-".into()]);
+    let d_gen = time_n(1, || {
+        std::hint::black_box(lloyd_generic(&values, &init, 50));
+    });
+    t.row(vec![
+        "kmeans generic 1M k=3".into(),
+        format!("{d_gen:.2?}"),
+        format!("fast is {:.1}x faster", d_gen.as_secs_f64() / d_fast.as_secs_f64()),
+    ]);
+
+    // ---- full BERT-Tiny forward (batch 32) through the Rust executor
+    let cfg = BertConfig::default();
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let model = BertModel::new(cfg.clone(), store).unwrap();
+    let ids = IntTensor::new(
+        &[32, 64],
+        (0..32 * 64).map(|_| rng.below(cfg.vocab_size) as i32).collect(),
+    )
+    .unwrap();
+    let mask = Tensor::full(&[32, 64], 1.0);
+    let d = time_n(5, || {
+        std::hint::black_box(model.forward(&ids, &mask));
+    });
+    t.row(vec![
+        "BERT-Tiny fwd b32 (rust executor)".into(),
+        format!("{d:.2?}"),
+        format!("{:.0} samples/s", 32.0 / d.as_secs_f64()),
+    ]);
+
+    // ---- fused quantized executor (deployment path: dequant inside matmul)
+    {
+        use splitquant::model::QuantizedBert;
+        use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+        let store2 = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store2);
+        let (_, qm) = quantize_store(&store2, &q, &SplitQuantConfig::new(2)).unwrap();
+        let qmodel = QuantizedBert::new(cfg.clone(), &store2, &qm).unwrap();
+        let d = time_n(5, || {
+            std::hint::black_box(qmodel.forward(&ids, &mask));
+        });
+        t.row(vec![
+            "QuantizedBert fwd b32 (fused INT2 dequant)".into(),
+            format!("{d:.2?}"),
+            format!(
+                "{:.0} samples/s, weights {:.0}% of FP32 resident",
+                32.0 / d.as_secs_f64(),
+                100.0 * qmodel.quantized_resident_bytes() as f64
+                    / qmodel.fp32_equivalent_bytes() as f64
+            ),
+        ]);
+    }
+
+    println!("{}", t.render());
+    println!("{}", t.render_markdown());
+}

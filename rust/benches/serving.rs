@@ -1,0 +1,143 @@
+//! Bench S1: serving throughput / latency through the coordinator + PJRT
+//! executables (the L3 system contribution), sweeping offered concurrency
+//! and worker count. Skipped without artifacts.
+//!
+//! ```sh
+//! cargo bench --bench serving
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
+use splitquant::data::{emotion, HashTokenizer};
+use splitquant::model::params::ParamStore;
+use splitquant::report::Table;
+use splitquant::runtime::Runtime;
+use splitquant::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::new(Path::new("artifacts")) else {
+        eprintln!("[serving] SKIP: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let rt = Arc::new(rt);
+    let cfg = rt.manifest.bert.clone();
+    let store = if Path::new("checkpoints/emotion.bin").exists() {
+        ParamStore::load(Path::new("checkpoints/emotion.bin")).unwrap()
+    } else {
+        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(7))
+    };
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32]).unwrap());
+    let (_, pool) = emotion::load_small(1, 10, 1024);
+
+    let requests = 600usize;
+    let mut t = Table::new(
+        &format!("S1 — serving sweep ({requests} requests/cell)"),
+        &["inflight", "workers", "QPS", "p50", "p95", "p99", "pad%", "batch hist"],
+    );
+    for &workers in &[1usize, 2, 4] {
+        for &inflight in &[1usize, 8, 64, 256] {
+            let server = Server::start(
+                exec.clone(),
+                tok.clone(),
+                ServeConfig {
+                    max_wait: Duration::from_millis(2),
+                    workers,
+                    queue_cap: 8192,
+                },
+            );
+            let t0 = Instant::now();
+            let mut done = 0usize;
+            let mut i = 0usize;
+            while done < requests {
+                let window = inflight.min(requests - done);
+                let rxs: Vec<_> = (0..window)
+                    .map(|k| server.submit(&pool.texts[(i + k) % pool.len()]).unwrap())
+                    .collect();
+                i += window;
+                for rx in rxs {
+                    rx.recv_timeout(Duration::from_secs(60)).expect("response");
+                    done += 1;
+                }
+            }
+            let wall = t0.elapsed();
+            let m = server.shutdown();
+            t.row(vec![
+                inflight.to_string(),
+                workers.to_string(),
+                format!("{:.0}", requests as f64 / wall.as_secs_f64()),
+                format!("{:.1}ms", m.latency.quantile_us(0.50) as f64 / 1e3),
+                format!("{:.1}ms", m.latency.quantile_us(0.95) as f64 / 1e3),
+                format!("{:.1}ms", m.latency.quantile_us(0.99) as f64 / 1e3),
+                format!("{:.0}%", m.padding_fraction() * 100.0),
+                format!("{:?}", m.batches_by_size),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("{}", t.render_markdown());
+    println!(
+        "shape expectation: QPS rises with inflight (batching amortizes dispatch);\n\
+         p50 rises with batch occupancy; padding% falls as load saturates b32.\n"
+    );
+
+    // ---- open-loop trace replay with admission control
+    use splitquant::data::trace::{generate, summarize, TraceKind};
+    use splitquant::util::rng::Rng as SqRng;
+    let mut t2 = Table::new(
+        "S1b — open-loop trace replay (2000 arrivals, admission control on)",
+        &["trace", "offered rate", "served", "shed", "QPS", "p50", "p99"],
+    );
+    let mut rng = SqRng::new(0);
+    for (name, kind) in [
+        ("poisson@200/s", TraceKind::Poisson { rate: 200.0 }),
+        ("poisson@2000/s", TraceKind::Poisson { rate: 2000.0 }),
+        (
+            "bursty 50/3000",
+            TraceKind::Bursty { calm_rate: 50.0, burst_rate: 3000.0, mean_phase_s: 0.3 },
+        ),
+    ] {
+        let arrivals = generate(kind, 2000, pool.len(), &mut rng);
+        let (mean_rate, _) = summarize(&arrivals);
+        let server = Server::start(
+            exec.clone(),
+            tok.clone(),
+            ServeConfig { max_wait: Duration::from_millis(2), workers: 2, queue_cap: 256 },
+        );
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        let mut shed = 0usize;
+        for a in &arrivals {
+            // busy-ish wait to the arrival time (trace replay)
+            while t0.elapsed() < a.at {
+                std::thread::sleep(Duration::from_micros(100));
+            }
+            match server.try_submit(&pool.texts[a.text_id]) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => shed += 1,
+            }
+        }
+        let mut served = 0usize;
+        for rx in rxs {
+            if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+                served += 1;
+            }
+        }
+        let wall = t0.elapsed();
+        let m = server.shutdown();
+        t2.row(vec![
+            name.to_string(),
+            format!("{mean_rate:.0}/s"),
+            served.to_string(),
+            shed.to_string(),
+            format!("{:.0}", served as f64 / wall.as_secs_f64()),
+            format!("{:.1}ms", m.latency.quantile_us(0.50) as f64 / 1e3),
+            format!("{:.1}ms", m.latency.quantile_us(0.99) as f64 / 1e3),
+        ]);
+    }
+    println!("{}", t2.render());
+    println!("{}", t2.render_markdown());
+}

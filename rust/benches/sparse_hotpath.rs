@@ -1,0 +1,77 @@
+//! Bench D2: the paper's **§6 sparse-engine remark** — split layers are ~⅔
+//! structural zeros, so a sparse engine (SparseDNN-style; ours is CSR)
+//! recovers most of the 3× dense overhead. Measures the BERT-Tiny linear
+//! shapes end to end.
+//!
+//! ```sh
+//! cargo bench --bench sparse_hotpath
+//! ```
+
+use std::time::Instant;
+
+use splitquant::model::graph::{Layer, LinearPart};
+use splitquant::model::sparse::SparseSplitLinear;
+use splitquant::report::Table;
+use splitquant::splitquant::weight_split::materialize_branches;
+use splitquant::splitquant::{split_quantize, SplitQuantConfig};
+use splitquant::tensor::{ops, Tensor};
+use splitquant::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let reps = 300usize;
+    let mut t = Table::new(
+        &format!("D2 — split-layer execution forms ({reps} reps, batch 64)"),
+        &["shape", "dense 1x", "3 dense branches", "CSR split", "fused dequant", "CSR vs 3x"],
+    );
+
+    for &(k, n) in &[(128usize, 128usize), (128, 512), (512, 128)] {
+        let w = Tensor::randn(&[k, n], 0.0, 0.5, &mut rng);
+        let x = Tensor::randn(&[64, k], 0.0, 1.0, &mut rng);
+        let st = split_quantize(&w, &SplitQuantConfig::new(2), &mut rng).unwrap();
+        let branches = materialize_branches(&w, &st.assignment, 3);
+
+        let dense = Layer::Linear { weight: w.clone(), bias: None };
+        let split3 = Layer::SplitLinear {
+            parts: branches
+                .iter()
+                .map(|b| LinearPart { weight: b.clone(), bias: None })
+                .collect(),
+        };
+        let csr = SparseSplitLinear::from_dense_branches(&branches, None);
+        let fused = st.qtensor.dequantize();
+
+        let time = |f: &dyn Fn() -> Tensor| {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(f());
+            }
+            t0.elapsed()
+        };
+        let t_dense = time(&|| dense.forward(&x));
+        let t_split = time(&|| split3.forward(&x));
+        let t_csr = time(&|| csr.forward(&x));
+        let t_fused = time(&|| ops::matmul(&x, &fused));
+
+        t.row(vec![
+            format!("{k}x{n}"),
+            format!("{t_dense:.2?}"),
+            format!("{t_split:.2?}"),
+            format!("{t_csr:.2?}"),
+            format!("{t_fused:.2?}"),
+            format!("{:.2}x faster", t_split.as_secs_f64() / t_csr.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{}", t.render_markdown());
+    println!(
+        "measured shape: 3-branch ≈ 2.5-3x dense (the paper's §6 overhead). CSR\n\
+         keeps nnz at 1x but LOSES wall-clock at ~33% density — indirect column\n\
+         indices defeat vectorization, the textbook spmm break-even is ~5-10%\n\
+         density, and SplitQuant branches sit far above it. This is exactly why\n\
+         the deployment path is the FUSED codes+cid matmul (≈1x dense, zeros\n\
+         never materialized) rather than a generic sparse engine; an engine with\n\
+         structured sparsity (SparseDNN-style codegen) would be needed to win at\n\
+         this density. Storage, not speed, is what CSR recovers here."
+    );
+}

@@ -1,0 +1,94 @@
+//! Baseline PTQ methods SplitQuant is compared against:
+//!
+//! * [`quantize_store_baseline`] — plain per-tensor (or per-channel) affine
+//!   quantization under any [`QConfig`]: min-max (the paper's "Baseline"
+//!   column), percentile clipping (§1's de-facto outlier treatment) or MSE
+//!   search.
+//! * [`ocs`] — Outlier Channel Splitting (Zhao et al., ICML 2019; paper
+//!   related work [16]).
+
+pub mod ocs;
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::model::params::ParamStore;
+use crate::quant::{QConfig, QTensor};
+
+/// Quantize every `quantizable` parameter with one shared [`QConfig`].
+/// Returns the dequantized eval store and the packed tensors.
+pub fn quantize_store_baseline(
+    store: &ParamStore,
+    quantizable: &[String],
+    cfg: &QConfig,
+) -> Result<(ParamStore, BTreeMap<String, QTensor>)> {
+    let mut eval_store = store.clone();
+    let mut tensors = BTreeMap::new();
+    for name in quantizable {
+        let t = store.get(name)?;
+        let q = QTensor::quantize(t, cfg)?;
+        eval_store.set(name, q.dequantize())?;
+        tensors.insert(name.clone(), q);
+    }
+    Ok((eval_store, tensors))
+}
+
+/// Packed byte total of a quantized tensor map.
+pub fn quantized_bytes(tensors: &BTreeMap<String, QTensor>) -> usize {
+    tensors.values().map(|q| q.byte_size()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+    use crate::splitquant::default_quantizable;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn baseline_store_quantization() {
+        let cfg = BertConfig {
+            vocab_size: 32,
+            hidden: 8,
+            layers: 1,
+            heads: 2,
+            ffn: 16,
+            max_len: 8,
+            num_classes: 2,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let quantizable = default_quantizable(&store);
+        let (eval, tensors) =
+            quantize_store_baseline(&store, &quantizable, &QConfig::baseline(8)).unwrap();
+        eval.check_order(&cfg.param_order()).unwrap();
+        assert_eq!(tensors.len(), quantizable.len());
+        // INT8 reconstruction is tight
+        for name in &quantizable {
+            let d = store.get(name).unwrap().max_abs_diff(eval.get(name).unwrap());
+            let step = tensors[name].params()[0].step();
+            assert!(d <= step, "{name}: {d} vs step {step}");
+        }
+    }
+
+    #[test]
+    fn percentile_baseline_clips() {
+        // a huge outlier shrinks the percentile range; the outlier itself is
+        // then badly reconstructed (the paper's "lost signal")
+        let mut data = vec![0.0f32; 999];
+        let mut rng = Rng::new(1);
+        for v in &mut data {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        data.push(1000.0);
+        let order = vec![("w.weight".to_string(), vec![1000usize])];
+        let mut store = ParamStore::zeros(&order);
+        store.set("w.weight", crate::tensor::Tensor::new(&[1000], data).unwrap()).unwrap();
+        let names = vec!["w.weight".to_string()];
+        let (eval, _) =
+            quantize_store_baseline(&store, &names, &QConfig::percentile(4, 99.0)).unwrap();
+        let rec = eval.get("w.weight").unwrap().data()[999];
+        assert!(rec < 10.0, "outlier should be crushed by clipping, got {rec}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Outlier Channel Splitting (OCS), Zhao et al. ICML 2019 — the paper's
+//! closest related work ([16]).
+//!
+//! OCS duplicates the channel containing the largest-magnitude weight and
+//! halves both copies, shrinking the tensor's value range without dropping
+//! the outlier (the consumer sums the duplicated outputs, so the function is
+//! preserved — the same function-preserving trick family as SplitQuant, but
+//! channel-granular and magnitude-focused).
+//!
+//! For PTQ *accuracy* evaluation we use the standard fake-quant emulation:
+//! expand → quantize with the expanded tensor's range → fold the duplicates
+//! back (`w ← 2·dq(q(w/2))` for split channels). This matches how the OCS
+//! paper evaluates weight quantization without changing the network graph.
+
+use crate::quant::{QConfig, QParams, QTensor};
+use crate::tensor::Tensor;
+
+/// Result of the OCS transform on one tensor.
+#[derive(Debug, Clone)]
+pub struct OcsResult {
+    /// Fake-quantized tensor with duplicates folded back (evaluation form).
+    pub fake_quant: Tensor,
+    /// How many channels were split.
+    pub channels_split: usize,
+    /// Channel count after expansion.
+    pub expanded_channels: usize,
+}
+
+/// Apply OCS along the trailing axis (out-channels of an (in, out) linear
+/// weight). `expand_ratio` is the fraction of extra channels to create
+/// (OCS paper uses 1–5 %; each split halves the current max-|w| channel).
+pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> OcsResult {
+    let (rows, cols) = t.as_2d();
+    let n_extra = ((cols as f64 * expand_ratio).ceil() as usize).max(1);
+
+    // per-original-channel max |w|
+    let col_absmax: Vec<f32> = (0..cols)
+        .map(|c| (0..rows).fold(0.0f32, |m, r| m.max(t.data()[r * cols + c].abs())))
+        .collect();
+
+    // expanded channels as (origin, fraction); copy value = fraction · column.
+    // Each split halves the currently-largest copy and duplicates it, so an
+    // original channel ends up represented by copies whose fractions sum to 1
+    // (e.g. two splits can give {1/2, 1/4, 1/4}).
+    let mut copies: Vec<(usize, f32)> = (0..cols).map(|c| (c, 1.0f32)).collect();
+    for _ in 0..n_extra {
+        let (ci, _) = copies
+            .iter()
+            .enumerate()
+            .map(|(i, &(o, f))| (i, f * col_absmax[o]))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        copies[ci].1 *= 0.5;
+        let dup = copies[ci];
+        copies.push(dup);
+    }
+
+    // range over the EXPANDED tensor (this is where OCS wins: the halved
+    // outlier no longer stretches the range)
+    let mut all = Vec::with_capacity(copies.len() * rows);
+    for &(o, f) in &copies {
+        for r in 0..rows {
+            all.push(t.data()[r * cols + o] * f);
+        }
+    }
+    let (lo, hi) = cfg.observer.range(&all, cfg.bits);
+    let p = if cfg.symmetric {
+        QParams::symmetric_from_range(lo, hi, cfg.bits)
+    } else {
+        QParams::from_range(lo, hi, cfg.bits)
+    };
+
+    // fold back: channel c reconstructs as Σ_i dq(q(v·fᵢ)) over its copies —
+    // exactly what the expanded graph computes when the consumer sums.
+    let mut out = vec![0.0f32; rows * cols];
+    let mut touched = vec![0usize; cols];
+    for &(o, f) in &copies {
+        touched[o] += 1;
+        for r in 0..rows {
+            out[r * cols + o] += p.fake(t.data()[r * cols + o] * f);
+        }
+    }
+    OcsResult {
+        fake_quant: Tensor::new(t.shape(), out).unwrap(),
+        channels_split: touched.iter().filter(|&&k| k > 1).count(),
+        expanded_channels: cols + n_extra,
+    }
+}
+
+/// Store-level OCS baseline over the quantizable set (rank-2+ tensors only;
+/// vectors fall back to plain quantization).
+pub fn quantize_store_ocs(
+    store: &crate::model::params::ParamStore,
+    quantizable: &[String],
+    cfg: &QConfig,
+    expand_ratio: f64,
+) -> crate::error::Result<crate::model::params::ParamStore> {
+    let mut eval = store.clone();
+    for name in quantizable {
+        let t = store.get(name)?;
+        if t.shape().len() >= 2 {
+            let r = ocs_fake_quant(t, cfg, expand_ratio);
+            eval.set(name, r.fake_quant)?;
+        } else {
+            let q = QTensor::quantize(t, cfg)?;
+            eval.set(name, q.dequantize())?;
+        }
+    }
+    Ok(eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn weight_with_outlier_channel(rows: usize, cols: usize, outlier: f32) -> Tensor {
+        let mut rng = Rng::new(0);
+        let mut t = Tensor::randn(&[rows, cols], 0.0, 0.1, &mut rng);
+        // put the outlier in channel 0
+        t.data_mut()[0] = outlier;
+        t
+    }
+
+    #[test]
+    fn ocs_beats_plain_quant_with_channel_outlier() {
+        let t = weight_with_outlier_channel(64, 32, 8.0);
+        let cfg = QConfig::baseline(4);
+        let plain = crate::quant::qtensor::fake_quant_tensor(&t, &cfg).unwrap();
+        let ocs = ocs_fake_quant(&t, &cfg, 0.10);
+        let mse = |a: &Tensor| -> f64 {
+            a.data()
+                .iter()
+                .zip(t.data())
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        assert!(
+            mse(&ocs.fake_quant) < mse(&plain),
+            "ocs {} vs plain {}",
+            mse(&ocs.fake_quant),
+            mse(&plain)
+        );
+        assert!(ocs.channels_split >= 1);
+    }
+
+    #[test]
+    fn ocs_preserves_function_at_high_bits() {
+        // INT8 with mild expansion: reconstruction ~ exact
+        let t = weight_with_outlier_channel(16, 8, 2.0);
+        let r = ocs_fake_quant(&t, &QConfig::baseline(8), 0.25);
+        assert!(t.max_abs_diff(&r.fake_quant) < 0.05);
+    }
+
+    #[test]
+    fn repeated_split_halves_repeatedly() {
+        // with many splits allowed, the same outlier channel is halved again
+        let t = weight_with_outlier_channel(4, 2, 100.0);
+        let r = ocs_fake_quant(&t, &QConfig::baseline(2), 2.0); // 4 extra
+        assert_eq!(r.expanded_channels, 2 + 4);
+        assert_eq!(r.channels_split, 1, "all splits should hit the outlier channel");
+    }
+
+    #[test]
+    fn expansion_accounting() {
+        let t = weight_with_outlier_channel(8, 10, 5.0);
+        let r = ocs_fake_quant(&t, &QConfig::baseline(4), 0.2);
+        assert_eq!(r.expanded_channels, 12);
+    }
+}

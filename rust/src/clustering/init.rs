@@ -1,0 +1,161 @@
+//! Greedy k-means++ seeding (paper ref [6]: Grunau, Özüdoğru, Rozhoň, Tětek,
+//! SODA 2023).
+//!
+//! Standard k-means++ samples each new center from the D² distribution once;
+//! the *greedy* variant draws `l ≈ 2 + ⌈log k⌉` candidates per round and
+//! keeps the one that minimizes the resulting potential, which provably
+//! tightens the approximation factor.
+
+use crate::util::rng::Rng;
+
+/// Number of candidates per greedy round.
+pub fn greedy_candidates(k: usize) -> usize {
+    2 + (k as f64).log2().ceil().max(0.0) as usize
+}
+
+/// Pick `k` initial centers from `values` with greedy k-means++.
+///
+/// Returns centers sorted ascending. Handles degenerate inputs (fewer
+/// distinct values than `k`, constant data) by allowing duplicate centers —
+/// Lloyd's empty-cluster repair deals with those downstream.
+pub fn greedy_kmeanspp(values: &[f32], k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(k >= 1, "k must be >= 1");
+    assert!(!values.is_empty(), "cannot seed on empty data");
+    let n = values.len();
+    let mut centers = Vec::with_capacity(k);
+
+    // first center: uniform
+    centers.push(values[rng.below(n)]);
+
+    // d2[i] = squared distance to the nearest chosen center
+    let mut d2: Vec<f64> = values
+        .iter()
+        .map(|&v| {
+            let d = (v - centers[0]) as f64;
+            d * d
+        })
+        .collect();
+
+    let l = greedy_candidates(k);
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let mut best_candidate = None;
+        let mut best_potential = f64::INFINITY;
+        for _ in 0..l {
+            let idx = if total <= 0.0 {
+                // all points coincide with existing centers: uniform fallback
+                rng.below(n)
+            } else {
+                sample_d2(&d2, total, rng)
+            };
+            let cand = values[idx];
+            // potential if we were to add this candidate
+            let pot: f64 = d2
+                .iter()
+                .zip(values)
+                .map(|(&cur, &v)| {
+                    let d = (v - cand) as f64;
+                    cur.min(d * d)
+                })
+                .sum();
+            if pot < best_potential {
+                best_potential = pot;
+                best_candidate = Some(cand);
+            }
+        }
+        let c = best_candidate.expect("at least one candidate");
+        for (cur, &v) in d2.iter_mut().zip(values) {
+            let d = (v - c) as f64;
+            *cur = cur.min(d * d);
+        }
+        centers.push(c);
+    }
+
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    centers
+}
+
+fn sample_d2(d2: &[f64], total: f64, rng: &mut Rng) -> usize {
+    let mut t = rng.f64() * total;
+    for (i, &w) in d2.iter().enumerate() {
+        t -= w;
+        if t <= 0.0 {
+            return i;
+        }
+    }
+    d2.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn candidate_count() {
+        assert_eq!(greedy_candidates(1), 2);
+        assert_eq!(greedy_candidates(2), 3);
+        assert_eq!(greedy_candidates(3), 4);
+        assert_eq!(greedy_candidates(8), 5);
+    }
+
+    #[test]
+    fn centers_come_from_data_and_are_sorted() {
+        let mut rng = Rng::new(0);
+        let values: Vec<f32> = (0..100).map(|i| (i as f32) * 0.5 - 25.0).collect();
+        let c = greedy_kmeanspp(&values, 3, &mut rng);
+        assert_eq!(c.len(), 3);
+        assert!(c.windows(2).all(|w| w[0] <= w[1]));
+        for x in &c {
+            assert!(values.contains(x));
+        }
+    }
+
+    #[test]
+    fn separated_blobs_get_one_center_each() {
+        // three tight, far-apart blobs: greedy ++ must land one center in each
+        let mut values = Vec::new();
+        let mut rng = Rng::new(42);
+        for &center in &[-100.0f32, 0.0, 100.0] {
+            for _ in 0..50 {
+                values.push(center + rng.normal_f32(0.0, 0.1));
+            }
+        }
+        for seed in 0..20 {
+            let mut r = Rng::new(seed);
+            let c = greedy_kmeanspp(&values, 3, &mut r);
+            assert!(c[0] < -90.0, "seed {seed}: {c:?}");
+            assert!(c[1].abs() < 10.0, "seed {seed}: {c:?}");
+            assert!(c[2] > 90.0, "seed {seed}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn constant_data_does_not_panic() {
+        let mut rng = Rng::new(1);
+        let values = vec![2.5f32; 40];
+        let c = greedy_kmeanspp(&values, 3, &mut rng);
+        assert_eq!(c, vec![2.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn fewer_points_than_k() {
+        let mut rng = Rng::new(2);
+        let c = greedy_kmeanspp(&[1.0, 2.0], 3, &mut rng);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn property_centers_subset_of_values() {
+        check("kmeans++ centers ⊆ data", 40, |rng| {
+            let n = rng.range(1, 200);
+            let k = rng.range(1, 6);
+            let values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let c = greedy_kmeanspp(&values, k, rng);
+            assert_eq!(c.len(), k);
+            for x in &c {
+                assert!(values.iter().any(|v| v == x));
+            }
+        });
+    }
+}

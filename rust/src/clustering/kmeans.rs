@@ -1,0 +1,252 @@
+//! Generic Lloyd's algorithm for 1-D data (reference implementation).
+
+use crate::util::rng::Rng;
+
+use super::init::greedy_kmeanspp;
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Cluster centers, sorted ascending (lower / middle / upper for k=3).
+    pub centroids: Vec<f32>,
+    /// Per-value cluster index into `centroids`.
+    pub assignment: Vec<u8>,
+    /// Sum of squared distances to assigned centers.
+    pub inertia: f64,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+}
+
+impl KMeansResult {
+    /// Per-cluster (min, max) value ranges; `None` for empty clusters.
+    pub fn cluster_ranges(&self, values: &[f32]) -> Vec<Option<(f32, f32)>> {
+        let k = self.centroids.len();
+        let mut ranges: Vec<Option<(f32, f32)>> = vec![None; k];
+        for (&v, &a) in values.iter().zip(&self.assignment) {
+            let e = &mut ranges[a as usize];
+            *e = Some(match *e {
+                None => (v, v),
+                Some((lo, hi)) => (lo.min(v), hi.max(v)),
+            });
+        }
+        ranges
+    }
+
+    /// Per-cluster population counts.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.centroids.len()];
+        for &a in &self.assignment {
+            sizes[a as usize] += 1;
+        }
+        sizes
+    }
+}
+
+/// Assign each value to its nearest centroid (ties → lowest index).
+pub fn assign(values: &[f32], centroids: &[f32]) -> Vec<u8> {
+    values
+        .iter()
+        .map(|&v| {
+            let mut best = 0u8;
+            let mut best_d = f32::INFINITY;
+            for (c, &cv) in centroids.iter().enumerate() {
+                let d = (v - cv) * (v - cv);
+                if d < best_d {
+                    best_d = d;
+                    best = c as u8;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+fn inertia_of(values: &[f32], centroids: &[f32], assignment: &[u8]) -> f64 {
+    values
+        .iter()
+        .zip(assignment)
+        .map(|(&v, &a)| {
+            let d = (v - centroids[a as usize]) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Lloyd iterations from explicit initial centers.
+///
+/// Empty clusters are repaired by re-seeding them on the point farthest from
+/// its center (a standard k-means trick that keeps exactly `k` non-degenerate
+/// clusters whenever the data has ≥ k distinct values).
+pub fn lloyd_generic(values: &[f32], init: &[f32], max_iter: usize) -> KMeansResult {
+    let k = init.len();
+    assert!(k >= 1 && !values.is_empty());
+    let mut centroids = init.to_vec();
+    let mut assignment = assign(values, &centroids);
+    let mut iterations = 0;
+
+    for _ in 0..max_iter {
+        iterations += 1;
+        // update
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0usize; k];
+        for (&v, &a) in values.iter().zip(&assignment) {
+            sums[a as usize] += v as f64;
+            counts[a as usize] += 1;
+        }
+        let mut new_centroids = centroids.clone();
+        for c in 0..k {
+            if counts[c] > 0 {
+                new_centroids[c] = (sums[c] / counts[c] as f64) as f32;
+            }
+        }
+        // empty-cluster repair: move to the farthest point
+        for c in 0..k {
+            if counts[c] == 0 {
+                if let Some((idx, _)) = values
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        let d = (v - new_centroids[assignment[i] as usize]).abs();
+                        (i, d)
+                    })
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                {
+                    new_centroids[c] = values[idx];
+                }
+            }
+        }
+        let new_assignment = assign(values, &new_centroids);
+        let converged = new_assignment == assignment && new_centroids == centroids;
+        centroids = new_centroids;
+        assignment = new_assignment;
+        if converged {
+            break;
+        }
+    }
+
+    // canonical order: centroids ascending, assignment remapped
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| centroids[a].partial_cmp(&centroids[b]).unwrap());
+    let mut remap = vec![0u8; k];
+    for (new_idx, &old_idx) in order.iter().enumerate() {
+        remap[old_idx] = new_idx as u8;
+    }
+    let centroids_sorted: Vec<f32> = order.iter().map(|&i| centroids[i]).collect();
+    let assignment: Vec<u8> = assignment.iter().map(|&a| remap[a as usize]).collect();
+    let inertia = inertia_of(values, &centroids_sorted, &assignment);
+    KMeansResult { centroids: centroids_sorted, assignment, inertia, iterations }
+}
+
+/// Full run: greedy k-means++ init, then Lloyd.
+pub fn kmeans(values: &[f32], k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    let init = greedy_kmeanspp(values, k, rng);
+    lloyd_generic(values, &init, max_iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn three_blobs_recovered() {
+        let mut rng = Rng::new(0);
+        let mut values = Vec::new();
+        for &c in &[-10.0f32, 0.0, 10.0] {
+            for _ in 0..100 {
+                values.push(c + rng.normal_f32(0.0, 0.2));
+            }
+        }
+        let r = kmeans(&values, 3, 50, &mut rng);
+        assert!((r.centroids[0] + 10.0).abs() < 0.5, "{:?}", r.centroids);
+        assert!(r.centroids[1].abs() < 0.5);
+        assert!((r.centroids[2] - 10.0).abs() < 0.5);
+        let sizes = r.cluster_sizes();
+        assert_eq!(sizes, vec![100, 100, 100]);
+    }
+
+    #[test]
+    fn assignment_is_monotone_in_value() {
+        let mut rng = Rng::new(1);
+        let values: Vec<f32> = (0..500).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let r = kmeans(&values, 3, 50, &mut rng);
+        let mut pairs: Vec<(f32, u8)> = values.iter().copied().zip(r.assignment.clone()).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(pairs.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn k1_centroid_is_mean() {
+        let values = vec![1.0f32, 2.0, 3.0, 6.0];
+        let mut rng = Rng::new(2);
+        let r = kmeans(&values, 1, 20, &mut rng);
+        assert!((r.centroids[0] - 3.0).abs() < 1e-6);
+        assert!(r.assignment.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn outlier_lands_in_its_own_cluster() {
+        // the paper's motivating scenario: a lone outlier should isolate
+        let mut values = vec![0.0f32; 0];
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            values.push(rng.normal_f32(0.0, 1.0));
+        }
+        values.push(1000.0);
+        let r = kmeans(&values, 3, 50, &mut rng);
+        let out_cluster = r.assignment[200];
+        assert_eq!(out_cluster, 2, "outlier must be in the upper cluster");
+        assert_eq!(r.cluster_sizes()[2], 1, "outlier alone in its cluster");
+    }
+
+    #[test]
+    fn constant_values() {
+        let values = vec![5.0f32; 17];
+        let mut rng = Rng::new(4);
+        let r = kmeans(&values, 3, 20, &mut rng);
+        assert_eq!(r.inertia, 0.0);
+        assert_eq!(r.assignment.len(), 17);
+    }
+
+    #[test]
+    fn property_inertia_never_worse_than_single_cluster() {
+        check("kmeans(k=3) <= kmeans(k=1) inertia", 30, |rng| {
+            let n = rng.range(3, 400);
+            let values: Vec<f32> =
+                crate::util::proptest::gen_values_with_outliers(rng, n, 0.05);
+            let r3 = kmeans(&values, 3, 50, rng);
+            let r1 = kmeans(&values, 1, 50, rng);
+            assert!(
+                r3.inertia <= r1.inertia + 1e-6,
+                "k=3 {} vs k=1 {}",
+                r3.inertia,
+                r1.inertia
+            );
+        });
+    }
+
+    #[test]
+    fn property_lloyd_never_increases_inertia() {
+        check("more lloyd iters never hurt", 25, |rng| {
+            let n = rng.range(5, 300);
+            let values: Vec<f32> =
+                crate::util::proptest::gen_values_with_outliers(rng, n, 0.1);
+            let init = super::greedy_kmeanspp(&values, 3, rng);
+            let short = lloyd_generic(&values, &init, 1);
+            let long = lloyd_generic(&values, &init, 60);
+            assert!(long.inertia <= short.inertia + 1e-6);
+        });
+    }
+
+    #[test]
+    fn cluster_ranges_cover_values() {
+        let values = vec![-5.0f32, -4.0, 0.0, 0.5, 4.0, 5.0];
+        let mut rng = Rng::new(6);
+        let r = kmeans(&values, 3, 50, &mut rng);
+        let ranges = r.cluster_ranges(&values);
+        for (i, &v) in values.iter().enumerate() {
+            let (lo, hi) = ranges[r.assignment[i] as usize].unwrap();
+            assert!(v >= lo && v <= hi);
+        }
+    }
+}

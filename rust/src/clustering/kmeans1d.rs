@@ -1,0 +1,217 @@
+//! Optimized 1-D k-means (the production path for big weight tensors).
+//!
+//! For 1-D data with sorted centroids, the nearest-centroid assignment is a
+//! set of k−1 boundary midpoints, so each Lloyd iteration needs only
+//! O(k log n) boundary bisection + O(k) centroid updates over prefix sums —
+//! after a single O(n log n) sort. On the 1M-element BERT-Tiny token
+//! embedding this is ~40× faster than the generic O(n·k)-per-iteration loop
+//! (see EXPERIMENTS.md §Perf) and produces identical clusters from the same
+//! initialization (property tested against [`super::kmeans`]).
+
+use crate::util::rng::Rng;
+
+use super::init::greedy_kmeanspp;
+use super::kmeans::KMeansResult;
+#[cfg(test)]
+use super::kmeans::lloyd_generic;
+
+/// Threshold below which the generic path is used (sorting overhead is not
+/// worth it, and tiny inputs hit more degenerate-repair corner cases).
+const SMALL_N: usize = 512;
+
+/// Lloyd on pre-sorted values. Returns (sorted-order assignment, result).
+fn lloyd_sorted(sorted: &[f32], init: &[f32], max_iter: usize) -> KMeansResult {
+    let n = sorted.len();
+    let k = init.len();
+    debug_assert!(k >= 1 && n >= 1);
+
+    // prefix sums for O(1) range means
+    let mut prefix = vec![0f64; n + 1];
+    for (i, &v) in sorted.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + v as f64;
+    }
+
+    let mut centroids = init.to_vec();
+    centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // segment start index per cluster; segment c = [starts[c], starts[c+1])
+    let mut starts = boundaries(sorted, &centroids);
+    let mut iterations = 0;
+
+    for _ in 0..max_iter {
+        iterations += 1;
+        let mut new_centroids = centroids.clone();
+        for c in 0..k {
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            if hi > lo {
+                new_centroids[c] = ((prefix[hi] - prefix[lo]) / (hi - lo) as f64) as f32;
+            }
+            // empty segments keep their centroid (duplicate centers only
+            // occur with duplicate data values; harmless: zero population)
+        }
+        new_centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let new_starts = boundaries(sorted, &new_centroids);
+        let converged = new_starts == starts && new_centroids == centroids;
+        centroids = new_centroids;
+        starts = new_starts;
+        if converged {
+            break;
+        }
+    }
+
+    let mut assignment = vec![0u8; n];
+    for c in 0..k {
+        for a in assignment[starts[c]..starts[c + 1]].iter_mut() {
+            *a = c as u8;
+        }
+    }
+    let inertia = sorted
+        .iter()
+        .zip(&assignment)
+        .map(|(&v, &a)| {
+            let d = (v - centroids[a as usize]) as f64;
+            d * d
+        })
+        .sum();
+    KMeansResult { centroids, assignment, inertia, iterations }
+}
+
+/// Segment start indices (length k+1) for sorted values & sorted centroids.
+/// Boundary between clusters c and c+1 is the midpoint; ties go to the lower
+/// cluster (matching the generic `assign` tie rule).
+fn boundaries(sorted: &[f32], centroids: &[f32]) -> Vec<usize> {
+    let k = centroids.len();
+    let mut starts = vec![0usize; k + 1];
+    starts[k] = sorted.len();
+    for c in 1..k {
+        let mid = 0.5 * (centroids[c - 1] + centroids[c]);
+        // first index with value > mid  (value == mid stays in lower cluster)
+        starts[c] = sorted.partition_point(|&v| v <= mid).max(starts[c - 1]);
+    }
+    // enforce monotone (duplicate centroids can produce equal midpoints)
+    for c in 1..k {
+        if starts[c] < starts[c - 1] {
+            starts[c] = starts[c - 1];
+        }
+    }
+    starts
+}
+
+/// Full production run: greedy k-means++ init + fast sorted Lloyd, assignment
+/// returned in the *original* value order.
+pub fn cluster(values: &[f32], k: usize, max_iter: usize, rng: &mut Rng) -> KMeansResult {
+    assert!(!values.is_empty() && k >= 1);
+    if values.len() < SMALL_N || k == 1 {
+        return super::kmeans::kmeans(values, k, max_iter, rng);
+    }
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| values[a as usize].partial_cmp(&values[b as usize]).unwrap());
+    let sorted: Vec<f32> = idx.iter().map(|&i| values[i as usize]).collect();
+
+    let init = greedy_kmeanspp(&sorted, k, rng);
+    let r = lloyd_sorted(&sorted, &init, max_iter);
+
+    let mut assignment = vec![0u8; values.len()];
+    for (pos, &orig) in idx.iter().enumerate() {
+        assignment[orig as usize] = r.assignment[pos];
+    }
+    KMeansResult {
+        centroids: r.centroids,
+        assignment,
+        inertia: r.inertia,
+        iterations: r.iterations,
+    }
+}
+
+/// Run Lloyd from explicit init on unsorted values via the fast path
+/// (exposed for the equivalence property tests).
+pub fn lloyd_fast(values: &[f32], init: &[f32], max_iter: usize) -> KMeansResult {
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| values[a as usize].partial_cmp(&values[b as usize]).unwrap());
+    let sorted: Vec<f32> = idx.iter().map(|&i| values[i as usize]).collect();
+    let r = lloyd_sorted(&sorted, init, max_iter);
+    let mut assignment = vec![0u8; values.len()];
+    for (pos, &orig) in idx.iter().enumerate() {
+        assignment[orig as usize] = r.assignment[pos];
+    }
+    KMeansResult {
+        centroids: r.centroids,
+        assignment,
+        inertia: r.inertia,
+        iterations: r.iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen_values_with_outliers};
+
+    #[test]
+    fn matches_generic_from_same_init() {
+        check("fast lloyd == generic lloyd", 30, |rng| {
+            let n = rng.range(8, 1500);
+            let values = gen_values_with_outliers(rng, n, 0.05);
+            let k = rng.range(2, 5);
+            let init = crate::clustering::init::greedy_kmeanspp(&values, k, rng);
+            let fast = lloyd_fast(&values, &init, 40);
+            let gen = lloyd_generic(&values, &init, 40);
+            // identical partition quality (assignments may differ only on
+            // exact midpoint ties, which have equal cost)
+            assert!(
+                (fast.inertia - gen.inertia).abs()
+                    <= 1e-5 * (1.0 + gen.inertia.abs()),
+                "fast {} vs generic {} (n={n}, k={k})",
+                fast.inertia,
+                gen.inertia
+            );
+        });
+    }
+
+    #[test]
+    fn production_cluster_on_large_input() {
+        let mut rng = Rng::new(0);
+        let mut values = Vec::new();
+        for &c in &[-8.0f32, 0.0, 8.0] {
+            for _ in 0..2000 {
+                values.push(c + rng.normal_f32(0.0, 0.3));
+            }
+        }
+        let r = cluster(&values, 3, 50, &mut rng);
+        assert!((r.centroids[0] + 8.0).abs() < 0.3);
+        assert!(r.centroids[1].abs() < 0.3);
+        assert!((r.centroids[2] - 8.0).abs() < 0.3);
+        assert_eq!(r.cluster_sizes(), vec![2000, 2000, 2000]);
+    }
+
+    #[test]
+    fn assignment_order_is_preserved() {
+        let mut rng = Rng::new(5);
+        let values: Vec<f32> = (0..4000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let r = cluster(&values, 3, 50, &mut rng);
+        // nearest-centroid invariant holds in the ORIGINAL order
+        for (&v, &a) in values.iter().zip(&r.assignment) {
+            let d_assigned = (v - r.centroids[a as usize]).abs();
+            for &c in &r.centroids {
+                assert!(d_assigned <= (v - c).abs() + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_tie_goes_lower() {
+        let sorted = vec![-1.0f32, 0.0, 1.0];
+        let cents = vec![-1.0f32, 1.0];
+        let b = boundaries(&sorted, &cents);
+        // midpoint is 0.0; the 0.0 value belongs to the lower cluster
+        assert_eq!(b, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn small_inputs_fall_back() {
+        let mut rng = Rng::new(7);
+        let values = vec![1.0f32, 2.0, 100.0];
+        let r = cluster(&values, 2, 20, &mut rng);
+        assert_eq!(r.assignment[2], 1);
+        assert_eq!(r.assignment[0], 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! 1-D k-means clustering — the optimizer behind SplitQuant's layer split
+//! (paper §4.1: k = 3, greedy k-means++ initialization [Grunau et al. 2023]).
+//!
+//! Two Lloyd implementations are provided:
+//! * [`kmeans::lloyd_generic`] — direct O(n·k) per iteration, any data order.
+//! * [`kmeans1d::cluster`] — the production path: sort once, then each Lloyd
+//!   iteration is O(k log n) using boundary bisection + prefix sums.
+//!
+//! Both produce identical results from the same initialization (property
+//! tested), and centroids are always returned **sorted ascending** so cluster
+//! 0/1/2 are the paper's lower/middle/upper clusters.
+
+pub mod init;
+pub mod kmeans;
+pub mod kmeans1d;
+
+pub use kmeans::{lloyd_generic, KMeansResult};
+pub use kmeans1d::cluster;
+
+/// Default cluster count from the paper (lower / middle / upper).
+pub const DEFAULT_K: usize = 3;

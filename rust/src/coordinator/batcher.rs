@@ -1,0 +1,120 @@
+//! Dynamic batching policy (pure logic, unit-testable without threads).
+
+use std::time::Duration;
+
+/// Size/deadline batching policy over a fixed set of compiled batch shapes.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Available compiled batch sizes, ascending (e.g. [1, 8, 32]).
+    sizes: Vec<usize>,
+    /// Max time the oldest queued request may wait before dispatch.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
+        assert!(!sizes.is_empty());
+        sizes.sort_unstable();
+        sizes.dedup();
+        BatchPolicy { sizes, max_wait }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Smallest compiled size that fits `n` requests (or the max size).
+    pub fn fit(&self, n: usize) -> usize {
+        for &s in &self.sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Decide whether to dispatch now.
+    ///
+    /// * A full batch (pending ≥ max size) dispatches immediately.
+    /// * Otherwise dispatch only once the oldest request has waited
+    ///   `max_wait`, using the smallest compiled size that fits.
+    ///
+    /// Returns the number of requests to take and the compiled batch size.
+    pub fn decide(&self, pending: usize, oldest_age: Duration) -> Option<(usize, usize)> {
+        if pending == 0 {
+            return None;
+        }
+        if pending >= self.max_batch() {
+            return Some((self.max_batch(), self.max_batch()));
+        }
+        if oldest_age >= self.max_wait {
+            let take = pending;
+            return Some((take, self.fit(take)));
+        }
+        None
+    }
+
+    /// Padding overhead ratio for a dispatch decision (1.0 = no padding).
+    pub fn padding_overhead(&self, take: usize, size: usize) -> f64 {
+        size as f64 / take.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![32, 1, 8], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn sizes_sorted_deduped() {
+        let p = policy();
+        assert_eq!(p.sizes(), &[1, 8, 32]);
+        assert_eq!(p.max_batch(), 32);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let p = policy();
+        assert_eq!(p.decide(32, Duration::ZERO), Some((32, 32)));
+        assert_eq!(p.decide(100, Duration::ZERO), Some((32, 32)));
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let p = policy();
+        assert_eq!(p.decide(5, Duration::from_millis(1)), None);
+        assert_eq!(p.decide(5, Duration::from_millis(2)), Some((5, 8)));
+        assert_eq!(p.decide(1, Duration::from_millis(3)), Some((1, 1)));
+        assert_eq!(p.decide(9, Duration::from_millis(2)), Some((9, 32)));
+    }
+
+    #[test]
+    fn empty_queue_never_dispatches() {
+        let p = policy();
+        assert_eq!(p.decide(0, Duration::from_secs(10)), None);
+    }
+
+    #[test]
+    fn fit_picks_smallest() {
+        let p = policy();
+        assert_eq!(p.fit(1), 1);
+        assert_eq!(p.fit(2), 8);
+        assert_eq!(p.fit(8), 8);
+        assert_eq!(p.fit(9), 32);
+        assert_eq!(p.fit(64), 32);
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let p = policy();
+        assert_eq!(p.padding_overhead(8, 8), 1.0);
+        assert_eq!(p.padding_overhead(2, 8), 4.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Serving metrics: latency distribution, batch-size histogram, throughput.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::LatencyStats;
+
+/// Aggregated serving metrics (guarded by a mutex in the server).
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub started: Instant,
+    pub completed: usize,
+    pub latency: LatencyStats,
+    /// dispatched batches per compiled batch size
+    pub batches_by_size: BTreeMap<usize, usize>,
+    /// total request slots padded (wasted compute)
+    pub padded_slots: usize,
+    /// total real request slots
+    pub real_slots: usize,
+    /// executor time only (excludes queueing)
+    pub exec_time: Duration,
+    /// requests rejected by admission control (queue full)
+    pub shed: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            completed: 0,
+            latency: LatencyStats::default(),
+            batches_by_size: BTreeMap::new(),
+            padded_slots: 0,
+            real_slots: 0,
+            exec_time: Duration::ZERO,
+            shed: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, real: usize, size: usize, exec: Duration) {
+        *self.batches_by_size.entry(size).or_insert(0) += 1;
+        self.real_slots += real;
+        self.padded_slots += size - real;
+        self.exec_time += exec;
+    }
+
+    pub fn record_done(&mut self, latency: Duration) {
+        self.completed += 1;
+        self.latency.record(latency);
+    }
+
+    /// Requests per second since start.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.real_slots + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / total as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% batches={:?}",
+            self.completed,
+            self.shed,
+            self.throughput(),
+            self.latency.summary(),
+            self.padding_fraction() * 100.0,
+            self.batches_by_size,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(5, 8, Duration::from_millis(3));
+        m.record_batch(32, 32, Duration::from_millis(10));
+        for _ in 0..37 {
+            m.record_done(Duration::from_millis(4));
+        }
+        assert_eq!(m.completed, 37);
+        assert_eq!(m.padded_slots, 3);
+        assert_eq!(m.real_slots, 37);
+        assert!((m.padding_fraction() - 3.0 / 40.0).abs() < 1e-9);
+        assert_eq!(m.batches_by_size[&8], 1);
+        assert!(m.throughput() > 0.0);
+    }
+}

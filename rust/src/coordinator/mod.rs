@@ -1,0 +1,25 @@
+//! Serving coordinator (L3): request router + dynamic batcher + worker pool
+//! over the AOT forward executables.
+//!
+//! Architecture (vLLM-router-like, scaled to this workload):
+//!
+//! ```text
+//! clients ──submit()──▶ bounded queue ──▶ batcher thread ──▶ work queue ──▶ workers
+//!                                           │  size/deadline policy          │
+//!                                           └─ pads to a compiled batch      └─ PJRT (or
+//!                                              shape (b1/b8/b32)                Rust) executor
+//! ```
+//!
+//! The batcher groups requests to amortize executable dispatch; because XLA
+//! executables are shape-specialized, it pads partial batches up to the
+//! nearest compiled batch size (padding rows carry an all-zero attention
+//! mask, so they cost compute but never change results — verified by the
+//! `padding_is_inert` test).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use metrics::Metrics;
+pub use server::{BatchExecutor, ClassifyResponse, PjrtExecutor, RustExecutor, ServeConfig, Server};

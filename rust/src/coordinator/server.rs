@@ -1,0 +1,479 @@
+//! The serving server: bounded ingress queue, batcher thread, worker pool.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::tokenizer::HashTokenizer;
+use crate::error::{Error, Result};
+use crate::model::bert::{argmax_rows, BertModel};
+use crate::model::config::BertConfig;
+use crate::model::params::ParamStore;
+use crate::runtime::literal::Value;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+
+/// Abstract batched classifier — PJRT in production, pure-Rust in tests.
+pub trait BatchExecutor: Send + Sync {
+    /// Classify a padded batch; returns one label per row.
+    fn classify(&self, ids: &IntTensor, mask: &Tensor, batch_size: usize) -> Result<Vec<i32>>;
+    /// Compiled batch sizes this executor supports.
+    fn batch_sizes(&self) -> Vec<usize>;
+}
+
+/// PJRT-backed executor over `bert_fwd_b{N}` executables with pre-staged
+/// parameter values (parameters are converted once, not per request).
+pub struct PjrtExecutor {
+    exes: Vec<(usize, Arc<crate::runtime::LoadedExe>)>,
+    params: Vec<Value>,
+}
+
+impl PjrtExecutor {
+    pub fn new(rt: &Runtime, store: &ParamStore, batch_sizes: &[usize]) -> Result<Self> {
+        let mut exes = Vec::new();
+        for &b in batch_sizes {
+            exes.push((b, rt.load(&format!("bert_fwd_b{b}"))?));
+        }
+        let params: Vec<Value> =
+            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+        Ok(PjrtExecutor { exes, params })
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn classify(&self, ids: &IntTensor, mask: &Tensor, batch_size: usize) -> Result<Vec<i32>> {
+        let exe = self
+            .exes
+            .iter()
+            .find(|(b, _)| *b == batch_size)
+            .map(|(_, e)| e.clone())
+            .ok_or_else(|| {
+                Error::Coordinator(format!("no executable for batch size {batch_size}"))
+            })?;
+        let mut inputs = self.params.clone();
+        inputs.push(Value::I32(ids.clone()));
+        inputs.push(Value::F32(mask.clone()));
+        let logits = exe.run_f32(&inputs)?;
+        Ok(argmax_rows(&logits))
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.iter().map(|(b, _)| *b).collect()
+    }
+}
+
+/// Pure-Rust executor (tests / artifact-free operation).
+pub struct RustExecutor {
+    model: BertModel,
+    sizes: Vec<usize>,
+}
+
+impl RustExecutor {
+    pub fn new(cfg: BertConfig, store: ParamStore, sizes: Vec<usize>) -> Result<Self> {
+        Ok(RustExecutor { model: BertModel::new(cfg, store)?, sizes })
+    }
+}
+
+impl BatchExecutor for RustExecutor {
+    fn classify(&self, ids: &IntTensor, mask: &Tensor, _batch: usize) -> Result<Vec<i32>> {
+        Ok(self.model.predict(ids, mask))
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub max_wait: Duration,
+    pub workers: usize,
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_wait: Duration::from_millis(2), workers: 2, queue_cap: 1024 }
+    }
+}
+
+/// Completed classification.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub label: i32,
+    pub batch_size: usize,
+    pub latency: Duration,
+}
+
+struct Pending {
+    ids: Vec<i32>,
+    mask: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<ClassifyResponse>,
+}
+
+struct WorkBatch {
+    requests: Vec<Pending>,
+    size: usize,
+}
+
+enum Ingress {
+    Req(Box<Pending>),
+    Shutdown,
+}
+
+/// A running server: ingress queue + batcher + workers.
+pub struct Server {
+    tx: mpsc::SyncSender<Ingress>,
+    tokenizer: HashTokenizer,
+    metrics: Arc<Mutex<Metrics>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the pipeline.
+    pub fn start(
+        executor: Arc<dyn BatchExecutor>,
+        tokenizer: HashTokenizer,
+        cfg: ServeConfig,
+    ) -> Server {
+        let policy = BatchPolicy::new(executor.batch_sizes(), cfg.max_wait);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let (tx, rx) = mpsc::sync_channel::<Ingress>(cfg.queue_cap);
+        // bounded work queue: when all workers are busy the batcher blocks
+        // here, its staged queue fills, then the ingress channel fills, and
+        // `try_submit` starts shedding — backpressure end to end
+        let (work_tx, work_rx) = mpsc::sync_channel::<WorkBatch>(cfg.workers.max(1));
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let max_len = tokenizer.max_len;
+
+        // ---- batcher thread
+        let batcher = {
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("sq-batcher".into())
+                .spawn(move || {
+                    let mut queue: Vec<Pending> = Vec::new();
+                    let mut open = true;
+                    // backpressure: stop draining the ingress channel once
+                    // enough work is staged — under overload the bounded
+                    // channel then fills and `try_submit` sheds instead of
+                    // queueing unboundedly (keeps tail latency finite)
+                    let stage_cap = 4 * policy.max_batch();
+                    while open || !queue.is_empty() {
+                        // drain what we can without blocking
+                        while queue.len() < stage_cap {
+                            match rx.try_recv() {
+                                Ok(Ingress::Req(p)) => queue.push(*p),
+                                Ok(Ingress::Shutdown) => open = false,
+                                Err(mpsc::TryRecvError::Empty) => break,
+                                Err(mpsc::TryRecvError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
+                            }
+                        }
+                        let oldest = queue
+                            .first()
+                            .map(|p| p.submitted.elapsed())
+                            .unwrap_or(Duration::ZERO);
+                        let force_flush = !open && !queue.is_empty();
+                        let decision = if force_flush {
+                            Some((queue.len().min(policy.max_batch()), {
+                                let take = queue.len().min(policy.max_batch());
+                                policy.fit(take)
+                            }))
+                        } else {
+                            policy.decide(queue.len(), oldest)
+                        };
+                        match decision {
+                            Some((take, size)) => {
+                                let requests: Vec<Pending> = queue.drain(..take).collect();
+                                let _ = metrics; // metrics recorded by workers
+                                if work_tx.send(WorkBatch { requests, size }).is_err() {
+                                    break;
+                                }
+                            }
+                            None => {
+                                if open {
+                                    // nap briefly; granularity ≪ max_wait
+                                    std::thread::park_timeout(Duration::from_micros(200));
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn batcher")
+        };
+
+        // ---- worker pool
+        let mut workers = Vec::new();
+        for wi in 0..cfg.workers.max(1) {
+            let work_rx = work_rx.clone();
+            let executor = executor.clone();
+            let metrics = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sq-worker-{wi}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let guard = work_rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(WorkBatch { requests, size }) = batch else { break };
+                        let real = requests.len();
+                        // pad to the compiled shape with zero-mask rows
+                        let mut ids = vec![0i32; size * max_len];
+                        let mut mask = vec![0.0f32; size * max_len];
+                        for (i, p) in requests.iter().enumerate() {
+                            ids[i * max_len..(i + 1) * max_len].copy_from_slice(&p.ids);
+                            mask[i * max_len..(i + 1) * max_len].copy_from_slice(&p.mask);
+                        }
+                        let ids = IntTensor::new(&[size, max_len], ids).unwrap();
+                        let mask = Tensor::new(&[size, max_len], mask).unwrap();
+                        let t0 = Instant::now();
+                        let labels = match executor.classify(&ids, &mask, size) {
+                            Ok(l) => l,
+                            Err(e) => {
+                                log::error!("worker: classify failed: {e}");
+                                continue;
+                            }
+                        };
+                        let exec = t0.elapsed();
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.record_batch(real, size, exec);
+                            for p in &requests {
+                                m.record_done(p.submitted.elapsed());
+                            }
+                        }
+                        for (i, p) in requests.into_iter().enumerate() {
+                            let _ = p.resp.send(ClassifyResponse {
+                                label: labels[i],
+                                batch_size: size,
+                                latency: p.submitted.elapsed(),
+                            });
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Server { tx, tokenizer, metrics, batcher: Some(batcher), workers }
+    }
+
+    /// Non-blocking submit with admission control: rejects immediately when
+    /// the ingress queue is at capacity (load shedding; the shed count is
+    /// visible in [`Metrics`]). Use under open-loop load (trace replay).
+    pub fn try_submit(&self, text: &str) -> Result<mpsc::Receiver<ClassifyResponse>> {
+        let (ids, mask) = self.tokenizer.encode(text);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Ingress::Req(Box::new(Pending {
+            ids,
+            mask,
+            submitted: Instant::now(),
+            resp: rtx,
+        }));
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(rrx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.lock().unwrap().shed += 1;
+                Err(Error::Coordinator("overloaded: ingress queue full".into()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("server is shut down".into()))
+            }
+        }
+    }
+
+    /// Submit a text; returns a receiver for the response.
+    pub fn submit(&self, text: &str) -> Result<mpsc::Receiver<ClassifyResponse>> {
+        let (ids, mask) = self.tokenizer.encode(text);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Ingress::Req(Box::new(Pending {
+                ids,
+                mask,
+                submitted: Instant::now(),
+                resp: rtx,
+            })))
+            .map_err(|_| Error::Coordinator("server is shut down".into()))?;
+        Ok(rrx)
+    }
+
+    /// Blocking classify convenience.
+    pub fn classify(&self, text: &str) -> Result<ClassifyResponse> {
+        self.submit(text)?
+            .recv()
+            .map_err(|_| Error::Coordinator("response channel closed".into()))
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) -> Metrics {
+        let _ = self.tx.send(Ingress::Shutdown);
+        if let Some(b) = self.batcher.take() {
+            b.thread().unpark();
+            let _ = b.join();
+        }
+        // dropping the work sender (inside batcher) ends workers
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        Arc::try_unwrap(std::mem::take(&mut self.metrics))
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Ingress::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rust_executor() -> (Arc<dyn BatchExecutor>, HashTokenizer) {
+        let cfg = BertConfig {
+            vocab_size: 512,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 16,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+        let ex = RustExecutor::new(cfg, store, vec![1, 4, 8]).unwrap();
+        (Arc::new(ex), tok)
+    }
+
+    #[test]
+    fn serve_roundtrip() {
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            ServeConfig { max_wait: Duration::from_millis(1), workers: 2, queue_cap: 64 },
+        );
+        let r = server.classify("hello there friend").unwrap();
+        assert!((0..6).contains(&r.label));
+        let m = server.shutdown();
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn serve_many_batches() {
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            ServeConfig { max_wait: Duration::from_millis(1), workers: 2, queue_cap: 256 },
+        );
+        let rxs: Vec<_> =
+            (0..50).map(|i| server.submit(&format!("message number {i}")).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!((0..6).contains(&r.label));
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed, 50);
+        assert!(m.real_slots >= 50);
+        // under burst load, some batching must have happened
+        let batched: usize = m
+            .batches_by_size
+            .iter()
+            .filter(|(&s, _)| s > 1)
+            .map(|(_, &c)| c)
+            .sum();
+        assert!(batched > 0, "expected batched dispatches: {:?}", m.batches_by_size);
+    }
+
+    #[test]
+    fn padding_is_inert() {
+        // a request classified alone == classified inside a padded batch
+        let (ex, tok) = rust_executor();
+        let (ids, mask) = tok.encode("the exact same text");
+        let one = {
+            let ids = IntTensor::new(&[1, 16], ids.clone()).unwrap();
+            let mask = Tensor::new(&[1, 16], mask.clone()).unwrap();
+            ex.classify(&ids, &mask, 1).unwrap()[0]
+        };
+        let padded = {
+            let mut idp = ids.clone();
+            let mut mp = mask.clone();
+            idp.extend(vec![0i32; 3 * 16]);
+            mp.extend(vec![0.0f32; 3 * 16]);
+            let ids = IntTensor::new(&[4, 16], idp).unwrap();
+            let mask = Tensor::new(&[4, 16], mp).unwrap();
+            ex.classify(&ids, &mask, 4).unwrap()[0]
+        };
+        assert_eq!(one, padded);
+    }
+
+    #[test]
+    fn admission_control_sheds_on_overload() {
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            // tiny queue + long deadline: the queue must fill
+            ServeConfig { max_wait: Duration::from_secs(60), workers: 1, queue_cap: 4 },
+        );
+        let mut accepted = 0usize;
+        let mut shed = 0usize;
+        let mut rxs = Vec::new();
+        // flood faster than the batcher's 200µs drain cadence until the
+        // 4-slot queue rejects (bounded to keep the test finite)
+        for i in 0..10_000 {
+            match server.try_submit(&format!("req {i}")) {
+                Ok(rx) => {
+                    accepted += 1;
+                    rxs.push(rx);
+                }
+                Err(_) => shed += 1,
+            }
+            if shed > 0 && accepted >= 4 {
+                break;
+            }
+        }
+        assert!(shed > 0, "expected shedding with queue_cap=4");
+        assert!(accepted >= 4);
+        let m = server.shutdown();
+        assert_eq!(m.shed, shed);
+        assert_eq!(m.completed, accepted);
+    }
+
+    #[test]
+    fn shutdown_flushes_queue() {
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            // very long deadline: only the shutdown flush can dispatch these
+            ServeConfig { max_wait: Duration::from_secs(60), workers: 1, queue_cap: 64 },
+        );
+        let rxs: Vec<_> = (0..3).map(|_| server.submit("drain me").unwrap()).collect();
+        std::thread::sleep(Duration::from_millis(10));
+        let m = server.shutdown();
+        assert_eq!(m.completed, 3);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Tokenized mini-batching for text datasets.
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+use super::synth_text::TextDataset;
+use super::tokenizer::HashTokenizer;
+
+/// One tokenized batch, ready to feed the BERT executables / executor.
+#[derive(Debug, Clone)]
+pub struct TextBatch {
+    /// i32[B, L]
+    pub ids: IntTensor,
+    /// f32[B, L]
+    pub mask: Tensor,
+    /// i32[B]
+    pub labels: IntTensor,
+}
+
+/// Pre-tokenized dataset + epoch shuffling, emitting fixed-size batches.
+pub struct TextBatcher {
+    ids: Vec<Vec<i32>>,
+    masks: Vec<Vec<f32>>,
+    labels: Vec<i32>,
+    pub batch_size: usize,
+    pub max_len: usize,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl TextBatcher {
+    pub fn new(data: &TextDataset, tok: &HashTokenizer, batch_size: usize) -> Self {
+        let mut ids = Vec::with_capacity(data.len());
+        let mut masks = Vec::with_capacity(data.len());
+        for t in &data.texts {
+            let (i, m) = tok.encode(t);
+            ids.push(i);
+            masks.push(m);
+        }
+        TextBatcher {
+            ids,
+            masks,
+            labels: data.labels.clone(),
+            batch_size,
+            max_len: tok.max_len,
+            order: (0..data.len()).collect(),
+            cursor: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Shuffle the visit order (call between epochs).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch, cycling (wrapping) over the dataset.
+    pub fn next_batch(&mut self) -> TextBatch {
+        let b = self.batch_size;
+        let l = self.max_len;
+        let mut ids = Vec::with_capacity(b * l);
+        let mut mask = Vec::with_capacity(b * l);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let idx = self.order[self.cursor];
+            self.cursor = (self.cursor + 1) % self.order.len();
+            ids.extend_from_slice(&self.ids[idx]);
+            mask.extend_from_slice(&self.masks[idx]);
+            labels.push(self.labels[idx]);
+        }
+        TextBatch {
+            ids: IntTensor::new(&[b, l], ids).unwrap(),
+            mask: Tensor::new(&[b, l], mask).unwrap(),
+            labels: IntTensor::new(&[b], labels).unwrap(),
+        }
+    }
+
+    /// All batches covering the dataset once in order, padding the tail by
+    /// wrapping; returns (batches, true sample count) for exact accuracy.
+    pub fn epoch_batches(&mut self) -> (Vec<TextBatch>, usize) {
+        let n = self.len();
+        self.cursor = 0;
+        self.order = (0..n).collect();
+        let nb = n.div_ceil(self.batch_size);
+        let mut out = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            out.push(self.next_batch());
+        }
+        (out, n)
+    }
+}
+
+/// Tokenize the whole dataset into eval batches of `batch_size` (tail wraps);
+/// returns (batches, true sample count).
+pub fn pad_to_batches(
+    data: &TextDataset,
+    tok: &HashTokenizer,
+    batch_size: usize,
+) -> (Vec<TextBatch>, usize) {
+    let mut b = TextBatcher::new(data, tok, batch_size);
+    b.epoch_batches()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::emotion;
+
+    #[test]
+    fn batch_shapes() {
+        let (_, test) = emotion::load_small(0, 10, 50);
+        let tok = HashTokenizer::new(8192, 64);
+        let mut b = TextBatcher::new(&test, &tok, 8);
+        let batch = b.next_batch();
+        assert_eq!(batch.ids.shape(), &[8, 64]);
+        assert_eq!(batch.mask.shape(), &[8, 64]);
+        assert_eq!(batch.labels.shape(), &[8]);
+    }
+
+    #[test]
+    fn epoch_covers_everything_once() {
+        let (_, test) = emotion::load_small(0, 10, 21);
+        let tok = HashTokenizer::new(8192, 64);
+        let mut b = TextBatcher::new(&test, &tok, 8);
+        let (batches, n) = b.epoch_batches();
+        assert_eq!(n, 21);
+        assert_eq!(batches.len(), 3); // 8 + 8 + 5(+3 wrapped)
+        // first 21 labels across batches match the dataset order
+        let flat: Vec<i32> = batches.iter().flat_map(|b| b.labels.data().to_vec()).collect();
+        assert_eq!(&flat[..21], &test.labels[..]);
+    }
+
+    #[test]
+    fn shuffle_changes_order_but_not_content() {
+        let (_, test) = emotion::load_small(0, 10, 64);
+        let tok = HashTokenizer::new(8192, 64);
+        let mut b = TextBatcher::new(&test, &tok, 64);
+        let before = b.next_batch();
+        let mut rng = Rng::new(1);
+        b.shuffle(&mut rng);
+        let after = b.next_batch();
+        assert_ne!(before.labels.data(), after.labels.data());
+        let mut x = before.labels.data().to_vec();
+        let mut y = after.labels.data().to_vec();
+        x.sort();
+        y.sort();
+        assert_eq!(x, y);
+    }
+}

@@ -1,0 +1,120 @@
+//! Synthetic emotion-recognition corpus (stand-in for DAIR.AI / CARER,
+//! Saravia et al. 2018 — 6 classes; the paper evaluates on its 2000-sample
+//! test split).
+
+use crate::util::rng::Rng;
+
+use super::synth_text::{generate, CorpusSpec, TextDataset};
+
+pub const NUM_CLASSES: usize = 6;
+pub const TRAIN_SIZE: usize = 16_000;
+pub const TEST_SIZE: usize = 2_000;
+
+const CLASS_NAMES: [&str; 6] = ["sadness", "joy", "love", "anger", "fear", "surprise"];
+
+const SADNESS: &[&str] = &[
+    "sad", "lonely", "depressed", "miserable", "crying", "tears", "grief", "hopeless",
+    "heartbroken", "gloomy", "sorrow", "hurt", "empty", "lost", "awful", "down", "blue",
+    "devastated", "disappointed", "regret", "mourning", "despair", "unhappy", "broken",
+];
+const JOY: &[&str] = &[
+    "happy", "joyful", "excited", "wonderful", "amazing", "great", "delighted", "smile",
+    "laughing", "cheerful", "fantastic", "thrilled", "fun", "glad", "awesome", "bright",
+    "celebrate", "enjoying", "pleased", "sunshine", "blessed", "content", "ecstatic", "yay",
+];
+const LOVE: &[&str] = &[
+    "love", "loving", "adore", "sweet", "caring", "darling", "affection", "romantic",
+    "cherish", "devoted", "tender", "warmth", "heart", "beloved", "fond", "passion",
+    "hug", "kiss", "soulmate", "dear", "gentle", "admire", "treasure", "valentine",
+];
+const ANGER: &[&str] = &[
+    "angry", "furious", "mad", "rage", "annoyed", "irritated", "hate", "outraged",
+    "frustrated", "livid", "disgusted", "hostile", "bitter", "resentful", "fuming",
+    "insulted", "offended", "pissed", "temper", "yelling", "shouting", "grudge", "cross", "irate",
+];
+const FEAR: &[&str] = &[
+    "afraid", "scared", "terrified", "anxious", "nervous", "panic", "frightened", "worried",
+    "dread", "horror", "alarmed", "uneasy", "shaking", "trembling", "paranoid", "threatened",
+    "insecure", "timid", "phobia", "startled", "creepy", "danger", "helpless", "tense",
+];
+const SURPRISE: &[&str] = &[
+    "surprised", "shocked", "astonished", "amazed", "stunned", "unexpected", "sudden",
+    "unbelievable", "incredible", "speechless", "wow", "startling", "curious", "strange",
+    "weird", "odd", "bizarre", "remarkable", "extraordinary", "mysterious", "impressed",
+    "overwhelmed", "funny", "dazed",
+];
+
+fn spec() -> CorpusSpec<'static> {
+    const WORDS: [&[&str]; 6] = [SADNESS, JOY, LOVE, ANGER, FEAR, SURPRISE];
+    CorpusSpec {
+        name: "emotion",
+        class_names: &CLASS_NAMES,
+        class_words: &WORDS,
+        signal: 0.17,
+        len_range: (8, 28),
+        filler: 1600,
+        priors: &[],
+        label_noise: 0.06,
+    }
+}
+
+/// (train, test) splits; deterministic in `seed`. Test uses an independent
+/// RNG stream so changing TRAIN_SIZE never changes the test set.
+pub fn load(seed: u64) -> (TextDataset, TextDataset) {
+    let mut root = Rng::new(seed);
+    let mut train_rng = root.fork(1);
+    let mut test_rng = root.fork(2);
+    let s = spec();
+    let mut train = generate(&s, TRAIN_SIZE, &mut train_rng);
+    train.name = "emotion-train".into();
+    let mut test = generate(&s, TEST_SIZE, &mut test_rng);
+    test.name = "emotion-test".into();
+    (train, test)
+}
+
+/// Smaller split for unit/integration tests.
+pub fn load_small(seed: u64, train_n: usize, test_n: usize) -> (TextDataset, TextDataset) {
+    let mut root = Rng::new(seed);
+    let mut train_rng = root.fork(1);
+    let mut test_rng = root.fork(2);
+    let s = spec();
+    (generate(&s, train_n, &mut train_rng), generate(&s, test_n, &mut test_rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper_protocol() {
+        let (train, test) = load(0);
+        assert_eq!(train.len(), TRAIN_SIZE);
+        assert_eq!(test.len(), TEST_SIZE);
+        assert_eq!(train.num_classes, 6);
+    }
+
+    #[test]
+    fn roughly_balanced() {
+        let (_, test) = load(0);
+        for c in test.class_histogram() {
+            assert!(c > 230 && c < 440, "histogram skewed: {c}");
+        }
+    }
+
+    #[test]
+    fn train_and_test_disjoint_streams() {
+        let (train, test) = load(0);
+        assert_ne!(train.texts[0], test.texts[0]);
+        // changing nothing reproduces identical data
+        let (train2, test2) = load(0);
+        assert_eq!(train.texts, train2.texts);
+        assert_eq!(test.texts, test2.texts);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _) = load(0);
+        let (b, _) = load(1);
+        assert_ne!(a.texts, b.texts);
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthetic 16×16 grayscale image workload for the CNN / conv-splitting
+//! path (Figure 3). Four structurally distinct classes plus noise.
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+pub const IMAGE: usize = 16;
+pub const NUM_CLASSES: usize = 4;
+
+/// A labelled image dataset in NCHW layout.
+#[derive(Debug, Clone)]
+pub struct ImageDataset {
+    /// f32[N, 1, 16, 16]
+    pub images: Tensor,
+    /// i32[N]
+    pub labels: IntTensor,
+}
+
+impl ImageDataset {
+    pub fn len(&self) -> usize {
+        self.images.shape()[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slice a contiguous batch `[start, start+b)`, wrapping around.
+    pub fn batch(&self, start: usize, b: usize) -> (Tensor, IntTensor) {
+        let n = self.len();
+        let hw = IMAGE * IMAGE;
+        let mut img = Vec::with_capacity(b * hw);
+        let mut lab = Vec::with_capacity(b);
+        for i in 0..b {
+            let idx = (start + i) % n;
+            img.extend_from_slice(&self.images.data()[idx * hw..(idx + 1) * hw]);
+            lab.push(self.labels.data()[idx]);
+        }
+        (
+            Tensor::new(&[b, 1, IMAGE, IMAGE], img).unwrap(),
+            IntTensor::new(&[b], lab).unwrap(),
+        )
+    }
+}
+
+fn draw(class: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut px = vec![0.0f32; IMAGE * IMAGE];
+    match class {
+        0 => {
+            // horizontal stripes, random phase/period
+            let period = rng.range(2, 5);
+            let phase = rng.below(period);
+            for y in 0..IMAGE {
+                let v = if (y + phase) % period < period / 2 + 1 { 1.0 } else { -1.0 };
+                for x in 0..IMAGE {
+                    px[y * IMAGE + x] = v;
+                }
+            }
+        }
+        1 => {
+            // vertical stripes
+            let period = rng.range(2, 5);
+            let phase = rng.below(period);
+            for y in 0..IMAGE {
+                for x in 0..IMAGE {
+                    px[y * IMAGE + x] = if (x + phase) % period < period / 2 + 1 { 1.0 } else { -1.0 };
+                }
+            }
+        }
+        2 => {
+            // checkerboard
+            let cell = rng.range(2, 4);
+            for y in 0..IMAGE {
+                for x in 0..IMAGE {
+                    px[y * IMAGE + x] = if (x / cell + y / cell) % 2 == 0 { 1.0 } else { -1.0 };
+                }
+            }
+        }
+        _ => {
+            // centered gaussian blob with random center/width
+            let cx = rng.range(4, 12) as f32;
+            let cy = rng.range(4, 12) as f32;
+            let s = rng.range_f64(2.0, 4.0) as f32;
+            for y in 0..IMAGE {
+                for x in 0..IMAGE {
+                    let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                    px[y * IMAGE + x] = 2.0 * (-d2 / (2.0 * s * s)).exp() - 0.5;
+                }
+            }
+        }
+    }
+    // additive noise
+    for p in &mut px {
+        *p += rng.normal_f32(0.0, 0.25);
+    }
+    px
+}
+
+/// Generate `n` labelled images, classes uniform.
+pub fn generate(n: usize, rng: &mut Rng) -> ImageDataset {
+    let mut img = Vec::with_capacity(n * IMAGE * IMAGE);
+    let mut lab = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(NUM_CLASSES);
+        img.extend(draw(c, rng));
+        lab.push(c as i32);
+    }
+    ImageDataset {
+        images: Tensor::new(&[n, 1, IMAGE, IMAGE], img).unwrap(),
+        labels: IntTensor::new(&[n], lab).unwrap(),
+    }
+}
+
+/// Standard (train, test) split.
+pub fn load(seed: u64, train_n: usize, test_n: usize) -> (ImageDataset, ImageDataset) {
+    let mut root = Rng::new(seed ^ 0x1111_2222);
+    let mut tr = root.fork(1);
+    let mut te = root.fork(2);
+    (generate(train_n, &mut tr), generate(test_n, &mut te))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let (tr, te) = load(0, 100, 40);
+        assert_eq!(tr.images.shape(), &[100, 1, 16, 16]);
+        assert_eq!(te.len(), 40);
+        let (tr2, _) = load(0, 100, 40);
+        assert_eq!(tr.images.data(), tr2.images.data());
+    }
+
+    #[test]
+    fn classes_distinguishable_by_simple_statistic() {
+        // row-variance separates horizontal stripes from vertical stripes
+        let mut rng = Rng::new(1);
+        let h = draw(0, &mut rng);
+        let v = draw(1, &mut rng);
+        let row_var = |px: &[f32]| -> f32 {
+            (0..IMAGE)
+                .map(|y| {
+                    let row = &px[y * IMAGE..(y + 1) * IMAGE];
+                    let m: f32 = row.iter().sum::<f32>() / IMAGE as f32;
+                    row.iter().map(|&p| (p - m) * (p - m)).sum::<f32>()
+                })
+                .sum()
+        };
+        assert!(row_var(&h) < row_var(&v), "{} vs {}", row_var(&h), row_var(&v));
+    }
+
+    #[test]
+    fn batch_wraps() {
+        let (tr, _) = load(0, 10, 1);
+        let (img, lab) = tr.batch(8, 4); // wraps past the end
+        assert_eq!(img.shape(), &[4, 1, 16, 16]);
+        assert_eq!(lab.data()[2], tr.labels.data()[0]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic data substrates.
+//!
+//! The paper evaluates on DAIR.AI emotion recognition and the UCI SMS Spam
+//! Collection; neither is reachable from this offline sandbox, so
+//! [`emotion`] and [`spam`] generate synthetic equivalents with the same
+//! cardinalities, class structure and evaluation protocol (see DESIGN.md §2
+//! for the substitution argument). [`images`] generates the small vision
+//! workload for the CNN / conv-splitting path.
+
+pub mod batch;
+pub mod emotion;
+pub mod images;
+pub mod spam;
+pub mod synth_text;
+pub mod tokenizer;
+pub mod trace;
+
+pub use batch::{pad_to_batches, TextBatch, TextBatcher};
+pub use synth_text::TextDataset;
+pub use tokenizer::HashTokenizer;

@@ -1,0 +1,114 @@
+//! Deterministic hash tokenizer.
+//!
+//! A fixed-vocabulary, training-free tokenizer: each whitespace-separated,
+//! lowercased word maps to `4 + (fnv1a(word) mod (V−4))`. Ids 0–3 are
+//! reserved (PAD/CLS/SEP/UNK). Collisions are possible and harmless for the
+//! synthetic corpora (the class-signal words are chosen collision-free at
+//! construction time — asserted in tests).
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const UNK: i32 = 3;
+pub const RESERVED: i32 = 4;
+
+/// Stateless hash tokenizer with BERT-style special tokens.
+#[derive(Debug, Clone)]
+pub struct HashTokenizer {
+    pub vocab_size: usize,
+    pub max_len: usize,
+}
+
+impl HashTokenizer {
+    pub fn new(vocab_size: usize, max_len: usize) -> Self {
+        assert!(vocab_size > RESERVED as usize + 1);
+        assert!(max_len >= 3, "need room for CLS + token + SEP");
+        HashTokenizer { vocab_size, max_len }
+    }
+
+    /// FNV-1a 64-bit.
+    fn hash(word: &str) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in word.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Id of a single word.
+    pub fn word_id(&self, word: &str) -> i32 {
+        let lower = word.to_lowercase();
+        let span = (self.vocab_size - RESERVED as usize) as u64;
+        RESERVED + (Self::hash(&lower) % span) as i32
+    }
+
+    /// Encode text to `[CLS] w1 … wn [SEP] PAD…` with an attention mask.
+    /// Truncates to `max_len`; returns (ids, mask) both of length `max_len`.
+    pub fn encode(&self, text: &str) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = Vec::with_capacity(self.max_len);
+        ids.push(CLS);
+        for w in text.split_whitespace() {
+            if ids.len() >= self.max_len - 1 {
+                break;
+            }
+            ids.push(self.word_id(w));
+        }
+        ids.push(SEP);
+        let used = ids.len();
+        let mut mask = vec![1.0f32; used];
+        ids.resize(self.max_len, PAD);
+        mask.resize(self.max_len, 0.0);
+        (ids, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let t = HashTokenizer::new(8192, 64);
+        let a = t.word_id("hello");
+        assert_eq!(a, t.word_id("HELLO"), "case-insensitive");
+        assert!(a >= RESERVED && (a as usize) < 8192);
+    }
+
+    #[test]
+    fn encode_structure() {
+        let t = HashTokenizer::new(8192, 8);
+        let (ids, mask) = t.encode("a b c");
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(ids[4], SEP);
+        assert_eq!(ids[5], PAD);
+        assert_eq!(mask, vec![1., 1., 1., 1., 1., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn truncation() {
+        let t = HashTokenizer::new(8192, 6);
+        let long: String = (0..50).map(|i| format!("w{i} ")).collect();
+        let (ids, mask) = t.encode(&long);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[5], SEP);
+        assert!(mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn empty_text() {
+        let t = HashTokenizer::new(8192, 6);
+        let (ids, mask) = t.encode("");
+        assert_eq!(&ids[..2], &[CLS, SEP]);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 2);
+    }
+
+    #[test]
+    fn distinct_words_mostly_distinct_ids() {
+        let t = HashTokenizer::new(8192, 64);
+        let ids: std::collections::HashSet<i32> =
+            (0..500).map(|i| t.word_id(&format!("word{i}"))).collect();
+        assert!(ids.len() > 480, "too many collisions: {}", ids.len());
+    }
+}

@@ -1,0 +1,160 @@
+//! Serving workload traces: arrival-time generators for the serving bench
+//! (S1). Real request logs are not available offline, so we synthesize the
+//! standard shapes used in serving papers: Poisson (open-loop), bursty
+//! (Markov-modulated) and diurnal-scaled.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// One request arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    /// offset from trace start
+    pub at: Duration,
+    /// index into the request text pool
+    pub text_id: usize,
+}
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceKind {
+    /// Poisson with constant rate (requests/second).
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson: alternates calm/burst.
+    Bursty { calm_rate: f64, burst_rate: f64, mean_phase_s: f64 },
+    /// Sinusoidal rate between lo and hi over `period_s` (diurnal pattern,
+    /// compressed).
+    Diurnal { lo_rate: f64, hi_rate: f64, period_s: f64 },
+}
+
+/// Generate `n` arrivals.
+pub fn generate(kind: TraceKind, n: usize, pool_size: usize, rng: &mut Rng) -> Vec<Arrival> {
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut burst = false;
+    let mut phase_left = 0.0f64;
+    for _ in 0..n {
+        let rate = match kind {
+            TraceKind::Poisson { rate } => rate,
+            TraceKind::Bursty { calm_rate, burst_rate, mean_phase_s } => {
+                if phase_left <= 0.0 {
+                    burst = !burst;
+                    phase_left = exp_sample(rng, 1.0 / mean_phase_s.max(1e-9));
+                }
+                if burst {
+                    burst_rate
+                } else {
+                    calm_rate
+                }
+            }
+            TraceKind::Diurnal { lo_rate, hi_rate, period_s } => {
+                let phase = (t / period_s) * std::f64::consts::TAU;
+                lo_rate + (hi_rate - lo_rate) * 0.5 * (1.0 - phase.cos())
+            }
+        };
+        let gap = exp_sample(rng, rate.max(1e-9));
+        t += gap;
+        phase_left -= gap;
+        out.push(Arrival {
+            at: Duration::from_secs_f64(t),
+            text_id: rng.below(pool_size.max(1)),
+        });
+    }
+    out
+}
+
+/// Exponential inter-arrival sample with the given rate.
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    let u = loop {
+        let u = rng.f64();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    -u.ln() / rate
+}
+
+/// Trace statistics for reporting.
+pub fn summarize(arrivals: &[Arrival]) -> (f64, f64) {
+    if arrivals.len() < 2 {
+        return (0.0, 0.0);
+    }
+    let total = arrivals.last().unwrap().at.as_secs_f64();
+    let mean_rate = arrivals.len() as f64 / total.max(1e-9);
+    // peak rate over 100ms windows
+    let mut peak = 0usize;
+    let mut lo = 0usize;
+    for hi in 0..arrivals.len() {
+        while arrivals[hi].at - arrivals[lo].at > Duration::from_millis(100) {
+            lo += 1;
+        }
+        peak = peak.max(hi - lo + 1);
+    }
+    (mean_rate, peak as f64 * 10.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Rng::new(0);
+        let tr = generate(TraceKind::Poisson { rate: 100.0 }, 5000, 64, &mut rng);
+        assert_eq!(tr.len(), 5000);
+        let (mean, _) = summarize(&tr);
+        assert!((mean - 100.0).abs() < 10.0, "mean rate {mean}");
+        // arrivals strictly increasing
+        assert!(tr.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn bursty_has_higher_peak_than_poisson() {
+        let mut rng = Rng::new(1);
+        let p = generate(TraceKind::Poisson { rate: 50.0 }, 4000, 8, &mut rng);
+        let b = generate(
+            TraceKind::Bursty { calm_rate: 10.0, burst_rate: 500.0, mean_phase_s: 0.5 },
+            4000,
+            8,
+            &mut rng,
+        );
+        let (_, peak_p) = summarize(&p);
+        let (_, peak_b) = summarize(&b);
+        assert!(peak_b > peak_p * 2.0, "poisson peak {peak_p}, bursty peak {peak_b}");
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates() {
+        let mut rng = Rng::new(2);
+        let tr = generate(
+            TraceKind::Diurnal { lo_rate: 20.0, hi_rate: 200.0, period_s: 2.0 },
+            4000,
+            8,
+            &mut rng,
+        );
+        // rate peaks at the middle of each period (phase π) and bottoms at
+        // the period boundary: compare the two quarter-period windows
+        let peak = tr
+            .iter()
+            .filter(|a| {
+                let p = a.at.as_secs_f64() % 2.0;
+                (0.75..1.25).contains(&p)
+            })
+            .count();
+        let trough = tr
+            .iter()
+            .filter(|a| {
+                let p = a.at.as_secs_f64() % 2.0;
+                !(0.25..1.75).contains(&p)
+            })
+            .count();
+        assert!(peak > trough * 2, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(TraceKind::Poisson { rate: 10.0 }, 100, 4, &mut Rng::new(7));
+        let b = generate(TraceKind::Poisson { rate: 10.0 }, 100, 4, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

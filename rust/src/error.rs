@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every subsystem of the crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("quantization error: {0}")]
+    Quant(String),
+
+    #[error("clustering error: {0}")]
+    Clustering(String),
+
+    #[error("model error: {0}")]
+    Model(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("json error at byte {at}: {msg}")]
+    Json { at: usize, msg: String },
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("checkpoint error: {0}")]
+    Checkpoint(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,256 @@
+//! Evaluation harness: PTQ method preparation + accuracy measurement through
+//! either executor (pure-Rust or PJRT).
+
+use crate::baselines;
+use crate::data::batch::TextBatch;
+use crate::error::Result;
+use crate::model::bert::{argmax_rows, BertModel};
+use crate::model::config::BertConfig;
+use crate::model::params::ParamStore;
+use crate::quant::QConfig;
+use crate::runtime::literal::Value;
+use crate::runtime::Runtime;
+use crate::splitquant::{self, ActQuantParams, SplitQuantConfig};
+
+/// Weight-quantization method under evaluation (one Table-1 cell).
+#[derive(Debug, Clone, Copy)]
+pub enum WeightMethod {
+    /// FP32 reference (no quantization).
+    None,
+    /// Per-tensor affine PTQ under a [`QConfig`] (baseline / percentile / mse).
+    Baseline(QConfig),
+    /// SplitQuant (the paper).
+    SplitQuant(SplitQuantConfig),
+    /// Outlier channel splitting (related work [16]).
+    Ocs(QConfig, f64),
+}
+
+impl WeightMethod {
+    pub fn label(&self) -> String {
+        match self {
+            WeightMethod::None => "FP32".into(),
+            WeightMethod::Baseline(c) => format!("baseline {}", c.label()),
+            WeightMethod::SplitQuant(c) => format!("splitquant INT{} k={}", c.bits, c.k),
+            WeightMethod::Ocs(c, r) => format!("ocs {} expand={r}", c.label()),
+        }
+    }
+}
+
+/// Apply a weight PTQ method, returning the eval store (dequantized weights)
+/// and the packed size in bytes when applicable.
+pub fn prepare_store(
+    store: &ParamStore,
+    method: &WeightMethod,
+) -> Result<(ParamStore, Option<usize>)> {
+    let quantizable = splitquant::default_quantizable(store);
+    match method {
+        WeightMethod::None => Ok((store.clone(), None)),
+        WeightMethod::Baseline(cfg) => {
+            let (eval, tensors) =
+                baselines::quantize_store_baseline(store, &quantizable, cfg)?;
+            Ok((eval, Some(baselines::quantized_bytes(&tensors))))
+        }
+        WeightMethod::SplitQuant(cfg) => {
+            let (eval, qmodel) = splitquant::quantize_store(store, &quantizable, cfg)?;
+            Ok((eval, Some(qmodel.quantized_bytes())))
+        }
+        WeightMethod::Ocs(cfg, ratio) => {
+            let eval = baselines::ocs::quantize_store_ocs(store, &quantizable, cfg, *ratio)?;
+            Ok((eval, None))
+        }
+    }
+}
+
+/// Accuracy through the pure-Rust executor. `act` optionally applies
+/// activation fake-quant at every site (calibrated [`ActQuantParams`]).
+pub fn accuracy_rust(
+    cfg: &BertConfig,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+    act: Option<&ActQuantParams>,
+) -> Result<f64> {
+    let model = BertModel::new(cfg.clone(), store.clone())?;
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    for b in batches {
+        let logits = match act {
+            None => model.forward(&b.ids, &b.mask),
+            Some(a) => {
+                let mut hook = a.hook(cfg);
+                model.forward_hooked(&b.ids, &b.mask, Some(&mut hook))
+            }
+        };
+        let preds = argmax_rows(&logits);
+        for (p, l) in preds.iter().zip(b.labels.data()) {
+            if seen >= n {
+                break;
+            }
+            hits += usize::from(p == l);
+            seen += 1;
+        }
+    }
+    Ok(hits as f64 / seen.max(1) as f64)
+}
+
+/// Accuracy through a PJRT forward executable (`bert_fwd_b{B}`); batches must
+/// match the executable's batch size.
+pub fn accuracy_pjrt(
+    rt: &Runtime,
+    exe_name: &str,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+) -> Result<f64> {
+    let exe = rt.load(exe_name)?;
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    for b in batches {
+        let mut inputs: Vec<Value> =
+            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+        inputs.push(Value::I32(b.ids.clone()));
+        inputs.push(Value::F32(b.mask.clone()));
+        let logits = exe.run_f32(&inputs)?;
+        let preds = argmax_rows(&logits);
+        for (p, l) in preds.iter().zip(b.labels.data()) {
+            if seen >= n {
+                break;
+            }
+            hits += usize::from(p == l);
+            seen += 1;
+        }
+    }
+    Ok(hits as f64 / seen.max(1) as f64)
+}
+
+/// Accuracy through the AOT **act-quant** executable, exercising the L1
+/// Pallas fake-quant kernel on the request path (ablation A3).
+pub fn accuracy_pjrt_actquant(
+    rt: &Runtime,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+    act: &ActQuantParams,
+) -> Result<f64> {
+    let batch = batches
+        .first()
+        .map(|b| b.ids.shape()[0])
+        .ok_or_else(|| crate::error::Error::Runtime("no batches".into()))?;
+    let exe = rt.load(&format!("bert_fwd_actquant_b{batch}"))?;
+    let (scales, zps) = act.to_arrays();
+    let (qmin, qmax) = crate::quant::qrange(act.bits);
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    for b in batches {
+        let mut inputs: Vec<Value> =
+            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+        inputs.push(Value::I32(b.ids.clone()));
+        inputs.push(Value::F32(b.mask.clone()));
+        inputs.push(Value::F32(scales.clone()));
+        inputs.push(Value::F32(zps.clone()));
+        inputs.push(Value::F32(crate::tensor::Tensor::scalar(qmin as f32)));
+        inputs.push(Value::F32(crate::tensor::Tensor::scalar(qmax as f32)));
+        let logits = exe.run_f32(&inputs)?;
+        let preds = argmax_rows(&logits);
+        for (p, l) in preds.iter().zip(b.labels.data()) {
+            if seen >= n {
+                break;
+            }
+            hits += usize::from(p == l);
+            seen += 1;
+        }
+    }
+    Ok(hits as f64 / seen.max(1) as f64)
+}
+
+/// Calibrate activation ranges by running FP32 forwards over `batches`
+/// through the pure-Rust executor.
+pub fn calibrate(
+    cfg: &BertConfig,
+    store: &ParamStore,
+    batches: &[TextBatch],
+) -> Result<splitquant::ActCalibrator> {
+    let model = BertModel::new(cfg.clone(), store.clone())?;
+    let mut cal = splitquant::ActCalibrator::new(cfg);
+    for b in batches {
+        let mut hook = cal.hook();
+        model.forward_hooked(&b.ids, &b.mask, Some(&mut hook));
+    }
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{emotion, pad_to_batches, HashTokenizer};
+    use crate::util::rng::Rng;
+
+    fn tiny_setup() -> (BertConfig, ParamStore, Vec<TextBatch>, usize) {
+        let cfg = BertConfig {
+            vocab_size: 512,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 16,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let (_, test) = emotion::load_small(0, 10, 60);
+        let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+        let (batches, n) = pad_to_batches(&test, &tok, 16);
+        (cfg, store, batches, n)
+    }
+
+    #[test]
+    fn untrained_accuracy_near_chance() {
+        let (cfg, store, batches, n) = tiny_setup();
+        let acc = accuracy_rust(&cfg, &store, &batches, n, None).unwrap();
+        assert!(acc < 0.55, "untrained acc {acc}");
+    }
+
+    #[test]
+    fn prepare_store_all_methods_run() {
+        let (_cfg, store, _, _) = tiny_setup();
+        for m in [
+            WeightMethod::None,
+            WeightMethod::Baseline(QConfig::baseline(4)),
+            WeightMethod::Baseline(QConfig::percentile(4, 99.0)),
+            WeightMethod::SplitQuant(SplitQuantConfig::new(4)),
+            WeightMethod::Ocs(QConfig::baseline(4), 0.05),
+        ] {
+            let (eval, bytes) = prepare_store(&store, &m).unwrap();
+            assert_eq!(eval.len(), store.len(), "{}", m.label());
+            if matches!(m, WeightMethod::Baseline(_) | WeightMethod::SplitQuant(_)) {
+                assert!(bytes.unwrap() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn splitquant_bytes_larger_than_baseline_but_bounded() {
+        // paper §6: split adds the cid plane — size grows, but far less than
+        // the naive 3× (we never materialize zeros)
+        let (_cfg, store, _, _) = tiny_setup();
+        let (_, b1) =
+            prepare_store(&store, &WeightMethod::Baseline(QConfig::baseline(2))).unwrap();
+        let (_, b2) =
+            prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(2))).unwrap();
+        let (b1, b2) = (b1.unwrap(), b2.unwrap());
+        assert!(b2 > b1, "split {b2} should exceed baseline {b1}");
+        assert!(b2 < b1 * 3, "split {b2} must stay under 3x baseline {b1}");
+    }
+
+    #[test]
+    fn calibration_then_act_quant_eval() {
+        let (cfg, store, batches, n) = tiny_setup();
+        let cal = calibrate(&cfg, &store, &batches[..1]).unwrap();
+        let act = cal.to_params(8, crate::splitquant::ActQuantMode::Split);
+        let acc_fp = accuracy_rust(&cfg, &store, &batches, n, None).unwrap();
+        let acc_a8 = accuracy_rust(&cfg, &store, &batches, n, Some(&act)).unwrap();
+        // INT8 activations barely move an untrained model's accuracy
+        assert!((acc_fp - acc_a8).abs() < 0.35, "fp {acc_fp} vs a8 {acc_a8}");
+    }
+}

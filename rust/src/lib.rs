@@ -1,0 +1,35 @@
+//! # splitquant
+//!
+//! Production-oriented reproduction of *SplitQuant: Layer Splitting for
+//! Low-Bit Neural Network Quantization* (Song & Lin, EDGE AI 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): Pallas kernels (`python/compile/kernels/`) — fake
+//!   quantization, split-dequant matmul, k-means assignment.
+//! * **L2** (build time): JAX BERT-Tiny / CNN graphs lowered AOT to HLO text
+//!   (`python/compile/model.py`, `aot.py` → `artifacts/`).
+//! * **L3** (this crate): the runtime system. Rust owns parameter storage,
+//!   training orchestration, the SplitQuant transform (k-means layer
+//!   splitting), the post-training-quantization engine, baselines, the
+//!   pure-Rust quantized-inference executor, the PJRT runtime bridge and a
+//!   batched serving coordinator. Python never runs on the request path.
+//!
+//! The public API is organized by subsystem; see `DESIGN.md` for the
+//! paper → module map and `EXPERIMENTS.md` for reproduced results.
+
+pub mod baselines;
+pub mod clustering;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod splitquant;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,463 @@
+//! `splitquant` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train           train BERT-Tiny on a synthetic task via the AOT train step
+//!   train-cnn       train the CNN on synthetic images
+//!   eval            evaluate a checkpoint (optionally PTQ-quantized)
+//!   table1          regenerate the paper's Table 1
+//!   serve           load-test the serving coordinator
+//!   verify-runtime  cross-check pure-Rust executor vs PJRT executables
+//!   info            print manifest / artifact inventory
+//!
+//! (Hand-rolled arg parsing: the offline registry has no clap.)
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
+use splitquant::data::{emotion, images, pad_to_batches, spam, HashTokenizer, TextBatcher};
+use splitquant::error::Result;
+use splitquant::eval::{accuracy_pjrt, accuracy_rust, calibrate, prepare_store, WeightMethod};
+use splitquant::model::{BertModel, CnnModel, ParamStore};
+use splitquant::quant::QConfig;
+use splitquant::report::{pct, pct_delta, Table};
+use splitquant::runtime::Runtime;
+use splitquant::splitquant::{ActQuantMode, SplitQuantConfig};
+use splitquant::train::{LrSchedule, Trainer};
+use splitquant::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny flag parser: `--key value` pairs (bare `--flag` means `true`).
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Flags {
+        let mut m = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(k) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    m.insert(k.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    m.insert(k.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Flags(m)
+    }
+
+    fn get(&self, k: &str, default: &str) -> String {
+        self.0.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn usize(&self, k: &str, default: usize) -> usize {
+        self.0.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64(&self, k: &str, default: u64) -> u64 {
+        self.0.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f32(&self, k: &str, default: f32) -> f32 {
+        self.0.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..]);
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "train-cnn" => cmd_train_cnn(&flags),
+        "eval" => cmd_eval(&flags),
+        "table1" => cmd_table1(&flags),
+        "quantize" => cmd_quantize(&flags),
+        "analyze" => cmd_analyze(&flags),
+        "serve" => cmd_serve(&flags),
+        "verify-runtime" => cmd_verify(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "splitquant — SplitQuant reproduction (Rust + JAX + Pallas)\n\n\
+         usage: splitquant <command> [--flag value]...\n\n\
+         commands:\n\
+           train           --task emotion|spam --steps N --lr F --seed S --out ckpt.bin\n\
+           train-cnn       --steps N --lr F --seed S --out ckpt.bin\n\
+           eval            --task T --ckpt F [--bits B] [--method none|baseline|percentile|entropy|splitquant|ocs]\n\
+                           [--act-quant none|tensor|split] [--engine rust|pjrt]\n\
+           table1          --ckpt-emotion F --ckpt-spam F [--bits 2,4,8]\n\
+           quantize        --ckpt F --bits B [--out F.sqq]  write a packed model\n\
+           analyze         --ckpt F [--bits 2] [--k 3]   per-tensor split analysis\n\
+           serve           --ckpt F --requests N [--workers W]\n\
+           verify-runtime  [--ckpt F]\n\
+           info\n\n\
+         common flags: --artifacts DIR (default ./artifacts)"
+    );
+}
+
+fn artifacts_dir(flags: &Flags) -> PathBuf {
+    PathBuf::from(flags.get("artifacts", "artifacts"))
+}
+
+fn load_task(
+    task: &str,
+    seed: u64,
+) -> Result<(splitquant::data::TextDataset, splitquant::data::TextDataset)> {
+    match task {
+        "emotion" => Ok(emotion::load(seed)),
+        // the spam protocol evaluates on the full training corpus (paper §5)
+        "spam" => {
+            let d = spam::load(seed);
+            Ok((d.clone(), d))
+        }
+        other => Err(splitquant::Error::Model(format!("unknown task {other:?}"))),
+    }
+}
+
+fn cmd_train(flags: &Flags) -> Result<()> {
+    let task = flags.get("task", "emotion");
+    let steps = flags.usize("steps", 400);
+    let seed = flags.u64("seed", 0);
+    let lr = flags.f32("lr", 3e-4);
+    let out = flags.get("out", &format!("checkpoints/{task}.bin"));
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let cfg = rt.manifest.bert.clone();
+
+    let (train_set, _) = load_task(&task, seed)?;
+    println!(
+        "[train] task={task} samples={} classes={} steps={steps} lr={lr}",
+        train_set.len(),
+        train_set.num_classes
+    );
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let mut batcher = TextBatcher::new(&train_set, &tok, 32);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let mut trainer = Trainer::new(&rt, "bert_train_step_b32", store)?;
+    let schedule = LrSchedule::WarmupLinear { peak: lr, warmup: steps / 10 + 1, floor: lr * 0.1 };
+    let t0 = std::time::Instant::now();
+    trainer.train_text(&mut batcher, steps, &schedule, &mut rng, 20, |e| {
+        println!(
+            "  step {:4}  loss {:.4}  lr {:.2e}  ({:?}/step)",
+            e.step, e.loss, e.lr, e.elapsed
+        );
+    })?;
+    println!("[train] done in {:?}; final loss {:.4}", t0.elapsed(), trainer.final_loss(20));
+    trainer.store.save(Path::new(&out))?;
+    println!("[train] checkpoint -> {out}");
+    Ok(())
+}
+
+fn cmd_train_cnn(flags: &Flags) -> Result<()> {
+    let steps = flags.usize("steps", 300);
+    let seed = flags.u64("seed", 0);
+    let lr = flags.f32("lr", 1e-2);
+    let out = flags.get("out", "checkpoints/cnn.bin");
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let ccfg = rt.manifest.cnn.clone();
+    let (train, test) = images::load(seed, 4096, 512);
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let store = ParamStore::init_cnn(&ccfg.param_order(), &mut rng);
+    let mut trainer = Trainer::new(&rt, "cnn_train_step_b32", store)?;
+    let schedule = LrSchedule::WarmupLinear { peak: lr, warmup: 20, floor: lr * 0.1 };
+    let mut cursor = 0usize;
+    let mut first_loss = None;
+    for s in 0..steps {
+        let (imgs, labels) = train.batch(cursor, 32);
+        cursor = (cursor + 32) % train.len();
+        let loss = trainer.step_images(&imgs, &labels, schedule.lr_at(s, steps))?;
+        first_loss.get_or_insert(loss);
+        if (s + 1) % 50 == 0 {
+            println!("  step {:4}  loss {:.4}", s + 1, loss);
+        }
+    }
+    println!(
+        "[train-cnn] first loss {:.4} final loss {:.4}",
+        first_loss.unwrap_or(f32::NAN),
+        trainer.final_loss(20)
+    );
+    let model = CnnModel::new(ccfg, trainer.store.clone())?;
+    let acc = model.accuracy(&test.images, &test.labels);
+    println!("[train-cnn] test accuracy {}", pct(acc));
+    trainer.store.save(Path::new(&out))?;
+    println!("[train-cnn] checkpoint -> {out}");
+    Ok(())
+}
+
+fn parse_method(flags: &Flags, bits: u8) -> WeightMethod {
+    match flags.get("method", "none").as_str() {
+        "none" => WeightMethod::None,
+        "baseline" => WeightMethod::Baseline(QConfig::baseline(bits)),
+        "percentile" => WeightMethod::Baseline(QConfig::percentile(bits, 99.0)),
+        "entropy" => WeightMethod::Baseline(QConfig {
+            observer: splitquant::quant::Observer::Entropy { bins: 512 },
+            ..QConfig::baseline(bits)
+        }),
+        "splitquant" => WeightMethod::SplitQuant(SplitQuantConfig::new(bits)),
+        "ocs" => WeightMethod::Ocs(QConfig::baseline(bits), 0.05),
+        other => {
+            eprintln!("unknown method {other:?}, using none");
+            WeightMethod::None
+        }
+    }
+}
+
+fn cmd_eval(flags: &Flags) -> Result<()> {
+    let task = flags.get("task", "emotion");
+    let ckpt = flags.get("ckpt", &format!("checkpoints/{task}.bin"));
+    let bits = flags.usize("bits", 8) as u8;
+    let engine = flags.get("engine", "rust");
+    let seed = flags.u64("seed", 0);
+    let method = parse_method(flags, bits);
+
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let cfg = rt.manifest.bert.clone();
+    let store = ParamStore::load(Path::new(&ckpt))?;
+    store.check_order(&cfg.param_order())?;
+    let (_, test_set) = load_task(&task, seed)?;
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, n) = pad_to_batches(&test_set, &tok, 32);
+
+    let (eval_store, bytes) = prepare_store(&store, &method)?;
+    let act_mode = flags.get("act-quant", "none");
+    let act_params = if act_mode != "none" {
+        let cal = calibrate(&cfg, &store, &batches[..batches.len().min(8)])?;
+        let mode =
+            if act_mode == "split" { ActQuantMode::Split } else { ActQuantMode::PerTensor };
+        Some(cal.to_params(bits, mode))
+    } else {
+        None
+    };
+
+    let t0 = std::time::Instant::now();
+    let acc = match (engine.as_str(), &act_params) {
+        ("pjrt", Some(a)) => {
+            splitquant::eval::accuracy_pjrt_actquant(&rt, &eval_store, &batches, n, a)?
+        }
+        ("pjrt", None) => accuracy_pjrt(&rt, "bert_fwd_b32", &eval_store, &batches, n)?,
+        _ => accuracy_rust(&cfg, &eval_store, &batches, n, act_params.as_ref())?,
+    };
+    println!(
+        "[eval] task={task} method=[{}] act={act_mode} engine={engine} n={n}",
+        method.label()
+    );
+    if let Some(b) = bytes {
+        println!("[eval] packed weight bytes: {}", splitquant::report::bytes(b));
+    }
+    println!("[eval] accuracy {} ({:?})", pct(acc), t0.elapsed());
+    Ok(())
+}
+
+fn cmd_table1(flags: &Flags) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let cfg = rt.manifest.bert.clone();
+    let bits_list: Vec<u8> =
+        flags.get("bits", "2,4,8").split(',').filter_map(|s| s.parse().ok()).collect();
+    let seed = flags.u64("seed", 0);
+
+    let mut table = Table::new(
+        "Table 1 — BERT-Tiny accuracy, baseline vs SplitQuant",
+        &["Dataset", "FP32", "Bits", "Baseline", "SplitQuant", "Diff"],
+    );
+    for task in ["emotion", "spam"] {
+        let ckpt = flags.get(&format!("ckpt-{task}"), &format!("checkpoints/{task}.bin"));
+        if !Path::new(&ckpt).exists() {
+            eprintln!("[table1] missing checkpoint {ckpt}; run `splitquant train --task {task}`");
+            continue;
+        }
+        let store = ParamStore::load(Path::new(&ckpt))?;
+        let (_, test_set) = load_task(task, seed)?;
+        let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+        let (batches, n) = pad_to_batches(&test_set, &tok, 32);
+        let fp32 = accuracy_rust(&cfg, &store, &batches, n, None)?;
+        for &bits in &bits_list {
+            let (base_store, _) =
+                prepare_store(&store, &WeightMethod::Baseline(QConfig::baseline(bits)))?;
+            let base = accuracy_rust(&cfg, &base_store, &batches, n, None)?;
+            let (sq_store, _) =
+                prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(bits)))?;
+            let sq = accuracy_rust(&cfg, &sq_store, &batches, n, None)?;
+            table.row(vec![
+                task.to_string(),
+                pct(fp32),
+                format!("INT{bits}"),
+                pct(base),
+                pct(sq),
+                pct_delta(sq - base),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_quantize(flags: &Flags) -> Result<()> {
+    let ckpt = flags.get("ckpt", "checkpoints/emotion.bin");
+    let bits = flags.usize("bits", 2) as u8;
+    let out = flags.get("out", &format!("{ckpt}.int{bits}.sqq"));
+    let store = ParamStore::load(Path::new(&ckpt))?;
+    let quantizable = splitquant::splitquant::default_quantizable(&store);
+    let t0 = std::time::Instant::now();
+    let (_, qmodel) = splitquant::splitquant::quantize_store(
+        &store,
+        &quantizable,
+        &SplitQuantConfig::new(bits).with_k(flags.usize("k", 3)),
+    )?;
+    let pm = splitquant::quant::PackedModel::assemble(&store, &qmodel);
+    pm.save(Path::new(&out))?;
+    let fp32 = std::fs::metadata(Path::new(&ckpt))?.len();
+    let packed = std::fs::metadata(Path::new(&out))?.len();
+    println!(
+        "[quantize] INT{bits} SplitQuant: {} quantized tensors in {:?}",
+        qmodel.tensors.len(),
+        t0.elapsed()
+    );
+    println!(
+        "[quantize] {} ({}) -> {} ({}, {:.1}% of FP32)",
+        ckpt,
+        splitquant::report::bytes(fp32 as usize),
+        out,
+        splitquant::report::bytes(packed as usize),
+        100.0 * packed as f64 / fp32 as f64,
+    );
+    Ok(())
+}
+
+fn cmd_analyze(flags: &Flags) -> Result<()> {
+    let ckpt = flags.get("ckpt", "checkpoints/emotion.bin");
+    let bits = flags.usize("bits", 2) as u8;
+    let k = flags.usize("k", 3);
+    let store = ParamStore::load(Path::new(&ckpt))?;
+    let quantizable = splitquant::splitquant::default_quantizable(&store);
+    let cfg = SplitQuantConfig::new(bits).with_k(k);
+    let analyses =
+        splitquant::splitquant::analysis::analyze_store(&store, &quantizable, &cfg)?;
+    println!("{}", splitquant::splitquant::analysis::render_report(&analyses).render());
+    let mean_gain: f64 = analyses.iter().map(|a| a.resolution_gain()).sum::<f64>()
+        / analyses.len().max(1) as f64;
+    println!(
+        "mean resolution gain at INT{bits}, k={k}: {mean_gain:.1}x (paper §4: SplitQuant\n\
+         raises the scaling factor S by shrinking each split's α−β)"
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let ckpt = flags.get("ckpt", "checkpoints/emotion.bin");
+    let requests = flags.usize("requests", 500);
+    let workers = flags.usize("workers", 2);
+    let seed = flags.u64("seed", 0);
+    let rt = Arc::new(Runtime::new(&artifacts_dir(flags))?);
+    let cfg = rt.manifest.bert.clone();
+    let store = ParamStore::load(Path::new(&ckpt))?;
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+
+    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32])?);
+    let server = Server::start(
+        exec,
+        tok,
+        ServeConfig { max_wait: Duration::from_millis(2), workers, queue_cap: 4096 },
+    );
+
+    let (_, test_set) = load_task("emotion", seed)?;
+    println!("[serve] sending {requests} requests...");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| server.submit(&test_set.texts[i % test_set.len()]))
+        .collect::<Result<Vec<_>>>()?;
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.shutdown();
+    println!("[serve] {ok}/{requests} ok in {wall:?}");
+    println!("[serve] {}", m.summary());
+    Ok(())
+}
+
+fn cmd_verify(flags: &Flags) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    let cfg = rt.manifest.bert.clone();
+    let seed = flags.u64("seed", 7);
+    let mut rng = Rng::new(seed);
+    let store = match flags.0.get("ckpt") {
+        Some(p) => ParamStore::load(Path::new(p))?,
+        None => ParamStore::init_bert(&cfg.param_order(), &mut rng),
+    };
+    let (_, test_set) = emotion::load_small(seed, 10, 64);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, _) = pad_to_batches(&test_set, &tok, 32);
+
+    let model = BertModel::new(cfg.clone(), store.clone())?;
+    let exe = rt.load("bert_fwd_b32")?;
+    let mut max_gap = 0.0f32;
+    for b in &batches {
+        let rust_logits = model.forward(&b.ids, &b.mask);
+        let mut inputs: Vec<splitquant::runtime::literal::Value> =
+            store.flat().iter().map(|t| t.clone().into()).collect();
+        inputs.push(b.ids.clone().into());
+        inputs.push(b.mask.clone().into());
+        let pjrt_logits = exe.run_f32(&inputs)?;
+        max_gap = max_gap.max(rust_logits.max_abs_diff(&pjrt_logits));
+    }
+    println!("[verify] max |rust - pjrt| over {} batches: {max_gap:.3e}", batches.len());
+    if max_gap > 1e-3 {
+        return Err(splitquant::Error::Runtime(format!(
+            "executor divergence {max_gap} exceeds 1e-3"
+        )));
+    }
+    println!("[verify] OK — executors agree");
+    Ok(())
+}
+
+fn cmd_info(flags: &Flags) -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir(flags))?;
+    println!("platform: {}", rt.platform());
+    println!("bert: {:?}", rt.manifest.bert);
+    let mut t = Table::new("artifacts", &["executable", "inputs", "outputs", "file"]);
+    for (name, spec) in &rt.manifest.executables {
+        t.row(vec![
+            name.clone(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+            spec.file.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! Pure-Rust BERT-Tiny executor.
+//!
+//! Runs the exact computation of the L2 JAX graph (`python/compile/model.py`)
+//! on a [`ParamStore`] — used for the quantization accuracy sweeps (Table 1)
+//! where thousands of forward passes over perturbed weights are needed and
+//! round-tripping through PJRT per configuration would dominate.
+//!
+//! Activation hooks fire at the same sites as the AOT act-quant graph
+//! (`BertConfig::act_sites`), enabling calibration (range recording) and
+//! activation fake-quant (per-tensor or SplitQuant chunked) without new
+//! graphs.
+
+use crate::error::Result;
+use crate::tensor::ops;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::config::BertConfig;
+use super::params::ParamStore;
+
+/// Observer/mutator invoked at each activation site: `(site_index, tensor)`.
+/// The tensor is `(B·L, width)` or `(B, width)` 2-D; the hook may mutate it
+/// in place (fake-quant) or just record statistics (calibration).
+pub type ActHook<'a> = &'a mut dyn FnMut(usize, &mut Tensor);
+
+/// BERT-Tiny with owned parameters.
+#[derive(Debug, Clone)]
+pub struct BertModel {
+    pub cfg: BertConfig,
+    pub params: ParamStore,
+}
+
+impl BertModel {
+    pub fn new(cfg: BertConfig, params: ParamStore) -> Result<Self> {
+        params.check_order(&cfg.param_order())?;
+        Ok(BertModel { cfg, params })
+    }
+
+    /// logits f32[B, C].
+    pub fn forward(&self, ids: &IntTensor, mask: &Tensor) -> Tensor {
+        self.forward_hooked(ids, mask, None)
+    }
+
+    /// Forward with an optional activation hook.
+    pub fn forward_hooked(
+        &self,
+        ids: &IntTensor,
+        mask: &Tensor,
+        mut hook: Option<ActHook<'_>>,
+    ) -> Tensor {
+        let cfg = &self.cfg;
+        let p = &self.params;
+        let (b, l) = (ids.shape()[0], ids.shape()[1]);
+        let h = cfg.hidden;
+
+        // embeddings + position + LN
+        let mut x = ops::embedding(p.get("embeddings.token").unwrap(), ids);
+        {
+            let pos = p.get("embeddings.position").unwrap();
+            let xd = x.data_mut();
+            for bi in 0..b {
+                for li in 0..l {
+                    let row = &mut xd[(bi * l + li) * h..(bi * l + li + 1) * h];
+                    for (v, &pv) in row.iter_mut().zip(pos.row(li)) {
+                        *v += pv;
+                    }
+                }
+            }
+        }
+        let mut x = ops::layer_norm(
+            &x.reshape(&[b * l, h]).unwrap(),
+            p.get("embeddings.ln.gamma").unwrap(),
+            p.get("embeddings.ln.beta").unwrap(),
+            cfg.ln_eps,
+        );
+        let mut site = 0usize;
+        fire(&mut hook, &mut site, &mut x);
+
+        for i in 0..cfg.layers {
+            let pre = format!("encoder.{i}");
+            // ---- attention
+            let attn = self.attention(&pre, &x, mask, b, l);
+            let mut res = x.clone();
+            res.add_assign(&attn);
+            x = ops::layer_norm(
+                &res,
+                p.get(&format!("{pre}.attn.ln.gamma")).unwrap(),
+                p.get(&format!("{pre}.attn.ln.beta")).unwrap(),
+                cfg.ln_eps,
+            );
+            fire(&mut hook, &mut site, &mut x);
+
+            // ---- FFN
+            let mut mid = ops::matmul(&x, p.get(&format!("{pre}.ffn.in.weight")).unwrap());
+            ops::add_bias(&mut mid, p.get(&format!("{pre}.ffn.in.bias")).unwrap());
+            let mut mid = ops::gelu(&mid);
+            fire(&mut hook, &mut site, &mut mid);
+            let mut ff = ops::matmul(&mid, p.get(&format!("{pre}.ffn.out.weight")).unwrap());
+            ops::add_bias(&mut ff, p.get(&format!("{pre}.ffn.out.bias")).unwrap());
+            ff.add_assign(&x);
+            x = ops::layer_norm(
+                &ff,
+                p.get(&format!("{pre}.ffn.ln.gamma")).unwrap(),
+                p.get(&format!("{pre}.ffn.ln.beta")).unwrap(),
+                cfg.ln_eps,
+            );
+            fire(&mut hook, &mut site, &mut x);
+        }
+
+        // ---- pooler on the [CLS] token (sequence position 0)
+        let mut cls = Tensor::zeros(&[b, h]);
+        for bi in 0..b {
+            cls.data_mut()[bi * h..(bi + 1) * h]
+                .copy_from_slice(&x.data()[bi * l * h..bi * l * h + h]);
+        }
+        let mut pooled = ops::matmul(&cls, p.get("pooler.weight").unwrap());
+        ops::add_bias(&mut pooled, p.get("pooler.bias").unwrap());
+        let mut pooled = ops::tanh(&pooled);
+        fire(&mut hook, &mut site, &mut pooled);
+
+        let mut logits = ops::matmul(&pooled, p.get("classifier.weight").unwrap());
+        ops::add_bias(&mut logits, p.get("classifier.bias").unwrap());
+        logits
+    }
+
+    /// Multi-head self-attention block (pre-LN residual handled by caller).
+    /// `x` is (B·L, H); returns (B·L, H).
+    fn attention(&self, pre: &str, x: &Tensor, mask: &Tensor, b: usize, l: usize) -> Tensor {
+        let cfg = &self.cfg;
+        let p = &self.params;
+        let h = cfg.hidden;
+        let a = cfg.heads;
+        let hd = cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        let proj = |name: &str| -> Tensor {
+            let mut y = ops::matmul(x, p.get(&format!("{pre}.attn.{name}.weight")).unwrap());
+            ops::add_bias(&mut y, p.get(&format!("{pre}.attn.{name}.bias")).unwrap());
+            y // (B·L, H)
+        };
+        let q = proj("q");
+        let k = proj("k");
+        let v = proj("v");
+
+        let mut ctx = Tensor::zeros(&[b * l, h]);
+        // per (batch, head): gather the head slice contiguously and reuse the
+        // blocked matmul for scores (q·kᵀ) and context (softmax·v) — ~2×
+        // faster than the element-wise loops this replaced (§Perf)
+        let mut qb = Tensor::zeros(&[l, hd]);
+        let mut kt = Tensor::zeros(&[hd, l]);
+        let mut vb = Tensor::zeros(&[l, hd]);
+        for bi in 0..b {
+            let mrow = &mask.data()[bi * l..(bi + 1) * l];
+            for ai in 0..a {
+                let off = ai * hd;
+                for i in 0..l {
+                    let src = (bi * l + i) * h + off;
+                    qb.data_mut()[i * hd..(i + 1) * hd]
+                        .copy_from_slice(&q.data()[src..src + hd]);
+                    vb.data_mut()[i * hd..(i + 1) * hd]
+                        .copy_from_slice(&v.data()[src..src + hd]);
+                    for d in 0..hd {
+                        kt.data_mut()[d * l + i] = k.data()[src + d];
+                    }
+                }
+                let mut scores = ops::matmul(&qb, &kt); // (L, L)
+                {
+                    let sd = scores.data_mut();
+                    for i in 0..l {
+                        for j in 0..l {
+                            sd[i * l + j] =
+                                sd[i * l + j] * scale + (1.0 - mrow[j]) * ops::NEG_INF;
+                        }
+                    }
+                }
+                let sm = ops::softmax_last(&scores);
+                let ctx_head = ops::matmul(&sm, &vb); // (L, hd)
+                for i in 0..l {
+                    let dst = (bi * l + i) * h + off;
+                    ctx.data_mut()[dst..dst + hd]
+                        .copy_from_slice(&ctx_head.data()[i * hd..(i + 1) * hd]);
+                }
+            }
+        }
+
+        let mut out = ops::matmul(&ctx, p.get(&format!("{pre}.attn.out.weight")).unwrap());
+        ops::add_bias(&mut out, p.get(&format!("{pre}.attn.out.bias")).unwrap());
+        out
+    }
+
+    /// Predicted class per example.
+    pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Vec<i32> {
+        argmax_rows(&self.forward(ids, mask))
+    }
+}
+
+/// Row-wise argmax of a logits matrix.
+pub fn argmax_rows(logits: &Tensor) -> Vec<i32> {
+    let (r, c) = logits.as_2d();
+    (0..r)
+        .map(|i| {
+            let row = &logits.data()[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best as i32
+        })
+        .collect()
+}
+
+fn fire(hook: &mut Option<ActHook<'_>>, site: &mut usize, x: &mut Tensor) {
+    if let Some(h) = hook.as_mut() {
+        h(*site, x);
+    }
+    *site += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> (BertConfig, BertModel) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 2,
+            heads: 2,
+            ffn: 32,
+            max_len: 12,
+            num_classes: 4,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let params = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let m = BertModel::new(cfg.clone(), params).unwrap();
+        (cfg, m)
+    }
+
+    fn batch(cfg: &BertConfig, b: usize, seed: u64) -> (IntTensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let l = cfg.max_len;
+        let mut ids = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for bi in 0..b {
+            let len = rng.range(3, l + 1);
+            for li in 0..l {
+                ids[bi * l + li] =
+                    if li < len { rng.below(cfg.vocab_size) as i32 } else { 0 };
+                mask[bi * l + li] = if li < len { 1.0 } else { 0.0 };
+            }
+        }
+        (
+            IntTensor::new(&[b, l], ids).unwrap(),
+            Tensor::new(&[b, l], mask).unwrap(),
+        )
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let (cfg, m) = tiny();
+        let (ids, mask) = batch(&cfg, 5, 1);
+        let logits = m.forward(&ids, &mask);
+        assert_eq!(logits.shape(), &[5, 4]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn padding_tokens_do_not_change_logits() {
+        let (cfg, m) = tiny();
+        let (ids, mask) = batch(&cfg, 4, 2);
+        let l1 = m.forward(&ids, &mask);
+        let mut noisy = ids.clone();
+        for i in 0..noisy.numel() {
+            if mask.data()[i] == 0.0 {
+                noisy.data_mut()[i] = (noisy.data()[i] + 17) % cfg.vocab_size as i32;
+            }
+        }
+        let l2 = m.forward(&noisy, &mask);
+        assert!(l1.max_abs_diff(&l2) < 1e-4, "diff {}", l1.max_abs_diff(&l2));
+    }
+
+    #[test]
+    fn batch_invariance() {
+        // example 0 evaluated alone == evaluated inside a batch
+        let (cfg, m) = tiny();
+        let (ids, mask) = batch(&cfg, 3, 3);
+        let all = m.forward(&ids, &mask);
+        let one_ids = IntTensor::new(&[1, cfg.max_len], ids.data()[..cfg.max_len].to_vec()).unwrap();
+        let one_mask = Tensor::new(&[1, cfg.max_len], mask.data()[..cfg.max_len].to_vec()).unwrap();
+        let single = m.forward(&one_ids, &one_mask);
+        for j in 0..cfg.num_classes {
+            assert!((all.at2(0, j) - single.at2(0, j)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn hooks_fire_at_all_sites_in_order() {
+        let (cfg, m) = tiny();
+        let (ids, mask) = batch(&cfg, 2, 4);
+        let mut seen = Vec::new();
+        let mut widths = Vec::new();
+        let mut hook = |site: usize, t: &mut Tensor| {
+            seen.push(site);
+            widths.push(*t.shape().last().unwrap());
+        };
+        m.forward_hooked(&ids, &mask, Some(&mut hook));
+        let sites = cfg.act_sites();
+        assert_eq!(seen, (0..sites.len()).collect::<Vec<_>>());
+        let expect: Vec<usize> = sites.iter().map(|(_, w)| *w).collect();
+        assert_eq!(widths, expect);
+    }
+
+    #[test]
+    fn hook_mutation_changes_output() {
+        let (cfg, m) = tiny();
+        let (ids, mask) = batch(&cfg, 2, 5);
+        let base = m.forward(&ids, &mask);
+        let mut hook = |_site: usize, t: &mut Tensor| {
+            for v in t.data_mut() {
+                *v = 0.0;
+            }
+        };
+        let zeroed = m.forward_hooked(&ids, &mask, Some(&mut hook));
+        assert!(base.max_abs_diff(&zeroed) > 1e-3);
+        let _ = cfg;
+    }
+
+    #[test]
+    fn argmax() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+}

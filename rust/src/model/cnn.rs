@@ -1,0 +1,84 @@
+//! Pure-Rust CNN executor (eval mode) — the conv-splitting / BN-folding
+//! substrate for Figure 3 and §4.1.
+
+use crate::error::Result;
+use crate::tensor::ops;
+use crate::tensor::{IntTensor, Tensor};
+
+use super::config::CnnConfig;
+use super::params::ParamStore;
+
+/// conv1→BN→ReLU→pool→conv2→BN→ReLU→pool→FC, matching `python/compile/cnn.py`.
+#[derive(Debug, Clone)]
+pub struct CnnModel {
+    pub cfg: CnnConfig,
+    pub params: ParamStore,
+}
+
+impl CnnModel {
+    pub fn new(cfg: CnnConfig, params: ParamStore) -> Result<Self> {
+        params.check_order(&cfg.param_order())?;
+        Ok(CnnModel { cfg, params })
+    }
+
+    /// logits f32[B, C] from images f32[B, 1, 16, 16] (eval-mode BN).
+    pub fn forward(&self, images: &Tensor) -> Tensor {
+        let p = &self.params;
+        let eps = self.cfg.bn_eps;
+        let g = |n: &str| p.get(n).unwrap();
+
+        let x = ops::conv2d_same(images, g("conv1.weight"), g("conv1.bias"));
+        let x = ops::batch_norm_eval(&x, g("bn1.gamma"), g("bn1.beta"), g("bn1.mean"), g("bn1.var"), eps);
+        let x = ops::relu(&x);
+        let x = ops::maxpool2(&x);
+        let x = ops::conv2d_same(&x, g("conv2.weight"), g("conv2.bias"));
+        let x = ops::batch_norm_eval(&x, g("bn2.gamma"), g("bn2.beta"), g("bn2.mean"), g("bn2.var"), eps);
+        let x = ops::relu(&x);
+        let x = ops::maxpool2(&x);
+        let b = x.shape()[0];
+        let flat = x.reshape(&[b, self.cfg.flat()]).unwrap();
+        let mut logits = ops::matmul(&flat, g("fc.weight"));
+        ops::add_bias(&mut logits, g("fc.bias"));
+        logits
+    }
+
+    pub fn predict(&self, images: &Tensor) -> Vec<i32> {
+        super::bert::argmax_rows(&self.forward(images))
+    }
+
+    /// Accuracy over a labelled set.
+    pub fn accuracy(&self, images: &Tensor, labels: &IntTensor) -> f64 {
+        let preds = self.predict(images);
+        let hits = preds.iter().zip(labels.data()).filter(|(p, l)| p == l).count();
+        hits as f64 / labels.numel() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_shape() {
+        let cfg = CnnConfig::default();
+        let mut rng = Rng::new(0);
+        let m = CnnModel::new(cfg.clone(), ParamStore::init_cnn(&cfg.param_order(), &mut rng))
+            .unwrap();
+        let imgs = Tensor::randn(&[3, 1, 16, 16], 0.0, 1.0, &mut rng);
+        let logits = m.forward(&imgs);
+        assert_eq!(logits.shape(), &[3, 4]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn accuracy_on_random_params_is_chancey() {
+        let cfg = CnnConfig::default();
+        let mut rng = Rng::new(1);
+        let m = CnnModel::new(cfg.clone(), ParamStore::init_cnn(&cfg.param_order(), &mut rng))
+            .unwrap();
+        let ds = crate::data::images::generate(200, &mut rng);
+        let acc = m.accuracy(&ds.images, &ds.labels);
+        assert!(acc < 0.6, "untrained model too good: {acc}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Model hyper-parameters and the flat parameter ABI.
+//!
+//! These mirror `python/compile/config.py` exactly; the integration tests
+//! cross-check `param_order()` against `artifacts/manifest.json` so the two
+//! sides can never silently drift.
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// BERT-Tiny configuration (Turc et al. 2019 scale: L=2, H=128, A=2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BertConfig {
+    pub vocab_size: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub max_len: usize,
+    pub num_classes: usize,
+    pub ln_eps: f32,
+}
+
+impl Default for BertConfig {
+    fn default() -> Self {
+        BertConfig {
+            vocab_size: 8192,
+            hidden: 128,
+            layers: 2,
+            heads: 2,
+            ffn: 512,
+            max_len: 64,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        }
+    }
+}
+
+impl BertConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Parse from the manifest's `bert_config` object.
+    pub fn from_manifest(j: &Json) -> Result<Self> {
+        let c = j.get("bert_config")?;
+        Ok(BertConfig {
+            vocab_size: c.get("vocab_size")?.as_usize()?,
+            hidden: c.get("hidden")?.as_usize()?,
+            layers: c.get("layers")?.as_usize()?,
+            heads: c.get("heads")?.as_usize()?,
+            ffn: c.get("ffn")?.as_usize()?,
+            max_len: c.get("max_len")?.as_usize()?,
+            num_classes: c.get("num_classes")?.as_usize()?,
+            ln_eps: c.get("ln_eps")?.as_f64()? as f32,
+        })
+    }
+
+    /// Deterministic flat (name, shape) parameter order — the L2⇄L3 ABI.
+    pub fn param_order(&self) -> Vec<(String, Vec<usize>)> {
+        let (h, f, v, l, c) =
+            (self.hidden, self.ffn, self.vocab_size, self.max_len, self.num_classes);
+        let mut out: Vec<(String, Vec<usize>)> = vec![
+            ("embeddings.token".into(), vec![v, h]),
+            ("embeddings.position".into(), vec![l, h]),
+            ("embeddings.ln.gamma".into(), vec![h]),
+            ("embeddings.ln.beta".into(), vec![h]),
+        ];
+        for i in 0..self.layers {
+            let p = format!("encoder.{i}");
+            for (n, s) in [
+                ("attn.q.weight", vec![h, h]),
+                ("attn.q.bias", vec![h]),
+                ("attn.k.weight", vec![h, h]),
+                ("attn.k.bias", vec![h]),
+                ("attn.v.weight", vec![h, h]),
+                ("attn.v.bias", vec![h]),
+                ("attn.out.weight", vec![h, h]),
+                ("attn.out.bias", vec![h]),
+                ("attn.ln.gamma", vec![h]),
+                ("attn.ln.beta", vec![h]),
+                ("ffn.in.weight", vec![h, f]),
+                ("ffn.in.bias", vec![f]),
+                ("ffn.out.weight", vec![f, h]),
+                ("ffn.out.bias", vec![h]),
+                ("ffn.ln.gamma", vec![h]),
+                ("ffn.ln.beta", vec![h]),
+            ] {
+                out.push((format!("{p}.{n}"), s));
+            }
+        }
+        out.push(("pooler.weight".into(), vec![h, h]));
+        out.push(("pooler.bias".into(), vec![h]));
+        out.push(("classifier.weight".into(), vec![h, c]));
+        out.push(("classifier.bias".into(), vec![c]));
+        out
+    }
+
+    /// Activation fake-quant sites, mirroring `config.act_sites`:
+    /// (name, channel width), in execution order.
+    pub fn act_sites(&self) -> Vec<(String, usize)> {
+        let mut sites = vec![("embeddings.out".to_string(), self.hidden)];
+        for i in 0..self.layers {
+            sites.push((format!("encoder.{i}.attn.out"), self.hidden));
+            sites.push((format!("encoder.{i}.ffn.gelu"), self.ffn));
+            sites.push((format!("encoder.{i}.ffn.out"), self.hidden));
+        }
+        sites.push(("pooler.out".to_string(), self.hidden));
+        sites
+    }
+}
+
+/// Interior split points for positional activation splitting (paper §4.2);
+/// mirrors `config.chunk_bounds`.
+pub fn chunk_bounds(n: usize, parts: usize) -> Vec<usize> {
+    let base = n / parts;
+    let rem = n % parts;
+    let mut bounds = Vec::with_capacity(parts - 1);
+    let mut acc = 0;
+    for i in 0..parts - 1 {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Chunk (start, end) pairs for a width-`n` activation split 3 ways.
+pub fn chunk_spans(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let b = chunk_bounds(n, parts);
+    let mut lo = 0;
+    let mut out = Vec::with_capacity(parts);
+    for &hi in &b {
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out.push((lo, n));
+    out
+}
+
+/// Tiny CNN configuration (conv-splitting / BN-folding path).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CnnConfig {
+    pub image: usize,
+    pub in_ch: usize,
+    pub ch1: usize,
+    pub ch2: usize,
+    pub kernel: usize,
+    pub num_classes: usize,
+    pub bn_eps: f32,
+}
+
+impl Default for CnnConfig {
+    fn default() -> Self {
+        CnnConfig { image: 16, in_ch: 1, ch1: 8, ch2: 16, kernel: 3, num_classes: 4, bn_eps: 1e-5 }
+    }
+}
+
+impl CnnConfig {
+    pub fn flat(&self) -> usize {
+        self.ch2 * (self.image / 4) * (self.image / 4)
+    }
+
+    pub fn from_manifest(j: &Json) -> Result<Self> {
+        let c = j.get("cnn_config")?;
+        Ok(CnnConfig {
+            image: c.get("image")?.as_usize()?,
+            in_ch: c.get("in_ch")?.as_usize()?,
+            ch1: c.get("ch1")?.as_usize()?,
+            ch2: c.get("ch2")?.as_usize()?,
+            kernel: c.get("kernel")?.as_usize()?,
+            num_classes: c.get("num_classes")?.as_usize()?,
+            bn_eps: c.get("bn_eps")?.as_f64()? as f32,
+        })
+    }
+
+    pub fn param_order(&self) -> Vec<(String, Vec<usize>)> {
+        let k = self.kernel;
+        vec![
+            ("conv1.weight".into(), vec![self.ch1, self.in_ch, k, k]),
+            ("conv1.bias".into(), vec![self.ch1]),
+            ("bn1.gamma".into(), vec![self.ch1]),
+            ("bn1.beta".into(), vec![self.ch1]),
+            ("bn1.mean".into(), vec![self.ch1]),
+            ("bn1.var".into(), vec![self.ch1]),
+            ("conv2.weight".into(), vec![self.ch2, self.ch1, k, k]),
+            ("conv2.bias".into(), vec![self.ch2]),
+            ("bn2.gamma".into(), vec![self.ch2]),
+            ("bn2.beta".into(), vec![self.ch2]),
+            ("bn2.mean".into(), vec![self.ch2]),
+            ("bn2.var".into(), vec![self.ch2]),
+            ("fc.weight".into(), vec![self.flat(), self.num_classes]),
+            ("fc.bias".into(), vec![self.num_classes]),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_param_order_size() {
+        let cfg = BertConfig::default();
+        let order = cfg.param_order();
+        assert_eq!(order.len(), 40);
+        let total: usize = order.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(total, 1_470_854); // asserted in python tests too
+    }
+
+    #[test]
+    fn act_sites_count() {
+        let cfg = BertConfig::default();
+        assert_eq!(cfg.act_sites().len(), 3 * cfg.layers + 2);
+        assert_eq!(cfg.act_sites()[0], ("embeddings.out".to_string(), 128));
+    }
+
+    #[test]
+    fn chunk_bounds_match_python() {
+        assert_eq!(chunk_bounds(128, 3), vec![43, 86]);
+        assert_eq!(chunk_bounds(512, 3), vec![171, 342]);
+        assert_eq!(chunk_bounds(3, 3), vec![1, 2]);
+        for n in [3usize, 7, 16, 43, 128, 512, 513] {
+            let spans = chunk_spans(n, 3);
+            assert_eq!(spans.len(), 3);
+            assert_eq!(spans.last().unwrap().1, n);
+            let sizes: Vec<usize> = spans.iter().map(|(a, b)| b - a).collect();
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn cnn_flat_dim() {
+        assert_eq!(CnnConfig::default().flat(), 256);
+        assert_eq!(CnnConfig::default().param_order().len(), 14);
+    }
+
+    #[test]
+    fn config_from_json() {
+        let j = Json::parse(
+            r#"{"bert_config":{"vocab_size":100,"hidden":8,"layers":1,"heads":2,
+                "ffn":16,"max_len":12,"num_classes":3,"ln_eps":1e-12}}"#,
+        )
+        .unwrap();
+        let c = BertConfig::from_manifest(&j).unwrap();
+        assert_eq!(c.vocab_size, 100);
+        assert_eq!(c.head_dim(), 4);
+    }
+}

@@ -1,0 +1,216 @@
+//! Generic sequential layer IR — the structural form SplitQuant operates on
+//! (Figure 1): linear/conv layers can be *split* into three parallel branches
+//! whose outputs are added; activation layers into three chunks whose outputs
+//! are concatenated.
+//!
+//! The BERT executor ([`super::bert`]) uses fused quantized parameters for
+//! speed; this IR exists to demonstrate and test the paper's *literal* layer
+//! structure (zero-padded branches, add/concat recombination) and to measure
+//! its overhead (bench `equivalence`, bench `model_size`).
+
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+
+/// Elementwise activation kinds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActKind {
+    Relu,
+    Gelu,
+    Tanh,
+}
+
+impl ActKind {
+    pub fn apply(&self, x: &Tensor) -> Tensor {
+        match self {
+            ActKind::Relu => ops::relu(x),
+            ActKind::Gelu => ops::gelu(x),
+            ActKind::Tanh => ops::tanh(x),
+        }
+    }
+}
+
+/// One branch of a split linear layer (zero-injected weight/bias).
+#[derive(Debug, Clone)]
+pub struct LinearPart {
+    pub weight: Tensor,
+    pub bias: Option<Tensor>,
+}
+
+/// A layer node.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Dense affine: `y = x·W + b`, W is (in, out).
+    Linear { weight: Tensor, bias: Option<Tensor> },
+    /// SplitQuant linear (Figure 2): parallel branches, outputs **added**.
+    SplitLinear { parts: Vec<LinearPart> },
+    /// Elementwise activation.
+    Activation(ActKind),
+    /// SplitQuant activation (Figure 1 D): input chunked on the last dim,
+    /// activation applied per chunk, results **concatenated**.
+    SplitActivation { kind: ActKind, spans: Vec<(usize, usize)> },
+}
+
+impl Layer {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            Layer::Linear { weight, bias } => {
+                let mut y = ops::matmul(x, weight);
+                if let Some(b) = bias {
+                    ops::add_bias(&mut y, b);
+                }
+                y
+            }
+            Layer::SplitLinear { parts } => {
+                assert!(!parts.is_empty());
+                let mut acc: Option<Tensor> = None;
+                for part in parts {
+                    let mut y = ops::matmul(x, &part.weight);
+                    if let Some(b) = &part.bias {
+                        ops::add_bias(&mut y, b);
+                    }
+                    match &mut acc {
+                        None => acc = Some(y),
+                        Some(a) => a.add_assign(&y),
+                    }
+                }
+                acc.unwrap()
+            }
+            Layer::Activation(k) => k.apply(x),
+            Layer::SplitActivation { kind, spans } => {
+                let (r, c) = x.as_2d();
+                assert_eq!(spans.last().map(|s| s.1), Some(c), "spans must cover width");
+                let mut out = vec![0.0f32; r * c];
+                for &(lo, hi) in spans {
+                    // gather chunk, activate, scatter back (the concat)
+                    let w = hi - lo;
+                    let mut chunk = vec![0.0f32; r * w];
+                    for i in 0..r {
+                        chunk[i * w..(i + 1) * w]
+                            .copy_from_slice(&x.data()[i * c + lo..i * c + hi]);
+                    }
+                    let act = kind.apply(&Tensor::new(&[r, w], chunk).unwrap());
+                    for i in 0..r {
+                        out[i * c + lo..i * c + hi]
+                            .copy_from_slice(&act.data()[i * w..(i + 1) * w]);
+                    }
+                }
+                Tensor::new(x.shape(), out).unwrap()
+            }
+        }
+    }
+
+    /// Parameter count (for overhead accounting).
+    pub fn numel(&self) -> usize {
+        match self {
+            Layer::Linear { weight, bias } => {
+                weight.numel() + bias.as_ref().map_or(0, |b| b.numel())
+            }
+            Layer::SplitLinear { parts } => parts
+                .iter()
+                .map(|p| p.weight.numel() + p.bias.as_ref().map_or(0, |b| b.numel()))
+                .sum(),
+            _ => 0,
+        }
+    }
+}
+
+/// A simple feed-forward stack.
+#[derive(Debug, Clone, Default)]
+pub struct Sequential {
+    pub layers: Vec<Layer>,
+}
+
+impl Sequential {
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        for l in &self.layers {
+            cur = l.forward(&cur);
+        }
+        cur
+    }
+
+    pub fn numel(&self) -> usize {
+        self.layers.iter().map(|l| l.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::chunk_spans;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn linear_forward() {
+        let w = Tensor::new(&[2, 2], vec![1., 0., 0., 2.]).unwrap();
+        let b = Tensor::new(&[2], vec![10., 20.]).unwrap();
+        let l = Layer::Linear { weight: w, bias: Some(b) };
+        let y = l.forward(&Tensor::new(&[1, 2], vec![3., 4.]).unwrap());
+        assert_eq!(y.data(), &[13., 28.]);
+    }
+
+    #[test]
+    fn split_linear_sums_branches() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&[4, 3], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[3], 0.0, 1.0, &mut rng);
+        // split by even/odd element parity into two zero-padded branches
+        let mut w0 = w.clone();
+        let mut w1 = w.clone();
+        for (i, (a, c)) in w0.data_mut().iter_mut().zip(w1.data_mut()).enumerate() {
+            if i % 2 == 0 {
+                *c = 0.0;
+            } else {
+                *a = 0.0;
+            }
+        }
+        let mut b0 = b.clone();
+        let mut b1 = b.clone();
+        b0.data_mut()[1] = 0.0;
+        b1.data_mut()[0] = 0.0;
+        b1.data_mut()[2] = 0.0;
+        let orig = Layer::Linear { weight: w, bias: Some(b) };
+        let split = Layer::SplitLinear {
+            parts: vec![
+                LinearPart { weight: w0, bias: Some(b0) },
+                LinearPart { weight: w1, bias: Some(b1) },
+            ],
+        };
+        let x = Tensor::randn(&[5, 4], 0.0, 1.0, &mut rng);
+        let diff = orig.forward(&x).max_abs_diff(&split.forward(&x));
+        assert!(diff < 1e-5, "{diff}");
+    }
+
+    #[test]
+    fn split_activation_equals_plain_activation() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[6, 10], 0.0, 2.0, &mut rng);
+        for kind in [ActKind::Relu, ActKind::Gelu, ActKind::Tanh] {
+            let plain = Layer::Activation(kind).forward(&x);
+            let split =
+                Layer::SplitActivation { kind, spans: chunk_spans(10, 3) }.forward(&x);
+            assert!(plain.max_abs_diff(&split) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sequential_chains() {
+        let mut rng = Rng::new(2);
+        let net = Sequential {
+            layers: vec![
+                Layer::Linear {
+                    weight: Tensor::randn(&[4, 8], 0.0, 1.0, &mut rng),
+                    bias: None,
+                },
+                Layer::Activation(ActKind::Relu),
+                Layer::Linear {
+                    weight: Tensor::randn(&[8, 2], 0.0, 1.0, &mut rng),
+                    bias: None,
+                },
+            ],
+        };
+        let y = net.forward(&Tensor::randn(&[3, 4], 0.0, 1.0, &mut rng));
+        assert_eq!(y.shape(), &[3, 2]);
+        assert_eq!(net.numel(), 4 * 8 + 8 * 2);
+    }
+}

@@ -1,0 +1,26 @@
+//! Model layer: configurations, parameter storage, the pure-Rust executors
+//! (BERT-Tiny and CNN) and the generic layer-graph IR used by the SplitQuant
+//! structural transforms.
+//!
+//! Two execution paths exist for every model:
+//! * the **pure-Rust executor** here (quantization sweeps, Table 1 — no
+//!   artifacts needed, fast on CPU), and
+//! * the **PJRT executables** in [`crate::runtime`] (training, serving,
+//!   activation-quant graphs — the AOT-compiled L2 graphs).
+//!
+//! Both implement the same math; `tests/integration_runtime.rs` asserts they
+//! agree to float tolerance on identical parameters.
+
+pub mod bert;
+pub mod cnn;
+pub mod config;
+pub mod graph;
+pub mod params;
+pub mod qbert;
+pub mod sparse;
+
+pub use bert::BertModel;
+pub use cnn::CnnModel;
+pub use config::{BertConfig, CnnConfig};
+pub use params::ParamStore;
+pub use qbert::QuantizedBert;

@@ -1,0 +1,323 @@
+//! Ordered, named parameter storage + binary checkpoints.
+//!
+//! The store preserves the manifest's flat parameter order (the ABI with the
+//! AOT executables) while offering name-based access for the quantization
+//! passes. Checkpoints use a simple versioned little-endian binary format.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 8] = b"SQCKPT1\n";
+
+/// Ordered named tensors.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    /// Zero-initialized store following a (name, shape) order.
+    pub fn zeros(order: &[(String, Vec<usize>)]) -> Self {
+        let mut s = ParamStore { names: Vec::new(), tensors: Vec::new(), index: HashMap::new() };
+        for (n, shape) in order {
+            s.push(n.clone(), Tensor::zeros(shape));
+        }
+        s
+    }
+
+    /// BERT-style init: LayerNorm gamma = 1, biases/betas = 0, everything
+    /// else N(0, 0.02) — matching common transformer initialization.
+    pub fn init_bert(order: &[(String, Vec<usize>)], rng: &mut Rng) -> Self {
+        let mut s = ParamStore { names: Vec::new(), tensors: Vec::new(), index: HashMap::new() };
+        for (n, shape) in order {
+            let t = if n.ends_with(".gamma") {
+                Tensor::ones(shape)
+            } else if n.ends_with(".beta") || n.ends_with(".bias") {
+                Tensor::zeros(shape)
+            } else {
+                Tensor::randn(shape, 0.0, 0.02, rng)
+            };
+            s.push(n.clone(), t);
+        }
+        s
+    }
+
+    /// CNN init: BN gamma/var = 1, mean/beta/bias = 0, weights He-ish.
+    pub fn init_cnn(order: &[(String, Vec<usize>)], rng: &mut Rng) -> Self {
+        let mut s = ParamStore { names: Vec::new(), tensors: Vec::new(), index: HashMap::new() };
+        for (n, shape) in order {
+            let t = if n.ends_with(".gamma") || n.ends_with(".var") {
+                Tensor::ones(shape)
+            } else if n.ends_with(".beta") || n.ends_with(".bias") || n.ends_with(".mean") {
+                Tensor::zeros(shape)
+            } else {
+                let fan_in: usize = shape[1..].iter().product::<usize>().max(1);
+                let std = (2.0 / fan_in as f32).sqrt();
+                Tensor::randn(shape, 0.0, std, rng)
+            };
+            s.push(n.clone(), t);
+        }
+        s
+    }
+
+    pub fn push(&mut self, name: String, t: Tensor) {
+        assert!(!self.index.contains_key(&name), "duplicate param {name}");
+        self.index.insert(name.clone(), self.tensors.len());
+        self.names.push(name);
+        self.tensors.push(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| Error::Model(format!("no parameter named {name:?}")))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        match self.index.get(name) {
+            Some(&i) => Ok(&mut self.tensors[i]),
+            None => Err(Error::Model(format!("no parameter named {name:?}"))),
+        }
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let cur = self.get(name)?;
+        if cur.shape() != t.shape() {
+            return Err(Error::Model(format!(
+                "set {name:?}: shape {:?} != existing {:?}",
+                t.shape(),
+                cur.shape()
+            )));
+        }
+        *self.get_mut(name)? = t;
+        Ok(())
+    }
+
+    /// Tensors in flat (manifest) order.
+    pub fn flat(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    /// Replace all tensors, keeping names (training-step output ingestion).
+    pub fn replace_flat(&mut self, tensors: Vec<Tensor>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            return Err(Error::Model(format!(
+                "replace_flat: {} tensors for {} slots",
+                tensors.len(),
+                self.tensors.len()
+            )));
+        }
+        for (slot, t) in self.tensors.iter_mut().zip(tensors) {
+            if slot.shape() != t.shape() {
+                return Err(Error::Model(format!(
+                    "replace_flat shape {:?} != {:?}",
+                    t.shape(),
+                    slot.shape()
+                )));
+            }
+            *slot = t;
+        }
+        Ok(())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(|s| s.as_str()).zip(self.tensors.iter())
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Total FP32 bytes (paper-§6 size accounting base).
+    pub fn byte_size(&self) -> usize {
+        self.tensors.iter().map(|t| t.byte_size()).sum()
+    }
+
+    /// Save to a binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.len() as u32).to_le_bytes())?;
+        for (name, t) in self.iter() {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u16).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape().len() as u8).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a binary checkpoint.
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Checkpoint(format!("{path:?}: bad magic {magic:?}")));
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut s = ParamStore { names: Vec::new(), tensors: Vec::new(), index: HashMap::new() };
+        for _ in 0..count {
+            let nlen = read_u16(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb)
+                .map_err(|e| Error::Checkpoint(format!("bad name: {e}")))?;
+            let ndim = read_u8(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            s.push(name, Tensor::new(&shape, data)?);
+        }
+        Ok(s)
+    }
+
+    /// Validate against an expected (name, shape) order.
+    pub fn check_order(&self, order: &[(String, Vec<usize>)]) -> Result<()> {
+        if self.len() != order.len() {
+            return Err(Error::Model(format!(
+                "store has {} params, expected {}",
+                self.len(),
+                order.len()
+            )));
+        }
+        for ((name, shape), (n2, t)) in order.iter().zip(self.iter()) {
+            if name != n2 || shape.as_slice() != t.shape() {
+                return Err(Error::Model(format!(
+                    "param mismatch: expected {name:?}{shape:?}, got {n2:?}{:?}",
+                    t.shape()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn read_u8(f: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+
+    #[test]
+    fn init_and_access() {
+        let cfg = BertConfig { vocab_size: 50, hidden: 8, layers: 1, ..Default::default() };
+        let mut rng = Rng::new(0);
+        let s = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        assert_eq!(s.len(), 24);
+        assert!(s.get("embeddings.ln.gamma").unwrap().data().iter().all(|&v| v == 1.0));
+        assert!(s.get("encoder.0.attn.q.bias").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = BertConfig {
+            vocab_size: 30,
+            hidden: 8,
+            layers: 1,
+            heads: 2,
+            ffn: 16,
+            max_len: 10,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(1);
+        let s = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let path = std::env::temp_dir().join("splitquant_test_ckpt.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), s.len());
+        for (name, t) in s.iter() {
+            let l = loaded.get(name).unwrap();
+            assert_eq!(l.shape(), t.shape());
+            assert_eq!(l.data(), t.data());
+        }
+        loaded.check_order(&cfg.param_order()).unwrap();
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("splitquant_test_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn replace_flat_validates() {
+        let order = vec![("a".to_string(), vec![2usize]), ("b".to_string(), vec![3usize])];
+        let mut s = ParamStore::zeros(&order);
+        assert!(s.replace_flat(vec![Tensor::zeros(&[2])]).is_err());
+        assert!(s
+            .replace_flat(vec![Tensor::zeros(&[2]), Tensor::zeros(&[4])])
+            .is_err());
+        assert!(s
+            .replace_flat(vec![Tensor::ones(&[2]), Tensor::ones(&[3])])
+            .is_ok());
+        assert_eq!(s.get("a").unwrap().data(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn set_checks_shape() {
+        let order = vec![("w".to_string(), vec![2usize, 2])];
+        let mut s = ParamStore::zeros(&order);
+        assert!(s.set("w", Tensor::zeros(&[4])).is_err());
+        assert!(s.set("w", Tensor::ones(&[2, 2])).is_ok());
+    }
+}

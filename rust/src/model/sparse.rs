@@ -1,0 +1,211 @@
+//! CSR sparse linear algebra for split layers.
+//!
+//! Paper §6: SplitQuant triples the layer count but every new layer is ~⅔
+//! structural zeros, so "model size, memory usage and inference speed may be
+//! optimized if SplitQuant is used together with sparse DNN inference engines
+//! such as SparseDNN". This module is that engine for our stack: CSR storage
+//! + row-major sparse·dense matmul. Bench `sparse_hotpath` measures how much
+//! of the 3× dense overhead it recovers.
+
+use crate::tensor::Tensor;
+
+/// Compressed-sparse-row matrix (CSR over the weight's `in` dimension).
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// row_ptr[r]..row_ptr[r+1] indexes into col_idx / values.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(t: &Tensor) -> CsrMatrix {
+        assert_eq!(t.shape().len(), 2);
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = t.at2(r, c);
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Storage bytes (values + column indices + row pointers).
+    pub fn byte_size(&self) -> usize {
+        self.values.len() * 4 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    /// `y = x (m×rows) @ self (rows×cols)`: dense·sparse with the sparse
+    /// matrix acting on the right — the split-linear hot path. Accumulates
+    /// into `out` (must be m×cols, zero-initialized by the caller), so three
+    /// split branches can share one output buffer.
+    pub fn matmul_acc(&self, x: &Tensor, out: &mut Tensor) {
+        let (m, k) = (x.shape()[0], x.shape()[1]);
+        assert_eq!(k, self.rows, "x width {k} vs csr rows {}", self.rows);
+        assert_eq!(out.shape(), &[m, self.cols]);
+        let n = self.cols;
+        let xd = x.data();
+        let od = out.data_mut();
+        for i in 0..m {
+            let xrow = &xd[i * k..(i + 1) * k];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for r in 0..self.rows {
+                let xv = xrow[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+                for idx in lo..hi {
+                    orow[self.col_idx[idx] as usize] += xv * self.values[idx];
+                }
+            }
+        }
+    }
+
+    /// Convenience: `x @ self` into a fresh tensor.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let m = x.shape()[0];
+        let mut out = Tensor::zeros(&[m, self.cols]);
+        self.matmul_acc(x, &mut out);
+        out
+    }
+}
+
+/// A split linear layer executed sparsely: k CSR branches + dense bias.
+#[derive(Debug, Clone)]
+pub struct SparseSplitLinear {
+    pub branches: Vec<CsrMatrix>,
+    pub bias: Option<Tensor>,
+}
+
+impl SparseSplitLinear {
+    /// Build from zero-padded dense branches (as produced by the SplitQuant
+    /// materialization).
+    pub fn from_dense_branches(branches: &[Tensor], bias: Option<Tensor>) -> Self {
+        SparseSplitLinear {
+            branches: branches.iter().map(CsrMatrix::from_dense).collect(),
+            bias,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let m = x.shape()[0];
+        let n = self.branches[0].cols;
+        let mut out = Tensor::zeros(&[m, n]);
+        for b in &self.branches {
+            b.matmul_acc(x, &mut out);
+        }
+        if let Some(bias) = &self.bias {
+            crate::tensor::ops::add_bias(&mut out, bias);
+        }
+        out
+    }
+
+    /// Total nonzeros across branches (== original weight nnz).
+    pub fn nnz(&self) -> usize {
+        self.branches.iter().map(|b| b.nnz()).sum()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.branches.iter().map(|b| b.byte_size()).sum::<usize>()
+            + self.bias.as_ref().map_or(0, |b| b.byte_size())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn csr_roundtrip_matmul() {
+        let mut rng = Rng::new(0);
+        let mut w = Tensor::randn(&[16, 12], 0.0, 1.0, &mut rng);
+        // sparsify ~2/3
+        for v in w.data_mut() {
+            if rng.chance(0.66) {
+                *v = 0.0;
+            }
+        }
+        let x = Tensor::randn(&[5, 16], 0.0, 1.0, &mut rng);
+        let dense = ops::matmul(&x, &w);
+        let sparse = CsrMatrix::from_dense(&w).matmul(&x);
+        assert!(dense.max_abs_diff(&sparse) < 1e-5);
+    }
+
+    #[test]
+    fn density_and_bytes() {
+        let mut w = Tensor::zeros(&[10, 10]);
+        w.data_mut()[3] = 1.0;
+        w.data_mut()[57] = -2.0;
+        let c = CsrMatrix::from_dense(&w);
+        assert_eq!(c.nnz(), 2);
+        assert!((c.density() - 0.02).abs() < 1e-12);
+        assert_eq!(c.byte_size(), 2 * 4 + 2 * 4 + 11 * 4);
+    }
+
+    #[test]
+    fn split_branches_equal_dense_sum() {
+        check("sparse split == dense linear", 20, |rng| {
+            let (kin, kout, m) = (rng.range(2, 24), rng.range(1, 20), rng.range(1, 8));
+            let w = Tensor::randn(&[kin, kout], 0.0, 1.0, rng);
+            // random 3-way element partition
+            let mut branches = vec![Tensor::zeros(&[kin, kout]); 3];
+            for i in 0..kin * kout {
+                let c = rng.below(3);
+                branches[c].data_mut()[i] = w.data()[i];
+            }
+            let bias = Tensor::randn(&[kout], 0.0, 1.0, rng);
+            let sp = SparseSplitLinear::from_dense_branches(&branches, Some(bias.clone()));
+            let x = Tensor::randn(&[m, kin], 0.0, 1.0, rng);
+            let mut dense = ops::matmul(&x, &w);
+            ops::add_bias(&mut dense, &bias);
+            let got = sp.forward(&x);
+            assert!(dense.max_abs_diff(&got) < 1e-4);
+            assert_eq!(sp.nnz(), w.data().iter().filter(|&&v| v != 0.0).count());
+        });
+    }
+
+    #[test]
+    fn sparse_storage_smaller_than_three_dense() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[128, 128], 0.0, 1.0, &mut rng);
+        let mut branches = vec![Tensor::zeros(&[128, 128]); 3];
+        for i in 0..128 * 128 {
+            branches[rng.below(3)].data_mut()[i] = w.data()[i];
+        }
+        let sp = SparseSplitLinear::from_dense_branches(&branches, None);
+        // u32 col indices double the per-nnz cost vs pure values, so CSR is
+        // ~1.5× smaller than 3× dense here (u16 indices would reach ~2×; see
+        // DESIGN.md §Perf)
+        let three_dense = 3 * w.byte_size();
+        assert!(
+            sp.byte_size() < three_dense * 3 / 4,
+            "sparse {} vs 3x dense {three_dense}",
+            sp.byte_size()
+        );
+    }
+}

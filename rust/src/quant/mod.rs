@@ -1,0 +1,20 @@
+//! Post-training-quantization engine: affine quantization (paper §3,
+//! Eq. 1–3), range observers (min-max / percentile clipping / MSE search),
+//! per-tensor & per-channel granularity, and bit-packed quantized tensors.
+//!
+//! SplitQuant itself (in [`crate::splitquant`]) is a *model reshaping* pass
+//! that feeds this engine narrower ranges; the engine is deliberately
+//! independent so baselines and SplitQuant share the identical quantizer —
+//! the same property the paper relies on for its comparison.
+
+pub mod observer;
+pub mod qconfig;
+pub mod qtensor;
+pub mod scheme;
+pub mod serialize;
+
+pub use observer::Observer;
+pub use qconfig::{Granularity, QConfig};
+pub use qtensor::{QLayout, QTensor};
+pub use scheme::{qrange, QParams};
+pub use serialize::PackedModel;

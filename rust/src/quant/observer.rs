@@ -1,0 +1,255 @@
+//! Range observers: how the quantizer decides `[β, α]` from data.
+//!
+//! * [`Observer::MinMax`] — keep everything, outliers included (paper's
+//!   "keep outliers" horn of the dilemma).
+//! * [`Observer::Percentile`] — the de-facto outlier-clipping baseline
+//!   (paper §1: "often 99% is used in practice"); two-sided clip.
+//! * [`Observer::MseSearch`] — shrink the min-max range over a grid and keep
+//!   the one minimizing reconstruction MSE (a stronger classical baseline).
+
+use crate::util::stats;
+
+use super::scheme::{quant_mse, QParams};
+
+/// Strategy for turning sample values into a quantization range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Observer {
+    /// Full min–max range.
+    MinMax,
+    /// Two-sided percentile clipping: range = [pct(100−p), pct(p)].
+    Percentile { pct: f64 },
+    /// Grid search over symmetric shrink factors of the min-max range,
+    /// minimizing fake-quant MSE.
+    MseSearch { steps: usize },
+    /// Histogram/entropy calibration (TensorRT-style): build a `bins`-bin
+    /// histogram, try clip thresholds, keep the one minimizing the KL
+    /// divergence between the clipped distribution and its quantized
+    /// re-expansion.
+    Entropy { bins: usize },
+}
+
+impl Observer {
+    /// Compute the quantization range `[beta, alpha]` for `values`.
+    pub fn range(&self, values: &[f32], bits: u8) -> (f32, f32) {
+        assert!(!values.is_empty(), "observer on empty data");
+        match *self {
+            Observer::MinMax => stats::min_max(values),
+            Observer::Percentile { pct } => {
+                let mut sorted: Vec<f32> = values.to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let lo = stats::percentile_sorted(&sorted, 100.0 - pct);
+                let hi = stats::percentile_sorted(&sorted, pct);
+                if lo <= hi {
+                    (lo, hi)
+                } else {
+                    (hi, lo)
+                }
+            }
+            Observer::MseSearch { steps } => {
+                let (lo, hi) = stats::min_max(values);
+                let mut best = (lo, hi);
+                let mut best_mse = f64::INFINITY;
+                for s in 0..steps {
+                    // log grid 1.0 .. 1e-3: outliers can be many orders of
+                    // magnitude above the bulk, a linear grid cannot reach them
+                    let f = 10f32.powf(-3.0 * s as f32 / (steps.max(2) - 1) as f32);
+                    let (b, a) = (lo * f, hi * f);
+                    let p = QParams::from_range(b, a, bits);
+                    let mse = quant_mse(values, &p);
+                    if mse < best_mse {
+                        best_mse = mse;
+                        best = (b, a);
+                    }
+                }
+                best
+            }
+            Observer::Entropy { bins } => entropy_range(values, bits, bins),
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Observer::MinMax => "minmax".into(),
+            Observer::Percentile { pct } => format!("pct{pct}"),
+            Observer::MseSearch { steps } => format!("mse{steps}"),
+            Observer::Entropy { bins } => format!("kl{bins}"),
+        }
+    }
+}
+
+/// TensorRT-style entropy calibration on |values| (symmetric clip search).
+///
+/// For each candidate clip `c` (a histogram-bin edge), the reference
+/// distribution is the histogram with out-of-clip mass folded into the edge
+/// bin, and the candidate distribution is that histogram collapsed onto
+/// `2^bits` quantization buckets and re-expanded. The clip minimizing
+/// KL(ref ‖ cand) wins; the returned range is `[-c, c]` intersected with
+/// the data's sign support.
+fn entropy_range(values: &[f32], bits: u8, bins: usize) -> (f32, f32) {
+    let bins = bins.max(64);
+    let (lo, hi) = stats::min_max(values);
+    let max_abs = lo.abs().max(hi.abs()).max(1e-12);
+    // |v| histogram
+    let mut hist = vec![0f64; bins];
+    for &v in values {
+        let b = ((v.abs() / max_abs) * bins as f32) as usize;
+        hist[b.min(bins - 1)] += 1.0;
+    }
+    let levels = (1usize << bits).max(2) / 2; // positive-side buckets
+    let start = levels.max(bins / 16).min(bins - 1);
+    let mut best_bin = bins;
+    let mut best_kl = f64::INFINITY;
+    // reference: the FULL |v| histogram — clipping away real mass must cost
+    // divergence (a clipped-only reference lets the smallest clip win with
+    // KL = 0, the classic pitfall)
+    let psum: f64 = hist.iter().sum::<f64>().max(1e-12);
+    for clip in start..=bins {
+        // candidate: kept bins collapsed into `levels` buckets and
+        // re-expanded; clipped bins dequantize onto the edge level
+        let mut q = vec![0f64; bins];
+        let per = clip as f64 / levels as f64;
+        let mut edge_density = 0.0f64;
+        for lvl in 0..levels {
+            let a = (lvl as f64 * per).floor() as usize;
+            let b = (((lvl + 1) as f64 * per).ceil() as usize).min(clip);
+            let mass: f64 = hist[a..b].iter().sum();
+            let nonzero = hist[a..b].iter().filter(|&&x| x > 0.0).count().max(1);
+            let d = mass / nonzero as f64;
+            for i in a..b {
+                if hist[i] > 0.0 {
+                    q[i] = d;
+                }
+            }
+            if lvl == levels - 1 {
+                edge_density = d;
+            }
+        }
+        for i in clip..bins {
+            if hist[i] > 0.0 {
+                // clipped values reconstruct at the edge — approximate their
+                // modelled density by the edge level's (spread thin, so real
+                // tail mass out here costs KL)
+                q[i] = (edge_density / (1 + i - clip) as f64).max(1e-12);
+            }
+        }
+        let qsum: f64 = q.iter().sum::<f64>().max(1e-12);
+        let mut kl = 0.0;
+        for (pi, qi) in hist.iter().zip(&q) {
+            if *pi > 0.0 {
+                let pn = pi / psum;
+                let qn = (qi / qsum).max(1e-12);
+                kl += pn * (pn / qn).ln();
+            }
+        }
+        if kl < best_kl {
+            best_kl = kl;
+            best_bin = clip;
+        }
+    }
+    let c = max_abs * best_bin as f32 / bins as f32;
+    // respect the data's sign support (all-positive data keeps beta >= 0)
+    (lo.max(-c), hi.min(c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn normal_with_outlier(n: usize, outlier: f32) -> Vec<f32> {
+        let mut rng = Rng::new(0);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        v.push(outlier);
+        v
+    }
+
+    #[test]
+    fn minmax_keeps_outlier() {
+        let v = normal_with_outlier(1000, 500.0);
+        let (lo, hi) = Observer::MinMax.range(&v, 8);
+        assert_eq!(hi, 500.0);
+        assert!(lo < 0.0);
+    }
+
+    #[test]
+    fn percentile_clips_outlier() {
+        let v = normal_with_outlier(1000, 500.0);
+        let (lo, hi) = Observer::Percentile { pct: 99.0 }.range(&v, 8);
+        assert!(hi < 10.0, "hi={hi}");
+        assert!(lo > -10.0);
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn percentile_100_equals_minmax() {
+        let v = normal_with_outlier(500, 42.0);
+        let a = Observer::Percentile { pct: 100.0 }.range(&v, 8);
+        let b = Observer::MinMax.range(&v, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mse_search_beats_minmax_with_outliers() {
+        // moderate outlier: clipping it pays off in aggregate MSE (a single
+        // extreme outlier would dominate the MSE and min-max would win —
+        // which is exactly the paper's point about clipping losing signal)
+        let v = normal_with_outlier(2000, 20.0);
+        let bits = 4;
+        let (lo_m, hi_m) = Observer::MinMax.range(&v, bits);
+        let (lo_s, hi_s) = Observer::MseSearch { steps: 40 }.range(&v, bits);
+        let mse_m = quant_mse(&v, &QParams::from_range(lo_m, hi_m, bits));
+        let mse_s = quant_mse(&v, &QParams::from_range(lo_s, hi_s, bits));
+        assert!(mse_s < mse_m, "search {mse_s} vs minmax {mse_m}");
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Observer::MinMax.label(), "minmax");
+        assert_eq!(Observer::Percentile { pct: 99.0 }.label(), "pct99");
+        assert_eq!(Observer::Entropy { bins: 512 }.label(), "kl512");
+    }
+
+    #[test]
+    fn entropy_clips_outlier_but_keeps_bulk() {
+        let v = normal_with_outlier(4000, 100.0);
+        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 4);
+        // the clip must land far below the outlier but cover the bulk
+        assert!(hi < 50.0, "hi={hi}");
+        assert!(hi > 2.0, "hi={hi}");
+        assert!(lo < -2.0, "lo={lo}");
+    }
+
+    #[test]
+    fn entropy_without_outliers_keeps_most_of_the_range() {
+        let mut rng = Rng::new(3);
+        let v: Vec<f32> = (0..4000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 8);
+        let (mlo, mhi) = Observer::MinMax.range(&v, 8);
+        assert!(hi >= mhi * 0.5, "hi {hi} vs minmax {mhi}");
+        assert!(lo <= mlo * 0.5, "lo {lo} vs minmax {mlo}");
+    }
+
+    #[test]
+    fn entropy_beats_minmax_on_bulk_reconstruction() {
+        // KL calibration optimizes distribution fidelity: with an extreme
+        // outlier it clips (sacrificing the outlier — the paper's §1
+        // trade-off) and reconstructs the *bulk* far better than min-max
+        let v = normal_with_outlier(4000, 200.0);
+        let bits = 4;
+        let (l1, h1) = Observer::MinMax.range(&v, bits);
+        let (l2, h2) = Observer::Entropy { bins: 512 }.range(&v, bits);
+        let bulk = &v[..4000]; // outlier excluded
+        let m1 = quant_mse(bulk, &QParams::from_range(l1, h1, bits));
+        let m2 = quant_mse(bulk, &QParams::from_range(l2, h2, bits));
+        assert!(m2 < m1 * 0.25, "entropy bulk {m2} vs minmax bulk {m1}");
+    }
+
+    #[test]
+    fn entropy_all_positive_data_keeps_positive_beta() {
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> = (0..1000).map(|_| rng.f32() * 5.0 + 1.0).collect();
+        let (lo, _hi) = Observer::Entropy { bins: 256 }.range(&v, 8);
+        assert!(lo >= 0.99, "lo={lo}");
+    }
+}

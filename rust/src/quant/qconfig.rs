@@ -1,0 +1,74 @@
+//! Quantization configuration: bit-width × scheme × granularity × observer.
+
+use super::observer::Observer;
+
+/// Scale-group granularity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Granularity {
+    /// One (scale, zp) for the whole tensor — what the paper's baseline uses.
+    PerTensor,
+    /// One (scale, zp) per slice along `axis` (0 = leading, otherwise the
+    /// trailing axis is supported).
+    PerChannel { axis: usize },
+}
+
+/// Full quantizer configuration shared by baselines and SplitQuant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QConfig {
+    pub bits: u8,
+    pub symmetric: bool,
+    pub granularity: Granularity,
+    pub observer: Observer,
+}
+
+impl QConfig {
+    /// The paper's baseline: asymmetric per-tensor min-max at `bits`.
+    pub fn baseline(bits: u8) -> QConfig {
+        QConfig {
+            bits,
+            symmetric: false,
+            granularity: Granularity::PerTensor,
+            observer: Observer::MinMax,
+        }
+    }
+
+    /// Percentile-clipping baseline (§1: the de-facto outlier treatment).
+    pub fn percentile(bits: u8, pct: f64) -> QConfig {
+        QConfig { observer: Observer::Percentile { pct }, ..QConfig::baseline(bits) }
+    }
+
+    /// Per-channel variant of the baseline (stronger classical PTQ).
+    pub fn per_channel(bits: u8, axis: usize) -> QConfig {
+        QConfig { granularity: Granularity::PerChannel { axis }, ..QConfig::baseline(bits) }
+    }
+
+    /// Report label, e.g. `INT2/minmax/per-tensor`.
+    pub fn label(&self) -> String {
+        let g = match self.granularity {
+            Granularity::PerTensor => "per-tensor".to_string(),
+            Granularity::PerChannel { axis } => format!("per-ch{axis}"),
+        };
+        let sym = if self.symmetric { "sym" } else { "asym" };
+        format!("INT{}/{}/{}/{}", self.bits, self.observer.label(), g, sym)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        let b = QConfig::baseline(2);
+        assert_eq!(b.bits, 2);
+        assert_eq!(b.granularity, Granularity::PerTensor);
+        let p = QConfig::percentile(4, 99.0);
+        assert_eq!(p.observer, Observer::Percentile { pct: 99.0 });
+        assert_eq!(QConfig::per_channel(8, 1).granularity, Granularity::PerChannel { axis: 1 });
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(QConfig::baseline(2).label(), "INT2/minmax/per-tensor/asym");
+    }
+}

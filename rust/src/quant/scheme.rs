@@ -1,0 +1,222 @@
+//! Affine quantization math — paper §3, Eq. (1)–(3), bit-exact with the
+//! jnp oracle in `python/compile/kernels/ref.py`:
+//!
+//! ```text
+//! S = (2^b − 1) / (α − β)
+//! Z = −2^(b−1) − INT(S·β)
+//! Q(x) = clip(INT(S·x) + Z, −2^(b−1), 2^(b−1)−1)
+//! dq(q) = (q − Z) / S
+//! ```
+//!
+//! `INT` is round-half-to-even (`f32::round_ties_even`, = `jnp.round`).
+
+/// (qmin, qmax) of signed `bits`-wide integers.
+pub fn qrange(bits: u8) -> (i32, i32) {
+    let h = 1i32 << (bits - 1);
+    (-h, h - 1)
+}
+
+/// Quantization parameters for one scale group (tensor / channel / cluster).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zp: f32,
+    pub bits: u8,
+}
+
+impl QParams {
+    /// Parameters for original value range `[beta, alpha]` (asymmetric).
+    ///
+    /// Degenerate spans are widened to 1e-8, matching the oracle, so constant
+    /// tensors stay finite.
+    pub fn from_range(beta: f32, alpha: f32, bits: u8) -> QParams {
+        debug_assert!(alpha >= beta, "range [{beta}, {alpha}] inverted");
+        let span = (alpha - beta).max(1e-8);
+        let scale = ((1u64 << bits) - 1) as f32 / span;
+        let zp = -((1i64 << (bits - 1)) as f32) - (scale * beta).round_ties_even();
+        QParams { scale, zp, bits }
+    }
+
+    /// Symmetric parameters: range `[-a, a]` with `a = max(|beta|, |alpha|)`.
+    /// The zero-point lands on 0 by construction.
+    pub fn symmetric_from_range(beta: f32, alpha: f32, bits: u8) -> QParams {
+        let a = beta.abs().max(alpha.abs());
+        QParams::from_range(-a, a, bits)
+    }
+
+    /// Quantize one value to its integer code (fits i8 for bits ≤ 8).
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i8 {
+        let (qmin, qmax) = qrange(self.bits);
+        let q = (self.scale * x).round_ties_even() + self.zp;
+        (q.clamp(qmin as f32, qmax as f32)) as i8
+    }
+
+    /// Dequantize a code.
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as f32 - self.zp) / self.scale
+    }
+
+    /// Quantize-dequantize (the PTQ simulation primitive).
+    #[inline]
+    pub fn fake(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Width of one quantization step in original units (the resolution the
+    /// paper's argument is about: SplitQuant shrinks this).
+    #[inline]
+    pub fn step(&self) -> f32 {
+        1.0 / self.scale
+    }
+
+    /// Representable dequantized interval.
+    pub fn dequant_range(&self) -> (f32, f32) {
+        let (qmin, qmax) = qrange(self.bits);
+        (self.dequantize(qmin as i8), self.dequantize(qmax as i8))
+    }
+}
+
+/// Quantize a slice into codes.
+pub fn quantize_slice(values: &[f32], p: &QParams) -> Vec<i8> {
+    values.iter().map(|&v| p.quantize(v)).collect()
+}
+
+/// Fake-quantize a slice in place.
+pub fn fake_quant_slice(values: &mut [f32], p: &QParams) {
+    for v in values.iter_mut() {
+        *v = p.fake(*v);
+    }
+}
+
+/// Mean squared quantization error of a slice under params.
+pub fn quant_mse(values: &[f32], p: &QParams) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values
+        .iter()
+        .map(|&v| {
+            let d = (p.fake(v) - v) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn qrange_matches_paper() {
+        assert_eq!(qrange(2), (-2, 1));
+        assert_eq!(qrange(4), (-8, 7));
+        assert_eq!(qrange(8), (-128, 127));
+    }
+
+    #[test]
+    fn zero_reconstructs_exactly_when_in_range() {
+        // critical SplitQuant property: injected zeros quantize losslessly
+        for bits in [2u8, 4, 8] {
+            for &(beta, alpha) in &[(-3.0f32, 5.0), (0.0, 7.0), (-9.0, 0.0), (-0.5, 0.25)] {
+                let p = QParams::from_range(beta, alpha, bits);
+                assert_eq!(p.fake(0.0), 0.0, "bits={bits} range=[{beta},{alpha}]");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_zero_point_is_zero() {
+        for bits in [2u8, 4, 8] {
+            let p = QParams::symmetric_from_range(-3.0, 2.0, bits);
+            assert_eq!(p.zp, 0.0, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn int8_spans_range() {
+        let p = QParams::from_range(-1.0, 1.0, 8);
+        assert!((p.fake(-1.0) + 1.0).abs() < 0.01);
+        assert!((p.fake(1.0) - 1.0).abs() < 0.01);
+        assert!(p.fake(0.37).abs() - 0.37 < 0.01);
+    }
+
+    #[test]
+    fn int2_has_four_codes() {
+        let p = QParams::from_range(-2.0, 1.0, 2);
+        let mut codes: Vec<i8> = (-20..=20).map(|i| p.quantize(i as f32 * 0.1)).collect();
+        codes.sort();
+        codes.dedup();
+        assert!(codes.len() <= 4);
+    }
+
+    #[test]
+    fn matches_paper_example_resolution_collapse() {
+        // §1: outlier crushes 4 values onto one code at low bits
+        let vals = [-1000.0f32, -500.0, 0.0, 500.0];
+        let with_outlier = QParams::from_range(-1000.0, 1e8, 4);
+        let codes: Vec<i8> = vals.iter().map(|&v| with_outlier.quantize(v)).collect();
+        let uniq: std::collections::HashSet<i8> = codes.iter().copied().collect();
+        assert!(uniq.len() <= 2, "{codes:?}");
+        let without = QParams::from_range(-1000.0, 1000.0, 4);
+        let codes2: Vec<i8> = vals.iter().map(|&v| without.quantize(v)).collect();
+        let uniq2: std::collections::HashSet<i8> = codes2.iter().copied().collect();
+        assert_eq!(uniq2.len(), 4, "{codes2:?}");
+    }
+
+    #[test]
+    fn degenerate_range_finite() {
+        let p = QParams::from_range(1.234, 1.234, 8);
+        assert!(p.scale.is_finite());
+        assert!(p.fake(1.234).is_finite());
+    }
+
+    #[test]
+    fn property_error_bounded_by_half_step() {
+        check("in-range quant error <= step/2", 60, |rng| {
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let beta = rng.normal_f32(0.0, 10.0);
+            let span = rng.range_f64(0.01, 100.0) as f32;
+            let alpha = beta + span;
+            let p = QParams::from_range(beta, alpha, bits);
+            for _ in 0..50 {
+                let x = beta + rng.f32() * span;
+                let err = (p.fake(x) - x).abs();
+                assert!(
+                    err <= p.step() * 0.5 + p.step() * 1e-3,
+                    "x={x} err={err} step={}",
+                    p.step()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn property_codes_clip_to_range() {
+        check("codes stay in [qmin,qmax]", 50, |rng| {
+            let bits = [2u8, 3, 4, 8][rng.below(4)];
+            let p = QParams::from_range(-1.0, 1.0, bits);
+            let (qmin, qmax) = qrange(bits);
+            for _ in 0..50 {
+                let x = rng.normal_f32(0.0, 100.0); // mostly out of range
+                let q = p.quantize(x) as i32;
+                assert!(q >= qmin && q <= qmax);
+            }
+        });
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let values: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (lo, hi) = crate::util::stats::min_max(&values);
+        let mses: Vec<f64> = [2u8, 4, 8]
+            .iter()
+            .map(|&b| quant_mse(&values, &QParams::from_range(lo, hi, b)))
+            .collect();
+        assert!(mses[0] > mses[1] && mses[1] > mses[2], "{mses:?}");
+    }
+}

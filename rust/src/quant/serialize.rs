@@ -1,0 +1,370 @@
+//! Packed quantized-model serialization — the deployment artifact.
+//!
+//! `ParamStore::save` persists FP32 checkpoints; this module persists the
+//! *quantized* model (packed codes, cluster-id planes, per-group parameters
+//! and the FP32 remainder) so a server can boot directly into the
+//! [`crate::model::QuantizedBert`] deployment path without re-running
+//! k-means. The format is versioned little-endian binary:
+//!
+//! ```text
+//! magic "SQQM0001"
+//! u8    bits
+//! u32   n_quantized
+//!   per tensor: name, shape, layout tag (+axis / +cid plane), params, codes
+//! u32   n_fp32
+//!   per tensor: name, shape, f32 data        (LN, position, …)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::model::params::ParamStore;
+use crate::splitquant::QuantizedModel;
+use crate::tensor::packing::Packed;
+use crate::tensor::Tensor;
+
+use super::qtensor::{QLayout, QTensor};
+use super::scheme::QParams;
+
+const MAGIC: &[u8; 8] = b"SQQM0001";
+
+/// A quantized model plus its FP32 remainder — everything needed to serve.
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    pub qmodel: QuantizedModel,
+    /// non-quantized parameters in their original order subset
+    pub fp32: Vec<(String, Tensor)>,
+}
+
+impl PackedModel {
+    /// Assemble from a full store + quantization result.
+    pub fn assemble(store: &ParamStore, qmodel: &QuantizedModel) -> PackedModel {
+        let fp32 = store
+            .iter()
+            .filter(|(n, _)| !qmodel.tensors.contains_key(*n))
+            .map(|(n, t)| (n.to_string(), t.clone()))
+            .collect();
+        PackedModel { qmodel: qmodel.clone(), fp32 }
+    }
+
+    /// Reconstruct a full FP32 [`ParamStore`] following `order` (evaluation /
+    /// fallback path; the deployment path feeds `qmodel` to `QuantizedBert`).
+    pub fn to_store(&self, order: &[(String, Vec<usize>)]) -> Result<ParamStore> {
+        let mut store = ParamStore::zeros(order);
+        for (name, t) in &self.fp32 {
+            store.set(name, t.clone())?;
+        }
+        for (name, q) in &self.qmodel.tensors {
+            store.set(name, q.dequantize())?;
+        }
+        Ok(store)
+    }
+
+    /// Total serialized size (quantized + fp32 payloads, without framing).
+    pub fn payload_bytes(&self) -> usize {
+        self.qmodel.quantized_bytes()
+            + self.fp32.iter().map(|(_, t)| t.byte_size()).sum::<usize>()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&[self.qmodel.bits])?;
+
+        f.write_all(&(self.qmodel.tensors.len() as u32).to_le_bytes())?;
+        for (name, q) in &self.qmodel.tensors {
+            write_str(&mut f, name)?;
+            write_shape(&mut f, q.shape())?;
+            match q.layout() {
+                QLayout::PerTensor => {
+                    f.write_all(&[0u8])?;
+                }
+                QLayout::PerChannel { axis } => {
+                    f.write_all(&[1u8])?;
+                    f.write_all(&(*axis as u32).to_le_bytes())?;
+                }
+                QLayout::Split { cid } => {
+                    f.write_all(&[2u8])?;
+                    write_packed(&mut f, cid)?;
+                }
+            }
+            f.write_all(&(q.params().len() as u32).to_le_bytes())?;
+            for p in q.params() {
+                f.write_all(&p.scale.to_le_bytes())?;
+                f.write_all(&p.zp.to_le_bytes())?;
+                f.write_all(&[p.bits])?;
+            }
+            write_packed(&mut f, q.codes())?;
+        }
+
+        f.write_all(&(self.fp32.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.fp32 {
+            write_str(&mut f, name)?;
+            write_shape(&mut f, t.shape())?;
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedModel> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Checkpoint(format!("{path:?}: bad magic {magic:?}")));
+        }
+        let bits = read_u8(&mut f)?;
+
+        let nq = read_u32(&mut f)? as usize;
+        let mut tensors = std::collections::BTreeMap::new();
+        for _ in 0..nq {
+            let name = read_str(&mut f)?;
+            let shape = read_shape(&mut f)?;
+            let layout_tag = read_u8(&mut f)?;
+            let (layout_axis, cid) = match layout_tag {
+                0 => (None, None),
+                1 => (Some(read_u32(&mut f)? as usize), None),
+                2 => (None, Some(read_packed(&mut f)?)),
+                t => return Err(Error::Checkpoint(format!("bad layout tag {t}"))),
+            };
+            let nparams = read_u32(&mut f)? as usize;
+            let mut params = Vec::with_capacity(nparams);
+            for _ in 0..nparams {
+                let scale = read_f32(&mut f)?;
+                let zp = read_f32(&mut f)?;
+                let b = read_u8(&mut f)?;
+                params.push(QParams { scale, zp, bits: b });
+            }
+            let codes = read_packed(&mut f)?;
+            let q = match (layout_axis, cid) {
+                (None, Some(cid)) => QTensor::from_split(&shape, codes, cid, params)?,
+                (axis, None) => {
+                    QTensor::from_parts(&shape, codes, params, axis)?
+                }
+                _ => unreachable!(),
+            };
+            tensors.insert(name, q);
+        }
+
+        let nf = read_u32(&mut f)? as usize;
+        let mut fp32 = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            let name = read_str(&mut f)?;
+            let shape = read_shape(&mut f)?;
+            let numel: usize = shape.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            fp32.push((name, Tensor::new(&shape, data)?));
+        }
+
+        let fp32_names = fp32.iter().map(|(n, _)| n.clone()).collect();
+        Ok(PackedModel { qmodel: QuantizedModel { tensors, fp32_names, bits }, fp32 })
+    }
+}
+
+fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+    f.write_all(&(s.len() as u16).to_le_bytes())?;
+    f.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(f: &mut impl Read) -> Result<String> {
+    let n = read_u16(f)? as usize;
+    let mut buf = vec![0u8; n];
+    f.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|e| Error::Checkpoint(format!("bad name: {e}")))
+}
+
+fn write_shape(f: &mut impl Write, shape: &[usize]) -> Result<()> {
+    f.write_all(&[shape.len() as u8])?;
+    for &d in shape {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_shape(f: &mut impl Read) -> Result<Vec<usize>> {
+    let n = read_u8(f)? as usize;
+    (0..n).map(|_| Ok(read_u32(f)? as usize)).collect()
+}
+
+fn write_packed(f: &mut impl Write, p: &Packed) -> Result<()> {
+    f.write_all(&[p.bits()])?;
+    f.write_all(&(p.len() as u32).to_le_bytes())?;
+    f.write_all(p.bytes())?;
+    Ok(())
+}
+
+fn read_packed(f: &mut impl Read) -> Result<Packed> {
+    let bits = read_u8(f)?;
+    let len = read_u32(f)? as usize;
+    let per_byte = 8 / bits.max(1) as usize;
+    let mut buf = vec![0u8; len.div_ceil(per_byte)];
+    f.read_exact(&mut buf)?;
+    Packed::from_raw(bits, len, buf)
+}
+
+fn read_u8(f: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(f: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+    use crate::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny() -> (BertConfig, ParamStore, QuantizedModel) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store);
+        let (_, qm) = quantize_store(&store, &q, &SplitQuantConfig::new(2)).unwrap();
+        (cfg, store, qm)
+    }
+
+    #[test]
+    fn roundtrip_split_model() {
+        let (cfg, store, qm) = tiny();
+        let pm = PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_packed_model.sqq");
+        pm.save(&path).unwrap();
+        let loaded = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.qmodel.bits, 2);
+        assert_eq!(loaded.qmodel.tensors.len(), qm.tensors.len());
+        // dequantized stores identical
+        let a = pm.to_store(&cfg.param_order()).unwrap();
+        let b = loaded.to_store(&cfg.param_order()).unwrap();
+        for (name, t) in a.iter() {
+            assert_eq!(t.data(), b.get(name).unwrap().data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_per_tensor_model() {
+        let cfg = BertConfig {
+            vocab_size: 32,
+            hidden: 8,
+            layers: 1,
+            heads: 2,
+            ffn: 16,
+            max_len: 8,
+            num_classes: 2,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(1);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store);
+        let (_, tensors) = crate::baselines::quantize_store_baseline(
+            &store,
+            &q,
+            &crate::quant::QConfig::baseline(4),
+        )
+        .unwrap();
+        let qm = QuantizedModel { tensors, fp32_names: vec![], bits: 4 };
+        let pm = PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_packed_pt.sqq");
+        pm.save(&path).unwrap();
+        let loaded = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let a = pm.to_store(&cfg.param_order()).unwrap();
+        let b = loaded.to_store(&cfg.param_order()).unwrap();
+        for (name, t) in a.iter() {
+            assert_eq!(t.data(), b.get(name).unwrap().data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn packed_file_much_smaller_than_fp32_checkpoint() {
+        let (_cfg, store, qm) = tiny();
+        let pm = PackedModel::assemble(&store, &qm);
+        let qpath = std::env::temp_dir().join("sq_size_q.sqq");
+        let fpath = std::env::temp_dir().join("sq_size_f.bin");
+        pm.save(&qpath).unwrap();
+        store.save(&fpath).unwrap();
+        let qsize = std::fs::metadata(&qpath).unwrap().len();
+        let fsize = std::fs::metadata(&fpath).unwrap().len();
+        std::fs::remove_file(&qpath).ok();
+        std::fs::remove_file(&fpath).ok();
+        // quantizable params dominate this model; INT2+cid ≈ 12.5 % of FP32
+        assert!(
+            (qsize as f64) < fsize as f64 * 0.45,
+            "packed {qsize} vs fp32 {fsize}"
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("sq_garbage.sqq");
+        std::fs::write(&path, b"not a packed model").unwrap();
+        assert!(PackedModel::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deployment_path_boots_from_packed_file() {
+        // the full cycle: quantize → save → load → QuantizedBert serves
+        let (cfg, store, qm) = tiny();
+        let pm = PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_boot.sqq");
+        pm.save(&path).unwrap();
+        let loaded = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let base = loaded.to_store(&cfg.param_order()).unwrap();
+        let qbert =
+            crate::model::QuantizedBert::new(cfg.clone(), &base, &loaded.qmodel).unwrap();
+        let mut rng = Rng::new(2);
+        let ids = crate::tensor::IntTensor::new(
+            &[2, cfg.max_len],
+            (0..2 * cfg.max_len).map(|_| rng.below(cfg.vocab_size) as i32).collect(),
+        )
+        .unwrap();
+        let mask = Tensor::full(&[2, cfg.max_len], 1.0);
+        let logits = qbert.forward(&ids, &mask);
+        assert_eq!(logits.shape(), &[2, cfg.num_classes]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+}

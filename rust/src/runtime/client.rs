@@ -1,0 +1,132 @@
+//! PJRT CPU client + executable cache.
+//!
+//! Pattern from `/opt/xla-example/load_hlo`: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens once per executable and
+//! is cached; `run` is the request-path entry point.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::literal::{from_literal, to_literal, Value};
+use super::manifest::{ExeSpec, Manifest};
+
+/// A compiled executable plus its I/O spec.
+pub struct LoadedExe {
+    pub spec: ExeSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExe {
+    /// Execute with typed values; returns outputs in spec order.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(v, s)| to_literal(v, s))
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with raw literals (callers that pre-stage literals, e.g. the
+    /// i8 planes of the split-linear kernel).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Value>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: outputs arrive as one tuple
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+
+    /// Convenience for single-f32-output executables (forward passes).
+    pub fn run_f32(&self, inputs: &[Value]) -> Result<Tensor> {
+        let mut out = self.run(inputs)?;
+        if out.len() != 1 {
+            return Err(Error::Runtime(format!(
+                "{}: expected 1 output, got {}",
+                self.spec.name,
+                out.len()
+            )));
+        }
+        out.remove(0).into_f32()
+    }
+}
+
+/// PJRT runtime: client + manifest + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<LoadedExe>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.validate_abi()?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load (compile) an executable by manifest name; cached.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedExe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.exe(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        log::info!("compiled {name} in {:?}", t0.elapsed());
+        let loaded = Arc::new(LoadedExe { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+// The underlying PJRT client handles are internally synchronized; the Rust
+// wrapper types just hold opaque pointers.
+unsafe impl Send for LoadedExe {}
+unsafe impl Sync for LoadedExe {}
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}

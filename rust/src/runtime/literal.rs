@@ -1,0 +1,126 @@
+//! Tensor ⇄ `xla::Literal` conversion.
+
+use crate::error::{Error, Result};
+use crate::tensor::{IntTensor, Tensor};
+
+use super::manifest::{Dtype, IoSpec};
+
+/// Either element type, as fed to / returned from an executable.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => Err(Error::Runtime("expected f32 value".into())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => Err(Error::Runtime("expected f32 value".into())),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<IntTensor> {
+        match self {
+            Value::I32(t) => Ok(t),
+            _ => Err(Error::Runtime("expected i32 value".into())),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<IntTensor> for Value {
+    fn from(t: IntTensor) -> Self {
+        Value::I32(t)
+    }
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+/// Convert a value to a literal, checking it against the slot spec.
+pub fn to_literal(v: &Value, spec: &IoSpec) -> Result<xla::Literal> {
+    if v.shape() != spec.shape.as_slice() {
+        return Err(Error::Runtime(format!(
+            "input {:?}: shape {:?} does not match spec {:?}",
+            spec.name,
+            v.shape(),
+            spec.shape
+        )));
+    }
+    if v.dtype() != spec.dtype {
+        return Err(Error::Runtime(format!(
+            "input {:?}: dtype {:?} does not match spec {:?}",
+            spec.name,
+            v.dtype(),
+            spec.dtype
+        )));
+    }
+    let lit = match v {
+        Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?,
+        Value::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?,
+    };
+    Ok(lit)
+}
+
+/// Convert a returned literal into a [`Value`] following the output spec.
+pub fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+    match spec.dtype {
+        Dtype::F32 => {
+            let data = lit.to_vec::<f32>()?;
+            Ok(Value::F32(Tensor::new(&spec.shape, data)?))
+        }
+        Dtype::I32 => {
+            let data = lit.to_vec::<i32>()?;
+            Ok(Value::I32(IntTensor::new(&spec.shape, data)?))
+        }
+        Dtype::I8 => {
+            // i8 outputs are converted to i32 tensors for convenience
+            let conv = lit.convert(xla::PrimitiveType::S32)?;
+            let data = conv.to_vec::<i32>()?;
+            Ok(Value::I32(IntTensor::new(&spec.shape, data)?))
+        }
+    }
+}
+
+/// Pack an i8 plane (codes / cluster ids) for an i8 input slot.
+pub fn i8_literal(data: &[i8], shape: &[usize], spec: &IoSpec) -> Result<xla::Literal> {
+    if shape != spec.shape.as_slice() || spec.dtype != Dtype::I8 {
+        return Err(Error::Runtime(format!(
+            "i8 input {:?}: shape {shape:?} vs spec {:?} ({:?})",
+            spec.name, spec.shape, spec.dtype
+        )));
+    }
+    // xla::Literal has no i8 NativeType constructor in this crate version;
+    // go through i32 and convert.
+    let as_i32: Vec<i32> = data.iter().map(|&v| v as i32).collect();
+    let lit = xla::Literal::vec1(&as_i32).reshape(&dims_i64(shape))?;
+    Ok(lit.convert(xla::PrimitiveType::S8)?)
+}

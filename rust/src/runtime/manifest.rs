@@ -1,0 +1,223 @@
+//! `artifacts/manifest.json` — the ABI between the build-time Python layers
+//! and the Rust runtime: executable inventory, I/O specs, parameter order,
+//! activation-site table and model configs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::model::config::{BertConfig, CnnConfig};
+use crate::util::json::Json;
+
+/// Element type of an executable input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    I8,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "i8" => Ok(Dtype::I8),
+            _ => Err(Error::Manifest(format!("unknown dtype {s:?}"))),
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT executable.
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: BTreeMap<String, ExeSpec>,
+    pub bert: BertConfig,
+    pub cnn: CnnConfig,
+    pub bert_param_order: Vec<(String, Vec<usize>)>,
+    pub cnn_param_order: Vec<(String, Vec<usize>)>,
+    /// (site name, width, interior chunk bounds)
+    pub act_sites: Vec<(String, usize, Vec<usize>)>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: j.get("name")?.as_str()?.to_string(),
+        shape,
+        dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_order(j: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            let pair = e.as_arr()?;
+            let name = pair[0].as_str()?.to_string();
+            let shape =
+                pair[1].as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<Vec<_>>>()?;
+            Ok((name, shape))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {path:?}: {e} — run `make artifacts` first"
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+
+        let mut executables = BTreeMap::new();
+        for (name, entry) in j.get("executables")?.as_obj()? {
+            let spec = ExeSpec {
+                name: name.clone(),
+                file: entry.get("file")?.as_str()?.to_string(),
+                inputs: entry
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: entry
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            if !dir.join(&spec.file).exists() {
+                return Err(Error::Manifest(format!(
+                    "executable {name}: file {} missing from {dir:?}",
+                    spec.file
+                )));
+            }
+            executables.insert(name.clone(), spec);
+        }
+
+        let act_sites = j
+            .get("act_sites")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                let bounds = e
+                    .get("bounds")?
+                    .as_arr()?
+                    .iter()
+                    .map(|b| b.as_usize())
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((e.get("name")?.as_str()?.to_string(), e.get("width")?.as_usize()?, bounds))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            executables,
+            bert: BertConfig::from_manifest(&j)?,
+            cnn: CnnConfig::from_manifest(&j)?,
+            bert_param_order: parse_order(j.get("bert_param_order")?)?,
+            cnn_param_order: parse_order(j.get("cnn_param_order")?)?,
+            act_sites,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no executable {name:?} in manifest")))
+    }
+
+    /// Cross-check the manifest's parameter order against the Rust config —
+    /// the drift guard between `config.py` and `model::config`.
+    pub fn validate_abi(&self) -> Result<()> {
+        let rust_order = self.bert.param_order();
+        if rust_order != self.bert_param_order {
+            return Err(Error::Manifest(
+                "bert param order mismatch between manifest and rust config".into(),
+            ));
+        }
+        let rust_cnn = self.cnn.param_order();
+        if rust_cnn != self.cnn_param_order {
+            return Err(Error::Manifest(
+                "cnn param order mismatch between manifest and rust config".into(),
+            ));
+        }
+        let sites = self.bert.act_sites();
+        if sites.len() != self.act_sites.len()
+            || sites
+                .iter()
+                .zip(&self.act_sites)
+                .any(|((n1, w1), (n2, w2, _))| n1 != n2 || w1 != w2)
+        {
+            return Err(Error::Manifest("activation site table mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.executables.contains_key("bert_fwd_b32"));
+        assert!(m.executables.contains_key("bert_train_step_b32"));
+        m.validate_abi().unwrap();
+        let fwd = m.exe("bert_fwd_b32").unwrap();
+        assert_eq!(fwd.inputs.len(), m.bert_param_order.len() + 2);
+        assert_eq!(fwd.outputs[0].shape, vec![32, m.bert.num_classes]);
+        assert_eq!(fwd.inputs[0].dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

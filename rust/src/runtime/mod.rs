@@ -1,0 +1,17 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO-text artifacts and runs
+//! them from Rust. Python never executes at runtime — the artifacts are the
+//! only L2 output the coordinator consumes.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the L2⇄L3 ABI).
+//! * [`literal`] — [`crate::tensor`] ⇄ `xla::Literal` conversion.
+//! * [`client`] — PJRT CPU client, executable cache, typed `run` calls.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::{LoadedExe, Runtime};
+pub use manifest::{Dtype, ExeSpec, IoSpec, Manifest};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,341 @@
+//! Activation splitting (paper §4.2).
+//!
+//! Activation values are unknown at quantization time, so the layer is split
+//! *positionally*: the width-n activation becomes three width-n/3 chunks,
+//! each quantized with its own scale, then concatenated. Even when the
+//! global max/min land in the same chunk, the other chunks' resolution still
+//! improves.
+//!
+//! The calibrator records per-chunk ranges through the executor's activation
+//! hook (or from PJRT-fetched activations) and produces:
+//! * per-tensor parameters (baseline: all three chunks share one range), or
+//! * per-chunk parameters (SplitQuant activation splitting).
+
+use crate::model::config::{chunk_spans, BertConfig};
+use crate::quant::{Observer, QParams};
+use crate::tensor::Tensor;
+
+/// Activation quantization mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActQuantMode {
+    /// One range per site (the paper's baseline act quant).
+    PerTensor,
+    /// Per-chunk ranges (SplitQuant §4.2).
+    Split,
+}
+
+/// Per-site, per-chunk activation quantization parameters.
+#[derive(Debug, Clone)]
+pub struct ActQuantParams {
+    /// `[site][chunk]` parameters; 3 chunks per site.
+    pub per_site: Vec<[QParams; 3]>,
+    pub bits: u8,
+}
+
+impl ActQuantParams {
+    /// Flatten to the (scales, zps) arrays the AOT act-quant executable
+    /// expects: f32[S, 3] each.
+    pub fn to_arrays(&self) -> (Tensor, Tensor) {
+        let s = self.per_site.len();
+        let mut scales = Vec::with_capacity(s * 3);
+        let mut zps = Vec::with_capacity(s * 3);
+        for site in &self.per_site {
+            for p in site {
+                scales.push(p.scale);
+                zps.push(p.zp);
+            }
+        }
+        (
+            Tensor::new(&[s, 3], scales).unwrap(),
+            Tensor::new(&[s, 3], zps).unwrap(),
+        )
+    }
+
+    /// Executor hook applying chunked fake-quant in place — the pure-Rust
+    /// twin of the AOT act-quant graph.
+    pub fn hook<'a>(
+        &'a self,
+        cfg: &BertConfig,
+    ) -> impl FnMut(usize, &mut Tensor) + 'a {
+        let sites = cfg.act_sites();
+        move |site: usize, t: &mut Tensor| {
+            let width = sites[site].1;
+            let (_r, c) = t.as_2d();
+            debug_assert_eq!(c, width);
+            let spans = chunk_spans(width, 3);
+            let d = t.data_mut();
+            let rows = d.len() / c;
+            for r in 0..rows {
+                let row_start = r * c;
+                for (ci, &(lo, hi)) in spans.iter().enumerate() {
+                    let p = &self.per_site[site][ci];
+                    for v in &mut d[row_start + lo..row_start + hi] {
+                        *v = p.fake(*v);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Collects per-site / per-chunk min-max ranges from calibration batches.
+#[derive(Debug, Clone)]
+pub struct ActCalibrator {
+    sites: Vec<(String, usize)>,
+    /// `[site][chunk] -> (min, max)`
+    ranges: Vec<[(f32, f32); 3]>,
+    samples_seen: usize,
+}
+
+impl ActCalibrator {
+    pub fn new(cfg: &BertConfig) -> Self {
+        let sites = cfg.act_sites();
+        let ranges = vec![[(f32::INFINITY, f32::NEG_INFINITY); 3]; sites.len()];
+        ActCalibrator { sites, ranges, samples_seen: 0 }
+    }
+
+    /// Executor hook that records ranges (no mutation).
+    pub fn hook(&mut self) -> impl FnMut(usize, &mut Tensor) + '_ {
+        move |site: usize, t: &mut Tensor| {
+            let width = self.sites[site].1;
+            let (_r, c) = t.as_2d();
+            debug_assert_eq!(c, width);
+            let spans = chunk_spans(width, 3);
+            let d = t.data();
+            for row in d.chunks(c) {
+                for (ci, &(lo, hi)) in spans.iter().enumerate() {
+                    let e = &mut self.ranges[site][ci];
+                    for &v in &row[lo..hi] {
+                        e.0 = e.0.min(v);
+                        e.1 = e.1.max(v);
+                    }
+                }
+            }
+            if site == 0 {
+                self.samples_seen += t.as_2d().0;
+            }
+        }
+    }
+
+    pub fn samples_seen(&self) -> usize {
+        self.samples_seen
+    }
+
+    /// Produce quantization parameters. `PerTensor` merges the three chunk
+    /// ranges per site (== calibrating without splitting); `Split` keeps
+    /// them separate. Optionally clip with a percentile-style observer is
+    /// not supported here (min-max calibration, as in the paper's setup).
+    pub fn to_params(&self, bits: u8, mode: ActQuantMode) -> ActQuantParams {
+        let per_site = self
+            .ranges
+            .iter()
+            .map(|chunks| {
+                match mode {
+                    ActQuantMode::PerTensor => {
+                        let lo = chunks.iter().map(|c| c.0).fold(f32::INFINITY, f32::min);
+                        let hi =
+                            chunks.iter().map(|c| c.1).fold(f32::NEG_INFINITY, f32::max);
+                        let p = QParams::from_range(lo.min(0.0), hi.max(0.0), bits);
+                        [p, p, p]
+                    }
+                    ActQuantMode::Split => {
+                        let mk = |c: &(f32, f32)| {
+                            QParams::from_range(c.0.min(0.0), c.1.max(0.0), bits)
+                        };
+                        [mk(&chunks[0]), mk(&chunks[1]), mk(&chunks[2])]
+                    }
+                }
+            })
+            .collect();
+        ActQuantParams { per_site, bits }
+    }
+
+    /// Observer-based variant over pooled chunk samples is intentionally not
+    /// implemented: min-max matches the AOT graph semantics exactly.
+    pub fn chunk_ranges(&self) -> &[[(f32, f32); 3]] {
+        &self.ranges
+    }
+
+    /// Merge ranges from another calibrator (parallel calibration shards).
+    pub fn merge(&mut self, other: &ActCalibrator) {
+        assert_eq!(self.sites.len(), other.sites.len());
+        for (a, b) in self.ranges.iter_mut().zip(&other.ranges) {
+            for (x, y) in a.iter_mut().zip(b) {
+                x.0 = x.0.min(y.0);
+                x.1 = x.1.max(y.1);
+            }
+        }
+        self.samples_seen += other.samples_seen;
+    }
+}
+
+/// Percentile-clipped activation params from raw samples (ablation A3
+/// baseline variant): pools every chunk's samples per site.
+pub fn params_from_samples(
+    samples: &[Vec<f32>], // [site] -> pooled values
+    bits: u8,
+    observer: Observer,
+) -> Vec<QParams> {
+    samples
+        .iter()
+        .map(|vals| {
+            let (lo, hi) = observer.range(vals, bits);
+            QParams::from_range(lo.min(0.0), hi.max(0.0), bits)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::bert::BertModel;
+    use crate::model::params::ParamStore;
+    use crate::tensor::IntTensor;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> (BertConfig, BertModel) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 12,
+            layers: 1,
+            heads: 2,
+            ffn: 24,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let params = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        (cfg.clone(), BertModel::new(cfg, params).unwrap())
+    }
+
+    fn batch(cfg: &BertConfig, b: usize, seed: u64) -> (IntTensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let l = cfg.max_len;
+        let ids: Vec<i32> = (0..b * l).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let mask = vec![1.0f32; b * l];
+        (IntTensor::new(&[b, l], ids).unwrap(), Tensor::new(&[b, l], mask).unwrap())
+    }
+
+    #[test]
+    fn calibration_collects_finite_ranges() {
+        let (cfg, m) = tiny();
+        let mut cal = ActCalibrator::new(&cfg);
+        let (ids, mask) = batch(&cfg, 4, 1);
+        {
+            let mut hook = cal.hook();
+            m.forward_hooked(&ids, &mask, Some(&mut hook));
+        }
+        assert_eq!(cal.samples_seen(), 4 * cfg.max_len);
+        for site in cal.chunk_ranges() {
+            for (lo, hi) in site {
+                assert!(lo.is_finite() && hi.is_finite() && lo <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_mode_shares_params_across_chunks() {
+        let (cfg, m) = tiny();
+        let mut cal = ActCalibrator::new(&cfg);
+        let (ids, mask) = batch(&cfg, 4, 2);
+        {
+            let mut hook = cal.hook();
+            m.forward_hooked(&ids, &mask, Some(&mut hook));
+        }
+        let pt = cal.to_params(4, ActQuantMode::PerTensor);
+        for site in &pt.per_site {
+            assert_eq!(site[0], site[1]);
+            assert_eq!(site[1], site[2]);
+        }
+        let sp = cal.to_params(4, ActQuantMode::Split);
+        // split params generally differ across chunks somewhere
+        assert!(sp
+            .per_site
+            .iter()
+            .any(|s| s[0] != s[1] || s[1] != s[2]));
+    }
+
+    #[test]
+    fn split_scales_never_worse_than_per_tensor() {
+        // each chunk's range ⊆ site range ⇒ per-chunk scale >= per-tensor scale
+        let (cfg, m) = tiny();
+        let mut cal = ActCalibrator::new(&cfg);
+        let (ids, mask) = batch(&cfg, 8, 3);
+        {
+            let mut hook = cal.hook();
+            m.forward_hooked(&ids, &mask, Some(&mut hook));
+        }
+        let pt = cal.to_params(2, ActQuantMode::PerTensor);
+        let sp = cal.to_params(2, ActQuantMode::Split);
+        for (a, b) in pt.per_site.iter().zip(&sp.per_site) {
+            for c in 0..3 {
+                assert!(b[c].scale >= a[c].scale - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn hook_applies_fake_quant() {
+        let (cfg, m) = tiny();
+        let mut cal = ActCalibrator::new(&cfg);
+        let (ids, mask) = batch(&cfg, 3, 4);
+        {
+            let mut hook = cal.hook();
+            m.forward_hooked(&ids, &mask, Some(&mut hook));
+        }
+        let base = m.forward(&ids, &mask);
+        let params = cal.to_params(2, ActQuantMode::Split);
+        let mut h = params.hook(&cfg);
+        let quant = m.forward_hooked(&ids, &mask, Some(&mut h));
+        assert!(base.max_abs_diff(&quant) > 1e-4, "INT2 act quant must bite");
+        let params8 = cal.to_params(8, ActQuantMode::Split);
+        let mut h8 = params8.hook(&cfg);
+        let quant8 = m.forward_hooked(&ids, &mask, Some(&mut h8));
+        assert!(base.max_abs_diff(&quant8) < base.max_abs_diff(&quant));
+    }
+
+    #[test]
+    fn arrays_shape() {
+        let (cfg, m) = tiny();
+        let mut cal = ActCalibrator::new(&cfg);
+        let (ids, mask) = batch(&cfg, 2, 5);
+        {
+            let mut hook = cal.hook();
+            m.forward_hooked(&ids, &mask, Some(&mut hook));
+        }
+        let p = cal.to_params(4, ActQuantMode::Split);
+        let (s, z) = p.to_arrays();
+        assert_eq!(s.shape(), &[cfg.act_sites().len(), 3]);
+        assert_eq!(z.shape(), s.shape());
+    }
+
+    #[test]
+    fn merge_combines_ranges() {
+        let (cfg, m) = tiny();
+        let mut a = ActCalibrator::new(&cfg);
+        let mut b = ActCalibrator::new(&cfg);
+        let (i1, m1) = batch(&cfg, 2, 6);
+        let (i2, m2) = batch(&cfg, 2, 7);
+        {
+            let mut h = a.hook();
+            m.forward_hooked(&i1, &m1, Some(&mut h));
+        }
+        {
+            let mut h = b.hook();
+            m.forward_hooked(&i2, &m2, Some(&mut h));
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        for site in 0..merged.chunk_ranges().len() {
+            let rm = &merged.chunk_ranges()[site];
+            let ra = &a.chunk_ranges()[site];
+            let rb = &b.chunk_ranges()[site];
+            for c in 0..3 {
+                assert!(rm[c].0 <= ra[c].0.min(rb[c].0) + 1e-9);
+                assert!(rm[c].1 >= ra[c].1.max(rb[c].1) - 1e-9);
+            }
+        }
+        assert_eq!(merged.samples_seen(), a.samples_seen() + b.samples_seen());
+    }
+}

@@ -1,0 +1,178 @@
+//! BatchNorm folding (paper §4.1: "It is better to fold batch normalization
+//! layers into preceding linear and convolution layers before applying
+//! SplitQuant").
+//!
+//! For eval-mode BN with running statistics (μ, σ²) and affine (γ, β):
+//!
+//! ```text
+//! s   = γ / √(σ² + ε)              (per out-channel)
+//! W'  = W · s                      (broadcast over the out-channel axis)
+//! b'  = (b − μ) · s + β
+//! BN' = identity (γ=1, β=0, μ=0, σ²=1−ε)
+//! ```
+
+use crate::error::Result;
+use crate::model::params::ParamStore;
+use crate::tensor::Tensor;
+
+/// Fold `bn` into the preceding conv/linear `conv` inside a [`ParamStore`].
+/// Conv weights are OIHW (out-channel leading); linear weights of shape
+/// (in, out) use the trailing axis. The BN parameters are reset to identity
+/// so the same graph stays valid.
+pub fn fold_bn(store: &mut ParamStore, conv: &str, bn: &str, eps: f32) -> Result<()> {
+    let gamma = store.get(&format!("{bn}.gamma"))?.clone();
+    let beta = store.get(&format!("{bn}.beta"))?.clone();
+    let mean = store.get(&format!("{bn}.mean"))?.clone();
+    let var = store.get(&format!("{bn}.var"))?.clone();
+    let ch = gamma.numel();
+
+    let s: Vec<f32> = (0..ch)
+        .map(|c| gamma.data()[c] / (var.data()[c] + eps).sqrt())
+        .collect();
+
+    // weight: scale along the out-channel axis
+    {
+        let w = store.get_mut(&format!("{conv}.weight"))?;
+        let shape = w.shape().to_vec();
+        if shape[0] == ch {
+            // OIHW conv (or out-leading linear)
+            let inner: usize = shape[1..].iter().product();
+            for c in 0..ch {
+                for v in &mut w.data_mut()[c * inner..(c + 1) * inner] {
+                    *v *= s[c];
+                }
+            }
+        } else if *shape.last().unwrap() == ch {
+            // (in, out) linear
+            let cols = ch;
+            for row in w.data_mut().chunks_mut(cols) {
+                for (v, &sc) in row.iter_mut().zip(&s) {
+                    *v *= sc;
+                }
+            }
+        } else {
+            return Err(crate::error::Error::Model(format!(
+                "fold_bn: {conv}.weight shape {shape:?} has no axis of {ch} channels"
+            )));
+        }
+    }
+
+    // bias
+    {
+        let b = store.get_mut(&format!("{conv}.bias"))?;
+        for c in 0..ch {
+            let v = b.data()[c];
+            b.data_mut()[c] = (v - mean.data()[c]) * s[c] + beta.data()[c];
+        }
+    }
+
+    // reset BN to identity (graph unchanged, BN now a no-op)
+    store.set(&format!("{bn}.gamma"), Tensor::ones(&[ch]))?;
+    store.set(&format!("{bn}.beta"), Tensor::zeros(&[ch]))?;
+    store.set(&format!("{bn}.mean"), Tensor::zeros(&[ch]))?;
+    store.set(&format!("{bn}.var"), Tensor::full(&[ch], 1.0 - eps))?;
+    Ok(())
+}
+
+/// Fold both BN layers of the standard CNN.
+pub fn fold_cnn(store: &mut ParamStore, eps: f32) -> Result<()> {
+    fold_bn(store, "conv1", "bn1", eps)?;
+    fold_bn(store, "conv2", "bn2", eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::cnn::CnnModel;
+    use crate::model::config::CnnConfig;
+    use crate::util::rng::Rng;
+
+    fn randomized_cnn(seed: u64) -> (CnnConfig, ParamStore) {
+        let cfg = CnnConfig::default();
+        let mut rng = Rng::new(seed);
+        let mut store = ParamStore::init_cnn(&cfg.param_order(), &mut rng);
+        // randomize BN stats so folding is non-trivial
+        for bn in ["bn1", "bn2"] {
+            let ch = store.get(&format!("{bn}.gamma")).unwrap().numel();
+            let mk = |rng: &mut Rng, lo: f32, hi: f32| {
+                Tensor::new(
+                    &[ch],
+                    (0..ch).map(|_| lo + rng.f32() * (hi - lo)).collect(),
+                )
+                .unwrap()
+            };
+            store.set(&format!("{bn}.gamma"), mk(&mut rng, 0.5, 2.0)).unwrap();
+            store.set(&format!("{bn}.beta"), mk(&mut rng, -0.3, 0.3)).unwrap();
+            store.set(&format!("{bn}.mean"), mk(&mut rng, -0.5, 0.5)).unwrap();
+            store.set(&format!("{bn}.var"), mk(&mut rng, 0.2, 3.0)).unwrap();
+        }
+        (cfg, store)
+    }
+
+    #[test]
+    fn folded_cnn_is_equivalent() {
+        let (cfg, store) = randomized_cnn(0);
+        let mut folded = store.clone();
+        fold_cnn(&mut folded, cfg.bn_eps).unwrap();
+
+        let m0 = CnnModel::new(cfg.clone(), store).unwrap();
+        let m1 = CnnModel::new(cfg.clone(), folded).unwrap();
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[4, 1, 16, 16], 0.0, 1.0, &mut rng);
+        let d = m0.forward(&x).max_abs_diff(&m1.forward(&x));
+        assert!(d < 1e-3, "fold diverged: {d}");
+    }
+
+    #[test]
+    fn folding_reduces_quantizable_tensor_count() {
+        // after folding, BN params are identity -> only conv/fc remain "real"
+        let (cfg, mut store) = randomized_cnn(1);
+        fold_cnn(&mut store, cfg.bn_eps).unwrap();
+        let g = store.get("bn1.gamma").unwrap();
+        assert!(g.data().iter().all(|&v| v == 1.0));
+        assert!(store.get("bn2.mean").unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn linear_trailing_axis_fold() {
+        // emulate a linear (in=3, out=2) followed by a "bn" over out features
+        let order = vec![
+            ("fc.weight".to_string(), vec![3usize, 2]),
+            ("fc.bias".to_string(), vec![2usize]),
+            ("norm.gamma".to_string(), vec![2usize]),
+            ("norm.beta".to_string(), vec![2usize]),
+            ("norm.mean".to_string(), vec![2usize]),
+            ("norm.var".to_string(), vec![2usize]),
+        ];
+        let mut store = ParamStore::zeros(&order);
+        store.set("fc.weight", Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap()).unwrap();
+        store.set("fc.bias", Tensor::new(&[2], vec![0.5, -0.5]).unwrap()).unwrap();
+        store.set("norm.gamma", Tensor::new(&[2], vec![2.0, 0.5]).unwrap()).unwrap();
+        store.set("norm.beta", Tensor::new(&[2], vec![1.0, -1.0]).unwrap()).unwrap();
+        store.set("norm.mean", Tensor::new(&[2], vec![0.1, 0.2]).unwrap()).unwrap();
+        store.set("norm.var", Tensor::new(&[2], vec![1.0, 4.0]).unwrap()).unwrap();
+        let eps = 0.0;
+        // manual expectation for x = [1, 1, 1]
+        let x = [1.0f32, 1.0, 1.0];
+        let pre: Vec<f32> = (0..2)
+            .map(|j| x.iter().enumerate().map(|(i, &v)| v * [1., 2., 3., 4., 5., 6.][i * 2 + j]).sum::<f32>() + [0.5, -0.5][j])
+            .collect();
+        let expect: Vec<f32> = (0..2)
+            .map(|j| {
+                let s = [2.0, 0.5][j] / ([1.0f32, 4.0][j] + eps).sqrt();
+                (pre[j] - [0.1, 0.2][j]) * s + [1.0, -1.0][j]
+            })
+            .collect();
+        fold_bn(&mut store, "fc", "norm", eps).unwrap();
+        let w = store.get("fc.weight").unwrap();
+        let b = store.get("fc.bias").unwrap();
+        let got: Vec<f32> = (0..2)
+            .map(|j| {
+                x.iter().enumerate().map(|(i, &v)| v * w.at2(i, j)).sum::<f32>() + b.data()[j]
+            })
+            .collect();
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-5, "{got:?} vs {expect:?}");
+        }
+    }
+}

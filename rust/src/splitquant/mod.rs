@@ -1,0 +1,242 @@
+//! **SplitQuant** (the paper's contribution): split each quantizable layer
+//! into three mathematically equivalent layers so each gets its own
+//! quantization scale (paper §4).
+//!
+//! * Weights & biases: 1-D k-means (k=3, greedy k-means++) clusters values
+//!   into lower/middle/upper groups; each group is quantized with its own
+//!   affine parameters ([`weight_split`]). The fused representation (codes +
+//!   cluster-id plane) is *mathematically identical* to the paper's three
+//!   zero-padded layers summed ([`equivalence`] proves it) while never
+//!   materializing the zeros.
+//! * Activations: positionally split into three chunks, each with its own
+//!   scale, concatenated back ([`activation_split`]).
+//! * BatchNorm is folded into preceding conv/linear layers before splitting
+//!   (§4.1, [`bn_fold`]).
+
+pub mod activation_split;
+pub mod analysis;
+pub mod bn_fold;
+pub mod equivalence;
+pub mod weight_split;
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::model::params::ParamStore;
+use crate::quant::QTensor;
+use crate::util::rng::Rng;
+
+pub use activation_split::{ActCalibrator, ActQuantMode, ActQuantParams};
+pub use weight_split::{split_quantize, split_quantize_pair, SplitTensor};
+
+/// SplitQuant configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitQuantConfig {
+    /// Cluster count (paper: 3 = lower/middle/upper).
+    pub k: usize,
+    /// Target integer bit-width.
+    pub bits: u8,
+    /// Lloyd iteration cap.
+    pub max_iter: usize,
+    /// Cluster weight and bias values jointly in one k-means (one split per
+    /// layer). Default **false**: ablation A2b shows joint clustering hurts
+    /// badly when bias magnitudes differ from weight magnitudes (e.g. after
+    /// BN folding) — the weight mass owns the centroids and biases land at
+    /// cluster edges with large error. Clustering biases separately gives
+    /// each its own lower/middle/upper split, matching Figure 2's structure
+    /// while preserving accuracy (see EXPERIMENTS.md §A2b).
+    pub joint_bias: bool,
+    /// Seed for k-means++ (deterministic runs).
+    pub seed: u64,
+}
+
+impl SplitQuantConfig {
+    pub fn new(bits: u8) -> Self {
+        SplitQuantConfig { k: 3, bits, max_iter: 50, joint_bias: false, seed: 0xC10C }
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+}
+
+/// A whole model quantized with SplitQuant: per-parameter Split-layout
+/// tensors plus the names deliberately kept FP32.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub tensors: BTreeMap<String, QTensor>,
+    pub fp32_names: Vec<String>,
+    pub bits: u8,
+}
+
+impl QuantizedModel {
+    /// Packed size of the quantized parameters (paper-§6 accounting).
+    pub fn quantized_bytes(&self) -> usize {
+        self.tensors.values().map(|q| q.byte_size()).sum()
+    }
+}
+
+/// Parameter names the PTQ passes quantize, mirroring the paper's scope
+/// (linear/conv layers incl. the token embedding; normalization parameters
+/// are *not* quantized — §4.1 notes PyTorch stores LN gamma as "weight" but
+/// they are semantically not weights, and BN is folded instead).
+pub fn default_quantizable(store: &ParamStore) -> Vec<String> {
+    store
+        .names()
+        .iter()
+        .filter(|n| {
+            let n = n.as_str();
+            let is_wb = n.ends_with(".weight") || n.ends_with(".bias");
+            let is_norm = n.contains(".ln.")
+                || n.starts_with("bn")
+                || n.contains(".bn")
+                || n.ends_with(".gamma")
+                || n.ends_with(".beta")
+                || n.ends_with(".mean")
+                || n.ends_with(".var");
+            let is_emb = n == "embeddings.token";
+            (is_wb && !is_norm) || is_emb
+        })
+        .cloned()
+        .collect()
+}
+
+/// Apply SplitQuant PTQ to every quantizable parameter of `store`.
+///
+/// Returns `(eval_store, qmodel)`: `eval_store` carries the dequantized
+/// (fake-quant) weights for accuracy evaluation through any executor, and
+/// `qmodel` the packed representation for size accounting / deployment.
+pub fn quantize_store(
+    store: &ParamStore,
+    quantizable: &[String],
+    cfg: &SplitQuantConfig,
+) -> Result<(ParamStore, QuantizedModel)> {
+    let mut eval_store = store.clone();
+    let mut tensors = BTreeMap::new();
+    let mut rng = Rng::new(cfg.seed);
+
+    let quantset: std::collections::HashSet<&str> =
+        quantizable.iter().map(|s| s.as_str()).collect();
+
+    for name in quantizable {
+        if !name.ends_with(".bias") || !cfg.joint_bias {
+            // biases handled with their weight below when joint
+            if name.ends_with(".bias") {
+                let t = store.get(name)?;
+                let st = split_quantize(t, cfg, &mut rng)?;
+                eval_store.set(name, st.qtensor.dequantize())?;
+                tensors.insert(name.clone(), st.qtensor);
+            }
+            continue;
+        }
+    }
+    for name in quantizable {
+        if name.ends_with(".bias") {
+            continue; // handled jointly
+        }
+        let w = store.get(name)?;
+        let bias_name = name.strip_suffix(".weight").map(|p| format!("{p}.bias"));
+        let bias = match &bias_name {
+            Some(bn) if cfg.joint_bias && quantset.contains(bn.as_str()) => {
+                Some(store.get(bn)?)
+            }
+            _ => None,
+        };
+        let (wq, bq) = split_quantize_pair(w, bias, cfg, &mut rng)?;
+        eval_store.set(name, wq.qtensor.dequantize())?;
+        tensors.insert(name.clone(), wq.qtensor);
+        if let (Some(bn), Some(bq)) = (bias_name, bq) {
+            eval_store.set(&bn, bq.qtensor.dequantize())?;
+            tensors.insert(bn, bq.qtensor);
+        }
+    }
+
+    let fp32_names: Vec<String> = store
+        .names()
+        .iter()
+        .filter(|n| !tensors.contains_key(*n))
+        .cloned()
+        .collect();
+    Ok((eval_store, QuantizedModel { tensors, fp32_names, bits: cfg.bits }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+
+    fn tiny_store() -> (BertConfig, ParamStore) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        (cfg, store)
+    }
+
+    #[test]
+    fn quantizable_set_excludes_norms_and_position() {
+        let (_, store) = tiny_store();
+        let q = default_quantizable(&store);
+        assert!(q.contains(&"embeddings.token".to_string()));
+        assert!(q.contains(&"encoder.0.attn.q.weight".to_string()));
+        assert!(q.contains(&"encoder.0.ffn.in.bias".to_string()));
+        assert!(q.contains(&"classifier.weight".to_string()));
+        assert!(!q.iter().any(|n| n.contains(".ln.")));
+        assert!(!q.contains(&"embeddings.position".to_string()));
+    }
+
+    #[test]
+    fn quantize_store_roundtrip_shapes() {
+        let (cfg, store) = tiny_store();
+        let quantizable = default_quantizable(&store);
+        let sq = SplitQuantConfig::new(4);
+        let (eval_store, qmodel) = quantize_store(&store, &quantizable, &sq).unwrap();
+        eval_store.check_order(&cfg.param_order()).unwrap();
+        assert_eq!(qmodel.tensors.len(), quantizable.len());
+        // LN params untouched
+        assert_eq!(
+            eval_store.get("encoder.0.attn.ln.gamma").unwrap().data(),
+            store.get("encoder.0.attn.ln.gamma").unwrap().data()
+        );
+        // quantized weights differ but are close at 4 bits
+        let orig = store.get("encoder.0.attn.q.weight").unwrap();
+        let deq = eval_store.get("encoder.0.attn.q.weight").unwrap();
+        let diff = orig.max_abs_diff(deq);
+        assert!(diff > 0.0 && diff < 0.05, "diff {diff}");
+    }
+
+    #[test]
+    fn int2_split_reconstruction_beats_baseline() {
+        // aggregate reconstruction MSE over a whole store: SplitQuant must
+        // beat the per-tensor min-max baseline at INT2
+        let (_, store) = tiny_store();
+        let quantizable = default_quantizable(&store);
+        let sq = SplitQuantConfig::new(2);
+        let (eval_sq, _) = quantize_store(&store, &quantizable, &sq).unwrap();
+        let base_cfg = crate::quant::QConfig::baseline(2);
+        let mut mse_sq = 0.0f64;
+        let mut mse_base = 0.0f64;
+        for name in &quantizable {
+            let orig = store.get(name).unwrap();
+            let sq_t = eval_sq.get(name).unwrap();
+            let base_t =
+                crate::quant::qtensor::fake_quant_tensor(orig, &base_cfg).unwrap();
+            for ((&o, &s), &b) in
+                orig.data().iter().zip(sq_t.data()).zip(base_t.data())
+            {
+                mse_sq += ((s - o) as f64).powi(2);
+                mse_base += ((b - o) as f64).powi(2);
+            }
+        }
+        assert!(mse_sq < mse_base * 0.5, "split {mse_sq} vs base {mse_base}");
+    }
+}

@@ -1,0 +1,321 @@
+//! Weight/bias splitting via 1-D k-means (paper §4.1, Figure 2/3).
+//!
+//! Every element of a layer's weight (and bias) is assigned to the lower /
+//! middle / upper cluster; each cluster gets its own affine quantization
+//! parameters computed over `cluster_range ∪ {0}`. Including 0 in the range
+//! (a) is exactly what quantizing the paper's zero-injected split layers
+//! does, and (b) guarantees the injected zeros reconstruct *exactly*
+//! (`dq(Q(0)) == 0` whenever 0 is inside the range — asserted in
+//! `quant::scheme` tests), so the fused codes+cid representation used here
+//! is bit-identical to materializing three layers and summing.
+
+use crate::error::Result;
+use crate::quant::{QParams, QTensor};
+use crate::tensor::packing::Packed;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use crate::clustering;
+
+use super::SplitQuantConfig;
+
+/// One split-quantized tensor plus its clustering metadata.
+#[derive(Debug, Clone)]
+pub struct SplitTensor {
+    pub qtensor: QTensor,
+    pub centroids: Vec<f32>,
+    /// Per-element cluster assignment (original order) — kept for
+    /// materialization/equivalence checks and the sparse executor.
+    pub assignment: Vec<u8>,
+}
+
+/// Smallest packing width (1/2/4/8) that can hold ids `0..k`.
+pub fn cid_bits(k: usize) -> u8 {
+    match k {
+        0..=2 => 1,
+        3..=4 => 2,
+        5..=16 => 4,
+        _ => 8,
+    }
+}
+
+/// Per-cluster quantization parameters over `range ∪ {0}`.
+fn cluster_params(
+    values: &[f32],
+    assignment: &[u8],
+    k: usize,
+    bits: u8,
+) -> Vec<QParams> {
+    let mut lo = vec![0.0f32; k]; // start at 0: range always includes 0
+    let mut hi = vec![0.0f32; k];
+    for (&v, &a) in values.iter().zip(assignment) {
+        let c = a as usize;
+        lo[c] = lo[c].min(v);
+        hi[c] = hi[c].max(v);
+    }
+    (0..k).map(|c| QParams::from_range(lo[c], hi[c], bits)).collect()
+}
+
+fn encode(
+    values: &[f32],
+    assignment: &[u8],
+    params: &[QParams],
+    bits: u8,
+    k: usize,
+) -> Result<(Packed, Packed)> {
+    let codes: Vec<i8> = values
+        .iter()
+        .zip(assignment)
+        .map(|(&v, &a)| params[a as usize].quantize(v))
+        .collect();
+    let codes = Packed::pack(&codes, bits)?;
+    let cid = Packed::pack_unsigned(assignment, cid_bits(k))?;
+    Ok((codes, cid))
+}
+
+/// Split-quantize a single tensor (no companion bias).
+pub fn split_quantize(t: &Tensor, cfg: &SplitQuantConfig, rng: &mut Rng) -> Result<SplitTensor> {
+    let km = clustering::cluster(t.data(), cfg.k, cfg.max_iter, rng);
+    let params = cluster_params(t.data(), &km.assignment, cfg.k, cfg.bits);
+    let (codes, cid) = encode(t.data(), &km.assignment, &params, cfg.bits, cfg.k)?;
+    Ok(SplitTensor {
+        qtensor: QTensor::from_split(t.shape(), codes, cid, params)?,
+        centroids: km.centroids,
+        assignment: km.assignment,
+    })
+}
+
+/// Split-quantize with an **externally supplied** assignment (ablation A2:
+/// equal-width / quantile splits instead of k-means). Assignment values must
+/// lie in `[0, k)`.
+pub fn split_quantize_with_assignment(
+    t: &Tensor,
+    assignment: Vec<u8>,
+    k: usize,
+    bits: u8,
+) -> Result<SplitTensor> {
+    assert_eq!(assignment.len(), t.numel());
+    let params = cluster_params(t.data(), &assignment, k, bits);
+    let (codes, cid) = encode(t.data(), &assignment, &params, bits, k)?;
+    Ok(SplitTensor {
+        qtensor: QTensor::from_split(t.shape(), codes, cid, params)?,
+        centroids: vec![],
+        assignment,
+    })
+}
+
+/// Equal-width range partition (ablation A2 baseline splitter).
+pub fn assign_equal_width(values: &[f32], k: usize) -> Vec<u8> {
+    let (lo, hi) = crate::util::stats::min_max(values);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|&v| (((v - lo) / span * k as f32) as usize).min(k - 1) as u8)
+        .collect()
+}
+
+/// Quantile partition: equal population per cluster (ablation A2 splitter).
+pub fn assign_quantile(values: &[f32], k: usize) -> Vec<u8> {
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| values[a as usize].partial_cmp(&values[b as usize]).unwrap());
+    let mut out = vec![0u8; values.len()];
+    for (rank, &orig) in idx.iter().enumerate() {
+        out[orig as usize] = ((rank * k) / values.len()).min(k - 1) as u8;
+    }
+    out
+}
+
+/// Split-quantize a weight and its bias **jointly**: one k-means over the
+/// concatenated values (Figure 2: weight and bias of a layer share the same
+/// three split layers), then separate packed tensors.
+pub fn split_quantize_pair(
+    weight: &Tensor,
+    bias: Option<&Tensor>,
+    cfg: &SplitQuantConfig,
+    rng: &mut Rng,
+) -> Result<(SplitTensor, Option<SplitTensor>)> {
+    let Some(bias) = bias else {
+        return Ok((split_quantize(weight, cfg, rng)?, None));
+    };
+    let nw = weight.numel();
+    let mut values = Vec::with_capacity(nw + bias.numel());
+    values.extend_from_slice(weight.data());
+    values.extend_from_slice(bias.data());
+
+    let km = clustering::cluster(&values, cfg.k, cfg.max_iter, rng);
+    let params = cluster_params(&values, &km.assignment, cfg.k, cfg.bits);
+
+    let (w_codes, w_cid) =
+        encode(&values[..nw], &km.assignment[..nw], &params, cfg.bits, cfg.k)?;
+    let (b_codes, b_cid) =
+        encode(&values[nw..], &km.assignment[nw..], &params, cfg.bits, cfg.k)?;
+
+    let wt = SplitTensor {
+        qtensor: QTensor::from_split(weight.shape(), w_codes, w_cid, params.clone())?,
+        centroids: km.centroids.clone(),
+        assignment: km.assignment[..nw].to_vec(),
+    };
+    let bt = SplitTensor {
+        qtensor: QTensor::from_split(bias.shape(), b_codes, b_cid, params)?,
+        centroids: km.centroids,
+        assignment: km.assignment[nw..].to_vec(),
+    };
+    Ok((wt, Some(bt)))
+}
+
+/// Materialize the paper's zero-padded split branches from an assignment:
+/// branch `c` holds the original values where `assignment == c`, 0 elsewhere.
+pub fn materialize_branches(t: &Tensor, assignment: &[u8], k: usize) -> Vec<Tensor> {
+    assert_eq!(t.numel(), assignment.len());
+    let mut out = vec![Tensor::zeros(t.shape()); k];
+    for (i, (&v, &a)) in t.data().iter().zip(assignment).enumerate() {
+        out[a as usize].data_mut()[i] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen_values_with_outliers};
+
+    fn cfg(bits: u8) -> SplitQuantConfig {
+        SplitQuantConfig::new(bits)
+    }
+
+    #[test]
+    fn split_reconstruction_beats_per_tensor_at_int2() {
+        let mut rng = Rng::new(0);
+        let vals = gen_values_with_outliers(&mut rng, 4096, 0.01);
+        let t = Tensor::new(&[64, 64], vals).unwrap();
+        let st = split_quantize(&t, &cfg(2), &mut rng).unwrap();
+        let deq = st.qtensor.dequantize();
+        let mse_split: f64 = t
+            .data()
+            .iter()
+            .zip(deq.data())
+            .map(|(&o, &d)| ((o - d) as f64).powi(2))
+            .sum();
+        let base =
+            crate::quant::qtensor::fake_quant_tensor(&t, &crate::quant::QConfig::baseline(2))
+                .unwrap();
+        let mse_base: f64 = t
+            .data()
+            .iter()
+            .zip(base.data())
+            .map(|(&o, &d)| ((o - d) as f64).powi(2))
+            .sum();
+        // with 1% scattered outliers the win is solid but not dramatic
+        // (k=3 cannot isolate ~40 outliers individually); the single-outlier
+        // case below shows the dramatic regime
+        assert!(mse_split < mse_base * 0.8, "split {mse_split} base {mse_base}");
+    }
+
+    #[test]
+    fn outliers_survive_splitquant() {
+        // paper's core claim: the outlier is kept AND the bulk keeps resolution
+        let mut rng = Rng::new(1);
+        let mut vals = gen_values_with_outliers(&mut rng, 2047, 0.0);
+        vals.push(500.0); // one enormous outlier
+        let t = Tensor::new(&[2048], vals.clone()).unwrap();
+        let st = split_quantize(&t, &cfg(2), &mut rng).unwrap();
+        let deq = st.qtensor.dequantize();
+        // outlier reconstructed well (its own cluster, not clipped away)
+        let out_err = (deq.data()[2047] - 500.0).abs();
+        assert!(out_err < 100.0, "outlier err {out_err}");
+        // bulk resolution: INT2 per-tensor min-max would give step ~167;
+        // split's bulk cluster step must be tiny in comparison
+        let bulk_params = st.qtensor.params()[st.assignment[0] as usize];
+        assert!(bulk_params.step() < 10.0, "bulk step {}", bulk_params.step());
+    }
+
+    #[test]
+    fn joint_bias_shares_clusters() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[32, 16], 0.0, 0.05, &mut rng);
+        let b = Tensor::randn(&[16], 0.0, 0.05, &mut rng);
+        let (wt, bt) = split_quantize_pair(&w, Some(&b), &cfg(4), &mut rng).unwrap();
+        let bt = bt.unwrap();
+        assert_eq!(wt.qtensor.params(), bt.qtensor.params());
+        assert_eq!(wt.centroids, bt.centroids);
+        assert_eq!(bt.assignment.len(), 16);
+    }
+
+    #[test]
+    fn cid_bits_choice() {
+        assert_eq!(cid_bits(2), 1);
+        assert_eq!(cid_bits(3), 2);
+        assert_eq!(cid_bits(4), 2);
+        assert_eq!(cid_bits(5), 4);
+    }
+
+    #[test]
+    fn materialized_branches_sum_to_original() {
+        check("Σ branches == original", 30, |rng| {
+            let n = rng.range(1, 400);
+            let vals = gen_values_with_outliers(rng, n, 0.05);
+            let t = Tensor::new(&[n], vals).unwrap();
+            let st = split_quantize(&t, &cfg(4), rng).unwrap();
+            let branches = materialize_branches(&t, &st.assignment, 3);
+            let mut sum = Tensor::zeros(t.shape());
+            for b in &branches {
+                sum.add_assign(b);
+            }
+            assert!(t.max_abs_diff(&sum) == 0.0, "exact FP32 identity expected");
+        });
+    }
+
+    #[test]
+    fn fused_dequant_equals_branchwise_fake_quant_sum() {
+        // dequantize(Split QTensor) == Σ_c fake_quant_c(branch_c)
+        check("fused == branch-wise", 25, |rng| {
+            let n = rng.range(2, 300);
+            let vals = gen_values_with_outliers(rng, n, 0.1);
+            let t = Tensor::new(&[n], vals).unwrap();
+            let st = split_quantize(&t, &cfg(2), rng).unwrap();
+            let fused = st.qtensor.dequantize();
+            let branches = materialize_branches(&t, &st.assignment, 3);
+            let params = st.qtensor.params();
+            let mut sum = Tensor::zeros(t.shape());
+            for (c, b) in branches.iter().enumerate() {
+                for (i, &v) in b.data().iter().enumerate() {
+                    // zero-injected entries reconstruct exactly to 0, so only
+                    // the owned entries contribute — same as the fused path
+                    if st.assignment[i] as usize == c {
+                        sum.data_mut()[i] += params[c].fake(v);
+                    } else {
+                        assert_eq!(params[c].fake(v), 0.0); // v == 0 here
+                    }
+                }
+            }
+            assert!(fused.max_abs_diff(&sum) < 1e-6);
+        });
+    }
+
+    #[test]
+    fn k1_equals_per_tensor_baseline_with_zero_extension() {
+        // k=1 degenerates to per-tensor quant over range ∪ {0}
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> = (0..256).map(|_| rng.normal_f32(1.0, 0.1)).collect();
+        let t = Tensor::new(&[256], vals).unwrap();
+        let c = SplitQuantConfig { k: 1, ..cfg(4) };
+        let st = split_quantize(&t, &c, &mut rng).unwrap();
+        assert_eq!(st.qtensor.params().len(), 1);
+        let p = st.qtensor.params()[0];
+        // range [0, max] (all values positive here)
+        let (lo, hi) = t.min_max();
+        let expect = QParams::from_range(0.0f32.min(lo), hi.max(0.0), 4);
+        assert_eq!(p, expect);
+    }
+
+    #[test]
+    fn assignment_is_monotone_lower_middle_upper() {
+        let mut rng = Rng::new(6);
+        let vals = gen_values_with_outliers(&mut rng, 3000, 0.02);
+        let t = Tensor::new(&[3000], vals.clone()).unwrap();
+        let st = split_quantize(&t, &cfg(4), &mut rng).unwrap();
+        let mut pairs: Vec<(f32, u8)> = vals.into_iter().zip(st.assignment).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(pairs.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+}

@@ -1,0 +1,257 @@
+//! Row-major dense tensors (`f32` and `i32`).
+//!
+//! Deliberately minimal: owned storage, explicit shapes, no stride tricks —
+//! the executor works on contiguous buffers and the hot loops live in
+//! [`super::ops`].
+
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Dense row-major `f32` tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// i.i.d. normal entries (parameter initialization).
+    pub fn randn(shape: &[usize], mean: f32, std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(mean, std)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?}",
+                self.shape,
+                self.data.len(),
+                shape
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data: self.data.clone() })
+    }
+
+    /// Number of rows / row width when viewed as 2-D (collapses leading dims).
+    pub fn as_2d(&self) -> (usize, usize) {
+        match self.shape.len() {
+            0 => (1, 1),
+            1 => (1, self.shape[0]),
+            _ => {
+                let cols = *self.shape.last().unwrap();
+                (self.data.len() / cols, cols)
+            }
+        }
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row `i` of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn min_max(&self) -> (f32, f32) {
+        crate::util::stats::min_max(&self.data)
+    }
+
+    /// Max |x| (symmetric quantization range).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Elementwise maximum absolute difference to another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// In-place elementwise add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Bytes of FP32 storage (model-size accounting, paper §6).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Dense row-major `i32` tensor (token ids, labels, cluster ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                numel,
+                data.len()
+            )));
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        IntTensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> i32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.as_2d(), (2, 3));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(&[2, 2], vec![1.0]).is_err());
+        assert!(IntTensor::new(&[3], vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert!(t.reshape(&[2, 4]).is_ok());
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[100, 100], 0.5, 2.0, &mut rng);
+        let m = crate::util::stats::mean(t.data());
+        let s = crate::util::stats::std_dev(t.data());
+        assert!((m - 0.5).abs() < 0.05, "mean {m}");
+        assert!((s - 2.0).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn minmax_and_absmax() {
+        let t = Tensor::new(&[4], vec![-3.0, 1.0, 2.0, -0.5]).unwrap();
+        assert_eq!(t.min_max(), (-3.0, 2.0));
+        assert_eq!(t.abs_max(), 3.0);
+    }
+
+    #[test]
+    fn as_2d_collapses_leading() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.as_2d(), (6, 4));
+        let v = Tensor::zeros(&[7]);
+        assert_eq!(v.as_2d(), (1, 7));
+    }
+}

@@ -1,0 +1,8 @@
+//! Dense tensors, ops and bit-packed storage — the numeric substrate for the
+//! pure-Rust executor and the quantization engine.
+
+pub mod dense;
+pub mod ops;
+pub mod packing;
+
+pub use dense::{IntTensor, Tensor};

@@ -1,0 +1,202 @@
+//! Bit-packed storage for low-bit integer codes.
+//!
+//! The paper's model-size arithmetic (§6: INT2 = 6.25 % of FP32, SplitQuant
+//! up to 18.75 %) assumes *real* sub-byte storage; this module provides it.
+//! Signed codes in `[-2^(b-1), 2^(b-1)-1]` are biased to unsigned and packed
+//! little-endian within each byte (first code in the lowest bits).
+
+use crate::error::{Error, Result};
+
+/// Bit-packed buffer of signed `bits`-wide integer codes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packed {
+    bits: u8,
+    len: usize,
+    bytes: Vec<u8>,
+}
+
+impl Packed {
+    /// Pack signed codes. `bits` must be 1..=8 and each code must fit.
+    pub fn pack(codes: &[i8], bits: u8) -> Result<Packed> {
+        if !(1..=8).contains(&bits) {
+            return Err(Error::Quant(format!("unsupported bit width {bits}")));
+        }
+        let qmin = -(1i16 << (bits - 1));
+        let qmax = (1i16 << (bits - 1)) - 1;
+        let per_byte = 8 / bits as usize;
+        let nbytes = codes.len().div_ceil(per_byte);
+        let mut bytes = vec![0u8; nbytes];
+        let mask = ((1u16 << bits) - 1) as u8;
+        for (i, &c) in codes.iter().enumerate() {
+            let c16 = c as i16;
+            if c16 < qmin || c16 > qmax {
+                return Err(Error::Quant(format!("code {c} out of INT{bits} range")));
+            }
+            let biased = ((c16 - qmin) as u8) & mask;
+            let byte = i / per_byte;
+            let shift = (i % per_byte) as u8 * bits;
+            bytes[byte] |= biased << shift;
+        }
+        Ok(Packed { bits, len: codes.len(), bytes })
+    }
+
+    /// Unpack back to signed codes.
+    pub fn unpack(&self) -> Vec<i8> {
+        let per_byte = 8 / self.bits as usize;
+        let qmin = -(1i16 << (self.bits - 1));
+        let mask = ((1u16 << self.bits) - 1) as u8;
+        let mut out = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            let byte = self.bytes[i / per_byte];
+            let shift = (i % per_byte) as u8 * self.bits;
+            let biased = (byte >> shift) & mask;
+            out.push((biased as i16 + qmin) as i8);
+        }
+        out
+    }
+
+    /// Pack **unsigned** codes in `[0, 2^bits)` (cluster-id planes).
+    pub fn pack_unsigned(codes: &[u8], bits: u8) -> Result<Packed> {
+        if !(1..=8).contains(&bits) {
+            return Err(Error::Quant(format!("unsupported bit width {bits}")));
+        }
+        let limit = if bits == 8 { 255u16 } else { (1u16 << bits) - 1 };
+        let per_byte = 8 / bits as usize;
+        let nbytes = codes.len().div_ceil(per_byte);
+        let mut bytes = vec![0u8; nbytes];
+        let mask = ((1u16 << bits) - 1) as u8;
+        for (i, &c) in codes.iter().enumerate() {
+            if c as u16 > limit {
+                return Err(Error::Quant(format!("code {c} out of UINT{bits} range")));
+            }
+            let byte = i / per_byte;
+            let shift = (i % per_byte) as u8 * bits;
+            bytes[byte] |= (c & mask) << shift;
+        }
+        Ok(Packed { bits, len: codes.len(), bytes })
+    }
+
+    /// Unpack as unsigned codes.
+    pub fn unpack_unsigned(&self) -> Vec<u8> {
+        let per_byte = 8 / self.bits as usize;
+        let mask = ((1u16 << self.bits) - 1) as u8;
+        (0..self.len)
+            .map(|i| {
+                let byte = self.bytes[i / per_byte];
+                let shift = (i % per_byte) as u8 * self.bits;
+                (byte >> shift) & mask
+            })
+            .collect()
+    }
+
+    /// Read one code without unpacking everything.
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        debug_assert!(i < self.len);
+        let per_byte = 8 / self.bits as usize;
+        let qmin = -(1i16 << (self.bits - 1));
+        let mask = ((1u16 << self.bits) - 1) as u8;
+        let byte = self.bytes[i / per_byte];
+        let shift = (i % per_byte) as u8 * self.bits;
+        (((byte >> shift) & mask) as i16 + qmin) as i8
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Packed storage size in bytes.
+    pub fn byte_size(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Reconstruct from raw parts (checkpoint loading).
+    pub fn from_raw(bits: u8, len: usize, bytes: Vec<u8>) -> Result<Packed> {
+        let per_byte = 8 / bits as usize;
+        if bytes.len() != len.div_ceil(per_byte) {
+            return Err(Error::Quant(format!(
+                "packed buffer size {} does not match len {len} at {bits} bits",
+                bytes.len()
+            )));
+        }
+        Ok(Packed { bits, len, bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in 1..=8u8 {
+            let qmin = -(1i16 << (bits - 1));
+            let qmax = (1i16 << (bits - 1)) - 1;
+            let codes: Vec<i8> = (qmin..=qmax).map(|v| v as i8).collect();
+            let p = Packed::pack(&codes, bits).unwrap();
+            assert_eq!(p.unpack(), codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn sizes_match_paper_arithmetic() {
+        // 1000 FP32 params = 4000 bytes; INT2 = 250 bytes = 6.25 %.
+        let codes = vec![0i8; 1000];
+        let p2 = Packed::pack(&codes, 2).unwrap();
+        assert_eq!(p2.byte_size(), 250);
+        let p4 = Packed::pack(&codes, 4).unwrap();
+        assert_eq!(p4.byte_size(), 500);
+        let p8 = Packed::pack(&codes, 8).unwrap();
+        assert_eq!(p8.byte_size(), 1000);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(Packed::pack(&[2], 2).is_err()); // INT2 max is 1
+        assert!(Packed::pack(&[-3], 2).is_err());
+        assert!(Packed::pack(&[7], 4).is_ok());
+        assert!(Packed::pack(&[8], 4).is_err());
+    }
+
+    #[test]
+    fn random_get_matches_unpack() {
+        check("packed get == unpack", 50, |rng| {
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let qmin = -(1i16 << (bits - 1));
+            let qmax = (1i16 << (bits - 1)) - 1;
+            let n = rng.range(1, 300);
+            let codes: Vec<i8> = (0..n)
+                .map(|_| (qmin + rng.below((qmax - qmin + 1) as usize) as i16) as i8)
+                .collect();
+            let p = Packed::pack(&codes, bits).unwrap();
+            let un = p.unpack();
+            assert_eq!(un, codes);
+            for i in 0..n {
+                assert_eq!(p.get(i), codes[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn from_raw_validates_length() {
+        let p = Packed::pack(&[0, 1, -1], 4).unwrap();
+        let raw = p.bytes().to_vec();
+        assert!(Packed::from_raw(4, 3, raw.clone()).is_ok());
+        assert!(Packed::from_raw(4, 5, raw).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Training orchestration: the Rust coordinator drives the AOT-compiled
+//! fused train-step executable (fwd + bwd + Adam inside one XLA graph).
+//!
+//! The coordinator owns all state (parameters, Adam moments, step counter,
+//! RNG, data order); XLA owns only the math. One `step()` feeds
+//! `3·P + 5` literals and ingests `3·P + 1` back.
+
+pub mod schedule;
+
+use crate::data::batch::TextBatcher;
+use crate::error::{Error, Result};
+use crate::model::params::ParamStore;
+use crate::runtime::literal::Value;
+use crate::runtime::Runtime;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+pub use schedule::LrSchedule;
+
+/// Progress record for one logged step.
+#[derive(Debug, Clone)]
+pub struct TrainLogEntry {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub elapsed: std::time::Duration,
+}
+
+/// Drives `bert_train_step_b{B}` (or `cnn_train_step_b{B}`).
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    exe: std::sync::Arc<crate::runtime::LoadedExe>,
+    pub store: ParamStore,
+    adam_m: Vec<Tensor>,
+    adam_v: Vec<Tensor>,
+    pub step: usize,
+    pub log: Vec<TrainLogEntry>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Create from an initialized parameter store.
+    pub fn new(rt: &'rt Runtime, exe_name: &str, store: ParamStore) -> Result<Self> {
+        let exe = rt.load(exe_name)?;
+        let nparams = store.len();
+        // text steps take (step, ids, mask, labels, lr); image steps
+        // (step, images, labels, lr)
+        let got = exe.spec.inputs.len();
+        if got != 3 * nparams + 5 && got != 3 * nparams + 4 {
+            return Err(Error::Runtime(format!(
+                "{exe_name}: {got} inputs do not match {nparams} params (want 3P+4 or 3P+5)"
+            )));
+        }
+        let adam_m = store.flat().iter().map(|t| Tensor::zeros(t.shape())).collect();
+        let adam_v = store.flat().iter().map(|t| Tensor::zeros(t.shape())).collect();
+        Ok(Trainer { rt, exe, store, adam_m, adam_v, step: 0, log: Vec::new() })
+    }
+
+    /// One optimizer step on a (ids, mask, labels) batch. Returns the loss.
+    pub fn step_batch(&mut self, ids: &IntTensor, mask: &Tensor, labels: &IntTensor, lr: f32) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let n = self.store.len();
+        let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 5);
+        inputs.extend(self.store.flat().iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.adam_m.iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.adam_v.iter().map(|t| Value::F32(t.clone())));
+        inputs.push(Value::I32(IntTensor::new(&[1], vec![self.step as i32])?));
+        inputs.push(Value::I32(ids.clone()));
+        inputs.push(Value::F32(mask.clone()));
+        inputs.push(Value::I32(labels.clone()));
+        inputs.push(Value::F32(Tensor::new(&[1], vec![lr])?));
+
+        let mut out = self.exe.run(&inputs)?;
+        if out.len() != 3 * n + 1 {
+            return Err(Error::Runtime(format!(
+                "train step returned {} outputs, expected {}",
+                out.len(),
+                3 * n + 1
+            )));
+        }
+        let loss = out.pop().unwrap().into_f32()?.data()[0];
+        let new_v: Vec<Tensor> =
+            out.drain(2 * n..).map(|v| v.into_f32()).collect::<Result<_>>()?;
+        let new_m: Vec<Tensor> =
+            out.drain(n..).map(|v| v.into_f32()).collect::<Result<_>>()?;
+        let new_p: Vec<Tensor> = out.into_iter().map(|v| v.into_f32()).collect::<Result<_>>()?;
+        self.store.replace_flat(new_p)?;
+        self.adam_m = new_m;
+        self.adam_v = new_v;
+        self.step += 1;
+        if !loss.is_finite() {
+            return Err(Error::Runtime(format!("loss diverged at step {}", self.step)));
+        }
+        self.log.push(TrainLogEntry {
+            step: self.step,
+            loss,
+            lr,
+            elapsed: t0.elapsed(),
+        });
+        Ok(loss)
+    }
+
+    /// One optimizer step on an image batch (`cnn_train_step_b{B}` signature:
+    /// params, m, v, step, images, labels, lr).
+    pub fn step_images(&mut self, images: &Tensor, labels: &IntTensor, lr: f32) -> Result<f32> {
+        let t0 = std::time::Instant::now();
+        let n = self.store.len();
+        let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 4);
+        inputs.extend(self.store.flat().iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.adam_m.iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.adam_v.iter().map(|t| Value::F32(t.clone())));
+        inputs.push(Value::I32(IntTensor::new(&[1], vec![self.step as i32])?));
+        inputs.push(Value::F32(images.clone()));
+        inputs.push(Value::I32(labels.clone()));
+        inputs.push(Value::F32(Tensor::new(&[1], vec![lr])?));
+
+        let mut out = self.exe.run(&inputs)?;
+        let loss = out.pop().unwrap().into_f32()?.data()[0];
+        let new_v: Vec<Tensor> =
+            out.drain(2 * n..).map(|v| v.into_f32()).collect::<Result<_>>()?;
+        let new_m: Vec<Tensor> =
+            out.drain(n..).map(|v| v.into_f32()).collect::<Result<_>>()?;
+        let new_p: Vec<Tensor> = out.into_iter().map(|v| v.into_f32()).collect::<Result<_>>()?;
+        self.store.replace_flat(new_p)?;
+        self.adam_m = new_m;
+        self.adam_v = new_v;
+        self.step += 1;
+        if !loss.is_finite() {
+            return Err(Error::Runtime(format!("loss diverged at step {}", self.step)));
+        }
+        self.log.push(TrainLogEntry { step: self.step, loss, lr, elapsed: t0.elapsed() });
+        Ok(loss)
+    }
+
+    /// Train for `steps` over a text batcher with a schedule; logs every
+    /// `log_every` steps via the `progress` callback.
+    pub fn train_text(
+        &mut self,
+        batcher: &mut TextBatcher,
+        steps: usize,
+        schedule: &LrSchedule,
+        rng: &mut Rng,
+        log_every: usize,
+        mut progress: impl FnMut(&TrainLogEntry),
+    ) -> Result<Vec<f32>> {
+        let mut losses = Vec::with_capacity(steps);
+        let steps_per_epoch = (batcher.len() / batcher.batch_size).max(1);
+        for s in 0..steps {
+            if s % steps_per_epoch == 0 {
+                batcher.shuffle(rng);
+            }
+            let b = batcher.next_batch();
+            let lr = schedule.lr_at(self.step, steps);
+            let loss = self.step_batch(&b.ids, &b.mask, &b.labels, lr)?;
+            losses.push(loss);
+            if log_every > 0 && (s + 1) % log_every == 0 {
+                progress(self.log.last().unwrap());
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Smoothed final loss (mean of the last k entries).
+    pub fn final_loss(&self, k: usize) -> f32 {
+        let n = self.log.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.log[n - k..].iter().map(|e| e.loss).sum::<f32>() / k as f32
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}

@@ -1,0 +1,57 @@
+//! Learning-rate schedules.
+
+/// Warmup + decay schedules for the Adam-in-graph trainer.
+#[derive(Debug, Clone, Copy)]
+pub enum LrSchedule {
+    /// Constant rate.
+    Constant(f32),
+    /// Linear warmup over `warmup` steps, then linear decay to `floor`.
+    WarmupLinear { peak: f32, warmup: usize, floor: f32 },
+}
+
+impl LrSchedule {
+    /// LR for `step` (0-based) of `total` steps.
+    pub fn lr_at(&self, step: usize, total: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::WarmupLinear { peak, warmup, floor } => {
+                if step < warmup {
+                    peak * (step + 1) as f32 / warmup as f32
+                } else if total <= warmup {
+                    peak
+                } else {
+                    let p = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+                    floor + (peak - floor) * (1.0 - p.min(1.0))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::Constant(0.1);
+        assert_eq!(s.lr_at(0, 100), 0.1);
+        assert_eq!(s.lr_at(99, 100), 0.1);
+    }
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = LrSchedule::WarmupLinear { peak: 1.0, warmup: 10, floor: 0.0 };
+        assert!((s.lr_at(0, 110) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(9, 110) - 1.0).abs() < 1e-6);
+        assert!(s.lr_at(50, 110) < 1.0);
+        assert!(s.lr_at(109, 110) < 0.05);
+        // monotone decay after warmup
+        let mut prev = f32::INFINITY;
+        for step in 10..110 {
+            let lr = s.lr_at(step, 110);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Fast scalar transcendentals for the executor hot loops.
+//!
+//! `libm`'s `expf`/`tanhf` cost ~15–20 ns each and do not vectorize; the
+//! BERT executor evaluates ~1M GELUs and ~0.5M softmax exps per batch-32
+//! forward, which made transcendentals ~30 % of forward time (§Perf log).
+//! These Cephes-style polynomial versions are accurate to ~2 ulp over the
+//! ranges the model uses and are branch-light so LLVM can vectorize the
+//! surrounding loops.
+
+/// Fast `exp(x)` for f32, max relative error ≈ 1e-6 on [-87, 87].
+///
+/// Range reduction: `x = n·ln2 + r`, `e^x = 2^n · e^r` with a degree-5
+/// polynomial for `e^r` on [-ln2/2, ln2/2]; `2^n` applied via exponent bits.
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    const LN2_HI: f32 = 0.693_359_375;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    // clamp to the finite range of f32 exp
+    let x = x.clamp(-87.0, 88.0);
+    let n = (x * LOG2E).round_ties_even();
+    let r = x - n * LN2_HI - n * LN2_LO;
+    // e^r via Horner, coefficients 1/k!
+    let p = 1.0
+        + r * (1.0
+            + r * (0.5
+                + r * (0.166_666_67 + r * (0.041_666_67 + r * (0.008_333_4 + r * 0.001_388_9)))));
+    // scale by 2^n: add n to the exponent field
+    let bits = p.to_bits();
+    let scaled = (bits as i64 + ((n as i64) << 23)) as u32;
+    f32::from_bits(scaled)
+}
+
+/// Fast `tanh(x)` via `fast_exp`, max abs error ≈ 2e-7.
+#[inline]
+pub fn fast_tanh(x: f32) -> f32 {
+    // tanh saturates to ±1 beyond ~9.02 in f32
+    if x > 9.0 {
+        return 1.0;
+    }
+    if x < -9.0 {
+        return -1.0;
+    }
+    let e2x = fast_exp(2.0 * x);
+    (e2x - 1.0) / (e2x + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_accuracy() {
+        let mut worst = 0.0f32;
+        for i in -8000..=8000 {
+            let x = i as f32 * 0.01; // [-80, 80]
+            let got = fast_exp(x);
+            let want = x.exp();
+            let rel = if want > 0.0 { (got - want).abs() / want } else { 0.0 };
+            worst = worst.max(rel);
+        }
+        assert!(worst < 3e-6, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn exp_edge_cases() {
+        assert_eq!(fast_exp(0.0), 1.0);
+        assert!(fast_exp(-100.0) >= 0.0);
+        assert!(fast_exp(-100.0) < 1e-37);
+        assert!(fast_exp(88.0).is_finite());
+    }
+
+    #[test]
+    fn tanh_accuracy() {
+        let mut worst = 0.0f32;
+        for i in -2000..=2000 {
+            let x = i as f32 * 0.01; // [-20, 20]
+            let got = fast_tanh(x);
+            let want = x.tanh();
+            worst = worst.max((got - want).abs());
+        }
+        assert!(worst < 5e-7, "worst abs err {worst}");
+    }
+
+    #[test]
+    fn tanh_saturates() {
+        assert_eq!(fast_tanh(50.0), 1.0);
+        assert_eq!(fast_tanh(-50.0), -1.0);
+        assert_eq!(fast_tanh(0.0), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the offline sandbox has no serde_json /
+//! rand / proptest, so these substrates are built in-crate).
+
+pub mod fastmath;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

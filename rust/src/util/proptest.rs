@@ -1,0 +1,100 @@
+//! Lightweight property-based testing harness (substrate: no `proptest`
+//! crate offline).
+//!
+//! A property is a closure over a seeded [`Rng`]; the harness runs it for
+//! many derived seeds and, on failure, reports the failing case seed so it
+//! can be replayed deterministically:
+//!
+//! ```ignore
+//! use splitquant::util::proptest::check;
+//! check("addition commutes", 100, |rng| {
+//!     let a = rng.f32();
+//!     let b = rng.f32();
+//!     assert!((a + b - (b + a)).abs() < 1e-9);
+//! });
+//! ```
+//! (doctests cannot link against libxla in this sandbox, hence `ignore`;
+//! the same property runs as a unit test below.)
+
+use super::rng::Rng;
+
+/// Base seed; change via `SPLITQUANT_PROPTEST_SEED` to explore new cases.
+fn base_seed() -> u64 {
+    std::env::var("SPLITQUANT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE)
+}
+
+/// Run `prop` for `cases` independent seeded RNGs. Panics (with the failing
+/// case index and seed) if any case panics.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u32, prop: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed on case {case}/{cases} (seed {seed:#x}): {msg}\n\
+                 replay with SPLITQUANT_PROPTEST_SEED={base} and this case index"
+            );
+        }
+    }
+}
+
+/// Generate a random tensor-ish Vec<f32> with occasional outliers — the value
+/// distribution SplitQuant targets (heavy tails, paper §1).
+pub fn gen_values_with_outliers(rng: &mut Rng, n: usize, outlier_rate: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(outlier_rate) {
+                rng.normal_f32(0.0, 1.0) * rng.range_f64(5.0, 50.0) as f32
+            } else {
+                rng.normal_f32(0.0, 1.0)
+            }
+        })
+        .collect()
+}
+
+/// Random shape with bounded rank / dimension (non-empty).
+pub fn gen_shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = rng.range(1, max_rank + 1);
+    (0..rank).map(|_| rng.range(1, max_dim + 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check("always fails eventually", 10, |rng| {
+            assert!(rng.f64() < 0.00001, "boom");
+        });
+    }
+
+    #[test]
+    fn outlier_generator_has_tails() {
+        let mut rng = Rng::new(1);
+        let v = gen_values_with_outliers(&mut rng, 10_000, 0.01);
+        let big = v.iter().filter(|x| x.abs() > 4.0).count();
+        assert!(big > 10, "expected outliers, got {big}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Small statistics helpers shared by observers, metrics and benches.
+
+/// Exact percentile of a sample via sorting (linear interpolation, like
+/// numpy's default). `p` in [0, 100].
+pub fn percentile(values: &[f32], p: f64) -> f32 {
+    assert!(!values.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f32> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f32], p: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = (rank - lo as f64) as f32;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(values: &[f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().map(|&x| x as f64).sum::<f64>() / values.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(values: &[f32]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    let var = values.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / values.len() as f64;
+    var.sqrt()
+}
+
+/// (min, max) of a non-empty slice, ignoring NaNs.
+pub fn min_max(values: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        if v.is_nan() {
+            continue;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+/// Latency histogram with microsecond resolution for the serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let rank = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+        v[rank]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+            self.len(),
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.95),
+            self.quantile_us(0.99),
+            self.quantile_us(1.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 75.0) - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minmax_skips_nan() {
+        let (lo, hi) = min_max(&[3.0, f32::NAN, -1.0]);
+        assert_eq!((lo, hi), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        let mut l = LatencyStats::default();
+        for ms in 1..=100u64 {
+            l.record(std::time::Duration::from_millis(ms));
+        }
+        assert_eq!(l.quantile_us(0.0), 1_000);
+        assert_eq!(l.quantile_us(1.0), 100_000);
+        let p50 = l.quantile_us(0.5);
+        assert!((49_000..=52_000).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn stats_mean_std() {
+        let v = [2.0f32, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&v) - 5.0).abs() < 1e-9);
+        assert!((std_dev(&v) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,189 @@
+//! Integration: the whole PTQ pipeline (data → model → quantize → evaluate)
+//! through the pure-Rust path, no artifacts required.
+
+use splitquant::baselines;
+use splitquant::data::{emotion, pad_to_batches, spam, HashTokenizer};
+use splitquant::eval::{accuracy_rust, prepare_store, WeightMethod};
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::QConfig;
+use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+use splitquant::util::rng::Rng;
+
+fn tiny_cfg() -> BertConfig {
+    BertConfig {
+        vocab_size: 1024,
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ffn: 64,
+        max_len: 24,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    }
+}
+
+#[test]
+fn full_pipeline_emotion() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(0);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let (_, test) = emotion::load_small(0, 10, 96);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, n) = pad_to_batches(&test, &tok, 32);
+    assert_eq!(n, 96);
+
+    for m in [
+        WeightMethod::None,
+        WeightMethod::Baseline(QConfig::baseline(2)),
+        WeightMethod::SplitQuant(SplitQuantConfig::new(2)),
+    ] {
+        let (s, _) = prepare_store(&store, &m).unwrap();
+        let acc = accuracy_rust(&cfg, &s, &batches, n, None).unwrap();
+        assert!((0.0..=1.0).contains(&acc), "{}: {acc}", m.label());
+    }
+}
+
+#[test]
+fn int8_quantization_is_nearly_lossless_on_logits() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(1);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let (_, test) = emotion::load_small(1, 10, 32);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, _) = pad_to_batches(&test, &tok, 32);
+
+    let (sq8, _) =
+        prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(8))).unwrap();
+    let m_fp = splitquant::model::BertModel::new(cfg.clone(), store).unwrap();
+    let m_q8 = splitquant::model::BertModel::new(cfg.clone(), sq8).unwrap();
+    let b = &batches[0];
+    let gap = m_fp.forward(&b.ids, &b.mask).max_abs_diff(&m_q8.forward(&b.ids, &b.mask));
+    assert!(gap < 0.35, "INT8 logit gap too large: {gap}");
+}
+
+#[test]
+fn splitquant_preserves_logits_better_than_baseline_at_int2() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(2);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let (_, test) = emotion::load_small(2, 10, 32);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, _) = pad_to_batches(&test, &tok, 32);
+    let b = &batches[0];
+
+    let m_fp = splitquant::model::BertModel::new(cfg.clone(), store.clone()).unwrap();
+    let fp = m_fp.forward(&b.ids, &b.mask);
+
+    let mut gaps = Vec::new();
+    for m in [
+        WeightMethod::Baseline(QConfig::baseline(2)),
+        WeightMethod::SplitQuant(SplitQuantConfig::new(2)),
+    ] {
+        let (s, _) = prepare_store(&store, &m).unwrap();
+        let mq = splitquant::model::BertModel::new(cfg.clone(), s).unwrap();
+        let q = mq.forward(&b.ids, &b.mask);
+        let mse: f64 = fp
+            .data()
+            .iter()
+            .zip(q.data())
+            .map(|(a, c)| ((a - c) as f64).powi(2))
+            .sum::<f64>()
+            / fp.numel() as f64;
+        gaps.push(mse);
+    }
+    assert!(
+        gaps[1] < gaps[0],
+        "splitquant logit MSE {} must beat baseline {}",
+        gaps[1],
+        gaps[0]
+    );
+}
+
+#[test]
+fn spam_protocol_uses_full_corpus() {
+    let d = spam::load_small(0, 200);
+    assert_eq!(d.num_classes, 2);
+    let tok = HashTokenizer::new(1024, 24);
+    let (batches, n) = pad_to_batches(&d, &tok, 32);
+    assert_eq!(n, 200);
+    assert_eq!(batches.len(), 7);
+}
+
+#[test]
+fn quantization_is_deterministic_given_seed() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(5);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let sq = SplitQuantConfig::new(2);
+    let (a, _) = quantize_store(&store, &quantizable, &sq).unwrap();
+    let (b, _) = quantize_store(&store, &quantizable, &sq).unwrap();
+    for (name, t) in a.iter() {
+        assert_eq!(t.data(), b.get(name).unwrap().data(), "{name} differs across runs");
+    }
+}
+
+#[test]
+fn checkpoint_quantize_roundtrip() {
+    // save → load → quantize must equal quantize of the original
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(6);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let path = std::env::temp_dir().join("sq_integration_ckpt.bin");
+    store.save(&path).unwrap();
+    let loaded = ParamStore::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    let quantizable = default_quantizable(&store);
+    let c = QConfig::baseline(4);
+    let (qa, _) = baselines::quantize_store_baseline(&store, &quantizable, &c).unwrap();
+    let (qb, _) = baselines::quantize_store_baseline(&loaded, &quantizable, &c).unwrap();
+    for (name, t) in qa.iter() {
+        assert_eq!(t.data(), qb.get(name).unwrap().data());
+    }
+}
+
+#[test]
+fn effect_grows_as_bits_shrink() {
+    // the paper's headline trend: SplitQuant's advantage (in weight
+    // reconstruction error) grows as bit-width decreases
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+
+    let mut ratios = Vec::new();
+    for bits in [8u8, 4, 2] {
+        let (base, _) = baselines::quantize_store_baseline(
+            &store,
+            &quantizable,
+            &QConfig::baseline(bits),
+        )
+        .unwrap();
+        let (sq, _) =
+            quantize_store(&store, &quantizable, &SplitQuantConfig::new(bits)).unwrap();
+        let mse = |s: &ParamStore| -> f64 {
+            quantizable
+                .iter()
+                .map(|n| {
+                    let o = store.get(n).unwrap();
+                    let q = s.get(n).unwrap();
+                    o.data()
+                        .iter()
+                        .zip(q.data())
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum()
+        };
+        ratios.push(mse(&sq) / mse(&base));
+    }
+    // lower ratio = bigger SplitQuant win; must improve (or hold) as bits drop
+    assert!(
+        ratios[2] <= ratios[0] + 0.05,
+        "INT2 ratio {} should beat INT8 ratio {}",
+        ratios[2],
+        ratios[0]
+    );
+}

@@ -1,0 +1,221 @@
+//! Integration: the PJRT runtime against the AOT artifacts — the L2 ⇄ L3
+//! contract. Every test is skipped (with a notice) when `make artifacts` has
+//! not been run.
+
+use std::path::{Path, PathBuf};
+
+use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+use splitquant::model::params::ParamStore;
+use splitquant::model::BertModel;
+use splitquant::quant::{qrange, QParams};
+use splitquant::runtime::literal::{i8_literal, Value};
+use splitquant::runtime::Runtime;
+use splitquant::tensor::Tensor;
+use splitquant::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_abi_matches_rust_configs() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    rt.manifest.validate_abi().unwrap();
+    assert!(rt.manifest.executables.len() >= 10);
+}
+
+#[test]
+fn rust_executor_matches_pjrt_forward_across_batch_sizes() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let mut rng = Rng::new(11);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let model = BertModel::new(cfg.clone(), store.clone()).unwrap();
+    let (_, test) = emotion::load_small(11, 4, 64);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+
+    for b in [1usize, 8, 32] {
+        let (batches, _) = pad_to_batches(&test, &tok, b);
+        let exe = rt.load(&format!("bert_fwd_b{b}")).unwrap();
+        let batch = &batches[0];
+        let rust = model.forward(&batch.ids, &batch.mask);
+        let mut inputs: Vec<Value> =
+            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+        inputs.push(Value::I32(batch.ids.clone()));
+        inputs.push(Value::F32(batch.mask.clone()));
+        let pjrt = exe.run_f32(&inputs).unwrap();
+        let gap = rust.max_abs_diff(&pjrt);
+        assert!(gap < 1e-4, "b{b}: executor gap {gap}");
+    }
+}
+
+#[test]
+fn fake_quant_executable_matches_rust_qparams() {
+    // the standalone L1 Pallas kernel, AOT-compiled, vs quant::scheme
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("fake_quant_256x512").unwrap();
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&[256, 512], 0.0, 2.0, &mut rng);
+    for bits in [2u8, 4, 8] {
+        let (lo, hi) = x.min_max();
+        let p = QParams::from_range(lo, hi, bits);
+        let (qmin, qmax) = qrange(bits);
+        let one = |v: f32| Tensor::new(&[1, 1], vec![v]).unwrap();
+        let out = exe
+            .run_f32(&[
+                Value::F32(x.clone()),
+                Value::F32(one(p.scale)),
+                Value::F32(one(p.zp)),
+                Value::F32(one(qmin as f32)),
+                Value::F32(one(qmax as f32)),
+            ])
+            .unwrap();
+        let mut expect = x.clone();
+        for v in expect.data_mut() {
+            *v = p.fake(*v);
+        }
+        let gap = out.max_abs_diff(&expect);
+        assert!(gap < 1e-5, "bits {bits}: kernel gap {gap}");
+    }
+}
+
+#[test]
+fn split_linear_executable_matches_rust_dequant_matmul() {
+    // the deployment hot path: Pallas split_matmul kernel vs QTensor dequant
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for (m, k, n) in [(32usize, 128usize, 128usize), (32, 128, 512)] {
+        let exe = rt.load(&format!("split_linear_{m}x{k}x{n}")).unwrap();
+        let mut rng = Rng::new((m + k + n) as u64);
+        let x = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
+        // random split tensor at INT2 (codes int8, ids 0..3)
+        let (qmin, qmax) = qrange(2);
+        let codes: Vec<i8> =
+            (0..k * n).map(|_| (qmin + rng.below(4) as i32) as i8).collect();
+        let cid: Vec<i8> = (0..k * n).map(|_| rng.below(3) as i8).collect();
+        let params: Vec<QParams> = (0..3)
+            .map(|i| QParams {
+                scale: 0.5 + i as f32,
+                zp: (qmin + i as i32) as f32,
+                bits: 2,
+            })
+            .collect();
+        let scales = Tensor::new(&[1, 3], params.iter().map(|p| p.scale).collect()).unwrap();
+        let zps = Tensor::new(&[1, 3], params.iter().map(|p| p.zp).collect()).unwrap();
+
+        let spec = &exe.spec;
+        let lits = vec![
+            splitquant::runtime::literal::to_literal(&Value::F32(x.clone()), &spec.inputs[0])
+                .unwrap(),
+            i8_literal(&codes, &[k, n], &spec.inputs[1]).unwrap(),
+            i8_literal(&cid, &[k, n], &spec.inputs[2]).unwrap(),
+            splitquant::runtime::literal::to_literal(&Value::F32(scales), &spec.inputs[3])
+                .unwrap(),
+            splitquant::runtime::literal::to_literal(&Value::F32(zps), &spec.inputs[4])
+                .unwrap(),
+        ];
+        let out = exe.run_literals(&lits).unwrap().remove(0).into_f32().unwrap();
+
+        // rust reference: dequant elementwise then matmul
+        let w: Vec<f32> = codes
+            .iter()
+            .zip(&cid)
+            .map(|(&q, &c)| params[c as usize].dequantize(q))
+            .collect();
+        let w = Tensor::new(&[k, n], w).unwrap();
+        let expect = splitquant::tensor::ops::matmul(&x, &w);
+        let gap = out.max_abs_diff(&expect);
+        assert!(gap < 2e-3, "{m}x{k}x{n}: split kernel gap {gap}");
+        assert_eq!((qmax) as i32, 1); // silence unused warning paranoia
+    }
+}
+
+#[test]
+fn cluster_assign_executable_matches_rust_kmeans_assign() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("cluster_assign_128x128").unwrap();
+    let mut rng = Rng::new(9);
+    let x = Tensor::randn(&[128, 128], 0.0, 3.0, &mut rng);
+    let cents = Tensor::new(&[1, 3], vec![-2.0, 0.1, 2.5]).unwrap();
+    let mut out = exe
+        .run(&[Value::F32(x.clone()), Value::F32(cents.clone())])
+        .unwrap();
+    let ids = out.remove(0).into_i32().unwrap();
+    let expect = splitquant::clustering::kmeans::assign(x.data(), &[-2.0, 0.1, 2.5]);
+    for (a, &b) in expect.iter().zip(ids.data()) {
+        assert_eq!(*a as i32, b);
+    }
+}
+
+#[test]
+fn actquant_executable_matches_rust_act_hook() {
+    // equal per-chunk triples == per-tensor; and the AOT act-quant graph
+    // (L1 pallas fake_quant inside L2) must match the Rust hook twin
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let mut rng = Rng::new(21);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let model = BertModel::new(cfg.clone(), store.clone()).unwrap();
+    let (_, test) = emotion::load_small(21, 4, 32);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, n) = pad_to_batches(&test, &tok, 32);
+
+    // calibrate on the same batch with the rust hook
+    let mut cal = splitquant::splitquant::ActCalibrator::new(&cfg);
+    {
+        let mut hook = cal.hook();
+        model.forward_hooked(&batches[0].ids, &batches[0].mask, Some(&mut hook));
+    }
+    let bits = 4;
+    let act = cal.to_params(bits, splitquant::splitquant::ActQuantMode::Split);
+
+    // rust path
+    let rust_acc =
+        splitquant::eval::accuracy_rust(&cfg, &store, &batches, n, Some(&act)).unwrap();
+    // pjrt path through the actquant executable
+    let pjrt_acc =
+        splitquant::eval::accuracy_pjrt_actquant(&rt, &store, &batches, n, &act).unwrap();
+    assert!(
+        (rust_acc - pjrt_acc).abs() < 0.101,
+        "act-quant accuracy gap: rust {rust_acc} vs pjrt {pjrt_acc}"
+    );
+
+    // logit-level agreement on one batch
+    let mut hook = act.hook(&cfg);
+    let rust_logits =
+        model.forward_hooked(&batches[0].ids, &batches[0].mask, Some(&mut hook));
+    let exe = rt.load("bert_fwd_actquant_b32").unwrap();
+    let (scales, zps) = act.to_arrays();
+    let (qmin, qmax) = qrange(bits);
+    let mut inputs: Vec<Value> = store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+    inputs.push(Value::I32(batches[0].ids.clone()));
+    inputs.push(Value::F32(batches[0].mask.clone()));
+    inputs.push(Value::F32(scales));
+    inputs.push(Value::F32(zps));
+    inputs.push(Value::F32(Tensor::scalar(qmin as f32)));
+    inputs.push(Value::F32(Tensor::scalar(qmax as f32)));
+    let pjrt_logits = exe.run_f32(&inputs).unwrap();
+    let gap = rust_logits.max_abs_diff(&pjrt_logits);
+    assert!(gap < 2e-2, "actquant logits gap {gap}");
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let a = rt.load("bert_fwd_b1").unwrap();
+    let b = rt.load("bert_fwd_b1").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.compiled_count(), 1);
+}

@@ -1,0 +1,89 @@
+//! Integration: the serving coordinator end-to-end over PJRT executables.
+//! Skipped when artifacts are absent.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
+use splitquant::data::{emotion, HashTokenizer};
+use splitquant::model::params::ParamStore;
+use splitquant::model::BertModel;
+use splitquant::runtime::Runtime;
+use splitquant::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn pjrt_serving_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let mut rng = Rng::new(0);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32]).unwrap());
+    let server = Server::start(
+        exec,
+        tok,
+        ServeConfig { max_wait: Duration::from_millis(2), workers: 2, queue_cap: 512 },
+    );
+
+    let (_, pool) = emotion::load_small(0, 4, 64);
+    let rxs: Vec<_> =
+        (0..64).map(|i| server.submit(&pool.texts[i % pool.len()]).unwrap()).collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!((0..cfg.num_classes as i32).contains(&r.label));
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 64);
+    assert!(m.throughput() > 0.0);
+}
+
+#[test]
+fn served_labels_match_direct_inference() {
+    // the coordinator (batching, padding, threading) must not change answers
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let mut rng = Rng::new(2);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let model = BertModel::new(cfg.clone(), store.clone()).unwrap();
+
+    let (_, pool) = emotion::load_small(2, 4, 16);
+    // direct labels via the rust executor
+    let direct: Vec<i32> = pool
+        .texts
+        .iter()
+        .map(|t| {
+            let (ids, mask) = tok.encode(t);
+            let ids = splitquant::tensor::IntTensor::new(&[1, cfg.max_len], ids).unwrap();
+            let mask = splitquant::tensor::Tensor::new(&[1, cfg.max_len], mask).unwrap();
+            model.predict(&ids, &mask)[0]
+        })
+        .collect();
+
+    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32]).unwrap());
+    let server = Server::start(
+        exec,
+        tok,
+        ServeConfig { max_wait: Duration::from_millis(1), workers: 2, queue_cap: 128 },
+    );
+    let rxs: Vec<_> = pool.texts.iter().map(|t| server.submit(t).unwrap()).collect();
+    let served: Vec<i32> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().label)
+        .collect();
+    server.shutdown();
+    assert_eq!(direct, served);
+}

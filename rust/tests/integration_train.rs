@@ -1,0 +1,114 @@
+//! Integration: training through the AOT fused train-step executables.
+//! Skipped when artifacts are absent.
+
+use std::path::{Path, PathBuf};
+
+use splitquant::data::{emotion, HashTokenizer, TextBatcher};
+use splitquant::model::params::ParamStore;
+use splitquant::runtime::Runtime;
+use splitquant::train::{LrSchedule, Trainer};
+use splitquant::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn bert_training_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let (train, _) = emotion::load_small(0, 512, 8);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let mut batcher = TextBatcher::new(&train, &tok, 32);
+    let mut rng = Rng::new(0);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let mut trainer = Trainer::new(&rt, "bert_train_step_b32", store).unwrap();
+    let losses = trainer
+        .train_text(
+            &mut batcher,
+            60,
+            &LrSchedule::Constant(2e-3),
+            &mut rng,
+            0,
+            |_| {},
+        )
+        .unwrap();
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[50..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail < head * 0.85,
+        "loss did not fall: head {head} tail {tail} ({losses:?})"
+    );
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn adam_state_actually_updates_params() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let (train, _) = emotion::load_small(3, 64, 8);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let mut batcher = TextBatcher::new(&train, &tok, 32);
+    let mut rng = Rng::new(3);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let before = store.get("encoder.0.ffn.in.weight").unwrap().clone();
+    let mut trainer = Trainer::new(&rt, "bert_train_step_b32", store).unwrap();
+    let b = batcher.next_batch();
+    trainer.step_batch(&b.ids, &b.mask, &b.labels, 1e-3).unwrap();
+    let after = trainer.store.get("encoder.0.ffn.in.weight").unwrap();
+    assert!(before.max_abs_diff(after) > 0.0, "params unchanged after a step");
+    assert_eq!(trainer.step, 1);
+}
+
+#[test]
+fn cnn_training_reduces_loss() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let ccfg = rt.manifest.cnn.clone();
+    let (train, _) = splitquant::data::images::load(1, 256, 8);
+    let mut rng = Rng::new(1);
+    let store = ParamStore::init_cnn(&ccfg.param_order(), &mut rng);
+    let mut trainer = Trainer::new(&rt, "cnn_train_step_b32", store).unwrap();
+    let mut losses = Vec::new();
+    let mut cursor = 0;
+    for _ in 0..25 {
+        let (imgs, labels) = train.batch(cursor, 32);
+        cursor += 32;
+        losses.push(trainer.step_images(&imgs, &labels, 5e-3).unwrap());
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[20..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "cnn loss did not fall: {losses:?}");
+    // BN running stats must have moved off their init
+    let mean = trainer.store.get("bn1.mean").unwrap();
+    assert!(mean.data().iter().any(|&v| v != 0.0), "BN stats frozen");
+}
+
+#[test]
+fn training_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = rt.manifest.bert.clone();
+    let run = || {
+        let (train, _) = emotion::load_small(5, 64, 8);
+        let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+        let mut batcher = TextBatcher::new(&train, &tok, 32);
+        let mut rng = Rng::new(5);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let mut trainer = Trainer::new(&rt, "bert_train_step_b32", store).unwrap();
+        trainer
+            .train_text(&mut batcher, 5, &LrSchedule::Constant(1e-3), &mut rng, 0, |_| {})
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must give identical loss trajectories");
+}

@@ -1,0 +1,225 @@
+//! Cross-module property tests: the invariants the paper's correctness
+//! argument rests on, checked over randomized inputs (seeded, replayable via
+//! SPLITQUANT_PROPTEST_SEED).
+
+use splitquant::clustering;
+use splitquant::coordinator::BatchPolicy;
+use splitquant::model::config::chunk_spans;
+use splitquant::model::graph::{ActKind, Layer};
+use splitquant::quant::{qrange, QConfig, QParams, QTensor};
+use splitquant::splitquant::weight_split::materialize_branches;
+use splitquant::splitquant::{split_quantize, split_quantize_pair, SplitQuantConfig};
+use splitquant::tensor::ops;
+use splitquant::tensor::packing::Packed;
+use splitquant::tensor::Tensor;
+use splitquant::util::json::Json;
+use splitquant::util::proptest::{check, gen_values_with_outliers};
+
+#[test]
+fn prop_split_linear_exactly_preserves_fp32_function() {
+    // Figure 2: Σ_c x·(W ⊙ m_c) == x·W for any partition
+    check("split linear identity", 40, |rng| {
+        let (ni, no, m) = (rng.range(1, 40), rng.range(1, 30), rng.range(1, 6));
+        let w = Tensor::randn(&[ni, no], 0.0, 1.0, rng);
+        let b = Tensor::randn(&[no], 0.0, 1.0, rng);
+        let cfg = SplitQuantConfig::new(4);
+        let (ws, bs) = split_quantize_pair(&w, Some(&b), &cfg, rng).unwrap();
+        let bs = bs.unwrap();
+        let split = splitquant::splitquant::equivalence::split_linear_layer(
+            &w,
+            Some(&b),
+            &ws,
+            Some(&bs),
+            cfg.k,
+        );
+        let orig = Layer::Linear { weight: w, bias: Some(b) };
+        let x = Tensor::randn(&[m, ni], 0.0, 1.0, rng);
+        let gap = orig.forward(&x).max_abs_diff(&split.forward(&x));
+        assert!(gap < 1e-4, "gap {gap}");
+    });
+}
+
+#[test]
+fn prop_split_activation_identity() {
+    // Figure 1 (D): chunk → activate → concat == activate
+    check("split activation identity", 40, |rng| {
+        let w = rng.range(3, 200);
+        let r = rng.range(1, 10);
+        let x = Tensor::randn(&[r, w], 0.0, 3.0, rng);
+        for kind in [ActKind::Relu, ActKind::Gelu, ActKind::Tanh] {
+            let plain = Layer::Activation(kind).forward(&x);
+            let split =
+                Layer::SplitActivation { kind, spans: chunk_spans(w, 3) }.forward(&x);
+            assert!(plain.max_abs_diff(&split) < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_split_quantization_never_worse_than_baseline_mse() {
+    // per-cluster scales subdivide the range ⇒ reconstruction can only improve
+    check("split >= baseline reconstruction", 30, |rng| {
+        let n = rng.range(16, 600);
+        let vals = gen_values_with_outliers(rng, n, 0.05);
+        let t = Tensor::new(&[n], vals).unwrap();
+        let bits = [2u8, 4][rng.below(2)];
+        let st = split_quantize(&t, &SplitQuantConfig::new(bits), rng).unwrap();
+        let sq = st.qtensor.dequantize();
+        let base = QTensor::quantize(&t, &QConfig::baseline(bits)).unwrap().dequantize();
+        let mse = |a: &Tensor| -> f64 {
+            a.data()
+                .iter()
+                .zip(t.data())
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        // allow a tiny epsilon: k-means is heuristic, ties can flip codes
+        assert!(
+            mse(&sq) <= mse(&base) * 1.05 + 1e-9,
+            "split {} vs base {}",
+            mse(&sq),
+            mse(&base)
+        );
+    });
+}
+
+#[test]
+fn prop_injected_zeros_reconstruct_exactly() {
+    // the zero-injection trick is only sound because dq(Q(0)) == 0
+    check("zeros exact through split quant", 40, |rng| {
+        let n = rng.range(4, 300);
+        let vals = gen_values_with_outliers(rng, n, 0.1);
+        let t = Tensor::new(&[n], vals).unwrap();
+        let bits = [2u8, 4, 8][rng.below(3)];
+        let st = split_quantize(&t, &SplitQuantConfig::new(bits), rng).unwrap();
+        for p in st.qtensor.params() {
+            assert_eq!(p.fake(0.0), 0.0, "params {p:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_packing_roundtrip_any_width() {
+    check("packing roundtrip", 60, |rng| {
+        let bits = [1u8, 2, 4, 8][rng.below(4)];
+        let (qmin, qmax) = qrange(bits);
+        let n = rng.range(1, 500);
+        let codes: Vec<i8> = (0..n)
+            .map(|_| (qmin + rng.below((qmax - qmin + 1) as usize) as i32) as i8)
+            .collect();
+        let p = Packed::pack(&codes, bits).unwrap();
+        assert_eq!(p.unpack(), codes);
+        assert_eq!(p.byte_size(), n.div_ceil(8 / bits as usize));
+    });
+}
+
+#[test]
+fn prop_quant_dequant_error_bound() {
+    check("quant error bounded by half step in-range", 50, |rng| {
+        let bits = [2u8, 4, 8][rng.below(3)];
+        let lo = rng.normal_f32(0.0, 5.0);
+        let hi = lo + rng.range_f64(0.1, 50.0) as f32;
+        let p = QParams::from_range(lo, hi, bits);
+        for _ in 0..30 {
+            let x = lo + rng.f32() * (hi - lo);
+            assert!((p.fake(x) - x).abs() <= p.step() * 0.501 + 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_kmeans_partition_is_voronoi() {
+    check("kmeans assignment is nearest-centroid", 25, |rng| {
+        let n = rng.range(8, 2000);
+        let vals = gen_values_with_outliers(rng, n, 0.05);
+        let k = rng.range(2, 5);
+        let r = clustering::cluster(&vals, k, 40, rng);
+        for (&v, &a) in vals.iter().zip(&r.assignment) {
+            let d = (v - r.centroids[a as usize]).abs();
+            for &c in &r.centroids {
+                assert!(d <= (v - c).abs() + 1e-5);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batch_policy_never_overflows_or_starves() {
+    check("batch policy sanity", 50, |rng| {
+        let mut sizes: Vec<usize> = (0..rng.range(1, 4)).map(|_| rng.range(1, 64)).collect();
+        sizes.push(rng.range(1, 64));
+        let policy = BatchPolicy::new(sizes, std::time::Duration::from_millis(2));
+        let pending = rng.below(200);
+        let age = std::time::Duration::from_millis(rng.below(10) as u64);
+        match policy.decide(pending, age) {
+            Some((take, size)) => {
+                assert!(take >= 1 && take <= pending);
+                assert!(size >= take || size == policy.max_batch());
+                assert!(policy.sizes().contains(&size));
+            }
+            None => {
+                // must only hold back when the queue is partial AND young
+                assert!(
+                    pending < policy.max_batch()
+                        && (pending == 0 || age < policy.max_wait)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    check("json value roundtrip", 40, |rng| {
+        fn gen(rng: &mut splitquant::util::rng::Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.normal_f32(0.0, 100.0) as f64 * 100.0).round() / 100.0),
+                3 => Json::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let j = gen(rng, 0);
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+    });
+}
+
+#[test]
+fn prop_sum_of_materialized_branches_is_identity() {
+    check("Σ branches == tensor", 40, |rng| {
+        let n = rng.range(1, 500);
+        let vals = gen_values_with_outliers(rng, n, 0.1);
+        let t = Tensor::new(&[n], vals).unwrap();
+        let st = split_quantize(&t, &SplitQuantConfig::new(2), rng).unwrap();
+        let branches = materialize_branches(&t, &st.assignment, 3);
+        let mut sum = Tensor::zeros(t.shape());
+        for b in &branches {
+            sum.add_assign(b);
+        }
+        assert_eq!(sum.data(), t.data());
+    });
+}
+
+#[test]
+fn prop_csr_matmul_matches_dense() {
+    check("csr == dense matmul", 30, |rng| {
+        let (m, k, n) = (rng.range(1, 12), rng.range(1, 40), rng.range(1, 30));
+        let mut w = Tensor::randn(&[k, n], 0.0, 1.0, rng);
+        for v in w.data_mut() {
+            if rng.chance(0.7) {
+                *v = 0.0;
+            }
+        }
+        let x = Tensor::randn(&[m, k], 0.0, 1.0, rng);
+        let dense = ops::matmul(&x, &w);
+        let sparse = splitquant::model::sparse::CsrMatrix::from_dense(&w).matmul(&x);
+        assert!(dense.max_abs_diff(&sparse) < 1e-4);
+    });
+}
