@@ -8,6 +8,28 @@
 //! Uses `checkpoints/emotion.bin` when present (train one with the
 //! `train_and_quantize` example), otherwise serves a randomly initialized
 //! model — the serving path is identical either way.
+//!
+//! ## Batching semantics
+//!
+//! The batcher sleeps on a Condvar (zero idle CPU; see
+//! `Metrics::batcher_polls`) and wakes the instant a request is enqueued.
+//! A full batch (pending ≥ largest compiled size) dispatches immediately;
+//! otherwise dispatch happens when the oldest request has waited
+//! `max_wait`, padded to the smallest compiled size that fits — capped at
+//! `batcher::MAX_PADDING_OVERHEAD` (2×) waste. Above the cap the batcher
+//! sends a zero-padding sub-batch of the largest compiled size that the
+//! pending requests fill completely and leaves the rest queued: 9 pending
+//! against sizes [1, 8, 32] runs the b8 executable once, not a b32 that is
+//! 72% padding.
+//!
+//! ## Kernel parallelism
+//!
+//! `ServeConfig::parallel` is a `splitquant::parallel::ParallelConfig`
+//! { threads, tile_k, tile_n, serial_flops }: one process-wide worker pool
+//! shared by every serving worker (workers overlap dispatches, they do not
+//! multiply kernel threads). `threads: 0` resolves SPLITQUANT_THREADS or
+//! the machine's core count; small matmuls (< serial_flops FLOPs, e.g. the
+//! b1 latency path) stay on the calling thread.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -54,7 +76,14 @@ fn main() -> splitquant::Result<()> {
         let server = Server::start(
             exec.clone(),
             tok.clone(),
-            ServeConfig { max_wait: Duration::from_millis(2), workers, queue_cap: 8192 },
+            // parallel: ParallelConfig::default() — auto thread count; set
+            // `parallel.threads` explicitly to pin the kernel pool size
+            ServeConfig {
+                max_wait: Duration::from_millis(2),
+                workers,
+                queue_cap: 8192,
+                ..ServeConfig::default()
+            },
         );
         let t0 = Instant::now();
         let mut done = 0usize;

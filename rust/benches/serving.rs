@@ -47,6 +47,7 @@ fn main() {
                     max_wait: Duration::from_millis(2),
                     workers,
                     queue_cap: 8192,
+                    ..ServeConfig::default()
                 },
             );
             let t0 = Instant::now();
@@ -105,7 +106,12 @@ fn main() {
         let server = Server::start(
             exec.clone(),
             tok.clone(),
-            ServeConfig { max_wait: Duration::from_millis(2), workers: 2, queue_cap: 256 },
+            ServeConfig {
+                max_wait: Duration::from_millis(2),
+                workers: 2,
+                queue_cap: 256,
+                ..ServeConfig::default()
+            },
         );
         let t0 = Instant::now();
         let mut rxs = Vec::new();

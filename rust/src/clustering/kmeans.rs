@@ -99,7 +99,9 @@ pub fn lloyd_generic(values: &[f32], init: &[f32], max_iter: usize) -> KMeansRes
                 new_centroids[c] = (sums[c] / counts[c] as f64) as f32;
             }
         }
-        // empty-cluster repair: move to the farthest point
+        // empty-cluster repair: move to the farthest point. Ties on
+        // distance break toward the larger value so the sorted fast path
+        // (which scans in value order) picks the identical reseed point.
         for c in 0..k {
             if counts[c] == 0 {
                 if let Some((idx, _)) = values
@@ -109,7 +111,11 @@ pub fn lloyd_generic(values: &[f32], init: &[f32], max_iter: usize) -> KMeansRes
                         let d = (v - new_centroids[assignment[i] as usize]).abs();
                         (i, d)
                     })
-                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .max_by(|a, b| {
+                        a.1.partial_cmp(&b.1)
+                            .unwrap()
+                            .then(values[a.0].partial_cmp(&values[b.0]).unwrap())
+                    })
                 {
                     new_centroids[c] = values[idx];
                 }

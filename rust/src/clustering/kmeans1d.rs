@@ -40,13 +40,38 @@ fn lloyd_sorted(sorted: &[f32], init: &[f32], max_iter: usize) -> KMeansResult {
     for _ in 0..max_iter {
         iterations += 1;
         let mut new_centroids = centroids.clone();
+        let mut any_empty = false;
         for c in 0..k {
             let (lo, hi) = (starts[c], starts[c + 1]);
             if hi > lo {
                 new_centroids[c] = ((prefix[hi] - prefix[lo]) / (hi - lo) as f64) as f32;
+            } else {
+                any_empty = true;
             }
-            // empty segments keep their centroid (duplicate centers only
-            // occur with duplicate data values; harmless: zero population)
+        }
+        if any_empty {
+            // Degenerate-cluster repair, mirroring `lloyd_generic`: re-seed
+            // every empty cluster on the point farthest from its (updated)
+            // assigned centroid. Without this the sorted path kept stale
+            // centroids while the generic path repaired them, so the two
+            // diverged on duplicate/clustered data (empty segments are
+            // common when k exceeds the number of distinct values).
+            let mut far_val = sorted[0];
+            let mut far_d = f32::NEG_INFINITY;
+            for c in 0..k {
+                for &v in &sorted[starts[c]..starts[c + 1]] {
+                    let d = (v - new_centroids[c]).abs();
+                    if d >= far_d {
+                        far_d = d;
+                        far_val = v;
+                    }
+                }
+            }
+            for c in 0..k {
+                if starts[c + 1] == starts[c] {
+                    new_centroids[c] = far_val;
+                }
+            }
         }
         new_centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let new_starts = boundaries(sorted, &new_centroids);
@@ -146,25 +171,73 @@ mod tests {
     use super::*;
     use crate::util::proptest::{check, gen_values_with_outliers};
 
+    fn assert_matches_generic(values: &[f32], k: usize, rng: &mut crate::util::rng::Rng) {
+        let init = crate::clustering::init::greedy_kmeanspp(values, k, rng);
+        let fast = lloyd_fast(values, &init, 40);
+        let gen = lloyd_generic(values, &init, 40);
+        // identical partition quality (assignments may differ only on
+        // exact midpoint ties, which have equal cost)
+        assert!(
+            (fast.inertia - gen.inertia).abs() <= 1e-5 * (1.0 + gen.inertia.abs()),
+            "fast {} vs generic {} (n={}, k={k})",
+            fast.inertia,
+            gen.inertia,
+            values.len()
+        );
+    }
+
     #[test]
     fn matches_generic_from_same_init() {
         check("fast lloyd == generic lloyd", 30, |rng| {
             let n = rng.range(8, 1500);
             let values = gen_values_with_outliers(rng, n, 0.05);
             let k = rng.range(2, 5);
-            let init = crate::clustering::init::greedy_kmeanspp(&values, k, rng);
-            let fast = lloyd_fast(&values, &init, 40);
-            let gen = lloyd_generic(&values, &init, 40);
-            // identical partition quality (assignments may differ only on
-            // exact midpoint ties, which have equal cost)
-            assert!(
-                (fast.inertia - gen.inertia).abs()
-                    <= 1e-5 * (1.0 + gen.inertia.abs()),
-                "fast {} vs generic {} (n={n}, k={k})",
-                fast.inertia,
-                gen.inertia
-            );
+            assert_matches_generic(&values, k, rng);
         });
+    }
+
+    #[test]
+    fn matches_generic_on_duplicate_heavy_data() {
+        // duplicate/clustered values force empty segments during Lloyd;
+        // before the sorted path gained the degenerate-cluster repair it
+        // kept stale centroids here and diverged from the generic path
+        check("fast lloyd == generic lloyd (duplicates)", 30, |rng| {
+            let n = rng.range(8, 800);
+            let distinct = rng.range(1, 6);
+            // jittered levels: heavy duplication without exact-midpoint
+            // distance ties (which both paths may break differently)
+            let levels: Vec<f32> =
+                (0..distinct).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut values: Vec<f32> =
+                (0..n).map(|_| levels[rng.below(distinct)]).collect();
+            if rng.chance(0.5) {
+                values.push(40.0); // lone outlier on top of the duplicates
+            }
+            let k = rng.range(2, 5);
+            assert_matches_generic(&values, k, rng);
+        });
+    }
+
+    #[test]
+    fn repair_resolves_empty_clusters_like_generic() {
+        // deterministic regression: k=3 with an init that leaves the middle
+        // centroid's segment empty on duplicate data
+        let values: Vec<f32> = [0.0f32; 600]
+            .iter()
+            .chain([10.0f32; 600].iter())
+            .copied()
+            .collect();
+        let init = vec![0.0f32, 4.0, 10.0];
+        let fast = lloyd_fast(&values, &init, 40);
+        let gen = lloyd_generic(&values, &init, 40);
+        assert!(
+            (fast.inertia - gen.inertia).abs() <= 1e-5 * (1.0 + gen.inertia.abs()),
+            "fast {} vs generic {}",
+            fast.inertia,
+            gen.inertia
+        );
+        // both must land on zero inertia: every point sits on a centroid
+        assert!(fast.inertia <= 1e-9, "repair failed: inertia {}", fast.inertia);
     }
 
     #[test]

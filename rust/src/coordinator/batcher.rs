@@ -2,6 +2,14 @@
 
 use std::time::Duration;
 
+/// Ceiling on acceptable padding waste for a deadline dispatch: a batch may
+/// execute at most 2× the pending work. Above this the policy prefers the
+/// largest compiled size that fits *under* the pending count (dispatch a
+/// full sub-batch now, leave the remainder queued) — e.g. 9 pending with
+/// compiled sizes [1, 8, 32] dispatches (8, 8) instead of padding to 32
+/// (3.5× wasted FLOPs, the bug this constant regression-guards).
+pub const MAX_PADDING_OVERHEAD: f64 = 2.0;
+
 /// Size/deadline batching policy over a fixed set of compiled batch shapes.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
@@ -37,11 +45,22 @@ impl BatchPolicy {
         self.max_batch()
     }
 
+    /// Largest compiled size that `n` requests can fill completely.
+    pub fn floor_fit(&self, n: usize) -> Option<usize> {
+        self.sizes.iter().rev().find(|&&s| s <= n).copied()
+    }
+
     /// Decide whether to dispatch now.
     ///
     /// * A full batch (pending ≥ max size) dispatches immediately.
     /// * Otherwise dispatch only once the oldest request has waited
-    ///   `max_wait`, using the smallest compiled size that fits.
+    ///   `max_wait`: take everything padded to the smallest compiled size
+    ///   that fits — unless that wastes more than
+    ///   [`MAX_PADDING_OVERHEAD`]× the pending work, in which case take a
+    ///   zero-padding sub-batch of the largest compiled size ≤ pending and
+    ///   leave the remainder queued for the next tick. Only when pending is
+    ///   below the smallest compiled size is an over-threshold pad
+    ///   unavoidable (there is no smaller executable to run).
     ///
     /// Returns the number of requests to take and the compiled batch size.
     pub fn decide(&self, pending: usize, oldest_age: Duration) -> Option<(usize, usize)> {
@@ -52,8 +71,14 @@ impl BatchPolicy {
             return Some((self.max_batch(), self.max_batch()));
         }
         if oldest_age >= self.max_wait {
-            let take = pending;
-            return Some((take, self.fit(take)));
+            let size = self.fit(pending);
+            if self.padding_overhead(pending, size) <= MAX_PADDING_OVERHEAD {
+                return Some((pending, size));
+            }
+            if let Some(floor) = self.floor_fit(pending) {
+                return Some((floor, floor));
+            }
+            return Some((pending, size)); // pending < smallest compiled size
         }
         None
     }
@@ -92,7 +117,57 @@ mod tests {
         assert_eq!(p.decide(5, Duration::from_millis(1)), None);
         assert_eq!(p.decide(5, Duration::from_millis(2)), Some((5, 8)));
         assert_eq!(p.decide(1, Duration::from_millis(3)), Some((1, 1)));
-        assert_eq!(p.decide(9, Duration::from_millis(2)), Some((9, 32)));
+        // 9 pending must NOT pad to 32 (3.5× overhead): dispatch the full
+        // sub-batch of 8 now and leave 1 queued for the next tick
+        assert_eq!(p.decide(9, Duration::from_millis(2)), Some((8, 8)));
+        // 2 pending: padding to 8 would be 4×; run the b1 executable instead
+        assert_eq!(p.decide(2, Duration::from_millis(2)), Some((1, 1)));
+    }
+
+    #[test]
+    fn floor_fit_picks_largest_below() {
+        let p = policy();
+        assert_eq!(p.floor_fit(9), Some(8));
+        assert_eq!(p.floor_fit(8), Some(8));
+        assert_eq!(p.floor_fit(40), Some(32));
+        assert_eq!(p.floor_fit(1), Some(1));
+        let coarse = BatchPolicy::new(vec![8, 32], Duration::from_millis(2));
+        assert_eq!(coarse.floor_fit(5), None);
+    }
+
+    #[test]
+    fn padding_overhead_bounded_when_pending_fills_smallest_size() {
+        // regression for the 9 → 32 blowup: for every pending count at or
+        // above the smallest compiled size, a deadline dispatch may never
+        // waste more than MAX_PADDING_OVERHEAD× the pending work
+        for sizes in [vec![1usize, 8, 32], vec![8, 32], vec![1, 4, 8, 64]] {
+            let p = BatchPolicy::new(sizes.clone(), Duration::from_millis(2));
+            let smallest = p.sizes()[0];
+            for pending in 1..=2 * p.max_batch() {
+                let Some((take, size)) = p.decide(pending, Duration::from_millis(2)) else {
+                    panic!("deadline reached with {pending} pending must dispatch");
+                };
+                assert!(take >= 1 && take <= pending, "take {take} of {pending}");
+                assert!(p.sizes().contains(&size), "{size} not a compiled size");
+                assert!(take <= size, "take {take} exceeds batch {size}");
+                if pending >= smallest {
+                    let overhead = p.padding_overhead(take, size);
+                    assert!(
+                        overhead <= MAX_PADDING_OVERHEAD,
+                        "sizes {sizes:?}, pending {pending}: ({take}, {size}) \
+                         overhead {overhead}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn below_smallest_size_still_dispatches_at_deadline() {
+        // with no b1 executable a lone request must still be served, even
+        // though the pad ratio exceeds the bound (there is no alternative)
+        let p = BatchPolicy::new(vec![8, 32], Duration::from_millis(2));
+        assert_eq!(p.decide(2, Duration::from_millis(2)), Some((2, 8)));
     }
 
     #[test]

@@ -21,6 +21,10 @@ pub struct Metrics {
     pub exec_time: Duration,
     /// requests rejected by admission control (queue full)
     pub shed: usize,
+    /// batcher wake-ups that did not dispatch (idle-spin detector: the
+    /// Condvar batcher should wake only on enqueue or deadline, so this
+    /// stays near zero while the queue is empty — regression-tested)
+    pub batcher_polls: usize,
 }
 
 impl Default for Metrics {
@@ -34,6 +38,7 @@ impl Default for Metrics {
             real_slots: 0,
             exec_time: Duration::ZERO,
             shed: 0,
+            batcher_polls: 0,
         }
     }
 }
@@ -73,12 +78,13 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% batches={:?}",
+            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% polls={} batches={:?}",
             self.completed,
             self.shed,
             self.throughput(),
             self.latency.summary(),
             self.padding_fraction() * 100.0,
+            self.batcher_polls,
             self.batches_by_size,
         )
     }

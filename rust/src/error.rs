@@ -1,42 +1,58 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the offline sandbox has no
+//! `thiserror`; the derive would be the only proc-macro dependency in the
+//! crate).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every subsystem of the crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("quantization error: {0}")]
     Quant(String),
-
-    #[error("clustering error: {0}")]
     Clustering(String),
-
-    #[error("model error: {0}")]
     Model(String),
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("json error at byte {at}: {msg}")]
     Json { at: usize, msg: String },
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("checkpoint error: {0}")]
     Checkpoint(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Quant(m) => write!(f, "quantization error: {m}"),
+            Error::Clustering(m) => write!(f, "clustering error: {m}"),
+            Error::Model(m) => write!(f, "model error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Json { at, msg } => write!(f, "json error at byte {at}: {msg}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -46,3 +62,24 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Shape("2 vs 3".into()).to_string(), "shape mismatch: 2 vs 3");
+        assert_eq!(
+            Error::Json { at: 7, msg: "bad token".into() }.to_string(),
+            "json error at byte 7: bad token"
+        );
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -11,8 +11,10 @@
 //! * **L3** (this crate): the runtime system. Rust owns parameter storage,
 //!   training orchestration, the SplitQuant transform (k-means layer
 //!   splitting), the post-training-quantization engine, baselines, the
-//!   pure-Rust quantized-inference executor, the PJRT runtime bridge and a
-//!   batched serving coordinator. Python never runs on the request path.
+//!   pure-Rust quantized-inference executor, the parallel kernel engine
+//!   ([`parallel`]: persistent worker pool + cache-blocked kernels), the
+//!   PJRT runtime bridge and a batched serving coordinator. Python never
+//!   runs on the request path.
 //!
 //! The public API is organized by subsystem; see `DESIGN.md` for the
 //! paper → module map and `EXPERIMENTS.md` for reproduced results.
@@ -24,6 +26,7 @@ pub mod data;
 pub mod error;
 pub mod eval;
 pub mod model;
+pub mod parallel;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -388,7 +388,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let server = Server::start(
         exec,
         tok,
-        ServeConfig { max_wait: Duration::from_millis(2), workers, queue_cap: 4096 },
+        ServeConfig {
+            max_wait: Duration::from_millis(2),
+            workers,
+            queue_cap: 4096,
+            ..ServeConfig::default()
+        },
     );
 
     let (_, test_set) = load_task("emotion", seed)?;

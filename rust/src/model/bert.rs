@@ -141,46 +141,7 @@ impl BertModel {
         let k = proj("k");
         let v = proj("v");
 
-        let mut ctx = Tensor::zeros(&[b * l, h]);
-        // per (batch, head): gather the head slice contiguously and reuse the
-        // blocked matmul for scores (q·kᵀ) and context (softmax·v) — ~2×
-        // faster than the element-wise loops this replaced (§Perf)
-        let mut qb = Tensor::zeros(&[l, hd]);
-        let mut kt = Tensor::zeros(&[hd, l]);
-        let mut vb = Tensor::zeros(&[l, hd]);
-        for bi in 0..b {
-            let mrow = &mask.data()[bi * l..(bi + 1) * l];
-            for ai in 0..a {
-                let off = ai * hd;
-                for i in 0..l {
-                    let src = (bi * l + i) * h + off;
-                    qb.data_mut()[i * hd..(i + 1) * hd]
-                        .copy_from_slice(&q.data()[src..src + hd]);
-                    vb.data_mut()[i * hd..(i + 1) * hd]
-                        .copy_from_slice(&v.data()[src..src + hd]);
-                    for d in 0..hd {
-                        kt.data_mut()[d * l + i] = k.data()[src + d];
-                    }
-                }
-                let mut scores = ops::matmul(&qb, &kt); // (L, L)
-                {
-                    let sd = scores.data_mut();
-                    for i in 0..l {
-                        for j in 0..l {
-                            sd[i * l + j] =
-                                sd[i * l + j] * scale + (1.0 - mrow[j]) * ops::NEG_INF;
-                        }
-                    }
-                }
-                let sm = ops::softmax_last(&scores);
-                let ctx_head = ops::matmul(&sm, &vb); // (L, hd)
-                for i in 0..l {
-                    let dst = (bi * l + i) * h + off;
-                    ctx.data_mut()[dst..dst + hd]
-                        .copy_from_slice(&ctx_head.data()[i * hd..(i + 1) * hd]);
-                }
-            }
-        }
+        let ctx = attention_ctx(&q, &k, &v, mask, b, l, h, a, hd, scale);
 
         let mut out = ops::matmul(&ctx, p.get(&format!("{pre}.attn.out.weight")).unwrap());
         ops::add_bias(&mut out, p.get(&format!("{pre}.attn.out.bias")).unwrap());
@@ -190,6 +151,117 @@ impl BertModel {
     /// Predicted class per example.
     pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Vec<i32> {
         argmax_rows(&self.forward(ids, mask))
+    }
+}
+
+/// Multi-head attention context `softmax(q·kᵀ·scale + mask)·v`, gathered
+/// back into `(B·L, H)`. Shared by [`BertModel`] and
+/// [`super::qbert::QuantizedBert`]. Each batch writes a disjoint `l·h`
+/// chunk of the output, so batches fan out over the
+/// [`crate::parallel`] worker pool when the problem is large enough;
+/// per-task gather scratch is worker-local, and the inner matmuls run
+/// serially inside pool tasks (nested-dispatch guard).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_ctx(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &Tensor,
+    b: usize,
+    l: usize,
+    h: usize,
+    heads: usize,
+    hd: usize,
+    scale: f32,
+) -> Tensor {
+    let mut ctx = Tensor::zeros(&[b * l, h]);
+    let flops = 4 * b * heads * l * l * hd;
+    if b >= 2 && crate::parallel::should_parallelize(flops) {
+        let pool = crate::parallel::global();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (bi, chunk) in ctx.data_mut().chunks_mut(l * h).enumerate() {
+            tasks.push(Box::new(move || {
+                // worker-local gather scratch (tasks run concurrently)
+                let mut scratch = AttnScratch::new(l, hd);
+                attn_one_batch(q, k, v, mask, chunk, bi, h, heads, &mut scratch, scale);
+            }));
+        }
+        pool.scope(tasks);
+    } else {
+        // one scratch reused across the whole batch (the b1 latency path
+        // must not pay per-element allocations)
+        let mut scratch = AttnScratch::new(l, hd);
+        for (bi, chunk) in ctx.data_mut().chunks_mut(l * h).enumerate() {
+            attn_one_batch(q, k, v, mask, chunk, bi, h, heads, &mut scratch, scale);
+        }
+    }
+    ctx
+}
+
+/// Per-head gather buffers for [`attn_one_batch`]: the head slice of q/v
+/// packed contiguously and k transposed, reused across heads and batches.
+struct AttnScratch {
+    qb: Tensor,
+    kt: Tensor,
+    vb: Tensor,
+}
+
+impl AttnScratch {
+    fn new(l: usize, hd: usize) -> AttnScratch {
+        AttnScratch {
+            qb: Tensor::zeros(&[l, hd]),
+            kt: Tensor::zeros(&[hd, l]),
+            vb: Tensor::zeros(&[l, hd]),
+        }
+    }
+}
+
+/// Attention for a single batch element into its `(l × h)` context chunk.
+/// Per head: gather the head slice contiguously and reuse the blocked
+/// matmul for scores (q·kᵀ) and context (softmax·v) — ~2× faster than the
+/// element-wise loops this replaced (§Perf).
+#[allow(clippy::too_many_arguments)]
+fn attn_one_batch(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &Tensor,
+    ctx_chunk: &mut [f32],
+    bi: usize,
+    h: usize,
+    heads: usize,
+    scratch: &mut AttnScratch,
+    scale: f32,
+) {
+    let l = scratch.qb.shape()[0];
+    let hd = scratch.qb.shape()[1];
+    let AttnScratch { qb, kt, vb } = scratch;
+    let mrow = &mask.data()[bi * l..(bi + 1) * l];
+    for ai in 0..heads {
+        let off = ai * hd;
+        for i in 0..l {
+            let src = (bi * l + i) * h + off;
+            qb.data_mut()[i * hd..(i + 1) * hd].copy_from_slice(&q.data()[src..src + hd]);
+            vb.data_mut()[i * hd..(i + 1) * hd].copy_from_slice(&v.data()[src..src + hd]);
+            for d in 0..hd {
+                kt.data_mut()[d * l + i] = k.data()[src + d];
+            }
+        }
+        let mut scores = ops::matmul(&qb, &kt); // (L, L)
+        {
+            let sd = scores.data_mut();
+            for i in 0..l {
+                for j in 0..l {
+                    sd[i * l + j] = sd[i * l + j] * scale + (1.0 - mrow[j]) * ops::NEG_INF;
+                }
+            }
+        }
+        let sm = ops::softmax_last(&scores);
+        let ctx_head = ops::matmul(&sm, &vb); // (L, hd)
+        for i in 0..l {
+            let dst = i * h + off;
+            ctx_chunk[dst..dst + hd].copy_from_slice(&ctx_head.data()[i * hd..(i + 1) * hd]);
+        }
     }
 }
 

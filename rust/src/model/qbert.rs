@@ -13,8 +13,8 @@
 
 use std::collections::BTreeMap;
 
-use crate::error::{Error, Result};
-use crate::quant::{QLayout, QTensor};
+use crate::error::Result;
+use crate::quant::QTensor;
 use crate::splitquant::QuantizedModel;
 use crate::tensor::ops;
 use crate::tensor::{IntTensor, Tensor};
@@ -37,22 +37,7 @@ pub struct QLinear {
 
 impl QLinear {
     pub fn new(q: QTensor) -> Result<Self> {
-        if q.shape().len() != 2 {
-            return Err(Error::Model(format!(
-                "QLinear expects rank-2 weights, got {:?}",
-                q.shape()
-            )));
-        }
-        let codes = q.codes().unpack();
-        let cid = match q.layout() {
-            QLayout::Split { cid } => cid.unpack_unsigned(),
-            QLayout::PerTensor => Vec::new(),
-            QLayout::PerChannel { .. } => {
-                return Err(Error::Model(
-                    "QLinear: per-channel layout not supported on the fused path".into(),
-                ))
-            }
-        };
+        let (codes, cid) = q.fused_planes()?;
         Ok(QLinear { q, codes, cid })
     }
 
@@ -62,32 +47,23 @@ impl QLinear {
 
     /// `y = x @ dq(W)` — the Rust twin of the L1 `split_matmul` kernel.
     ///
-    /// Dequantizes W into a **transient** scratch buffer (freed on return;
-    /// the resident form stays int8 codes + cid) and runs the blocked
-    /// matmul. §Perf: the earlier truly-interleaved variant (dequant one
-    /// row inside the k-loop) re-touched the whole output per k step and
-    /// ran 1.9× slower than FP32; scratch dequant brings the fused path to
-    /// ~1.05× FP32 while keeping resident weight memory at ≤50 %.
+    /// Runs the tiled fused kernel
+    /// ([`crate::parallel::kernels::split_matmul`]): per-cluster weight
+    /// tiles are dequantized into a cache-resident scratch tile inside the
+    /// blocked matmul, never materializing the full FP32 matrix. §Perf:
+    /// the earlier full-scratch variant dequantized all of W per call
+    /// (k·n·4 bytes of traffic before the first FMA); tile dequant keeps
+    /// the reconstruction in L1/L2 and row-partitions across the worker
+    /// pool for large batches, while resident weight memory stays ≤50 %
+    /// of FP32 (unpacked codes + cid).
     pub fn matmul_fused(&self, x: &Tensor) -> Tensor {
-        let (_m, k) = (x.shape()[0], x.shape()[1]);
-        let (k2, n) = (self.q.shape()[0], self.q.shape()[1]);
-        assert_eq!(k, k2, "fused matmul inner dims {k} vs {k2}");
-        let params = self.q.params();
-        let inv: Vec<f32> = params.iter().map(|p| 1.0 / p.scale).collect();
-        let zp: Vec<f32> = params.iter().map(|p| p.zp).collect();
-        let mut w = vec![0.0f32; k * n];
-        if self.cid.is_empty() {
-            let (i0, z0) = (inv[0], zp[0]);
-            for (o, &q) in w.iter_mut().zip(&self.codes) {
-                *o = (q as f32 - z0) * i0;
-            }
-        } else {
-            for ((o, &q), &c) in w.iter_mut().zip(&self.codes).zip(&self.cid) {
-                *o = (q as f32 - zp[c as usize]) * inv[c as usize];
-            }
-        }
-        let w = Tensor::new(&[k, n], w).unwrap();
-        ops::matmul(x, &w)
+        crate::parallel::kernels::split_matmul(
+            x,
+            self.q.shape(),
+            &self.codes,
+            &self.cid,
+            self.q.params(),
+        )
     }
 
     /// Resident bytes of this deployment form (unpacked codes + cid + meta).
@@ -182,43 +158,7 @@ impl QuantizedBert {
             let k = self.linear(&format!("{pre}.attn.k.weight"), &x);
             let v = self.linear(&format!("{pre}.attn.v.weight"), &x);
 
-            let mut ctx = Tensor::zeros(&[b * l, h]);
-            let mut qb = Tensor::zeros(&[l, hd]);
-            let mut kt = Tensor::zeros(&[hd, l]);
-            let mut vb = Tensor::zeros(&[l, hd]);
-            for bi in 0..b {
-                let mrow = &mask.data()[bi * l..(bi + 1) * l];
-                for ai in 0..a {
-                    let off = ai * hd;
-                    for ii in 0..l {
-                        let src = (bi * l + ii) * h + off;
-                        qb.data_mut()[ii * hd..(ii + 1) * hd]
-                            .copy_from_slice(&q.data()[src..src + hd]);
-                        vb.data_mut()[ii * hd..(ii + 1) * hd]
-                            .copy_from_slice(&v.data()[src..src + hd]);
-                        for d in 0..hd {
-                            kt.data_mut()[d * l + ii] = k.data()[src + d];
-                        }
-                    }
-                    let mut scores = ops::matmul(&qb, &kt);
-                    {
-                        let sd = scores.data_mut();
-                        for ii in 0..l {
-                            for j in 0..l {
-                                sd[ii * l + j] =
-                                    sd[ii * l + j] * scale + (1.0 - mrow[j]) * ops::NEG_INF;
-                            }
-                        }
-                    }
-                    let sm = ops::softmax_last(&scores);
-                    let ctx_head = ops::matmul(&sm, &vb);
-                    for ii in 0..l {
-                        let dst = (bi * l + ii) * h + off;
-                        ctx.data_mut()[dst..dst + hd]
-                            .copy_from_slice(&ctx_head.data()[ii * hd..(ii + 1) * hd]);
-                    }
-                }
-            }
+            let ctx = super::bert::attention_ctx(&q, &k, &v, mask, b, l, h, a, hd, scale);
             let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx);
             let mut res = x.clone();
             res.add_assign(&attn);

@@ -1,0 +1,425 @@
+//! Cache-blocked, row-partitioned parallel kernels.
+//!
+//! Each kernel partitions its *output* into disjoint row chunks and lends
+//! one chunk per task to the global [`super::WorkerPool`]; inputs are shared
+//! immutably. Every chunk runs the same inner loop as the serial kernel in
+//! [`crate::tensor::ops`] (same k-quad unrolling, same zero-skip, same
+//! accumulation order), so for `matmul`/`batch_matmul` the parallel result
+//! is bit-identical to the serial one — property-tested below, with a 1e-5
+//! tolerance to keep the contract honest if the inner loops ever diverge.
+//!
+//! The fused split-dequant matmul is the Rust twin of the L1 `split_matmul`
+//! Pallas kernel: weight tiles are reconstructed `w = (q − zp)·(1/s)` from
+//! int codes + cluster ids into a per-worker scratch tile (cache-resident,
+//! `tile_k × tile_n`), never materializing the full FP32 weight matrix.
+
+use std::ops::Range;
+
+use crate::quant::QParams;
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+
+use super::{config, global, should_parallelize};
+
+/// Rows per task: oversplit by 4× the thread count so the zero-skip
+/// fast path (padded batch rows cost almost nothing) load-balances.
+fn rows_per_task(rows: usize, threads: usize) -> usize {
+    rows.div_ceil(threads.max(1) * 4).max(1)
+}
+
+/// `C = A(m×k) @ B(k×n)` on the worker pool, unconditionally parallel.
+/// Use [`ops::matmul`] for the size-aware dispatching entry point.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return Tensor::new(&[m, n], out).unwrap();
+    }
+    let pool = global();
+    let rows_per = rows_per_task(m, pool.threads());
+    let (ad, bd) = (a.data(), b.data());
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+        let r0 = ci * rows_per;
+        let rows = r0..r0 + chunk.len() / n;
+        tasks.push(Box::new(move || ops::matmul_rows(ad, bd, chunk, rows, k, n)));
+    }
+    pool.scope(tasks);
+    Tensor::new(&[m, n], out).unwrap()
+}
+
+/// `(B, m, k) @ (B, k, n) -> (B, m, n)` on the worker pool, partitioned
+/// over the batch dimension.
+pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (bs, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    let (bs2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
+    assert_eq!(bs, bs2);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; bs * m * n];
+    if bs == 0 || m * n == 0 {
+        return Tensor::new(&[bs, m, n], out).unwrap();
+    }
+    let pool = global();
+    let per = bs.div_ceil(pool.threads().max(1) * 2).max(1);
+    let (ad, bd) = (a.data(), b.data());
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ci, chunk) in out.chunks_mut(per * m * n).enumerate() {
+        let b0 = ci * per;
+        tasks.push(Box::new(move || {
+            for (bi, o2) in chunk.chunks_mut(m * n).enumerate() {
+                let idx = b0 + bi;
+                let a2 = &ad[idx * m * k..(idx + 1) * m * k];
+                let b2 = &bd[idx * k * n..(idx + 1) * k * n];
+                ops::matmul_naive_into(a2, b2, o2, m, k, n);
+            }
+        }));
+    }
+    pool.scope(tasks);
+    Tensor::new(&[bs, m, n], out).unwrap()
+}
+
+/// Fused split-dequant matmul: `y = x @ dq(W)` where `W` lives as int
+/// codes (+ optional per-element cluster ids selecting a `QParams` group).
+/// Dispatches serial/parallel by size; `wshape` is `[k, n]`. An empty
+/// `cid` means a single param group (per-tensor layout).
+///
+/// The pooled path requires `m ≫ threads`: every task re-dequantizes the
+/// W tiles it streams through, so with T threads the reconstruction
+/// happens T times per call — amortized only when each task owns many
+/// activation rows (at `m ≥ 8·T` the redundant dequant is ≤ ~12% of the
+/// FMA work). Small-batch shapes stay on the serial tiled path.
+pub fn split_matmul(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (wshape[0], wshape[1]);
+    assert_eq!(k, k2, "fused matmul inner dims {k} vs {k2}");
+    assert_eq!(codes.len(), k * n, "fused matmul codes len");
+    assert!(cid.is_empty() || cid.len() == k * n, "fused matmul cid len");
+    assert!(!params.is_empty(), "fused matmul needs at least one param group");
+    if should_parallelize(2 * m * k * n) && m >= 8 * super::effective_threads() {
+        split_matmul_pooled(x, wshape, codes, cid, params)
+    } else {
+        split_matmul_serial(x, wshape, codes, cid, params)
+    }
+}
+
+/// Fused split-dequant matmul forced onto the calling thread (tiled).
+pub fn split_matmul_serial(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let n = wshape[1];
+    let group = DequantGroups::new(params);
+    let mut out = vec![0.0f32; m * n];
+    if m * n > 0 {
+        split_matmul_rows(x.data(), codes, cid, &group, &mut out, 0..m, k, n);
+    }
+    Tensor::new(&[m, n], out).unwrap()
+}
+
+/// Fused split-dequant matmul forced onto the worker pool.
+pub fn split_matmul_pooled(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let n = wshape[1];
+    let group = DequantGroups::new(params);
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return Tensor::new(&[m, n], out).unwrap();
+    }
+    let pool = global();
+    // one chunk per thread (NOT the 4× oversplit of the plain matmul):
+    // every task re-dequantizes the W tiles it touches, so finer chunks
+    // would multiply the reconstruction work per call
+    let rows_per = m.div_ceil(pool.threads()).max(1);
+    let xd = x.data();
+    let groups = &group;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+        let r0 = ci * rows_per;
+        let rows = r0..r0 + chunk.len() / n;
+        tasks.push(Box::new(move || {
+            split_matmul_rows(xd, codes, cid, groups, chunk, rows, k, n);
+        }));
+    }
+    pool.scope(tasks);
+    Tensor::new(&[m, n], out).unwrap()
+}
+
+/// Per-group dequant constants, precomputed once per call: the hot loop
+/// reconstructs `w = (q − zp) · inv` with two loads and one FMA.
+struct DequantGroups {
+    inv: Vec<f32>,
+    zp: Vec<f32>,
+}
+
+impl DequantGroups {
+    fn new(params: &[QParams]) -> DequantGroups {
+        DequantGroups {
+            inv: params.iter().map(|p| 1.0 / p.scale).collect(),
+            zp: params.iter().map(|p| p.zp).collect(),
+        }
+    }
+}
+
+/// Inner fused kernel for one output row chunk. Tiles W as
+/// `tile_k × tile_n`, dequantizing each tile into a worker-local scratch
+/// buffer before streaming all chunk rows through it. `tile_k` is a
+/// multiple of 4, so the k-quad boundaries (and the zero-skip over padded
+/// activation rows) line up exactly with the serial kernel's unroll.
+#[allow(clippy::too_many_arguments)]
+fn split_matmul_rows(
+    xd: &[f32],
+    codes: &[i8],
+    cid: &[u8],
+    groups: &DequantGroups,
+    out_chunk: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let cfg = config();
+    let tk = (cfg.tile_k.max(4) / 4) * 4;
+    let tn = cfg.tile_n.max(8).min(n.max(1));
+    let mut scratch = vec![0.0f32; tk * tn];
+    let per_tensor = cid.is_empty();
+    let (i0, z0) = (groups.inv[0], groups.zp[0]);
+    let mut n0 = 0;
+    while n0 < n {
+        let nt = tn.min(n - n0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kt = tk.min(k - k0);
+            // ---- dequantize the W tile [k0..k0+kt) × [n0..n0+nt)
+            for kk in 0..kt {
+                let wrow = (k0 + kk) * n + n0;
+                let srow = &mut scratch[kk * nt..(kk + 1) * nt];
+                if per_tensor {
+                    for (s, &q) in srow.iter_mut().zip(&codes[wrow..wrow + nt]) {
+                        *s = (q as f32 - z0) * i0;
+                    }
+                } else {
+                    for (j, s) in srow.iter_mut().enumerate() {
+                        let c = cid[wrow + j] as usize;
+                        *s = (codes[wrow + j] as f32 - groups.zp[c]) * groups.inv[c];
+                    }
+                }
+            }
+            // ---- FMA all chunk rows through the tile
+            let k4 = kt - kt % 4;
+            for (ri, i) in rows.clone().enumerate() {
+                let arow = &xd[i * k + k0..i * k + k0 + kt];
+                let orow = &mut out_chunk[ri * n + n0..ri * n + n0 + nt];
+                let mut kk = 0;
+                while kk < k4 {
+                    let (a0, a1, a2, a3) =
+                        (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        kk += 4;
+                        continue; // padded/sparse rows (zero-mask batch slots)
+                    }
+                    let b0 = &scratch[kk * nt..kk * nt + nt];
+                    let b1 = &scratch[(kk + 1) * nt..(kk + 1) * nt + nt];
+                    let b2 = &scratch[(kk + 2) * nt..(kk + 2) * nt + nt];
+                    let b3 = &scratch[(kk + 3) * nt..(kk + 3) * nt + nt];
+                    for j in 0..nt {
+                        orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                    kk += 4;
+                }
+                for kk in k4..kt {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &scratch[kk * nt..kk * nt + nt];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            k0 += kt;
+        }
+        n0 += nt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::qrange;
+    use crate::util::proptest::{check, gen_values_with_outliers};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::new(&[m, n], gen_values_with_outliers(rng, m * n, 0.05)).unwrap()
+    }
+
+    /// Zero out a few full rows (the padded-batch-slot pattern).
+    fn zero_some_rows(t: &mut Tensor, rng: &mut Rng) {
+        let (m, n) = (t.shape()[0], t.shape()[1]);
+        for i in 0..m {
+            if rng.chance(0.3) {
+                for v in &mut t.data_mut()[i * n..(i + 1) * n] {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_parallel_matmul_matches_serial() {
+        check("pooled matmul == serial matmul", 40, |rng| {
+            let m = rng.range(1, 33); // includes m = 1
+            let k = rng.range(1, 41); // includes k % 4 != 0
+            let n = rng.range(1, 33);
+            let mut a = rand_tensor(rng, m, k);
+            zero_some_rows(&mut a, rng);
+            let b = rand_tensor(rng, k, n);
+            let par = matmul(&a, &b);
+            let ser = ops::matmul_serial(&a, &b);
+            assert!(
+                par.max_abs_diff(&ser) <= 1e-5,
+                "gap {} at {m}x{k}x{n}",
+                par.max_abs_diff(&ser)
+            );
+        });
+    }
+
+    #[test]
+    fn property_parallel_batch_matmul_matches_serial() {
+        check("pooled batch_matmul == serial", 30, |rng| {
+            let bs = rng.range(1, 7);
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 17);
+            let n = rng.range(1, 12);
+            let a = Tensor::new(
+                &[bs, m, k],
+                gen_values_with_outliers(rng, bs * m * k, 0.05),
+            )
+            .unwrap();
+            let b = Tensor::new(
+                &[bs, k, n],
+                gen_values_with_outliers(rng, bs * k * n, 0.05),
+            )
+            .unwrap();
+            let par = batch_matmul(&a, &b);
+            let ser = ops::batch_matmul_serial(&a, &b);
+            assert!(par.max_abs_diff(&ser) <= 1e-5, "gap {}", par.max_abs_diff(&ser));
+        });
+    }
+
+    /// Random quantized weight: codes within INT`bits` range plus either a
+    /// per-tensor param group or a split layout with 2–4 groups.
+    fn rand_qweight(
+        rng: &mut Rng,
+        k: usize,
+        n: usize,
+        bits: u8,
+    ) -> (Vec<i8>, Vec<u8>, Vec<QParams>) {
+        let (qmin, qmax) = qrange(bits);
+        let span = (qmax - qmin + 1) as usize;
+        let codes: Vec<i8> =
+            (0..k * n).map(|_| (qmin + rng.below(span) as i32) as i8).collect();
+        if rng.chance(0.5) {
+            let p = QParams::from_range(-1.0, 1.0, bits);
+            (codes, Vec::new(), vec![p])
+        } else {
+            let groups = rng.range(2, 5);
+            let params: Vec<QParams> = (0..groups)
+                .map(|g| {
+                    let lo = -0.1 * (g as f32 + 1.0) * (1.0 + rng.f32());
+                    let hi = 0.2 * (g as f32 + 1.0) * (1.0 + rng.f32());
+                    QParams::from_range(lo, hi, bits)
+                })
+                .collect();
+            let cid: Vec<u8> = (0..k * n).map(|_| rng.below(groups) as u8).collect();
+            (codes, cid, params)
+        }
+    }
+
+    /// Reference: dequantize W fully with the same `(q − zp)·inv` formula,
+    /// then run the serial matmul.
+    fn reference_fused(
+        x: &Tensor,
+        k: usize,
+        n: usize,
+        codes: &[i8],
+        cid: &[u8],
+        params: &[QParams],
+    ) -> Tensor {
+        let inv: Vec<f32> = params.iter().map(|p| 1.0 / p.scale).collect();
+        let zp: Vec<f32> = params.iter().map(|p| p.zp).collect();
+        let mut w = vec![0.0f32; k * n];
+        for (i, (o, &q)) in w.iter_mut().zip(codes).enumerate() {
+            let c = if cid.is_empty() { 0 } else { cid[i] as usize };
+            *o = (q as f32 - zp[c]) * inv[c];
+        }
+        ops::matmul_serial(x, &Tensor::new(&[k, n], w).unwrap())
+    }
+
+    #[test]
+    fn property_fused_split_matmul_matches_dequant_reference() {
+        check("fused split matmul == dequant + serial matmul", 40, |rng| {
+            let m = rng.range(1, 20);
+            let k = rng.range(1, 41);
+            let n = rng.range(1, 28);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let mut x = rand_tensor(rng, m, k);
+            zero_some_rows(&mut x, rng);
+            let (codes, cid, params) = rand_qweight(rng, k, n, bits);
+            let want = reference_fused(&x, k, n, &codes, &cid, &params);
+            for got in [
+                split_matmul_serial(&x, &[k, n], &codes, &cid, &params),
+                split_matmul_pooled(&x, &[k, n], &codes, &cid, &params),
+            ] {
+                assert!(
+                    got.max_abs_diff(&want) <= 1e-5,
+                    "gap {} at {m}x{k}x{n} INT{bits}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn fused_kernel_handles_tile_boundaries() {
+        // shapes straddling the default 64×256 tiles, plus k % 4 != 0
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(3usize, 130usize, 300usize), (2, 67, 257), (1, 64, 256)] {
+            let x = rand_tensor(&mut rng, m, k);
+            let (codes, cid, params) = rand_qweight(&mut rng, k, n, 4);
+            let want = reference_fused(&x, k, n, &codes, &cid, &params);
+            let got = split_matmul(&x, &[k, n], &codes, &cid, &params);
+            assert!(got.max_abs_diff(&want) <= 1e-5, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn big_matmul_is_bit_identical_across_engines() {
+        // above the dispatch threshold: ops::matmul routes to the pool; the
+        // row partition must not change the accumulation order at all
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[256, 96], 0.0, 1.0, &mut rng);
+        let b = Tensor::randn(&[96, 128], 0.0, 1.0, &mut rng);
+        let par = matmul(&a, &b);
+        let ser = ops::matmul_serial(&a, &b);
+        assert_eq!(par.data(), ser.data(), "row partition must be bit-exact");
+    }
+}

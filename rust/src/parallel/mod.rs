@@ -1,0 +1,131 @@
+//! Parallel kernel engine (§Perf): a persistent worker pool plus
+//! cache-blocked, row-partitioned kernels for the inference hot path.
+//!
+//! SplitQuant's mathematically-equivalent layer splitting (paper §4) — and
+//! the OCS baseline's channel duplication — inflate every quantized matmul,
+//! so the serial scalar kernels in [`crate::tensor::ops`] bound end-to-end
+//! throughput. This subsystem provides:
+//!
+//! * [`pool::WorkerPool`] — one process-wide pool of persistent threads
+//!   with rayon-style scoped submits (borrowed closures, blocking join).
+//!   The serving coordinator's workers all share it instead of each
+//!   oversubscribing the machine.
+//! * [`kernels`] — parallel `matmul` / `batch_matmul` and the fused
+//!   split-dequant matmul that reconstructs weight tiles from int codes +
+//!   cluster ids on the fly (no full FP32 weight materialization).
+//! * [`ParallelConfig`] — thread count, tile sizes, and the serial-fallback
+//!   threshold, applied process-wide via [`configure`].
+//!
+//! Dispatch contract: `ops::matmul` and friends route through
+//! [`should_parallelize`], which returns `false` for small problems, for
+//! single-threaded configs, and from inside pool workers (nested parallel
+//! sections run serially instead of deadlocking). Property tests assert the
+//! parallel kernels match the serial ones within 1e-5 on every shape class
+//! (`k % 4 != 0`, `m = 1`, zero-padded rows included).
+
+pub mod kernels;
+pub mod pool;
+
+use std::sync::OnceLock;
+
+pub use pool::WorkerPool;
+
+/// Tuning knobs for the kernel engine. Process-wide: the first
+/// [`configure`] (or the first kernel dispatch, whichever comes first)
+/// freezes the values for the lifetime of the process, because the pool
+/// threads are spawned once and shared by every subsystem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads. `0` = auto: `SPLITQUANT_THREADS` env var if set,
+    /// otherwise `std::thread::available_parallelism()`.
+    pub threads: usize,
+    /// Fused-kernel k-tile (rows of W dequantized per scratch refill);
+    /// rounded down to a multiple of 4 to keep quad boundaries aligned
+    /// with the serial kernel's unroll.
+    pub tile_k: usize,
+    /// Fused-kernel n-tile (scratch width); `tile_k * tile_n * 4` bytes of
+    /// scratch per worker, sized to stay cache-resident.
+    pub tile_n: usize,
+    /// Problems below this many FLOPs (2·m·k·n for a matmul) stay on the
+    /// calling thread: pool dispatch costs ~1–2µs and small serving shapes
+    /// (batch-1 forward) are latency-sensitive.
+    pub serial_flops: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { threads: 0, tile_k: 64, tile_n: 256, serial_flops: 4_000_000 }
+    }
+}
+
+impl ParallelConfig {
+    /// Effective worker-thread count after env/auto resolution.
+    pub fn resolve_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Some(n) = std::env::var("SPLITQUANT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return n;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+static CONFIG: OnceLock<ParallelConfig> = OnceLock::new();
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+static THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Install a process-wide config. Returns `false` (and changes nothing) if
+/// the engine was already configured — first caller wins, so set it before
+/// the first parallel kernel runs (e.g. from `Server::start`).
+pub fn configure(cfg: ParallelConfig) -> bool {
+    CONFIG.set(cfg).is_ok()
+}
+
+/// The effective process-wide config (defaults if [`configure`] never ran).
+pub fn config() -> &'static ParallelConfig {
+    CONFIG.get_or_init(ParallelConfig::default)
+}
+
+/// Effective worker-thread count, resolved once (env var / syscall are not
+/// re-consulted on the per-matmul dispatch path).
+pub fn effective_threads() -> usize {
+    *THREADS.get_or_init(|| config().resolve_threads())
+}
+
+/// The shared process-wide pool, spawned lazily on first use.
+pub fn global() -> &'static WorkerPool {
+    POOL.get_or_init(|| WorkerPool::new(effective_threads()))
+}
+
+/// Should a kernel of `flops` total work fan out to the pool?
+pub fn should_parallelize(flops: usize) -> bool {
+    let cfg = config();
+    flops >= cfg.serial_flops && !pool::in_pool_worker() && effective_threads() > 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_resolves_at_least_one_thread() {
+        assert!(ParallelConfig::default().resolve_threads() >= 1);
+    }
+
+    #[test]
+    fn explicit_thread_count_wins() {
+        let cfg = ParallelConfig { threads: 3, ..ParallelConfig::default() };
+        assert_eq!(cfg.resolve_threads(), 3);
+    }
+
+    #[test]
+    fn small_problems_stay_serial() {
+        // 2·8·8·8 = 1024 flops is far below any sane serial_flops
+        assert!(!should_parallelize(1024));
+    }
+}

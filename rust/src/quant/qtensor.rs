@@ -186,6 +186,54 @@ impl QTensor {
         Tensor::new(&self.shape, data).expect("shape consistent")
     }
 
+    /// Unpacked `(codes, cid)` planes for the fused matmul path (`cid`
+    /// empty for per-tensor layouts). Errors on non-rank-2 weights and on
+    /// per-channel layouts, which the fused kernel does not support.
+    /// Shared by [`QTensor::matmul_fused`] and the deployment executor's
+    /// resident form ([`crate::model::qbert::QLinear`]).
+    pub fn fused_planes(&self) -> Result<(Vec<i8>, Vec<u8>)> {
+        if self.shape.len() != 2 {
+            return Err(Error::Quant(format!(
+                "fused matmul expects rank-2 weights, got {:?}",
+                self.shape
+            )));
+        }
+        let cid = match &self.layout {
+            QLayout::Split { cid } => cid.unpack_unsigned(),
+            QLayout::PerTensor => Vec::new(),
+            QLayout::PerChannel { .. } => {
+                return Err(Error::Quant(
+                    "per-channel layout not supported on the fused matmul path".into(),
+                ))
+            }
+        };
+        Ok((self.codes.unpack(), cid))
+    }
+
+    /// `y = x @ dq(W)` without materializing the FP32 weight matrix:
+    /// per-cluster tiles are dequantized on the fly inside the blocked
+    /// matmul (see [`crate::parallel::kernels::split_matmul`]). Unpacks the
+    /// code/cid planes per call — deployment executors that call this in a
+    /// loop should hold the unpacked form instead (see
+    /// [`crate::model::qbert::QLinear`]).
+    pub fn matmul_fused(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 2 || x.shape()[1] != self.shape[0] {
+            return Err(Error::Quant(format!(
+                "matmul_fused: activations {:?} do not match weights {:?}",
+                x.shape(),
+                self.shape
+            )));
+        }
+        let (codes, cid) = self.fused_planes()?;
+        Ok(crate::parallel::kernels::split_matmul(
+            x,
+            &self.shape,
+            &codes,
+            &cid,
+            &self.params,
+        ))
+    }
+
     /// Total storage bytes: packed codes + cluster-id plane + scale metadata.
     /// This is the paper-§6 model-size accounting.
     pub fn byte_size(&self) -> usize {
@@ -314,6 +362,28 @@ mod tests {
             let tol = if *want > 1.0 { 50.0 } else { 0.001 };
             assert!((got - want).abs() < tol, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn fused_matmul_matches_dequantized_matmul() {
+        let mut rng = Rng::new(9);
+        for cfg in [QConfig::baseline(4), QConfig::baseline(8)] {
+            let w = Tensor::randn(&[24, 10], 0.0, 0.5, &mut rng);
+            let q = QTensor::quantize(&w, &cfg).unwrap();
+            let x = Tensor::randn(&[5, 24], 0.0, 1.0, &mut rng);
+            let fused = q.matmul_fused(&x).unwrap();
+            let reference = crate::tensor::ops::matmul_serial(&x, &q.dequantize());
+            let gap = fused.max_abs_diff(&reference);
+            assert!(gap < 1e-4, "fused gap {gap}");
+        }
+    }
+
+    #[test]
+    fn fused_matmul_rejects_per_channel() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.2, 0.3, 100.0, 200.0, 300.0]).unwrap();
+        let q = QTensor::quantize(&t, &QConfig::per_channel(8, 0)).unwrap();
+        let x = Tensor::ones(&[1, 2]);
+        assert!(q.matmul_fused(&x).is_err());
     }
 
     #[test]

@@ -11,21 +11,50 @@ pub const NEG_INF: f32 = -1e9;
 
 /// `C = A(m×k) @ B(k×n)`, row-major.
 ///
+/// Size-aware dispatch: large products fan out row-partitioned over the
+/// [`crate::parallel`] worker pool; everything else (and any call made from
+/// inside a pool worker) runs [`matmul_serial`] on the calling thread. Both
+/// engines share [`matmul_rows`], so the result is identical either way.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    if m >= 2 && crate::parallel::should_parallelize(2 * m * k * n) {
+        return crate::parallel::kernels::matmul(a, b);
+    }
+    matmul_serial(a, b)
+}
+
+/// Serial `C = A(m×k) @ B(k×n)`.
+///
 /// i–k–j loop with the k dimension unrolled 4-wide: each pass over a C row
 /// performs 4 FMAs per element against 4 consecutive B rows, amortizing the
 /// C-row load/store traffic that bounds the naive i–k–j form (§Perf: 15 →
 /// ~28 GFLOP/s single-core with `target-cpu=native`).
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+pub fn matmul_serial(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    let ad = a.data();
-    let bd = b.data();
+    matmul_rows(a.data(), b.data(), &mut out, 0..m, k, n);
+    Tensor::new(&[m, n], out).unwrap()
+}
+
+/// Compute output rows `rows` of `A(m×k) @ B(k×n)` into `out_chunk`
+/// (`rows.len() × n`, pre-zeroed). `ad` is indexed by absolute row, so
+/// disjoint chunks can run concurrently — this is the kernel both the
+/// serial path and the pool tasks execute, keeping them bit-identical.
+pub(crate) fn matmul_rows(
+    ad: &[f32],
+    bd: &[f32],
+    out_chunk: &mut [f32],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+) {
     let k4 = k - k % 4;
-    for i in 0..m {
+    for (ri, i) in rows.enumerate() {
         let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
+        let orow = &mut out_chunk[ri * n..(ri + 1) * n];
         let mut kk = 0;
         while kk < k4 {
             let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
@@ -53,11 +82,21 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    Tensor::new(&[m, n], out).unwrap()
 }
 
 /// 3-D batch of matmuls: `(B, m, k) @ (B, k, n) -> (B, m, n)`.
+/// Large batches fan out over the worker pool, one task per batch slice.
 pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (bs, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    let n = b.shape()[2];
+    if bs >= 2 && crate::parallel::should_parallelize(2 * bs * m * k * n) {
+        return crate::parallel::kernels::batch_matmul(a, b);
+    }
+    batch_matmul_serial(a, b)
+}
+
+/// Serial 3-D batch of matmuls.
+pub fn batch_matmul_serial(a: &Tensor, b: &Tensor) -> Tensor {
     let (bs, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
     let (bs2, k2, n) = (b.shape()[0], b.shape()[1], b.shape()[2]);
     assert_eq!(bs, bs2);
@@ -67,18 +106,31 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
         let a2 = &a.data()[bi * m * k..(bi + 1) * m * k];
         let b2 = &b.data()[bi * k * n..(bi + 1) * k * n];
         let o2 = &mut out[bi * m * n..(bi + 1) * m * n];
-        for i in 0..m {
-            let arow = &a2[i * k..(i + 1) * k];
-            let orow = &mut o2[i * n..(i + 1) * n];
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &b2[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+        matmul_naive_into(a2, b2, o2, m, k, n);
+    }
+    Tensor::new(&[bs, m, n], out).unwrap()
+}
+
+/// One naive i–k–j matmul into a pre-zeroed output slice (the per-batch
+/// inner loop of [`batch_matmul`], shared with the parallel engine).
+pub(crate) fn matmul_naive_into(
+    a2: &[f32],
+    b2: &[f32],
+    o2: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let arow = &a2[i * k..(i + 1) * k];
+        let orow = &mut o2[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b2[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
             }
         }
     }
-    Tensor::new(&[bs, m, n], out).unwrap()
 }
 
 /// `X(r×c) + bias(c)` broadcast over rows, in place.

@@ -1,0 +1,144 @@
+//! Integration: the parallel kernel engine under the serving coordinator.
+//!
+//! Runs entirely on the pure-Rust executor (no artifacts needed): mixed
+//! request sizes flow through the Condvar batcher, pad to compiled batch
+//! shapes, and execute on the shared worker pool — labels must match
+//! direct single-request inference exactly, and the kernel engine must
+//! agree with the serial kernels at model scale.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitquant::coordinator::{RustExecutor, ServeConfig, Server};
+use splitquant::data::HashTokenizer;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::model::BertModel;
+use splitquant::parallel::{kernels, ParallelConfig};
+use splitquant::tensor::{ops, IntTensor, Tensor};
+use splitquant::util::rng::Rng;
+
+/// Force every matmul in this test binary through the worker pool (the
+/// tiny test model would otherwise stay under the serial-fallback
+/// threshold). Process-wide and first-wins, so each test calls it.
+fn force_parallel() {
+    splitquant::parallel::configure(ParallelConfig {
+        threads: 4,
+        serial_flops: 1,
+        ..ParallelConfig::default()
+    });
+}
+
+fn tiny_cfg() -> BertConfig {
+    BertConfig {
+        vocab_size: 512,
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ffn: 64,
+        max_len: 16,
+        num_classes: 5,
+        ln_eps: 1e-12,
+    }
+}
+
+#[test]
+fn mixed_request_sizes_serve_correct_labels_on_shared_pool() {
+    force_parallel();
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(42);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let model = BertModel::new(cfg.clone(), store.clone()).unwrap();
+
+    // requests of very different lengths → different padding per batch
+    let texts: Vec<String> = (0..40)
+        .map(|i| {
+            let words = 1 + (i * 7) % 13;
+            (0..words).map(|w| format!("tok{i}x{w}")).collect::<Vec<_>>().join(" ")
+        })
+        .collect();
+
+    // direct labels, one request at a time through the serial-ish path
+    let direct: Vec<i32> = texts
+        .iter()
+        .map(|t| {
+            let (ids, mask) = tok.encode(t);
+            let ids = IntTensor::new(&[1, cfg.max_len], ids).unwrap();
+            let mask = Tensor::new(&[1, cfg.max_len], mask).unwrap();
+            model.predict(&ids, &mask)[0]
+        })
+        .collect();
+
+    let ex = Arc::new(RustExecutor::new(cfg, store, vec![1, 4, 8]).unwrap());
+    let server = Server::start(
+        ex,
+        tok,
+        ServeConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 3, // three serving workers share ONE kernel pool
+            queue_cap: 256,
+            parallel: ParallelConfig::default(),
+        },
+    );
+    let rxs: Vec<_> = texts.iter().map(|t| server.submit(t).unwrap()).collect();
+    let served: Vec<i32> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().label)
+        .collect();
+    let m = server.shutdown();
+    assert_eq!(direct, served, "batched+padded+parallel labels must match direct");
+    assert_eq!(m.completed, 40);
+    // the padding-overhead cap must hold end to end
+    let executed = m.real_slots + m.padded_slots;
+    assert!(
+        (executed as f64) <= 2.0 * m.real_slots as f64,
+        "padding overhead: executed {executed} slots for {} real",
+        m.real_slots
+    );
+}
+
+#[test]
+fn parallel_kernels_match_serial_at_model_scale() {
+    force_parallel();
+    // the acceptance shapes: big enough to cross the dispatch threshold
+    let mut rng = Rng::new(7);
+    let a = Tensor::randn(&[512, 512], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[512, 512], 0.0, 1.0, &mut rng);
+    let par = kernels::matmul(&a, &b);
+    let ser = ops::matmul_serial(&a, &b);
+    assert!(par.max_abs_diff(&ser) <= 1e-5, "matmul gap {}", par.max_abs_diff(&ser));
+
+    let a3 = Tensor::randn(&[16, 48, 32], 0.0, 1.0, &mut rng);
+    let b3 = Tensor::randn(&[16, 32, 40], 0.0, 1.0, &mut rng);
+    let par3 = kernels::batch_matmul(&a3, &b3);
+    let ser3 = ops::batch_matmul_serial(&a3, &b3);
+    assert!(par3.max_abs_diff(&ser3) <= 1e-5, "batch gap {}", par3.max_abs_diff(&ser3));
+}
+
+#[test]
+fn quantized_forward_agrees_between_pool_and_serial_paths() {
+    use splitquant::model::QuantizedBert;
+    use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+
+    force_parallel();
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(3);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let (eval_store, qm) =
+        quantize_store(&store, &quantizable, &SplitQuantConfig::new(4)).unwrap();
+    let reference = BertModel::new(cfg.clone(), eval_store).unwrap();
+    let fused = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+
+    // batch large enough that projections cross the parallel threshold in
+    // bigger configs, small enough to stay fast here; the contract is that
+    // dispatch choice never changes answers
+    let b = 8;
+    let ids: Vec<i32> =
+        (0..b * cfg.max_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+    let ids = IntTensor::new(&[b, cfg.max_len], ids).unwrap();
+    let mask = Tensor::full(&[b, cfg.max_len], 1.0);
+    let gap = reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask));
+    assert!(gap < 1e-3, "fused/parallel forward gap {gap}");
+}

@@ -34,7 +34,12 @@ fn pjrt_serving_end_to_end() {
     let server = Server::start(
         exec,
         tok,
-        ServeConfig { max_wait: Duration::from_millis(2), workers: 2, queue_cap: 512 },
+        ServeConfig {
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_cap: 512,
+            ..ServeConfig::default()
+        },
     );
 
     let (_, pool) = emotion::load_small(0, 4, 64);
@@ -77,7 +82,12 @@ fn served_labels_match_direct_inference() {
     let server = Server::start(
         exec,
         tok,
-        ServeConfig { max_wait: Duration::from_millis(1), workers: 2, queue_cap: 128 },
+        ServeConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 128,
+            ..ServeConfig::default()
+        },
     );
     let rxs: Vec<_> = pool.texts.iter().map(|t| server.submit(t).unwrap()).collect();
     let served: Vec<i32> = rxs

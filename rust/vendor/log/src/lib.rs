@@ -1,0 +1,55 @@
+//! Offline stub of the `log` facade.
+//!
+//! The sandbox has no registry access, so this path crate provides the five
+//! level macros with the same invocation syntax as the real crate. Records
+//! go to stderr only when `SPLITQUANT_LOG` is set in the environment, so the
+//! request path stays silent by default. Arguments are always evaluated
+//! (matching the real facade closely enough for `-D warnings` builds).
+
+/// Backing sink for the level macros. Not part of the public API surface of
+/// the real crate; named with a double underscore to signal that.
+pub fn __log(level: &str, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("SPLITQUANT_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log("ERROR", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log("WARN", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log("INFO", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log("DEBUG", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log("TRACE", format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_evaluate_args() {
+        let mut hits = 0;
+        let mut bump = || {
+            hits += 1;
+            hits
+        };
+        crate::info!("value {}", bump());
+        crate::error!("value {}", bump());
+        assert_eq!(hits, 2, "macro arguments must be evaluated");
+    }
+}
