@@ -8,9 +8,9 @@
 
 use std::path::Path;
 
-use splitquant::baselines;
 use splitquant::data::images;
 use splitquant::model::{CnnModel, ParamStore};
+use splitquant::quant::pipeline::{BaselinePass, BnFoldWith, QuantPipeline, SplitQuantPass};
 use splitquant::quant::QConfig;
 use splitquant::report::{pct, pct_delta, Table};
 use splitquant::runtime::Runtime;
@@ -41,42 +41,47 @@ fn main() -> splitquant::Result<()> {
             println!("  step {:4}  loss {loss:.4}", s + 1);
         }
     }
-    let store = trainer.store.clone();
-    let fp32_model = CnnModel::new(ccfg.clone(), store.clone())?;
+    let store = trainer.store.share();
+    let fp32_model = CnnModel::new(ccfg.clone(), store.share())?;
     let fp32 = fp32_model.accuracy(&test.images, &test.labels);
     println!("[cnn] FP32 accuracy: {}", pct(fp32));
 
-    // ---- §4.1: fold BN before splitting
-    let mut folded = store.clone();
-    sq::bn_fold::fold_cnn(&mut folded, ccfg.bn_eps)?;
-    let fold_model = CnnModel::new(ccfg.clone(), folded.clone())?;
+    // ---- §4.1: BN folding as a pipeline pass (function preserved)
+    let bn_pairs = vec![
+        ("conv1".to_string(), "bn1".to_string()),
+        ("conv2".to_string(), "bn2".to_string()),
+    ];
+    let folded = QuantPipeline::new()
+        .pass(BnFoldWith::new(bn_pairs.clone(), ccfg.bn_eps))
+        .run(&store)?;
+    let fold_model = CnnModel::new(ccfg.clone(), folded.eval.share())?;
     let fold_acc = fold_model.accuracy(&test.images, &test.labels);
     println!(
         "[cnn] after BN folding: {} (must match FP32 — function preserved)",
         pct(fold_acc)
     );
 
-    // ---- PTQ on the folded model: baseline vs SplitQuant, conv weights
-    let quantizable = sq::default_quantizable(&folded);
+    // ---- PTQ composed with folding: both methods run fold-then-quantize
+    // over the UNfolded store in one pipeline each
+    let quantizable = sq::default_quantizable(&folded.eval);
     println!("[cnn] quantizable tensors: {quantizable:?}");
     let mut table = Table::new(
         &format!("CNN conv-split PTQ (FP32 {})", pct(fp32)),
         &["Bits", "Baseline", "SplitQuant", "Diff"],
     );
     for bits in [2u8, 4, 8] {
-        let (base_store, _) = baselines::quantize_store_baseline(
-            &folded,
-            &quantizable,
-            &QConfig::baseline(bits),
-        )?;
+        let base_art = QuantPipeline::new()
+            .pass(BnFoldWith::new(bn_pairs.clone(), ccfg.bn_eps))
+            .pass(BaselinePass::new(QConfig::baseline(bits)))
+            .run(&store)?;
         let base =
-            CnnModel::new(ccfg.clone(), base_store)?.accuracy(&test.images, &test.labels);
-        let (sq_store, _) = sq::quantize_store(
-            &folded,
-            &quantizable,
-            &sq::SplitQuantConfig::new(bits),
-        )?;
-        let sacc = CnnModel::new(ccfg.clone(), sq_store)?.accuracy(&test.images, &test.labels);
+            CnnModel::new(ccfg.clone(), base_art.eval)?.accuracy(&test.images, &test.labels);
+        let sq_art = QuantPipeline::new()
+            .pass(BnFoldWith::new(bn_pairs.clone(), ccfg.bn_eps))
+            .pass(SplitQuantPass::bits(bits))
+            .run(&store)?;
+        let sacc =
+            CnnModel::new(ccfg.clone(), sq_art.eval)?.accuracy(&test.images, &test.labels);
         table.row(vec![
             format!("INT{bits}"),
             pct(base),
@@ -92,7 +97,7 @@ fn main() -> splitquant::Result<()> {
     println!("[cnn] Figure-3 equivalence gap (fused vs 3 materialized conv branches): {gap:.2e}");
 
     // ---- §6: sparse execution of split layers recovers the 3x overhead
-    let fc = folded.get("fc.weight")?;
+    let fc = folded.eval.get("fc.weight")?;
     let mut sq_rng = Rng::new(4);
     let split = sq::split_quantize(fc, &sq::SplitQuantConfig::new(4), &mut sq_rng)?;
     let branches = sq::weight_split::materialize_branches(fc, &split.assignment, 3);

@@ -10,9 +10,9 @@
 //! 2. percentile clipping rescues the bulk but destroys the outlier,
 //! 3. SplitQuant keeps both.
 
-use splitquant::baselines;
 use splitquant::model::config::BertConfig;
 use splitquant::model::params::ParamStore;
+use splitquant::quant::pipeline::{BaselinePass, BnFold, QuantPipeline, SplitQuantPass};
 use splitquant::quant::{QConfig, QParams, QTensor};
 use splitquant::report::{pct, Table};
 use splitquant::splitquant as sq;
@@ -106,20 +106,28 @@ fn main() -> splitquant::Result<()> {
         quantizable.len()
     );
 
+    // every PTQ method is a pass over one shared ModelArtifact: the pipeline
+    // never deep-copies the model — eval views share untouched tensors with
+    // `store` (copy-on-write), so a sweep over bit-widths is cheap
     let mut tab = Table::new(
         "weight reconstruction MSE across the model",
         &["bits", "baseline (min-max)", "SplitQuant", "improvement"],
     );
     for bits in [2u8, 4, 8] {
-        let (base, _) =
-            baselines::quantize_store_baseline(&store, &quantizable, &QConfig::baseline(bits))?;
-        let (sq_store, _) =
-            sq::quantize_store(&store, &quantizable, &sq::SplitQuantConfig::new(bits))?;
-        let m_base: f64 =
-            quantizable.iter().map(|n| mse(store.get(n).unwrap(), base.get(n).unwrap())).sum();
+        let base = QuantPipeline::new()
+            .pass(BaselinePass::new(QConfig::baseline(bits)))
+            .run(&store)?;
+        let split = QuantPipeline::new()
+            .pass(BnFold) // §4.1 fold (a no-op on BERT; shown for the shape of the API)
+            .pass(SplitQuantPass::bits(bits))
+            .run(&store)?;
+        let m_base: f64 = quantizable
+            .iter()
+            .map(|n| mse(store.get(n).unwrap(), base.eval.get(n).unwrap()))
+            .sum();
         let m_sq: f64 = quantizable
             .iter()
-            .map(|n| mse(store.get(n).unwrap(), sq_store.get(n).unwrap()))
+            .map(|n| mse(store.get(n).unwrap(), split.eval.get(n).unwrap()))
             .sum();
         tab.row(vec![
             format!("INT{bits}"),
@@ -129,6 +137,23 @@ fn main() -> splitquant::Result<()> {
         ]);
     }
     println!("{}", tab.render());
+
+    println!("== 3. Mixed precision per layer ==\n");
+    // per-layer overrides: keep the classifier head at INT8 while the body
+    // drops to INT2 — one pass, one artifact, provenance recorded
+    let mixed = QuantPipeline::new()
+        .pass(SplitQuantPass::bits(2).layer_bits("classifier.weight", 8))
+        .run(&store)?;
+    println!(
+        "applied passes: {:?}\nclassifier.weight bits: {}  encoder body bits: {}",
+        mixed.provenance,
+        mixed.tensors["classifier.weight"].bits(),
+        mixed.tensors["encoder.0.attn.q.weight"].bits(),
+    );
+    println!(
+        "eval view shares untouched tensors with the source store: ln.gamma shared = {}\n",
+        mixed.eval.shares_tensor(&store, "embeddings.ln.gamma")
+    );
     println!(
         "next: cargo run --release --example train_and_quantize  (full Table 1 on trained models)"
     );

@@ -59,7 +59,9 @@ fn main() -> splitquant::Result<()> {
     };
     let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
 
-    // compile b1/b8/b32 forward executables up front
+    // compile b1/b8/b32 forward executables up front; PjrtExecutor stages
+    // the parameter literals once per executable — requests borrow them,
+    // so serving N workers never re-materializes the weights
     let t0 = Instant::now();
     let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32])?);
     println!("[serve] compiled {} executables in {:?}", rt.compiled_count(), t0.elapsed());

@@ -76,9 +76,10 @@ fn main() -> splitquant::Result<()> {
         trainer.final_loss(20),
     );
 
-    // ---- evaluate FP32
+    // ---- evaluate FP32 (share(): an O(1) view of the trained weights; the
+    // PTQ sweep below copy-on-writes only the tensors each method rewrites)
     let (batches, n) = pad_to_batches(&test_set, &tok, 32);
-    let store = trainer.store.clone();
+    let store = trainer.store.share();
     let fp32 = accuracy_rust(&cfg, &store, &batches, n, None)?;
     println!("[e2e] FP32 accuracy: {}", pct(fp32));
 

@@ -107,4 +107,28 @@ fn main() {
         "shape expectation: packed INT2 ≈ 6.25% + scale metadata; fused SplitQuant adds\n\
          only the cid plane (INT2: +6.25%, total ≈ 12.5%) — under the paper's 18.75% bound."
     );
+
+    // ---- serving replicas: share() views are O(1), COW only on write
+    let n_replicas = 8usize;
+    let replicas: Vec<ParamStore> = (0..n_replicas).map(|_| store.share()).collect();
+    let mut views: Vec<&ParamStore> = vec![&store];
+    views.extend(replicas.iter());
+    let resident = ParamStore::resident_bytes(views);
+    let naive = (n_replicas + 1) * store.byte_size();
+    let mut r = Table::new(
+        &format!("{n_replicas} serving replicas from one ParamStore::share()"),
+        &["form", "resident bytes", "vs 1 copy"],
+    );
+    r.row(vec![
+        "deep clone per replica (old)".into(),
+        bytes(naive),
+        format!("{:.0}%", 100.0 * naive as f64 / store.byte_size() as f64),
+    ]);
+    r.row(vec![
+        "Arc-shared copy-on-write (ours)".into(),
+        bytes(resident),
+        format!("{:.0}%", 100.0 * resident as f64 / store.byte_size() as f64),
+    ]);
+    println!("{}", r.render());
+    assert_eq!(resident, store.byte_size(), "replicas must not duplicate weights");
 }

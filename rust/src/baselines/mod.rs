@@ -13,24 +13,22 @@ use std::collections::BTreeMap;
 
 use crate::error::Result;
 use crate::model::params::ParamStore;
+use crate::quant::pipeline::{BaselinePass, QuantPipeline};
 use crate::quant::{QConfig, QTensor};
 
 /// Quantize every `quantizable` parameter with one shared [`QConfig`].
-/// Returns the dequantized eval store and the packed tensors.
+/// Returns the dequantized eval store (copy-on-write shared with `store`)
+/// and the packed tensors. Thin wrapper over a single
+/// [`BaselinePass`] pipeline.
 pub fn quantize_store_baseline(
     store: &ParamStore,
     quantizable: &[String],
     cfg: &QConfig,
 ) -> Result<(ParamStore, BTreeMap<String, QTensor>)> {
-    let mut eval_store = store.clone();
-    let mut tensors = BTreeMap::new();
-    for name in quantizable {
-        let t = store.get(name)?;
-        let q = QTensor::quantize(t, cfg)?;
-        eval_store.set(name, q.dequantize())?;
-        tensors.insert(name.clone(), q);
-    }
-    Ok((eval_store, tensors))
+    let artifact = QuantPipeline::new()
+        .pass(BaselinePass::new(*cfg).quantizable(quantizable.to_vec()))
+        .run(store)?;
+    Ok((artifact.eval, artifact.tensors))
 }
 
 /// Packed byte total of a quantized tensor map.

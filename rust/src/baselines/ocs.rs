@@ -12,7 +12,7 @@
 //! back (`w ← 2·dq(q(w/2))` for split channels). This matches how the OCS
 //! paper evaluates weight quantization without changing the network graph.
 
-use crate::quant::{QConfig, QParams, QTensor};
+use crate::quant::{QConfig, QParams};
 use crate::tensor::Tensor;
 
 /// Result of the OCS transform on one tensor.
@@ -88,25 +88,19 @@ pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> OcsResult
 }
 
 /// Store-level OCS baseline over the quantizable set (rank-2+ tensors only;
-/// vectors fall back to plain quantization).
+/// vectors fall back to plain quantization). Thin wrapper over a single
+/// [`crate::quant::pipeline::OcsPass`] pipeline; the returned eval store is
+/// copy-on-write shared with `store`.
 pub fn quantize_store_ocs(
     store: &crate::model::params::ParamStore,
     quantizable: &[String],
     cfg: &QConfig,
     expand_ratio: f64,
 ) -> crate::error::Result<crate::model::params::ParamStore> {
-    let mut eval = store.clone();
-    for name in quantizable {
-        let t = store.get(name)?;
-        if t.shape().len() >= 2 {
-            let r = ocs_fake_quant(t, cfg, expand_ratio);
-            eval.set(name, r.fake_quant)?;
-        } else {
-            let q = QTensor::quantize(t, cfg)?;
-            eval.set(name, q.dequantize())?;
-        }
-    }
-    Ok(eval)
+    let pass = crate::quant::pipeline::OcsPass::new(*cfg, expand_ratio)
+        .quantizable(quantizable.to_vec());
+    let artifact = crate::quant::pipeline::QuantPipeline::new().pass(pass).run(store)?;
+    Ok(artifact.eval)
 }
 
 #[cfg(test)]

@@ -21,7 +21,7 @@ use crate::error::{Error, Result};
 use crate::model::bert::{argmax_rows, BertModel};
 use crate::model::config::BertConfig;
 use crate::model::params::ParamStore;
-use crate::runtime::literal::Value;
+use crate::runtime::literal::{f32_literal, i32_literal};
 use crate::runtime::Runtime;
 use crate::tensor::{IntTensor, Tensor};
 
@@ -36,44 +36,116 @@ pub trait BatchExecutor: Send + Sync {
     fn batch_sizes(&self) -> Vec<usize>;
 }
 
-/// PJRT-backed executor over `bert_fwd_b{N}` executables with pre-staged
-/// parameter values (parameters are converted once, not per request).
+/// One compiled forward executable plus its staged parameter literals.
+struct StagedExe {
+    batch: usize,
+    exe: Arc<crate::runtime::LoadedExe>,
+    /// Parameter literals in manifest order, converted **once** at
+    /// construction and shared across every batch-size executable (their
+    /// param slots are batch-independent — validated in `new`); every
+    /// request borrows them (never cloned, never re-converted — see
+    /// `assemble_literal_refs`).
+    params: Arc<Vec<xla::Literal>>,
+}
+
+/// PJRT-backed executor over `bert_fwd_b{N}` executables. Parameter
+/// literals are staged once per executable and shared by reference across
+/// all requests and serving workers; `classify` converts only the
+/// per-request `ids`/`mask` (ROADMAP "pool-aware PJRT executor" — the
+/// previous version deep-cloned every staged parameter `Value` per call).
 pub struct PjrtExecutor {
-    exes: Vec<(usize, Arc<crate::runtime::LoadedExe>)>,
-    params: Vec<Value>,
+    exes: Vec<StagedExe>,
+}
+
+/// Per-request input assembly: borrow the staged parameter literals and
+/// append the request literals. Split out so the zero-re-materialization
+/// property is unit-testable without a PJRT backend.
+fn assemble_literal_refs<'a>(
+    staged: &'a [xla::Literal],
+    request: &'a [xla::Literal],
+) -> Vec<&'a xla::Literal> {
+    staged.iter().chain(request.iter()).collect()
 }
 
 impl PjrtExecutor {
     pub fn new(rt: &Runtime, store: &ParamStore, batch_sizes: &[usize]) -> Result<Self> {
-        let mut exes = Vec::new();
+        let nparams = store.len();
+        let mut loaded = Vec::new();
         for &b in batch_sizes {
-            exes.push((b, rt.load(&format!("bert_fwd_b{b}"))?));
+            let exe = rt.load(&format!("bert_fwd_b{b}"))?;
+            if exe.spec.inputs.len() != nparams + 2 {
+                return Err(Error::Coordinator(format!(
+                    "bert_fwd_b{b}: {} inputs do not match {} params + ids + mask",
+                    exe.spec.inputs.len(),
+                    nparams
+                )));
+            }
+            loaded.push((b, exe));
         }
-        let params: Vec<Value> =
-            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
-        Ok(PjrtExecutor { exes, params })
+        let Some((b0, first)) = loaded.first() else {
+            return Ok(PjrtExecutor { exes: Vec::new() });
+        };
+        // only the trailing ids/mask slots depend on the batch size, so ONE
+        // staged literal set serves every executable (no per-size weight
+        // copies) — but verify that against the manifest instead of assuming
+        for (b, exe) in &loaded[1..] {
+            for (i, (a, c)) in first.spec.inputs[..nparams]
+                .iter()
+                .zip(&exe.spec.inputs[..nparams])
+                .enumerate()
+            {
+                if a.shape != c.shape || a.dtype != c.dtype {
+                    return Err(Error::Coordinator(format!(
+                        "bert_fwd_b{b}: param slot {i} spec {:?}/{:?} differs \
+                         from bert_fwd_b{b0}'s {:?}/{:?}",
+                        c.shape, c.dtype, a.shape, a.dtype
+                    )));
+                }
+            }
+        }
+        let params = Arc::new(
+            store
+                .flat_tensors()
+                .zip(&first.spec.inputs[..nparams])
+                .map(|(t, spec)| f32_literal(t, spec))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        let exes = loaded
+            .into_iter()
+            .map(|(batch, exe)| StagedExe { batch, exe, params: Arc::clone(&params) })
+            .collect();
+        Ok(PjrtExecutor { exes })
     }
 }
 
+// `PjrtExecutor` relies on auto-derived `Send`/`Sync`: the staged literals
+// are immutable host-side buffers read concurrently by the serving workers.
+// If a real `xla` crate with `!Send` literal handles is swapped in, the
+// resulting compile error at `Arc<dyn BatchExecutor>` is the prompt to
+// decide (and document) thread safety explicitly, as `LoadedExe` does —
+// do not pre-suppress it with a blanket `unsafe impl`.
+
 impl BatchExecutor for PjrtExecutor {
     fn classify(&self, ids: &IntTensor, mask: &Tensor, batch_size: usize) -> Result<Vec<i32>> {
-        let exe = self
+        let staged = self
             .exes
             .iter()
-            .find(|(b, _)| *b == batch_size)
-            .map(|(_, e)| e.clone())
+            .find(|s| s.batch == batch_size)
             .ok_or_else(|| {
                 Error::Coordinator(format!("no executable for batch size {batch_size}"))
             })?;
-        let mut inputs = self.params.clone();
-        inputs.push(Value::I32(ids.clone()));
-        inputs.push(Value::F32(mask.clone()));
-        let logits = exe.run_f32(&inputs)?;
+        let n = staged.params.len();
+        let request = [
+            i32_literal(ids, &staged.exe.spec.inputs[n])?,
+            f32_literal(mask, &staged.exe.spec.inputs[n + 1])?,
+        ];
+        let inputs = assemble_literal_refs(&staged.params, &request);
+        let logits = staged.exe.run_f32_refs(&inputs)?;
         Ok(argmax_rows(&logits))
     }
 
     fn batch_sizes(&self) -> Vec<usize> {
-        self.exes.iter().map(|(b, _)| *b).collect()
+        self.exes.iter().map(|s| s.batch).collect()
     }
 }
 
@@ -81,14 +153,24 @@ impl BatchExecutor for PjrtExecutor {
 /// on the process-wide [`crate::parallel`] worker pool: multiple serving
 /// workers calling `classify` concurrently share one set of kernel threads
 /// instead of each spawning their own (no oversubscription).
+///
+/// Replicas are cheap: pass [`ParamStore::share`] views and N executors
+/// hold one copy of the weights (copy-on-write `ParamStore`).
 pub struct RustExecutor {
     model: BertModel,
     sizes: Vec<usize>,
 }
 
 impl RustExecutor {
+    /// `store` is typically a [`ParamStore::share`] view — constructing a
+    /// replica copies no tensor data.
     pub fn new(cfg: BertConfig, store: ParamStore, sizes: Vec<usize>) -> Result<Self> {
         Ok(RustExecutor { model: BertModel::new(cfg, store)?, sizes })
+    }
+
+    /// The executor's parameter view (sharing checks / introspection).
+    pub fn params(&self) -> &ParamStore {
+        &self.model.params
     }
 }
 
@@ -467,6 +549,25 @@ mod tests {
         let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
         let ex = RustExecutor::new(cfg, store, vec![1, 4, 8]).unwrap();
         (Arc::new(ex), tok)
+    }
+
+    #[test]
+    fn staged_param_literals_are_shared_not_recreated() {
+        // regression for the per-call `self.params.clone()`: every request's
+        // input list must point at the SAME staged literals, across repeated
+        // calls — only the trailing request literals are fresh
+        let staged: Vec<xla::Literal> =
+            (0..3).map(|i| xla::Literal::vec1(&[i as f32])).collect();
+        let request = [xla::Literal::vec1(&[9.0f32]), xla::Literal::vec1(&[8.0f32])];
+        let a = assemble_literal_refs(&staged, &request);
+        let b = assemble_literal_refs(&staged, &request);
+        assert_eq!(a.len(), staged.len() + request.len());
+        for (i, r) in a.iter().take(staged.len()).enumerate() {
+            assert!(std::ptr::eq(*r, &staged[i]), "param {i} re-materialized");
+            assert!(std::ptr::eq(*r, b[i]), "param {i} differs across calls");
+        }
+        assert!(std::ptr::eq(a[3], &request[0]));
+        assert!(std::ptr::eq(a[4], &request[1]));
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::error::Result;
 use crate::model::bert::{argmax_rows, BertModel};
 use crate::model::config::BertConfig;
 use crate::model::params::ParamStore;
+use crate::quant::pipeline::{BaselinePass, OcsPass, QuantPipeline, SplitQuantPass};
 use crate::quant::QConfig;
 use crate::runtime::literal::Value;
 use crate::runtime::Runtime;
@@ -36,27 +37,32 @@ impl WeightMethod {
     }
 }
 
-/// Apply a weight PTQ method, returning the eval store (dequantized weights)
-/// and the packed size in bytes when applicable.
+/// Apply a weight PTQ method, returning the eval store (dequantized weights,
+/// copy-on-write shared with `store`) and the packed size in bytes when
+/// applicable. Each method is a one-pass [`QuantPipeline`]; the passes all
+/// default to [`splitquant::default_quantizable`], so the Table-1 methods
+/// stay strictly comparable.
 pub fn prepare_store(
     store: &ParamStore,
     method: &WeightMethod,
 ) -> Result<(ParamStore, Option<usize>)> {
-    let quantizable = splitquant::default_quantizable(store);
     match method {
-        WeightMethod::None => Ok((store.clone(), None)),
+        WeightMethod::None => Ok((store.share(), None)),
         WeightMethod::Baseline(cfg) => {
-            let (eval, tensors) =
-                baselines::quantize_store_baseline(store, &quantizable, cfg)?;
-            Ok((eval, Some(baselines::quantized_bytes(&tensors))))
+            let a = QuantPipeline::new().pass(BaselinePass::new(*cfg)).run(store)?;
+            let bytes = baselines::quantized_bytes(&a.tensors);
+            Ok((a.eval, Some(bytes)))
         }
         WeightMethod::SplitQuant(cfg) => {
-            let (eval, qmodel) = splitquant::quantize_store(store, &quantizable, cfg)?;
-            Ok((eval, Some(qmodel.quantized_bytes())))
+            let a = QuantPipeline::new()
+                .pass(SplitQuantPass::with_config(*cfg))
+                .run(store)?;
+            let bytes = baselines::quantized_bytes(&a.tensors);
+            Ok((a.eval, Some(bytes)))
         }
         WeightMethod::Ocs(cfg, ratio) => {
-            let eval = baselines::ocs::quantize_store_ocs(store, &quantizable, cfg, *ratio)?;
-            Ok((eval, None))
+            let a = QuantPipeline::new().pass(OcsPass::new(*cfg, *ratio)).run(store)?;
+            Ok((a.eval, None))
         }
     }
 }
@@ -70,7 +76,7 @@ pub fn accuracy_rust(
     n: usize,
     act: Option<&ActQuantParams>,
 ) -> Result<f64> {
-    let model = BertModel::new(cfg.clone(), store.clone())?;
+    let model = BertModel::new(cfg.clone(), store.share())?;
     let mut hits = 0usize;
     let mut seen = 0usize;
     for b in batches {
@@ -107,7 +113,7 @@ pub fn accuracy_pjrt(
     let mut seen = 0usize;
     for b in batches {
         let mut inputs: Vec<Value> =
-            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+            store.flat_tensors().map(|t| Value::F32(t.clone())).collect();
         inputs.push(Value::I32(b.ids.clone()));
         inputs.push(Value::F32(b.mask.clone()));
         let logits = exe.run_f32(&inputs)?;
@@ -143,7 +149,7 @@ pub fn accuracy_pjrt_actquant(
     let mut seen = 0usize;
     for b in batches {
         let mut inputs: Vec<Value> =
-            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+            store.flat_tensors().map(|t| Value::F32(t.clone())).collect();
         inputs.push(Value::I32(b.ids.clone()));
         inputs.push(Value::F32(b.mask.clone()));
         inputs.push(Value::F32(scales.clone()));
@@ -170,7 +176,7 @@ pub fn calibrate(
     store: &ParamStore,
     batches: &[TextBatch],
 ) -> Result<splitquant::ActCalibrator> {
-    let model = BertModel::new(cfg.clone(), store.clone())?;
+    let model = BertModel::new(cfg.clone(), store.share())?;
     let mut cal = splitquant::ActCalibrator::new(cfg);
     for b in batches {
         let mut hook = cal.hook();

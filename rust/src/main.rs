@@ -434,7 +434,7 @@ fn cmd_verify(flags: &Flags) -> Result<()> {
     for b in &batches {
         let rust_logits = model.forward(&b.ids, &b.mask);
         let mut inputs: Vec<splitquant::runtime::literal::Value> =
-            store.flat().iter().map(|t| t.clone().into()).collect();
+            store.flat_tensors().map(|t| t.clone().into()).collect();
         inputs.push(b.ids.clone().into());
         inputs.push(b.mask.clone().into());
         let pjrt_logits = exe.run_f32(&inputs)?;

@@ -3,10 +3,28 @@
 //! The store preserves the manifest's flat parameter order (the ABI with the
 //! AOT executables) while offering name-based access for the quantization
 //! passes. Checkpoints use a simple versioned little-endian binary format.
+//!
+//! ## Shared-memory semantics
+//!
+//! Tensors live behind [`Arc`] with copy-on-write semantics:
+//!
+//! * [`ParamStore::share`] (and plain `clone()`) produce an **O(1) replica
+//!   view** — N serving replicas built from one store hold zero duplicated
+//!   weight tensors (verified by `Arc::ptr_eq` in `tests/integration_share`).
+//! * [`ParamStore::get`] returns a cheap borrowed view; [`ParamStore::handle`]
+//!   returns the shared `Arc` handle itself.
+//! * [`ParamStore::set`] and [`ParamStore::get_mut`] break sharing for **only
+//!   the touched tensor** (clone-on-write); every other tensor stays shared
+//!   with all replicas.
+//!
+//! This is what lets `RustExecutor` replicas, staged `PjrtExecutor`
+//! parameters and the quantization pipeline's eval views coexist at ~1×
+//! resident weight bytes (ROADMAP "Sharded ParamStore").
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
@@ -14,11 +32,11 @@ use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 8] = b"SQCKPT1\n";
 
-/// Ordered named tensors.
+/// Ordered named tensors behind shared, copy-on-write storage.
 #[derive(Debug, Clone)]
 pub struct ParamStore {
     names: Vec<String>,
-    tensors: Vec<Tensor>,
+    tensors: Vec<Arc<Tensor>>,
     index: HashMap<String, usize>,
 }
 
@@ -71,7 +89,7 @@ impl ParamStore {
         assert!(!self.index.contains_key(&name), "duplicate param {name}");
         self.index.insert(name.clone(), self.tensors.len());
         self.names.push(name);
-        self.tensors.push(t);
+        self.tensors.push(Arc::new(t));
     }
 
     pub fn len(&self) -> usize {
@@ -86,36 +104,73 @@ impl ParamStore {
         &self.names
     }
 
+    /// O(1) replica view: every tensor is shared with `self` until one side
+    /// writes to it (copy-on-write). This is the serving-replica entry point:
+    /// N replicas cost ~1× the weight bytes, not N×.
+    pub fn share(&self) -> ParamStore {
+        self.clone()
+    }
+
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.index
             .get(name)
-            .map(|&i| &self.tensors[i])
+            .map(|&i| &*self.tensors[i])
             .ok_or_else(|| Error::Model(format!("no parameter named {name:?}")))
     }
 
+    /// The shared handle behind `name` (for `Arc::ptr_eq` sharing checks and
+    /// callers that want to hold a tensor past the store's lifetime).
+    pub fn handle(&self, name: &str) -> Result<Arc<Tensor>> {
+        self.index
+            .get(name)
+            .map(|&i| Arc::clone(&self.tensors[i]))
+            .ok_or_else(|| Error::Model(format!("no parameter named {name:?}")))
+    }
+
+    /// Whether `name` is backed by the same allocation in both stores
+    /// (true for untouched tensors of a [`ParamStore::share`] replica).
+    pub fn shares_tensor(&self, other: &ParamStore, name: &str) -> bool {
+        match (self.index.get(name), other.index.get(name)) {
+            (Some(&i), Some(&j)) => Arc::ptr_eq(&self.tensors[i], &other.tensors[j]),
+            _ => false,
+        }
+    }
+
+    /// Mutable view; clones the tensor first if it is shared with a replica
+    /// (copy-on-write), so writes never leak into other views.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
-        match self.index.get(name) {
-            Some(&i) => Ok(&mut self.tensors[i]),
+        match self.index.get(name).copied() {
+            Some(i) => Ok(Arc::make_mut(&mut self.tensors[i])),
             None => Err(Error::Model(format!("no parameter named {name:?}"))),
         }
     }
 
+    /// Replace one tensor. Only this slot's sharing is broken; replicas keep
+    /// the previous allocation.
     pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
-        let cur = self.get(name)?;
-        if cur.shape() != t.shape() {
+        let i = match self.index.get(name).copied() {
+            Some(i) => i,
+            None => return Err(Error::Model(format!("no parameter named {name:?}"))),
+        };
+        if self.tensors[i].shape() != t.shape() {
             return Err(Error::Model(format!(
                 "set {name:?}: shape {:?} != existing {:?}",
                 t.shape(),
-                cur.shape()
+                self.tensors[i].shape()
             )));
         }
-        *self.get_mut(name)? = t;
+        self.tensors[i] = Arc::new(t);
         Ok(())
     }
 
-    /// Tensors in flat (manifest) order.
-    pub fn flat(&self) -> &[Tensor] {
+    /// Shared tensor handles in flat (manifest) order.
+    pub fn flat(&self) -> &[Arc<Tensor>] {
         &self.tensors
+    }
+
+    /// Tensor views in flat (manifest) order.
+    pub fn flat_tensors(&self) -> impl Iterator<Item = &Tensor> {
+        self.tensors.iter().map(|t| &**t)
     }
 
     /// Replace all tensors, keeping names (training-step output ingestion).
@@ -135,13 +190,13 @@ impl ParamStore {
                     slot.shape()
                 )));
             }
-            *slot = t;
+            *slot = Arc::new(t);
         }
         Ok(())
     }
 
     pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
-        self.names.iter().map(|s| s.as_str()).zip(self.tensors.iter())
+        self.names.iter().map(|s| s.as_str()).zip(self.flat_tensors())
     }
 
     /// Total parameter count.
@@ -149,9 +204,31 @@ impl ParamStore {
         self.tensors.iter().map(|t| t.numel()).sum()
     }
 
-    /// Total FP32 bytes (paper-§6 size accounting base).
+    /// Total FP32 bytes (paper-§6 size accounting base). Counts every slot,
+    /// shared or not; see [`ParamStore::resident_bytes`] for the deduplicated
+    /// figure across replicas.
     pub fn byte_size(&self) -> usize {
         self.tensors.iter().map(|t| t.byte_size()).sum()
+    }
+
+    /// Unique resident FP32 bytes across a set of stores: tensors shared
+    /// between replicas (same allocation) are counted once. For N fresh
+    /// [`ParamStore::share`] replicas this equals one store's
+    /// [`ParamStore::byte_size`].
+    pub fn resident_bytes<'a, I>(stores: I) -> usize
+    where
+        I: IntoIterator<Item = &'a ParamStore>,
+    {
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for s in stores {
+            for t in &s.tensors {
+                if seen.insert(Arc::as_ptr(t)) {
+                    total += t.byte_size();
+                }
+            }
+        }
+        total
     }
 
     /// Save to a binary checkpoint.
@@ -319,5 +396,43 @@ mod tests {
         let mut s = ParamStore::zeros(&order);
         assert!(s.set("w", Tensor::zeros(&[4])).is_err());
         assert!(s.set("w", Tensor::ones(&[2, 2])).is_ok());
+    }
+
+    #[test]
+    fn share_is_zero_copy_until_written() {
+        let order = vec![
+            ("w".to_string(), vec![4usize, 4]),
+            ("b".to_string(), vec![4usize]),
+        ];
+        let base = ParamStore::zeros(&order);
+        let mut replica = base.share();
+        assert!(replica.shares_tensor(&base, "w"));
+        assert!(replica.shares_tensor(&base, "b"));
+        assert!(Arc::ptr_eq(&base.handle("w").unwrap(), &replica.handle("w").unwrap()));
+        assert_eq!(ParamStore::resident_bytes([&base, &replica]), base.byte_size());
+
+        // writing through the replica breaks sharing for that tensor only
+        replica.get_mut("w").unwrap().data_mut()[0] = 7.0;
+        assert!(!replica.shares_tensor(&base, "w"));
+        assert!(replica.shares_tensor(&base, "b"));
+        assert_eq!(base.get("w").unwrap().data()[0], 0.0);
+        assert_eq!(replica.get("w").unwrap().data()[0], 7.0);
+        assert_eq!(
+            ParamStore::resident_bytes([&base, &replica]),
+            base.byte_size() + base.get("w").unwrap().byte_size()
+        );
+    }
+
+    #[test]
+    fn replace_flat_breaks_sharing_per_slot() {
+        let order = vec![("a".to_string(), vec![2usize]), ("b".to_string(), vec![3usize])];
+        let base = ParamStore::zeros(&order);
+        let mut replica = base.share();
+        replica
+            .replace_flat(vec![Tensor::ones(&[2]), Tensor::ones(&[3])])
+            .unwrap();
+        assert!(!replica.shares_tensor(&base, "a"));
+        assert!(base.get("a").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(replica.get("a").unwrap().data().iter().all(|&v| v == 1.0));
     }
 }

@@ -94,7 +94,8 @@ impl QuantizedBert {
     /// baseline). Rank-2 quantized weights execute fused; everything else is
     /// dequantized into the FP32 store once.
     pub fn new(cfg: BertConfig, store: &ParamStore, qm: &QuantizedModel) -> Result<Self> {
-        let mut fp32 = store.clone();
+        // O(1) share: only the slots rewritten below are copy-on-written
+        let mut fp32 = store.share();
         let mut qlinears = BTreeMap::new();
         for (name, q) in &qm.tensors {
             if q.shape().len() == 2 && name != "embeddings.token" {

@@ -8,12 +8,17 @@
 //! the same property the paper relies on for its comparison.
 
 pub mod observer;
+pub mod pipeline;
 pub mod qconfig;
 pub mod qtensor;
 pub mod scheme;
 pub mod serialize;
 
 pub use observer::Observer;
+pub use pipeline::{
+    ActCalibratePass, BaselinePass, BnFold, BnFoldWith, ModelArtifact, OcsPass, QuantPass,
+    QuantPipeline, SplitQuantPass,
+};
 pub use qconfig::{Granularity, QConfig};
 pub use qtensor::{QLayout, QTensor};
 pub use scheme::{qrange, QParams};

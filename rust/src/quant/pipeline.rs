@@ -1,0 +1,677 @@
+//! Composable quantization pass pipeline over shared-memory model artifacts.
+//!
+//! The paper frames SplitQuant as a *preprocessing* step: "preprocess DNNs
+//! with SplitQuant, then any quantization algorithm benefits". This module
+//! makes that framing literal. Every model transformation — BatchNorm
+//! folding (§4.1), the SplitQuant weight/bias split, activation calibration
+//! (§4.2), the per-tensor baseline quantizer and the OCS related-work
+//! baseline — is a [`QuantPass`] applied to one [`ModelArtifact`], and a
+//! [`QuantPipeline`] chains them:
+//!
+//! ```ignore
+//! use splitquant::quant::pipeline::{BnFold, QuantPipeline, SplitQuantPass};
+//! let artifact = QuantPipeline::new()
+//!     .pass(BnFold)                       // fold BN stats (no-op on BERT)
+//!     .pass(SplitQuantPass::bits(2)       // paper defaults: k = 3, k-means++
+//!         .layer_bits("classifier.weight", 8))  // mixed precision per layer
+//!     .run(&store)?;
+//! let (eval, qmodel) = artifact.into_parts();
+//! ```
+//!
+//! The artifact's eval view starts as an O(1) [`ParamStore::share`] of the
+//! source store, so a pipeline never deep-copies the model: passes
+//! copy-on-write only the tensors they actually rewrite, and untouched
+//! parameters (LayerNorm, position embeddings, …) stay pointer-shared with
+//! the source (asserted in `tests/integration_share`).
+//!
+//! The legacy entry points ([`crate::splitquant::quantize_store`],
+//! [`crate::baselines::quantize_store_baseline`],
+//! [`crate::baselines::ocs::quantize_store_ocs`]) are thin wrappers over
+//! single-pass pipelines, so both routes produce byte-identical artifacts.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::baselines::ocs::ocs_fake_quant;
+use crate::error::Result;
+use crate::model::config::BertConfig;
+use crate::model::params::ParamStore;
+use crate::splitquant::bn_fold::fold_bn;
+use crate::splitquant::{
+    default_quantizable, split_quantize, split_quantize_pair, ActCalibrator, ActQuantMode,
+    ActQuantParams, QuantizedModel, SplitQuantConfig,
+};
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::rng::Rng;
+
+use super::qconfig::QConfig;
+use super::qtensor::QTensor;
+
+/// The unified model artifact a [`QuantPipeline`] threads through its
+/// passes: an evaluation view (fake-quant FP32 weights, copy-on-write shared
+/// with the source store), the packed quantized tensors, optional calibrated
+/// activation parameters, and the provenance of every applied pass.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    /// Dequantized (fake-quant) weights for accuracy evaluation through any
+    /// executor. Starts as an O(1) [`ParamStore::share`] of the source
+    /// store; passes copy-on-write only the tensors they touch.
+    pub eval: ParamStore,
+    /// Packed tensors produced by quantization passes, by parameter name.
+    pub tensors: BTreeMap<String, QTensor>,
+    /// Calibrated activation parameters ([`ActCalibratePass`]).
+    pub act_params: Option<ActQuantParams>,
+    /// Names of the applied passes, in order.
+    pub provenance: Vec<String>,
+    /// Default bit-width recorded by the last quantization pass (32 when no
+    /// pass packed a tensor). Per-layer overrides may use other widths —
+    /// each [`QTensor`] carries its own.
+    pub bits: u8,
+}
+
+impl ModelArtifact {
+    /// Start an artifact over `store` without copying any tensor.
+    pub fn new(store: &ParamStore) -> ModelArtifact {
+        ModelArtifact {
+            eval: store.share(),
+            tensors: BTreeMap::new(),
+            act_params: None,
+            provenance: Vec::new(),
+            bits: 32,
+        }
+    }
+
+    /// Parameter names still carried in FP32 (not packed by any pass).
+    pub fn fp32_names(&self) -> Vec<String> {
+        self.eval
+            .names()
+            .iter()
+            .filter(|n| !self.tensors.contains_key(*n))
+            .cloned()
+            .collect()
+    }
+
+    /// Packed [`QuantizedModel`] view (paper-§6 size accounting form).
+    pub fn quantized_model(&self) -> QuantizedModel {
+        QuantizedModel {
+            tensors: self.tensors.clone(),
+            fp32_names: self.fp32_names(),
+            bits: self.bits,
+        }
+    }
+
+    /// Decompose into the legacy `(eval_store, qmodel)` pair.
+    pub fn into_parts(self) -> (ParamStore, QuantizedModel) {
+        let fp32_names = self.fp32_names();
+        let qmodel = QuantizedModel { tensors: self.tensors, fp32_names, bits: self.bits };
+        (self.eval, qmodel)
+    }
+}
+
+/// One composable step of a [`QuantPipeline`].
+pub trait QuantPass {
+    /// Short pass label recorded in [`ModelArtifact::provenance`].
+    fn name(&self) -> String;
+    /// Apply the pass, mutating the artifact in place.
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()>;
+}
+
+/// Ordered sequence of [`QuantPass`]es applied to one [`ModelArtifact`].
+#[derive(Default)]
+pub struct QuantPipeline {
+    passes: Vec<Box<dyn QuantPass>>,
+}
+
+impl QuantPipeline {
+    pub fn new() -> QuantPipeline {
+        QuantPipeline { passes: Vec::new() }
+    }
+
+    /// Append a pass (builder style).
+    pub fn pass(mut self, p: impl QuantPass + 'static) -> QuantPipeline {
+        self.passes.push(Box::new(p));
+        self
+    }
+
+    /// Run every pass in order over a fresh artifact of `store`. The source
+    /// store is never mutated and never deep-copied.
+    pub fn run(&self, store: &ParamStore) -> Result<ModelArtifact> {
+        let mut artifact = ModelArtifact::new(store);
+        for p in &self.passes {
+            p.apply(&mut artifact)?;
+            artifact.provenance.push(p.name());
+        }
+        Ok(artifact)
+    }
+}
+
+/// Default ε when folding auto-discovered BN layers (matches `CnnConfig`).
+pub const DEFAULT_BN_EPS: f32 = 1e-5;
+
+/// BatchNorm-folding pass (paper §4.1) with convention-based discovery: a
+/// parameter group `P.{gamma,beta,mean,var}` (running stats present, so not
+/// a LayerNorm) is folded into the conv/linear layer named by replacing
+/// `bn` with `conv` in the final segment of `P` (e.g. `bn1` → `conv1`, the
+/// repo's CNN naming) when that layer's weight and bias exist. A no-op on BN-free stores such
+/// as the BERT models. Use [`BnFoldWith`] for explicit pairs or a custom ε.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BnFold;
+
+impl QuantPass for BnFold {
+    fn name(&self) -> String {
+        "bn_fold".into()
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        for (conv, bn) in discover_bn_pairs(&model.eval) {
+            fold_bn(&mut model.eval, &conv, &bn, DEFAULT_BN_EPS)?;
+        }
+        Ok(())
+    }
+}
+
+/// Explicit BN-fold pass: fold each `(conv, bn)` pair with a given ε.
+#[derive(Debug, Clone)]
+pub struct BnFoldWith {
+    pub pairs: Vec<(String, String)>,
+    pub eps: f32,
+}
+
+impl BnFoldWith {
+    pub fn new(pairs: Vec<(String, String)>, eps: f32) -> BnFoldWith {
+        BnFoldWith { pairs, eps }
+    }
+}
+
+impl QuantPass for BnFoldWith {
+    fn name(&self) -> String {
+        "bn_fold".into()
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        for (conv, bn) in &self.pairs {
+            fold_bn(&mut model.eval, conv, bn, self.eps)?;
+        }
+        Ok(())
+    }
+}
+
+/// `(conv, bn)` pairs by naming convention: a prefix with all four BN stats
+/// (`gamma`/`beta`/`mean`/`var`) is a BatchNorm layer (LayerNorms carry no
+/// running stats); its fold target is the prefix with `bn` replaced by
+/// `conv`, when that layer's weight and bias are present.
+fn discover_bn_pairs(store: &ParamStore) -> Vec<(String, String)> {
+    let names: HashSet<&str> = store.names().iter().map(|s| s.as_str()).collect();
+    let mut pairs = Vec::new();
+    for n in store.names() {
+        if let Some(prefix) = n.strip_suffix(".mean") {
+            let is_bn = ["gamma", "beta", "var"]
+                .iter()
+                .all(|s| names.contains(format!("{prefix}.{s}").as_str()));
+            // rewrite only the final path segment, so an enclosing module
+            // path that happens to contain "bn" is left alone
+            let (path, leaf) = match prefix.rsplit_once('.') {
+                Some((p, l)) => (Some(p), l),
+                None => (None, prefix),
+            };
+            let conv_leaf = leaf.replace("bn", "conv");
+            let conv = match path {
+                Some(p) => format!("{p}.{conv_leaf}"),
+                None => conv_leaf,
+            };
+            let has_target = conv != prefix
+                && names.contains(format!("{conv}.weight").as_str())
+                && names.contains(format!("{conv}.bias").as_str());
+            if is_bn && has_target {
+                pairs.push((conv, prefix.to_string()));
+            }
+        }
+    }
+    pairs
+}
+
+/// The paper's SplitQuant weight/bias split as a pass: 1-D k-means clusters
+/// each quantizable tensor into lower/middle/upper groups, each quantized
+/// with its own affine parameters. Writes the dequantized (fake-quant) view
+/// into the artifact's eval store (copy-on-write) and the packed
+/// codes+cid form into its tensor map.
+///
+/// Per-layer [`SplitQuantConfig`] overrides make mixed precision
+/// expressible: `SplitQuantPass::bits(2).layer_bits("classifier.weight", 8)`
+/// keeps a sensitive head at INT8 while the rest of the model drops to INT2.
+#[derive(Debug, Clone)]
+pub struct SplitQuantPass {
+    cfg: SplitQuantConfig,
+    overrides: BTreeMap<String, SplitQuantConfig>,
+    quantizable: Option<Vec<String>>,
+}
+
+impl SplitQuantPass {
+    /// Uniform `bits` everywhere (paper defaults: k = 3, greedy k-means++).
+    pub fn bits(bits: u8) -> SplitQuantPass {
+        SplitQuantPass::with_config(SplitQuantConfig::new(bits))
+    }
+
+    /// Explicit base config.
+    pub fn with_config(cfg: SplitQuantConfig) -> SplitQuantPass {
+        SplitQuantPass { cfg, overrides: BTreeMap::new(), quantizable: None }
+    }
+
+    /// Mixed precision: override the bit-width for one layer.
+    pub fn layer_bits(self, name: &str, bits: u8) -> SplitQuantPass {
+        let cfg = SplitQuantConfig { bits, ..self.cfg };
+        self.layer_config(name, cfg)
+    }
+
+    /// Mixed precision: override the full config for one layer.
+    pub fn layer_config(mut self, name: &str, cfg: SplitQuantConfig) -> SplitQuantPass {
+        self.overrides.insert(name.to_string(), cfg);
+        self
+    }
+
+    /// Restrict the quantized set (default:
+    /// [`crate::splitquant::default_quantizable`] of the eval store).
+    pub fn quantizable(mut self, names: Vec<String>) -> SplitQuantPass {
+        self.quantizable = Some(names);
+        self
+    }
+
+    /// Effective config for one parameter (override or base).
+    pub fn config_for(&self, name: &str) -> SplitQuantConfig {
+        self.overrides.get(name).copied().unwrap_or(self.cfg)
+    }
+}
+
+impl QuantPass for SplitQuantPass {
+    fn name(&self) -> String {
+        format!("splitquant(bits={}, k={})", self.cfg.bits, self.cfg.k)
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let quantizable = match &self.quantizable {
+            Some(q) => q.clone(),
+            None => default_quantizable(&model.eval),
+        };
+        let quantset: HashSet<&str> = quantizable.iter().map(|s| s.as_str()).collect();
+        let mut rng = Rng::new(self.cfg.seed);
+
+        // One pass in `quantizable` order. Each name is either a bias that
+        // its weight's config claims for joint clustering (skipped here,
+        // packed on the weight's turn), a weight with such a companion (one
+        // k-means over the concatenated values, two packed tensors), or a
+        // tensor quantized on its own. The shared seeded RNG advances in
+        // `quantizable` order — deterministic for a given (store, config),
+        // which is the contract; exact bit-layout is not stable across
+        // refactors of this iteration order.
+        for name in &quantizable {
+            if let Some(stem) = name.strip_suffix(".bias") {
+                let wname = format!("{stem}.weight");
+                if quantset.contains(wname.as_str()) && self.config_for(&wname).joint_bias {
+                    continue;
+                }
+            }
+            let cfg = self.config_for(name);
+            let joint_bias = name
+                .strip_suffix(".weight")
+                .map(|stem| format!("{stem}.bias"))
+                .filter(|bn| cfg.joint_bias && quantset.contains(bn.as_str()));
+            match joint_bias {
+                Some(bn) => {
+                    let (wt, bt) = {
+                        let w = model.eval.get(name)?;
+                        let b = model.eval.get(&bn)?;
+                        split_quantize_pair(w, Some(b), &cfg, &mut rng)?
+                    };
+                    let bt = bt.expect("split_quantize_pair returns a bias split");
+                    model.eval.set(name, wt.qtensor.dequantize())?;
+                    model.eval.set(&bn, bt.qtensor.dequantize())?;
+                    model.tensors.insert(name.clone(), wt.qtensor);
+                    model.tensors.insert(bn, bt.qtensor);
+                }
+                None => {
+                    let st = {
+                        let t = model.eval.get(name)?;
+                        split_quantize(t, &cfg, &mut rng)?
+                    };
+                    model.eval.set(name, st.qtensor.dequantize())?;
+                    model.tensors.insert(name.clone(), st.qtensor);
+                }
+            }
+        }
+        model.bits = self.cfg.bits;
+        Ok(())
+    }
+}
+
+/// Plain affine PTQ under one shared [`QConfig`] (the paper's "Baseline"
+/// column: min-max, percentile or MSE observer, per-tensor or per-channel).
+#[derive(Debug, Clone)]
+pub struct BaselinePass {
+    cfg: QConfig,
+    quantizable: Option<Vec<String>>,
+}
+
+impl BaselinePass {
+    pub fn new(cfg: QConfig) -> BaselinePass {
+        BaselinePass { cfg, quantizable: None }
+    }
+
+    /// Restrict the quantized set (default:
+    /// [`crate::splitquant::default_quantizable`] of the eval store).
+    pub fn quantizable(mut self, names: Vec<String>) -> BaselinePass {
+        self.quantizable = Some(names);
+        self
+    }
+}
+
+impl QuantPass for BaselinePass {
+    fn name(&self) -> String {
+        format!("baseline({})", self.cfg.label())
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let quantizable = match &self.quantizable {
+            Some(q) => q.clone(),
+            None => default_quantizable(&model.eval),
+        };
+        for name in &quantizable {
+            let q = {
+                let t = model.eval.get(name)?;
+                QTensor::quantize(t, &self.cfg)?
+            };
+            model.eval.set(name, q.dequantize())?;
+            model.tensors.insert(name.clone(), q);
+        }
+        model.bits = self.cfg.bits;
+        Ok(())
+    }
+}
+
+/// Outlier Channel Splitting (Zhao et al., ICML 2019) as a pass: rank-2+
+/// tensors get the expand → quantize → fold-back fake-quant treatment,
+/// vectors fall back to plain quantization. Produces only the eval view —
+/// the OCS evaluation protocol has no packed deployment form.
+#[derive(Debug, Clone)]
+pub struct OcsPass {
+    cfg: QConfig,
+    expand_ratio: f64,
+    quantizable: Option<Vec<String>>,
+}
+
+impl OcsPass {
+    pub fn new(cfg: QConfig, expand_ratio: f64) -> OcsPass {
+        OcsPass { cfg, expand_ratio, quantizable: None }
+    }
+
+    /// Restrict the quantized set (default:
+    /// [`crate::splitquant::default_quantizable`] of the eval store).
+    pub fn quantizable(mut self, names: Vec<String>) -> OcsPass {
+        self.quantizable = Some(names);
+        self
+    }
+}
+
+impl QuantPass for OcsPass {
+    fn name(&self) -> String {
+        format!("ocs({}, expand={})", self.cfg.label(), self.expand_ratio)
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let quantizable = match &self.quantizable {
+            Some(q) => q.clone(),
+            None => default_quantizable(&model.eval),
+        };
+        for name in &quantizable {
+            let fq = {
+                let t = model.eval.get(name)?;
+                if t.shape().len() >= 2 {
+                    ocs_fake_quant(t, &self.cfg, self.expand_ratio).fake_quant
+                } else {
+                    QTensor::quantize(t, &self.cfg)?.dequantize()
+                }
+            };
+            model.eval.set(name, fq)?;
+        }
+        Ok(())
+    }
+}
+
+/// Activation-split calibration (paper §4.2) as a pass: run forwards of the
+/// artifact's **current** eval view (so calibration sees the weights the
+/// earlier passes produced) over the calibration batches through the
+/// pure-Rust executor, record per-site/per-chunk ranges, and store the
+/// resulting [`ActQuantParams`] on the artifact. The eval store is shared
+/// O(1) into the model, not copied.
+pub struct ActCalibratePass {
+    cfg: BertConfig,
+    batches: Vec<(IntTensor, Tensor)>,
+    bits: u8,
+    mode: ActQuantMode,
+}
+
+impl ActCalibratePass {
+    pub fn new(
+        cfg: BertConfig,
+        batches: Vec<(IntTensor, Tensor)>,
+        bits: u8,
+        mode: ActQuantMode,
+    ) -> ActCalibratePass {
+        ActCalibratePass { cfg, batches, bits, mode }
+    }
+}
+
+impl QuantPass for ActCalibratePass {
+    fn name(&self) -> String {
+        format!("act_calibrate(bits={}, {:?})", self.bits, self.mode)
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let bert = crate::model::bert::BertModel::new(self.cfg.clone(), model.eval.share())?;
+        let mut cal = ActCalibrator::new(&self.cfg);
+        for (ids, mask) in &self.batches {
+            let mut hook = cal.hook();
+            bert.forward_hooked(ids, mask, Some(&mut hook));
+        }
+        model.act_params = Some(cal.to_params(self.bits, self.mode));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::CnnConfig;
+    use crate::splitquant::quantize_store;
+
+    fn tiny_store() -> (BertConfig, ParamStore) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        (cfg, store)
+    }
+
+    #[test]
+    fn pipeline_reproduces_quantize_store_byte_identically() {
+        // acceptance check: BnFold (no-op on BERT) + SplitQuantPass::bits(2)
+        // must equal the quantize_store path bit for bit
+        let (_, store) = tiny_store();
+        let quantizable = default_quantizable(&store);
+        let (eval_ref, qm_ref) =
+            quantize_store(&store, &quantizable, &SplitQuantConfig::new(2)).unwrap();
+
+        let artifact = QuantPipeline::new()
+            .pass(BnFold)
+            .pass(SplitQuantPass::bits(2))
+            .run(&store)
+            .unwrap();
+        assert_eq!(artifact.quantized_model(), qm_ref);
+        for (name, t) in eval_ref.iter() {
+            assert_eq!(t.data(), artifact.eval.get(name).unwrap().data(), "{name}");
+        }
+        assert_eq!(
+            artifact.provenance,
+            vec!["bn_fold".to_string(), "splitquant(bits=2, k=3)".to_string()]
+        );
+    }
+
+    #[test]
+    fn pipeline_source_store_is_untouched_and_shared() {
+        let (_, store) = tiny_store();
+        let before: Vec<f32> =
+            store.get("encoder.0.attn.q.weight").unwrap().data().to_vec();
+        let artifact =
+            QuantPipeline::new().pass(SplitQuantPass::bits(4)).run(&store).unwrap();
+        // source unchanged
+        assert_eq!(store.get("encoder.0.attn.q.weight").unwrap().data(), &before[..]);
+        // untouched (non-quantizable) tensors still pointer-shared
+        assert!(artifact.eval.shares_tensor(&store, "embeddings.ln.gamma"));
+        assert!(artifact.eval.shares_tensor(&store, "embeddings.position"));
+        // quantized tensors were copy-on-written
+        assert!(!artifact.eval.shares_tensor(&store, "encoder.0.attn.q.weight"));
+    }
+
+    #[test]
+    fn per_layer_bit_overrides_mix_precision() {
+        let (_, store) = tiny_store();
+        let artifact = QuantPipeline::new()
+            .pass(SplitQuantPass::bits(2).layer_bits("classifier.weight", 8))
+            .run(&store)
+            .unwrap();
+        assert_eq!(artifact.tensors["classifier.weight"].bits(), 8);
+        assert_eq!(artifact.tensors["encoder.0.attn.q.weight"].bits(), 2);
+        // the INT8 layer reconstructs far tighter than its INT2 peers
+        let tight = store
+            .get("classifier.weight")
+            .unwrap()
+            .max_abs_diff(artifact.eval.get("classifier.weight").unwrap());
+        let loose = store
+            .get("encoder.0.attn.q.weight")
+            .unwrap()
+            .max_abs_diff(artifact.eval.get("encoder.0.attn.q.weight").unwrap());
+        assert!(tight < loose, "int8 {tight} vs int2 {loose}");
+    }
+
+    #[test]
+    fn bn_fold_auto_matches_fold_cnn() {
+        let ccfg = CnnConfig::default();
+        let mut rng = Rng::new(3);
+        let mut store = ParamStore::init_cnn(&ccfg.param_order(), &mut rng);
+        for bn in ["bn1", "bn2"] {
+            let ch = store.get(&format!("{bn}.gamma")).unwrap().numel();
+            store.set(&format!("{bn}.gamma"), Tensor::full(&[ch], 1.5)).unwrap();
+            store.set(&format!("{bn}.mean"), Tensor::full(&[ch], 0.2)).unwrap();
+            store.set(&format!("{bn}.var"), Tensor::full(&[ch], 2.0)).unwrap();
+        }
+        let mut manual = store.share();
+        crate::splitquant::bn_fold::fold_cnn(&mut manual, DEFAULT_BN_EPS).unwrap();
+        let artifact = QuantPipeline::new().pass(BnFold).run(&store).unwrap();
+        for (name, t) in manual.iter() {
+            assert_eq!(t.data(), artifact.eval.get(name).unwrap().data(), "{name}");
+        }
+    }
+
+    #[test]
+    fn bn_fold_is_noop_on_bert() {
+        let (_, store) = tiny_store();
+        assert!(discover_bn_pairs(&store).is_empty());
+        let artifact = QuantPipeline::new().pass(BnFold).run(&store).unwrap();
+        for name in store.names() {
+            assert!(artifact.eval.shares_tensor(&store, name), "{name}");
+        }
+    }
+
+    #[test]
+    fn act_calibrate_pass_records_params() {
+        let (cfg, store) = tiny_store();
+        let mut rng = Rng::new(7);
+        let l = cfg.max_len;
+        let batches: Vec<(IntTensor, Tensor)> = (0..2)
+            .map(|_| {
+                let ids: Vec<i32> =
+                    (0..4 * l).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+                (IntTensor::new(&[4, l], ids).unwrap(), Tensor::full(&[4, l], 1.0))
+            })
+            .collect();
+        let artifact = QuantPipeline::new()
+            .pass(SplitQuantPass::bits(8))
+            .pass(ActCalibratePass::new(cfg.clone(), batches, 8, ActQuantMode::Split))
+            .run(&store)
+            .unwrap();
+        let act = artifact.act_params.as_ref().unwrap();
+        assert_eq!(act.per_site.len(), cfg.act_sites().len());
+        assert_eq!(artifact.provenance.len(), 2);
+        assert_eq!(act.bits, 8);
+    }
+
+    #[test]
+    fn joint_bias_pass_packs_weight_and_bias_together() {
+        let (_, store) = tiny_store();
+        let cfg = SplitQuantConfig { joint_bias: true, ..SplitQuantConfig::new(4) };
+        let artifact = QuantPipeline::new()
+            .pass(SplitQuantPass::with_config(cfg))
+            .run(&store)
+            .unwrap();
+        let w = &artifact.tensors["encoder.0.attn.q.weight"];
+        let b = &artifact.tensors["encoder.0.attn.q.bias"];
+        // joint clustering ⇒ identical per-cluster quantization params
+        assert_eq!(w.params(), b.params());
+        // and the legacy wrapper agrees with the pass route
+        let quantizable = default_quantizable(&store);
+        let (_, qm) = quantize_store(&store, &quantizable, &cfg).unwrap();
+        assert_eq!(artifact.quantized_model(), qm);
+    }
+
+    #[test]
+    fn joint_bias_orphan_bias_is_quantized_solo() {
+        // pinned behavior: under joint_bias, a bias whose weight is NOT in
+        // the quantizable set is still quantized (on its own) rather than
+        // silently left FP32 — the caller listed it, so it gets packed
+        let order = vec![
+            ("x.weight".to_string(), vec![4usize, 4]),
+            ("x.bias".to_string(), vec![4usize]),
+        ];
+        let mut store = ParamStore::zeros(&order);
+        let mut rng = Rng::new(11);
+        store.set("x.bias", Tensor::randn(&[4], 0.0, 1.0, &mut rng)).unwrap();
+        let cfg = SplitQuantConfig { joint_bias: true, ..SplitQuantConfig::new(4) };
+        let artifact = QuantPipeline::new()
+            .pass(SplitQuantPass::with_config(cfg).quantizable(vec!["x.bias".to_string()]))
+            .run(&store)
+            .unwrap();
+        assert!(artifact.tensors.contains_key("x.bias"));
+        assert!(!artifact.tensors.contains_key("x.weight"));
+        assert_eq!(artifact.fp32_names(), vec!["x.weight".to_string()]);
+    }
+
+    #[test]
+    fn baseline_and_ocs_passes_match_legacy_wrappers() {
+        let (_, store) = tiny_store();
+        let quantizable = default_quantizable(&store);
+        let qcfg = QConfig::baseline(4);
+
+        let a = QuantPipeline::new().pass(BaselinePass::new(qcfg)).run(&store).unwrap();
+        let (eval, tensors) =
+            crate::baselines::quantize_store_baseline(&store, &quantizable, &qcfg).unwrap();
+        assert_eq!(a.tensors, tensors);
+        for (name, t) in eval.iter() {
+            assert_eq!(t.data(), a.eval.get(name).unwrap().data(), "{name}");
+        }
+
+        let o = QuantPipeline::new().pass(OcsPass::new(qcfg, 0.05)).run(&store).unwrap();
+        let eval_ocs =
+            crate::baselines::ocs::quantize_store_ocs(&store, &quantizable, &qcfg, 0.05)
+                .unwrap();
+        for (name, t) in eval_ocs.iter() {
+            assert_eq!(t.data(), o.eval.get(name).unwrap().data(), "{name}");
+        }
+        assert!(o.tensors.is_empty());
+    }
+}

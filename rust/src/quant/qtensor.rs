@@ -21,7 +21,7 @@ pub enum QLayout {
 }
 
 /// A quantized tensor: packed codes + scale groups.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QTensor {
     shape: Vec<usize>,
     codes: Packed,

@@ -43,7 +43,17 @@ impl LoadedExe {
     /// Execute with raw literals (callers that pre-stage literals, e.g. the
     /// i8 planes of the split-linear kernel).
     pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Value>> {
-        let result = self.exe.execute::<xla::Literal>(literals)?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literal_refs(&refs)
+    }
+
+    /// Execute with **borrowed** literals. This is the zero-copy request
+    /// path: callers stage their constant inputs (parameter literals) once
+    /// and assemble each call as references to the staged values plus the
+    /// per-request literals — nothing staged is cloned or re-converted
+    /// (see [`crate::coordinator::PjrtExecutor`]).
+    pub fn run_literal_refs(&self, literals: &[&xla::Literal]) -> Result<Vec<Value>> {
+        let result = self.exe.execute(literals)?;
         let tuple = result[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True: outputs arrive as one tuple
         let parts = tuple.to_tuple()?;
@@ -62,9 +72,13 @@ impl LoadedExe {
             .collect()
     }
 
-    /// Convenience for single-f32-output executables (forward passes).
-    pub fn run_f32(&self, inputs: &[Value]) -> Result<Tensor> {
-        let mut out = self.run(inputs)?;
+    /// Single-f32-output convenience over [`Self::run_literal_refs`].
+    pub fn run_f32_refs(&self, literals: &[&xla::Literal]) -> Result<Tensor> {
+        self.single_f32(self.run_literal_refs(literals)?)
+    }
+
+    /// Unwrap the one-f32-output convention shared by the forward passes.
+    fn single_f32(&self, mut out: Vec<Value>) -> Result<Tensor> {
         if out.len() != 1 {
             return Err(Error::Runtime(format!(
                 "{}: expected 1 output, got {}",
@@ -73,6 +87,11 @@ impl LoadedExe {
             )));
         }
         out.remove(0).into_f32()
+    }
+
+    /// Convenience for single-f32-output executables (forward passes).
+    pub fn run_f32(&self, inputs: &[Value]) -> Result<Tensor> {
+        self.single_f32(self.run(inputs)?)
     }
 }
 

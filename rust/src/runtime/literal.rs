@@ -65,29 +65,41 @@ fn dims_i64(shape: &[usize]) -> Vec<i64> {
     shape.iter().map(|&d| d as i64).collect()
 }
 
-/// Convert a value to a literal, checking it against the slot spec.
-pub fn to_literal(v: &Value, spec: &IoSpec) -> Result<xla::Literal> {
-    if v.shape() != spec.shape.as_slice() {
+fn check_slot(shape: &[usize], dtype: Dtype, spec: &IoSpec) -> Result<()> {
+    if shape != spec.shape.as_slice() {
         return Err(Error::Runtime(format!(
             "input {:?}: shape {:?} does not match spec {:?}",
-            spec.name,
-            v.shape(),
-            spec.shape
+            spec.name, shape, spec.shape
         )));
     }
-    if v.dtype() != spec.dtype {
+    if dtype != spec.dtype {
         return Err(Error::Runtime(format!(
             "input {:?}: dtype {:?} does not match spec {:?}",
-            spec.name,
-            v.dtype(),
-            spec.dtype
+            spec.name, dtype, spec.dtype
         )));
     }
-    let lit = match v {
-        Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?,
-        Value::I32(t) => xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?,
-    };
-    Ok(lit)
+    Ok(())
+}
+
+/// Convert an f32 tensor to a literal for the slot `spec` (no owned
+/// [`Value`] required — used to stage parameter literals once).
+pub fn f32_literal(t: &Tensor, spec: &IoSpec) -> Result<xla::Literal> {
+    check_slot(t.shape(), Dtype::F32, spec)?;
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?)
+}
+
+/// Convert an i32 tensor to a literal for the slot `spec`.
+pub fn i32_literal(t: &IntTensor, spec: &IoSpec) -> Result<xla::Literal> {
+    check_slot(t.shape(), Dtype::I32, spec)?;
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims_i64(t.shape()))?)
+}
+
+/// Convert a value to a literal, checking it against the slot spec.
+pub fn to_literal(v: &Value, spec: &IoSpec) -> Result<xla::Literal> {
+    match v {
+        Value::F32(t) => f32_literal(t, spec),
+        Value::I32(t) => i32_literal(t, spec),
+    }
 }
 
 /// Convert a returned literal into a [`Value`] following the output spec.

@@ -12,6 +12,18 @@
 //!   scale, concatenated back ([`activation_split`]).
 //! * BatchNorm is folded into preceding conv/linear layers before splitting
 //!   (§4.1, [`bn_fold`]).
+//!
+//! ## Pass-pipeline API
+//!
+//! Whole-model quantization is expressed as composable passes over a shared
+//! [`crate::quant::pipeline::ModelArtifact`]: BN folding, the SplitQuant
+//! weight/bias split, activation calibration and the baselines are each a
+//! [`crate::quant::pipeline::QuantPass`], chained with
+//! [`crate::quant::pipeline::QuantPipeline`] — including per-layer
+//! [`SplitQuantConfig`] overrides for mixed-precision bit-widths. The
+//! [`quantize_store`] entry point below is a thin wrapper over a single-pass
+//! pipeline, kept for the `(eval_store, qmodel)` tuple shape the benches and
+//! examples grew up with.
 
 pub mod activation_split;
 pub mod analysis;
@@ -23,8 +35,8 @@ use std::collections::BTreeMap;
 
 use crate::error::Result;
 use crate::model::params::ParamStore;
+use crate::quant::pipeline::{QuantPipeline, SplitQuantPass};
 use crate::quant::QTensor;
-use crate::util::rng::Rng;
 
 pub use activation_split::{ActCalibrator, ActQuantMode, ActQuantParams};
 pub use weight_split::{split_quantize, split_quantize_pair, SplitTensor};
@@ -63,7 +75,7 @@ impl SplitQuantConfig {
 
 /// A whole model quantized with SplitQuant: per-parameter Split-layout
 /// tensors plus the names deliberately kept FP32.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedModel {
     pub tensors: BTreeMap<String, QTensor>,
     pub fp32_names: Vec<String>,
@@ -105,66 +117,29 @@ pub fn default_quantizable(store: &ParamStore) -> Vec<String> {
 /// Apply SplitQuant PTQ to every quantizable parameter of `store`.
 ///
 /// Returns `(eval_store, qmodel)`: `eval_store` carries the dequantized
-/// (fake-quant) weights for accuracy evaluation through any executor, and
-/// `qmodel` the packed representation for size accounting / deployment.
+/// (fake-quant) weights for accuracy evaluation through any executor
+/// (copy-on-write shared with `store` — untouched tensors are never
+/// copied), and `qmodel` the packed representation for size accounting /
+/// deployment. Thin wrapper over a single
+/// [`crate::quant::pipeline::SplitQuantPass`] pipeline; use the pipeline
+/// directly to compose with BN folding, activation calibration, or
+/// per-layer mixed-precision overrides.
 pub fn quantize_store(
     store: &ParamStore,
     quantizable: &[String],
     cfg: &SplitQuantConfig,
 ) -> Result<(ParamStore, QuantizedModel)> {
-    let mut eval_store = store.clone();
-    let mut tensors = BTreeMap::new();
-    let mut rng = Rng::new(cfg.seed);
-
-    let quantset: std::collections::HashSet<&str> =
-        quantizable.iter().map(|s| s.as_str()).collect();
-
-    for name in quantizable {
-        if !name.ends_with(".bias") || !cfg.joint_bias {
-            // biases handled with their weight below when joint
-            if name.ends_with(".bias") {
-                let t = store.get(name)?;
-                let st = split_quantize(t, cfg, &mut rng)?;
-                eval_store.set(name, st.qtensor.dequantize())?;
-                tensors.insert(name.clone(), st.qtensor);
-            }
-            continue;
-        }
-    }
-    for name in quantizable {
-        if name.ends_with(".bias") {
-            continue; // handled jointly
-        }
-        let w = store.get(name)?;
-        let bias_name = name.strip_suffix(".weight").map(|p| format!("{p}.bias"));
-        let bias = match &bias_name {
-            Some(bn) if cfg.joint_bias && quantset.contains(bn.as_str()) => {
-                Some(store.get(bn)?)
-            }
-            _ => None,
-        };
-        let (wq, bq) = split_quantize_pair(w, bias, cfg, &mut rng)?;
-        eval_store.set(name, wq.qtensor.dequantize())?;
-        tensors.insert(name.clone(), wq.qtensor);
-        if let (Some(bn), Some(bq)) = (bias_name, bq) {
-            eval_store.set(&bn, bq.qtensor.dequantize())?;
-            tensors.insert(bn, bq.qtensor);
-        }
-    }
-
-    let fp32_names: Vec<String> = store
-        .names()
-        .iter()
-        .filter(|n| !tensors.contains_key(*n))
-        .cloned()
-        .collect();
-    Ok((eval_store, QuantizedModel { tensors, fp32_names, bits: cfg.bits }))
+    let artifact = QuantPipeline::new()
+        .pass(SplitQuantPass::with_config(*cfg).quantizable(quantizable.to_vec()))
+        .run(store)?;
+    Ok(artifact.into_parts())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::model::config::BertConfig;
+    use crate::util::rng::Rng;
 
     fn tiny_store() -> (BertConfig, ParamStore) {
         let cfg = BertConfig {

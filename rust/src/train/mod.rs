@@ -50,8 +50,8 @@ impl<'rt> Trainer<'rt> {
                 "{exe_name}: {got} inputs do not match {nparams} params (want 3P+4 or 3P+5)"
             )));
         }
-        let adam_m = store.flat().iter().map(|t| Tensor::zeros(t.shape())).collect();
-        let adam_v = store.flat().iter().map(|t| Tensor::zeros(t.shape())).collect();
+        let adam_m = store.flat_tensors().map(|t| Tensor::zeros(t.shape())).collect();
+        let adam_v = store.flat_tensors().map(|t| Tensor::zeros(t.shape())).collect();
         Ok(Trainer { rt, exe, store, adam_m, adam_v, step: 0, log: Vec::new() })
     }
 
@@ -60,7 +60,7 @@ impl<'rt> Trainer<'rt> {
         let t0 = std::time::Instant::now();
         let n = self.store.len();
         let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 5);
-        inputs.extend(self.store.flat().iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.store.flat_tensors().map(|t| Value::F32(t.clone())));
         inputs.extend(self.adam_m.iter().map(|t| Value::F32(t.clone())));
         inputs.extend(self.adam_v.iter().map(|t| Value::F32(t.clone())));
         inputs.push(Value::I32(IntTensor::new(&[1], vec![self.step as i32])?));
@@ -105,7 +105,7 @@ impl<'rt> Trainer<'rt> {
         let t0 = std::time::Instant::now();
         let n = self.store.len();
         let mut inputs: Vec<Value> = Vec::with_capacity(3 * n + 4);
-        inputs.extend(self.store.flat().iter().map(|t| Value::F32(t.clone())));
+        inputs.extend(self.store.flat_tensors().map(|t| Value::F32(t.clone())));
         inputs.extend(self.adam_m.iter().map(|t| Value::F32(t.clone())));
         inputs.extend(self.adam_v.iter().map(|t| Value::F32(t.clone())));
         inputs.push(Value::I32(IntTensor::new(&[1], vec![self.step as i32])?));

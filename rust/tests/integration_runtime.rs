@@ -48,7 +48,7 @@ fn rust_executor_matches_pjrt_forward_across_batch_sizes() {
         let batch = &batches[0];
         let rust = model.forward(&batch.ids, &batch.mask);
         let mut inputs: Vec<Value> =
-            store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+            store.flat_tensors().map(|t| Value::F32(t.clone())).collect();
         inputs.push(Value::I32(batch.ids.clone()));
         inputs.push(Value::F32(batch.mask.clone()));
         let pjrt = exe.run_f32(&inputs).unwrap();
@@ -198,7 +198,7 @@ fn actquant_executable_matches_rust_act_hook() {
     let exe = rt.load("bert_fwd_actquant_b32").unwrap();
     let (scales, zps) = act.to_arrays();
     let (qmin, qmax) = qrange(bits);
-    let mut inputs: Vec<Value> = store.flat().iter().map(|t| Value::F32(t.clone())).collect();
+    let mut inputs: Vec<Value> = store.flat_tensors().map(|t| Value::F32(t.clone())).collect();
     inputs.push(Value::I32(batches[0].ids.clone()));
     inputs.push(Value::F32(batches[0].mask.clone()));
     inputs.push(Value::F32(scales));

@@ -1,0 +1,171 @@
+//! Sharing semantics of the Arc-backed [`ParamStore`]: O(1) replica views
+//! via `share()`, pointer-equality of tensors across replicas, copy-on-write
+//! isolation after `set`/`get_mut`, and ~1× resident weight bytes for N
+//! serving replicas (the ISSUE-2 acceptance criteria).
+
+use std::sync::Arc;
+
+use splitquant::coordinator::{BatchExecutor, RustExecutor};
+use splitquant::data::HashTokenizer;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::pipeline::{QuantPipeline, SplitQuantPass};
+use splitquant::tensor::{IntTensor, Tensor};
+use splitquant::util::proptest::check;
+use splitquant::util::rng::Rng;
+
+fn tiny_store() -> (BertConfig, ParamStore) {
+    let cfg = BertConfig {
+        vocab_size: 512,
+        hidden: 16,
+        layers: 1,
+        heads: 2,
+        ffn: 32,
+        max_len: 16,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(0);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    (cfg, store)
+}
+
+#[test]
+fn share_is_pointer_equal_everywhere() {
+    let (_, store) = tiny_store();
+    let replicas: Vec<ParamStore> = (0..4).map(|_| store.share()).collect();
+    for r in &replicas {
+        for name in store.names() {
+            assert!(
+                Arc::ptr_eq(&store.handle(name).unwrap(), &r.handle(name).unwrap()),
+                "{name} not shared"
+            );
+            assert!(r.shares_tensor(&store, name), "{name}");
+        }
+    }
+}
+
+#[test]
+fn copy_on_write_isolates_replicas() {
+    let (_, store) = tiny_store();
+    let mut replica = store.share();
+    let name = "encoder.0.attn.q.weight";
+    let shape = store.get(name).unwrap().shape().to_vec();
+    replica.set(name, Tensor::ones(&shape)).unwrap();
+    // the replica diverged on the touched tensor only
+    assert!(!replica.shares_tensor(&store, name));
+    assert!(replica.get(name).unwrap().data().iter().all(|&v| v == 1.0));
+    // the original is untouched (randn init, not all-ones)
+    assert!(store.get(name).unwrap().data().iter().any(|&v| v != 1.0));
+    // every other tensor is still the same allocation
+    for n in store.names().iter().filter(|n| n.as_str() != name) {
+        assert!(replica.shares_tensor(&store, n), "{n}");
+    }
+}
+
+#[test]
+fn get_mut_copy_on_writes_the_touched_tensor() {
+    let (_, store) = tiny_store();
+    let mut replica = store.share();
+    let name = "pooler.bias";
+    replica.get_mut(name).unwrap().data_mut()[0] = 42.0;
+    assert!(!replica.shares_tensor(&store, name));
+    assert_eq!(store.get(name).unwrap().data()[0], 0.0);
+    assert_eq!(replica.get(name).unwrap().data()[0], 42.0);
+}
+
+#[test]
+fn n_replicas_hold_one_copy_of_the_weights() {
+    let (_, store) = tiny_store();
+    let one = store.byte_size();
+    let replicas: Vec<ParamStore> = (0..8).map(|_| store.share()).collect();
+    let mut stores: Vec<&ParamStore> = vec![&store];
+    stores.extend(replicas.iter());
+    // 9 views, exactly 1× resident weight bytes
+    assert_eq!(ParamStore::resident_bytes(stores), one);
+
+    // one COW write grows the footprint by exactly the touched tensor
+    let mut hot = store.share();
+    let name = "classifier.weight";
+    let zeroed = Tensor::zeros(store.get(name).unwrap().shape());
+    hot.set(name, zeroed).unwrap();
+    assert_eq!(
+        ParamStore::resident_bytes([&store, &hot]),
+        one + store.get(name).unwrap().byte_size()
+    );
+}
+
+#[test]
+fn serving_replicas_share_weights_end_to_end() {
+    let (cfg, store) = tiny_store();
+    // two serving executors built from O(1) shares of one store
+    let ex1 = RustExecutor::new(cfg.clone(), store.share(), vec![1, 4]).unwrap();
+    let ex2 = RustExecutor::new(cfg.clone(), store.share(), vec![1, 4]).unwrap();
+    for name in store.names() {
+        assert!(ex1.params().shares_tensor(ex2.params(), name), "{name}");
+        assert!(ex1.params().shares_tensor(&store, name), "{name}");
+    }
+    assert_eq!(
+        ParamStore::resident_bytes([&store, ex1.params(), ex2.params()]),
+        store.byte_size()
+    );
+    // both replicas serve and agree
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (ids, mask) = tok.encode("replica agreement probe");
+    let ids = IntTensor::new(&[1, cfg.max_len], ids).unwrap();
+    let mask = Tensor::new(&[1, cfg.max_len], mask).unwrap();
+    assert_eq!(
+        ex1.classify(&ids, &mask, 1).unwrap(),
+        ex2.classify(&ids, &mask, 1).unwrap()
+    );
+}
+
+#[test]
+fn quantization_pipeline_shares_untouched_tensors() {
+    let (_, store) = tiny_store();
+    let artifact = QuantPipeline::new()
+        .pass(SplitQuantPass::bits(4))
+        .run(&store)
+        .unwrap();
+    // non-quantizable parameters were never copied
+    assert!(artifact.eval.shares_tensor(&store, "embeddings.ln.gamma"));
+    assert!(artifact.eval.shares_tensor(&store, "embeddings.position"));
+    // quantized weights were copy-on-written, source intact
+    assert!(!artifact.eval.shares_tensor(&store, "encoder.0.attn.q.weight"));
+    let quantized = artifact.tensors.len();
+    assert!(quantized > 0);
+    // resident bytes: 1× the store + only the rewritten tensors
+    let rewritten: usize = store
+        .names()
+        .iter()
+        .filter(|n| !artifact.eval.shares_tensor(&store, n.as_str()))
+        .map(|n| store.get(n).unwrap().byte_size())
+        .sum();
+    assert_eq!(
+        ParamStore::resident_bytes([&store, &artifact.eval]),
+        store.byte_size() + rewritten
+    );
+}
+
+#[test]
+fn property_cow_never_leaks_into_the_base() {
+    check("cow isolation", 25, |rng| {
+        let rows = rng.range(1, 8);
+        let cols = rng.range(1, 8);
+        let blen = rng.range(1, 8);
+        let order = vec![
+            ("a.weight".to_string(), vec![rows, cols]),
+            ("a.bias".to_string(), vec![blen]),
+        ];
+        let base = ParamStore::zeros(&order);
+        let mut replica = base.share();
+        let name = if rng.below(2) == 0 { "a.weight" } else { "a.bias" };
+        let shape = base.get(name).unwrap().shape().to_vec();
+        replica.set(name, Tensor::randn(&shape, 0.0, 1.0, rng)).unwrap();
+        assert!(!replica.shares_tensor(&base, name));
+        let other = if name == "a.weight" { "a.bias" } else { "a.weight" };
+        assert!(replica.shares_tensor(&base, other));
+        // the base never sees the replica's write
+        assert!(base.get(name).unwrap().data().iter().all(|&v| v == 0.0));
+    });
+}
