@@ -175,7 +175,7 @@ fn main() {
         let (_, qm) = quantize_store(&store2, &q, &SplitQuantConfig::new(2)).unwrap();
         let qmodel = QuantizedBert::new(cfg.clone(), &store2, &qm).unwrap();
         let d = time_n(5, || {
-            std::hint::black_box(qmodel.forward(&ids, &mask));
+            std::hint::black_box(qmodel.forward(&ids, &mask).unwrap());
         });
         t.row(vec![
             "QuantizedBert fwd b32 (fused INT2 dequant)".into(),

@@ -25,6 +25,13 @@ pub struct Metrics {
     /// Condvar batcher should wake only on enqueue or deadline, so this
     /// stays near zero while the queue is empty — regression-tested)
     pub batcher_polls: usize,
+    /// shard demand misses served from disk (paged executors only; zero on
+    /// fully-resident executors — see [`crate::shardstore`])
+    pub shard_faults: usize,
+    /// shards evicted to stay under `ServeConfig::residency_budget_bytes`
+    pub shard_evictions: usize,
+    /// total bytes paged in from the shard file (faults + prefetch + pins)
+    pub bytes_paged_in: usize,
 }
 
 impl Default for Metrics {
@@ -39,6 +46,9 @@ impl Default for Metrics {
             exec_time: Duration::ZERO,
             shed: 0,
             batcher_polls: 0,
+            shard_faults: 0,
+            shard_evictions: 0,
+            bytes_paged_in: 0,
         }
     }
 }
@@ -77,8 +87,16 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let paging = if self.shard_faults + self.shard_evictions > 0 {
+            format!(
+                " faults={} evictions={} paged_in={}B",
+                self.shard_faults, self.shard_evictions, self.bytes_paged_in
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% polls={} batches={:?}",
+            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% polls={} batches={:?}{paging}",
             self.completed,
             self.shed,
             self.throughput(),

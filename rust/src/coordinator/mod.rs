@@ -30,4 +30,7 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, MAX_PADDING_OVERHEAD};
 pub use metrics::Metrics;
-pub use server::{BatchExecutor, ClassifyResponse, PjrtExecutor, RustExecutor, ServeConfig, Server};
+pub use server::{
+    BatchExecutor, ClassifyResponse, PjrtExecutor, QuantExecutor, RustExecutor, ServeConfig,
+    Server,
+};

@@ -21,8 +21,11 @@ use crate::error::{Error, Result};
 use crate::model::bert::{argmax_rows, BertModel};
 use crate::model::config::BertConfig;
 use crate::model::params::ParamStore;
+use crate::model::QuantizedBert;
 use crate::runtime::literal::{f32_literal, i32_literal};
 use crate::runtime::Runtime;
+use crate::shardstore::{PagedConfig, PagedModel, ResidencyCounters};
+use crate::splitquant::QuantizedModel;
 use crate::tensor::{IntTensor, Tensor};
 
 use super::batcher::BatchPolicy;
@@ -34,6 +37,13 @@ pub trait BatchExecutor: Send + Sync {
     fn classify(&self, ids: &IntTensor, mask: &Tensor, batch_size: usize) -> Result<Vec<i32>>;
     /// Compiled batch sizes this executor supports.
     fn batch_sizes(&self) -> Vec<usize>;
+    /// Shard-paging counters, when this executor pages weights in and out
+    /// under a residency budget ([`crate::shardstore`]). Fully-resident
+    /// executors return `None`; the server folds `Some` counters into
+    /// [`Metrics`] on read.
+    fn residency(&self) -> Option<ResidencyCounters> {
+        None
+    }
 }
 
 /// One compiled forward executable plus its staged parameter literals.
@@ -184,6 +194,76 @@ impl BatchExecutor for RustExecutor {
     }
 }
 
+/// Quantized-weight executor over [`QuantizedBert`] — the deployment path
+/// behind the batcher. Two forms:
+///
+/// * [`QuantExecutor::resident`]: every fused linear unpacked in RAM
+///   (fastest; resident bytes ≈ 50 % of FP32).
+/// * [`QuantExecutor::paged`] / [`QuantExecutor::from_paged`]: packed
+///   shards page in from a `SQSH0001` file under
+///   [`ServeConfig::residency_budget_bytes`] — the "model larger than RAM"
+///   form. Logits are byte-identical to the resident form (same planes,
+///   same fused kernel); the residency counters surface in [`Metrics`].
+pub struct QuantExecutor {
+    model: QuantizedBert,
+    sizes: Vec<usize>,
+}
+
+impl QuantExecutor {
+    /// Fully-resident quantized executor.
+    pub fn resident(
+        cfg: BertConfig,
+        store: &ParamStore,
+        qm: &QuantizedModel,
+        sizes: Vec<usize>,
+    ) -> Result<Self> {
+        Ok(QuantExecutor { model: QuantizedBert::new(cfg, store, qm)?, sizes })
+    }
+
+    /// Open `shards` and serve under `serve.residency_budget_bytes`
+    /// (unset ⇒ unbounded: everything stays resident after first use).
+    pub fn paged(
+        cfg: BertConfig,
+        shards: &std::path::Path,
+        sizes: Vec<usize>,
+        serve: &ServeConfig,
+    ) -> Result<Self> {
+        let paged = PagedModel::open(
+            shards,
+            PagedConfig {
+                residency_budget_bytes: serve.residency_budget_bytes.unwrap_or(usize::MAX),
+                ..PagedConfig::default()
+            },
+        )?;
+        Self::from_paged(cfg, paged, sizes)
+    }
+
+    /// Build over an existing [`PagedModel`] — pass `paged.clone()` to
+    /// stand up N replicas sharing one residency budget (~1× resident
+    /// shard bytes total, the paged analogue of `ParamStore::share`).
+    pub fn from_paged(cfg: BertConfig, paged: PagedModel, sizes: Vec<usize>) -> Result<Self> {
+        Ok(QuantExecutor { model: QuantizedBert::from_paged(cfg, paged)?, sizes })
+    }
+
+    pub fn model(&self) -> &QuantizedBert {
+        &self.model
+    }
+}
+
+impl BatchExecutor for QuantExecutor {
+    fn classify(&self, ids: &IntTensor, mask: &Tensor, _batch: usize) -> Result<Vec<i32>> {
+        self.model.predict(ids, mask)
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn residency(&self) -> Option<ResidencyCounters> {
+        self.model.paged().map(|p| p.counters())
+    }
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -196,17 +276,24 @@ pub struct ServeConfig {
     /// Kernel-engine tuning, applied process-wide at `Server::start` (first
     /// configuration wins; see [`crate::parallel::configure`]).
     pub parallel: crate::parallel::ParallelConfig,
+    /// Byte budget for paged quantized shards ([`QuantExecutor::paged`]):
+    /// the summed on-disk bytes of unpinned resident shards never exceed
+    /// it (LRU eviction; embeddings/LN stay pinned outside the budget).
+    /// `None` ⇒ unbounded — everything stays resident after first fault.
+    /// Lets a server hold a model whose packed payload exceeds RAM.
+    pub residency_budget_bytes: Option<usize>,
 }
 
 impl Default for ServeConfig {
     /// 2ms batching window, 2 serving workers, 1024-deep ingress queue,
-    /// auto kernel threads.
+    /// auto kernel threads, unbounded shard residency.
     fn default() -> Self {
         ServeConfig {
             max_wait: Duration::from_millis(2),
             workers: 2,
             queue_cap: 1024,
             parallel: crate::parallel::ParallelConfig::default(),
+            residency_budget_bytes: None,
         }
     }
 }
@@ -309,6 +396,9 @@ pub struct Server {
     /// never touches the metrics mutex while holding the ingress lock.
     /// Folded into [`Metrics::batcher_polls`] on read.
     polls: Arc<AtomicUsize>,
+    /// Kept for metrics reads: shard-paging counters live in the executor's
+    /// residency manager and are folded into [`Metrics`] on read.
+    executor: Arc<dyn BatchExecutor>,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -457,7 +547,15 @@ impl Server {
             );
         }
 
-        Server { ingress, tokenizer, metrics, polls, batcher: Some(batcher), workers }
+        Server {
+            ingress,
+            tokenizer,
+            metrics,
+            polls,
+            executor,
+            batcher: Some(batcher),
+            workers,
+        }
     }
 
     /// Non-blocking submit with admission control: rejects immediately when
@@ -501,6 +599,7 @@ impl Server {
     pub fn metrics(&self) -> Metrics {
         let mut m = self.metrics.lock().unwrap().clone();
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
+        fold_residency(&mut m, &*self.executor);
         m
     }
 
@@ -518,6 +617,7 @@ impl Server {
             .map(|m| m.into_inner().unwrap())
             .unwrap_or_else(|arc| arc.lock().unwrap().clone());
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
+        fold_residency(&mut m, &*self.executor);
         m
     }
 }
@@ -525,6 +625,16 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.ingress.close();
+    }
+}
+
+/// Copy the executor's shard-paging counters (if any) into a metrics
+/// snapshot — residency state lives in the executor, not the server.
+fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
+    if let Some(c) = ex.residency() {
+        m.shard_faults = c.shard_faults;
+        m.shard_evictions = c.shard_evictions;
+        m.bytes_paged_in = c.bytes_paged_in;
     }
 }
 

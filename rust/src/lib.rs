@@ -13,8 +13,9 @@
 //!   splitting), the post-training-quantization engine, baselines, the
 //!   pure-Rust quantized-inference executor, the parallel kernel engine
 //!   ([`parallel`]: persistent worker pool + cache-blocked kernels), the
-//!   PJRT runtime bridge and a batched serving coordinator. Python never
-//!   runs on the request path.
+//!   shard-paged model store ([`shardstore`]: serve models larger than RAM
+//!   under a residency byte budget), the PJRT runtime bridge and a batched
+//!   serving coordinator. Python never runs on the request path.
 //!
 //! The public API is organized by subsystem; see `DESIGN.md` for the
 //! paper → module map and `EXPERIMENTS.md` for reproduced results.
@@ -30,6 +31,7 @@ pub mod parallel;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod shardstore;
 pub mod splitquant;
 pub mod tensor;
 pub mod train;

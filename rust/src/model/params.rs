@@ -28,6 +28,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
+use crate::util::io::{read_f32_vec, read_u16, read_u32, read_u8, write_f32_slice};
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 8] = b"SQCKPT1\n";
@@ -86,10 +87,17 @@ impl ParamStore {
     }
 
     pub fn push(&mut self, name: String, t: Tensor) {
+        self.push_shared(name, Arc::new(t));
+    }
+
+    /// Push an already-shared tensor handle without copying its data — the
+    /// caller (e.g. [`crate::shardstore::PagedModel`]'s pinned set) keeps
+    /// its `Arc` and both sides reference one allocation.
+    pub fn push_shared(&mut self, name: String, t: Arc<Tensor>) {
         assert!(!self.index.contains_key(&name), "duplicate param {name}");
         self.index.insert(name.clone(), self.tensors.len());
         self.names.push(name);
-        self.tensors.push(Arc::new(t));
+        self.tensors.push(t);
     }
 
     pub fn len(&self) -> usize {
@@ -148,6 +156,13 @@ impl ParamStore {
     /// Replace one tensor. Only this slot's sharing is broken; replicas keep
     /// the previous allocation.
     pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        self.set_shared(name, Arc::new(t))
+    }
+
+    /// Replace one tensor with an already-shared handle (no data copy; the
+    /// slot now aliases the caller's allocation — same sharing semantics as
+    /// a fresh [`ParamStore::share`] replica slot).
+    pub fn set_shared(&mut self, name: &str, t: Arc<Tensor>) -> Result<()> {
         let i = match self.index.get(name).copied() {
             Some(i) => i,
             None => return Err(Error::Model(format!("no parameter named {name:?}"))),
@@ -159,7 +174,7 @@ impl ParamStore {
                 self.tensors[i].shape()
             )));
         }
-        self.tensors[i] = Arc::new(t);
+        self.tensors[i] = t;
         Ok(())
     }
 
@@ -247,9 +262,8 @@ impl ParamStore {
             for &d in t.shape() {
                 f.write_all(&(d as u32).to_le_bytes())?;
             }
-            for &v in t.data() {
-                f.write_all(&v.to_le_bytes())?;
-            }
+            // one buffered write per tensor payload (not one per f32)
+            write_f32_slice(&mut f, t.data())?;
         }
         Ok(())
     }
@@ -276,12 +290,7 @@ impl ParamStore {
                 shape.push(read_u32(&mut f)? as usize);
             }
             let numel: usize = shape.iter().product();
-            let mut buf = vec![0u8; numel * 4];
-            f.read_exact(&mut buf)?;
-            let data: Vec<f32> = buf
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
+            let data = read_f32_vec(&mut f, numel)?;
             s.push(name, Tensor::new(&shape, data)?);
         }
         Ok(s)
@@ -306,24 +315,6 @@ impl ParamStore {
         }
         Ok(())
     }
-}
-
-fn read_u8(f: &mut impl Read) -> Result<u8> {
-    let mut b = [0u8; 1];
-    f.read_exact(&mut b)?;
-    Ok(b[0])
-}
-
-fn read_u16(f: &mut impl Read) -> Result<u16> {
-    let mut b = [0u8; 2];
-    f.read_exact(&mut b)?;
-    Ok(u16::from_le_bytes(b))
-}
-
-fn read_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -421,6 +412,22 @@ mod tests {
             ParamStore::resident_bytes([&base, &replica]),
             base.byte_size() + base.get("w").unwrap().byte_size()
         );
+    }
+
+    #[test]
+    fn shared_handles_alias_one_allocation() {
+        let order = vec![("w".to_string(), vec![2usize])];
+        let mut s = ParamStore::zeros(&order);
+        let t = Arc::new(Tensor::ones(&[2]));
+        s.set_shared("w", Arc::clone(&t)).unwrap();
+        assert!(Arc::ptr_eq(&s.handle("w").unwrap(), &t));
+        // shape still validated
+        assert!(s.set_shared("w", Arc::new(Tensor::zeros(&[3]))).is_err());
+
+        let mut s2 = ParamStore::zeros(&[]);
+        s2.push_shared("w".into(), Arc::clone(&t));
+        assert!(Arc::ptr_eq(&s2.handle("w").unwrap(), &t));
+        assert!(s2.shares_tensor(&s, "w"));
     }
 
     #[test]

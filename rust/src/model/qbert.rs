@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 
 use crate::error::Result;
 use crate::quant::QTensor;
+use crate::shardstore::PagedModel;
 use crate::splitquant::QuantizedModel;
 use crate::tensor::ops;
 use crate::tensor::{IntTensor, Tensor};
@@ -77,6 +78,27 @@ impl QLinear {
     }
 }
 
+/// Whether a quantized tensor executes on the fused linear path (vs being
+/// dequantized into the FP32 store once): a rank-2 weight outside the
+/// embedding block. The single source of truth shared with
+/// [`crate::shardstore::paged`]'s pagable classification, so the resident
+/// and paged backends can never disagree about which tensors run fused —
+/// the byte-identity contract between them depends on that.
+pub(crate) fn is_fused_linear(name: &str, shape: &[usize]) -> bool {
+    shape.len() == 2 && !name.starts_with("embeddings.")
+}
+
+/// Where the quantized linear weights live during execution.
+enum Linears {
+    /// All fused linears resident in their unpacked deployment form.
+    Resident(BTreeMap<String, QLinear>),
+    /// Packed shards paged in on demand under a byte budget
+    /// ([`crate::shardstore`]). The packed [`QTensor`] is the resident
+    /// form; the code/cid planes are unpacked per matmul, trading CPU for
+    /// keeping only low-bit codes in RAM.
+    Paged(PagedModel),
+}
+
 /// BERT-Tiny with quantized linear weights executed fused; embeddings and
 /// the non-quantizable parameters (LayerNorm, position) stay FP32.
 pub struct QuantizedBert {
@@ -85,8 +107,8 @@ pub struct QuantizedBert {
     /// dequantized form is used directly), token embedding (dequantized once
     /// — it is a *lookup*, not a matmul, so fused dequant buys nothing).
     fp32: ParamStore,
-    /// fused quantized linears by parameter name
-    qlinears: BTreeMap<String, QLinear>,
+    /// quantized linears by parameter name — resident or paged
+    linears: Linears,
 }
 
 impl QuantizedBert {
@@ -98,7 +120,7 @@ impl QuantizedBert {
         let mut fp32 = store.share();
         let mut qlinears = BTreeMap::new();
         for (name, q) in &qm.tensors {
-            if q.shape().len() == 2 && name != "embeddings.token" {
+            if is_fused_linear(name, q.shape()) {
                 qlinears.insert(name.clone(), QLinear::new(q.clone())?);
                 // zero the fp32 copy so accidental use is loud in tests
                 fp32.set(name, Tensor::zeros(q.shape()))?;
@@ -106,13 +128,63 @@ impl QuantizedBert {
                 fp32.set(name, q.dequantize())?;
             }
         }
-        Ok(QuantizedBert { cfg, fp32, qlinears })
+        Ok(QuantizedBert { cfg, fp32, linears: Linears::Resident(qlinears) })
     }
 
-    fn linear(&self, name: &str, x: &Tensor) -> Tensor {
-        let mut y = match self.qlinears.get(name) {
-            Some(q) => q.matmul_fused(x),
-            None => ops::matmul(x, self.fp32.get(name).unwrap()),
+    /// Build from a paged shard store ([`crate::shardstore::PagedModel`]):
+    /// the pinned set (FP32 remainder + embeddings) materializes into the
+    /// FP32 store via [`ParamStore::push_shared`] — every replica built
+    /// from a `paged.clone()` aliases the same allocations (FP32 shards
+    /// come from the residency cache; pinned quantized shards are
+    /// dequantized once per `PagedModel`, not per replica) — while the
+    /// fused linears stay on disk until [`QuantizedBert::forward`] faults
+    /// them in. Pagable weights get **no** FP32 slot at all: the store
+    /// never allocates the dense model this subsystem exists to avoid, and
+    /// an accidental FP32 lookup of a pagable weight fails loudly as a
+    /// missing parameter. Every parameter the config requires must exist
+    /// in the shard file — a config/file mismatch is an error here, not
+    /// silent zero logits later.
+    pub fn from_paged(cfg: BertConfig, paged: PagedModel) -> Result<Self> {
+        let mut fp32 = ParamStore::zeros(&[]);
+        for (name, shape) in cfg.param_order() {
+            if paged.is_pagable(&name) {
+                continue;
+            }
+            // errors on shards missing from the file (fail fast on a
+            // config/file mismatch)
+            let t = paged.pinned_fp32(&name)?;
+            if t.shape() != shape.as_slice() {
+                return Err(crate::error::Error::Model(format!(
+                    "shard {name:?}: shape {:?} does not match the model \
+                     config's {shape:?}",
+                    t.shape()
+                )));
+            }
+            fp32.push_shared(name, t);
+        }
+        Ok(QuantizedBert { cfg, fp32, linears: Linears::Paged(paged) })
+    }
+
+    /// `Err` only on the paged backend: a shard fault can fail on IO or an
+    /// unsupported layout — surfaced as a `classify` error, never a panic
+    /// in a serving worker.
+    fn linear(&self, name: &str, x: &Tensor) -> Result<Tensor> {
+        let mut y = match &self.linears {
+            Linears::Resident(qlinears) => match qlinears.get(name) {
+                Some(q) => q.matmul_fused(x),
+                None => ops::matmul(x, self.fp32.get(name)?),
+            },
+            Linears::Paged(paged) => {
+                if paged.is_pagable(name) {
+                    let shard = paged.fetch_quant(name)?;
+                    let q = shard.as_quant().expect("fetch_quant returned quantized");
+                    // same planes, same kernel as QLinear::matmul_fused —
+                    // logits stay byte-identical to the resident path
+                    q.matmul_fused(x)?
+                } else {
+                    ops::matmul(x, self.fp32.get(name)?)
+                }
+            }
         };
         let bias_name = name.strip_suffix(".weight").map(|p| format!("{p}.bias"));
         if let Some(bn) = bias_name {
@@ -120,11 +192,12 @@ impl QuantizedBert {
                 ops::add_bias(&mut y, b);
             }
         }
-        y
+        Ok(y)
     }
 
-    /// logits f32[B, C] — same math as `BertModel::forward`, quantized hot path.
-    pub fn forward(&self, ids: &IntTensor, mask: &Tensor) -> Tensor {
+    /// logits f32[B, C] — same math as `BertModel::forward`, quantized hot
+    /// path. `Err` only on the paged backend (failed shard fault).
+    pub fn forward(&self, ids: &IntTensor, mask: &Tensor) -> Result<Tensor> {
         let cfg = &self.cfg;
         let p = &self.fp32;
         let (b, l) = (ids.shape()[0], ids.shape()[1]);
@@ -133,9 +206,9 @@ impl QuantizedBert {
         let hd = cfg.head_dim();
         let scale = 1.0 / (hd as f32).sqrt();
 
-        let mut x = ops::embedding(p.get("embeddings.token").unwrap(), ids);
+        let mut x = ops::embedding(p.get("embeddings.token")?, ids);
         {
-            let pos = p.get("embeddings.position").unwrap();
+            let pos = p.get("embeddings.position")?;
             let xd = x.data_mut();
             for bi in 0..b {
                 for li in 0..l {
@@ -148,35 +221,35 @@ impl QuantizedBert {
         }
         let mut x = ops::layer_norm(
             &x.reshape(&[b * l, h]).unwrap(),
-            p.get("embeddings.ln.gamma").unwrap(),
-            p.get("embeddings.ln.beta").unwrap(),
+            p.get("embeddings.ln.gamma")?,
+            p.get("embeddings.ln.beta")?,
             cfg.ln_eps,
         );
 
         for i in 0..cfg.layers {
             let pre = format!("encoder.{i}");
-            let q = self.linear(&format!("{pre}.attn.q.weight"), &x);
-            let k = self.linear(&format!("{pre}.attn.k.weight"), &x);
-            let v = self.linear(&format!("{pre}.attn.v.weight"), &x);
+            let q = self.linear(&format!("{pre}.attn.q.weight"), &x)?;
+            let k = self.linear(&format!("{pre}.attn.k.weight"), &x)?;
+            let v = self.linear(&format!("{pre}.attn.v.weight"), &x)?;
 
             let ctx = super::bert::attention_ctx(&q, &k, &v, mask, b, l, h, a, hd, scale);
-            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx);
+            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx)?;
             let mut res = x.clone();
             res.add_assign(&attn);
             x = ops::layer_norm(
                 &res,
-                p.get(&format!("{pre}.attn.ln.gamma")).unwrap(),
-                p.get(&format!("{pre}.attn.ln.beta")).unwrap(),
+                p.get(&format!("{pre}.attn.ln.gamma"))?,
+                p.get(&format!("{pre}.attn.ln.beta"))?,
                 cfg.ln_eps,
             );
 
-            let mid = ops::gelu(&self.linear(&format!("{pre}.ffn.in.weight"), &x));
-            let mut ff = self.linear(&format!("{pre}.ffn.out.weight"), &mid);
+            let mid = ops::gelu(&self.linear(&format!("{pre}.ffn.in.weight"), &x)?);
+            let mut ff = self.linear(&format!("{pre}.ffn.out.weight"), &mid)?;
             ff.add_assign(&x);
             x = ops::layer_norm(
                 &ff,
-                p.get(&format!("{pre}.ffn.ln.gamma")).unwrap(),
-                p.get(&format!("{pre}.ffn.ln.beta")).unwrap(),
+                p.get(&format!("{pre}.ffn.ln.gamma"))?,
+                p.get(&format!("{pre}.ffn.ln.beta"))?,
                 cfg.ln_eps,
             );
         }
@@ -186,26 +259,55 @@ impl QuantizedBert {
             cls.data_mut()[bi * h..(bi + 1) * h]
                 .copy_from_slice(&x.data()[bi * l * h..bi * l * h + h]);
         }
-        let pooled = ops::tanh(&self.linear("pooler.weight", &cls));
+        let pooled = ops::tanh(&self.linear("pooler.weight", &cls)?);
         self.linear("classifier.weight", &pooled)
     }
 
-    pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Vec<i32> {
-        argmax_rows(&self.forward(ids, mask))
+    pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Result<Vec<i32>> {
+        Ok(argmax_rows(&self.forward(ids, mask)?))
     }
 
     /// Resident weight bytes of the quantized linears (deployment memory).
+    /// For the paged backend this is the *current* pagable working set —
+    /// bounded by the residency budget, not the model size.
     pub fn quantized_resident_bytes(&self) -> usize {
-        self.qlinears.values().map(|q| q.resident_bytes()).sum()
+        match &self.linears {
+            Linears::Resident(qlinears) => {
+                qlinears.values().map(|q| q.resident_bytes()).sum()
+            }
+            Linears::Paged(paged) => paged.counters().resident_bytes,
+        }
     }
 
     /// The FP32 bytes those linears would occupy.
     pub fn fp32_equivalent_bytes(&self) -> usize {
-        self.qlinears.values().map(|q| q.shape().iter().product::<usize>() * 4).sum()
+        match &self.linears {
+            Linears::Resident(qlinears) => {
+                qlinears.values().map(|q| q.shape().iter().product::<usize>() * 4).sum()
+            }
+            Linears::Paged(paged) => paged.fp32_equivalent_bytes(),
+        }
     }
 
     pub fn num_quantized_linears(&self) -> usize {
-        self.qlinears.len()
+        match &self.linears {
+            Linears::Resident(qlinears) => qlinears.len(),
+            Linears::Paged(paged) => paged.pagable().len(),
+        }
+    }
+
+    /// The FP32 parameter view (sharing checks / introspection — the
+    /// quantized-executor analogue of `RustExecutor::params`).
+    pub fn fp32_params(&self) -> &ParamStore {
+        &self.fp32
+    }
+
+    /// The paged backend, when this executor serves from shards.
+    pub fn paged(&self) -> Option<&PagedModel> {
+        match &self.linears {
+            Linears::Resident(_) => None,
+            Linears::Paged(p) => Some(p),
+        }
     }
 }
 
@@ -253,7 +355,7 @@ mod tests {
             let fused = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
             let (ids, mask) = batch(&cfg, 3, 1);
             let a = reference.forward(&ids, &mask);
-            let b = fused.forward(&ids, &mask);
+            let b = fused.forward(&ids, &mask).unwrap();
             let gap = a.max_abs_diff(&b);
             assert!(gap < 1e-3, "bits {bits}: fused gap {gap}");
         }
@@ -272,9 +374,47 @@ mod tests {
             (resident as f64) < fp32 as f64 * 0.6,
             "resident {resident} vs fp32 {fp32}"
         );
-        for (_, ql) in q.qlinears.iter() {
+        let Linears::Resident(qlinears) = &q.linears else {
+            panic!("QuantizedBert::new builds the resident backend")
+        };
+        for ql in qlinears.values() {
             assert!(ql.packed_bytes() < ql.resident_bytes());
         }
+    }
+
+    #[test]
+    fn paged_backend_is_byte_identical_to_resident() {
+        use crate::shardstore::{PagedConfig, PagedModel};
+        let (cfg, store, qm) = setup(2);
+        let resident = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        let pm = crate::quant::PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_qbert_paged.sqsh");
+        pm.save_sharded(&path).unwrap();
+
+        let probe = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        let budget = probe.pagable_bytes() / 2;
+        assert!(budget >= probe.max_shard_bytes());
+        drop(probe);
+        let paged = PagedModel::open(
+            &path,
+            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1 },
+        )
+        .unwrap();
+        let qbert = QuantizedBert::from_paged(cfg.clone(), paged.clone()).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let (ids, mask) = batch(&cfg, 3, 1);
+        let a = resident.forward(&ids, &mask).unwrap();
+        let b = qbert.forward(&ids, &mask).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "paged logits diverged");
+        }
+        let c = paged.counters();
+        assert!(c.shard_faults > 0, "paged forward never faulted");
+        assert!(c.shard_evictions > 0, "half-budget forward never evicted");
+        assert!(c.resident_bytes <= budget);
+        assert!(c.peak_resident_bytes <= budget);
     }
 
     #[test]
@@ -302,7 +442,8 @@ mod tests {
         let fused = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
         let reference = super::super::bert::BertModel::new(cfg.clone(), eval).unwrap();
         let (ids, mask) = batch(&cfg, 2, 5);
-        let gap = reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask));
+        let gap =
+            reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask).unwrap());
         assert!(gap < 1e-3, "{gap}");
     }
 }

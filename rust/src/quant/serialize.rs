@@ -14,6 +14,13 @@
 //! u32   n_fp32
 //!   per tensor: name, shape, f32 data        (LN, position, …)
 //! ```
+//!
+//! The per-tensor *record* encoding (everything after the name) is shared
+//! with the sharded `SQSH0001` format ([`crate::shardstore`]), which adds a
+//! per-tensor offset index in front so any single layer can be read without
+//! touching the rest of the file. FP32 payloads go through
+//! [`crate::util::io`] in one buffered read/write per tensor rather than
+//! one syscall-sized `write_all` per element.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -23,6 +30,7 @@ use crate::model::params::ParamStore;
 use crate::splitquant::QuantizedModel;
 use crate::tensor::packing::Packed;
 use crate::tensor::Tensor;
+use crate::util::io::{read_f32, read_f32_vec, read_u16, read_u32, read_u8, write_f32_slice};
 
 use super::qtensor::{QLayout, QTensor};
 use super::scheme::QParams;
@@ -78,38 +86,21 @@ impl PackedModel {
         f.write_all(&(self.qmodel.tensors.len() as u32).to_le_bytes())?;
         for (name, q) in &self.qmodel.tensors {
             write_str(&mut f, name)?;
-            write_shape(&mut f, q.shape())?;
-            match q.layout() {
-                QLayout::PerTensor => {
-                    f.write_all(&[0u8])?;
-                }
-                QLayout::PerChannel { axis } => {
-                    f.write_all(&[1u8])?;
-                    f.write_all(&(*axis as u32).to_le_bytes())?;
-                }
-                QLayout::Split { cid } => {
-                    f.write_all(&[2u8])?;
-                    write_packed(&mut f, cid)?;
-                }
-            }
-            f.write_all(&(q.params().len() as u32).to_le_bytes())?;
-            for p in q.params() {
-                f.write_all(&p.scale.to_le_bytes())?;
-                f.write_all(&p.zp.to_le_bytes())?;
-                f.write_all(&[p.bits])?;
-            }
-            write_packed(&mut f, q.codes())?;
+            write_qtensor_record(&mut f, q)?;
         }
 
         f.write_all(&(self.fp32.len() as u32).to_le_bytes())?;
         for (name, t) in &self.fp32 {
             write_str(&mut f, name)?;
-            write_shape(&mut f, t.shape())?;
-            for &v in t.data() {
-                f.write_all(&v.to_le_bytes())?;
-            }
+            write_fp32_record(&mut f, t)?;
         }
         Ok(())
+    }
+
+    /// Save in the sharded `SQSH0001` format (per-tensor offset index, so a
+    /// [`crate::shardstore::PagedModel`] can fault layers in independently).
+    pub fn save_sharded(&self, path: &Path) -> Result<()> {
+        crate::shardstore::write_sharded(self, path)
     }
 
     pub fn load(path: &Path) -> Result<PackedModel> {
@@ -125,46 +116,14 @@ impl PackedModel {
         let mut tensors = std::collections::BTreeMap::new();
         for _ in 0..nq {
             let name = read_str(&mut f)?;
-            let shape = read_shape(&mut f)?;
-            let layout_tag = read_u8(&mut f)?;
-            let (layout_axis, cid) = match layout_tag {
-                0 => (None, None),
-                1 => (Some(read_u32(&mut f)? as usize), None),
-                2 => (None, Some(read_packed(&mut f)?)),
-                t => return Err(Error::Checkpoint(format!("bad layout tag {t}"))),
-            };
-            let nparams = read_u32(&mut f)? as usize;
-            let mut params = Vec::with_capacity(nparams);
-            for _ in 0..nparams {
-                let scale = read_f32(&mut f)?;
-                let zp = read_f32(&mut f)?;
-                let b = read_u8(&mut f)?;
-                params.push(QParams { scale, zp, bits: b });
-            }
-            let codes = read_packed(&mut f)?;
-            let q = match (layout_axis, cid) {
-                (None, Some(cid)) => QTensor::from_split(&shape, codes, cid, params)?,
-                (axis, None) => {
-                    QTensor::from_parts(&shape, codes, params, axis)?
-                }
-                _ => unreachable!(),
-            };
-            tensors.insert(name, q);
+            tensors.insert(name, read_qtensor_record(&mut f)?);
         }
 
         let nf = read_u32(&mut f)? as usize;
         let mut fp32 = Vec::with_capacity(nf);
         for _ in 0..nf {
             let name = read_str(&mut f)?;
-            let shape = read_shape(&mut f)?;
-            let numel: usize = shape.iter().product();
-            let mut buf = vec![0u8; numel * 4];
-            f.read_exact(&mut buf)?;
-            let data: Vec<f32> = buf
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            fp32.push((name, Tensor::new(&shape, data)?));
+            fp32.push((name, read_fp32_record(&mut f)?));
         }
 
         let fp32_names = fp32.iter().map(|(n, _)| n.clone()).collect();
@@ -172,13 +131,80 @@ impl PackedModel {
     }
 }
 
-fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
+/// Write one quantized tensor record: shape, layout tag (+axis / +cid
+/// plane), params, codes. Everything after the tensor's name in `SQQM0001`;
+/// the unit of independent access in `SQSH0001`.
+pub(crate) fn write_qtensor_record(f: &mut impl Write, q: &QTensor) -> Result<()> {
+    write_shape(f, q.shape())?;
+    match q.layout() {
+        QLayout::PerTensor => {
+            f.write_all(&[0u8])?;
+        }
+        QLayout::PerChannel { axis } => {
+            f.write_all(&[1u8])?;
+            f.write_all(&(*axis as u32).to_le_bytes())?;
+        }
+        QLayout::Split { cid } => {
+            f.write_all(&[2u8])?;
+            write_packed(f, cid)?;
+        }
+    }
+    f.write_all(&(q.params().len() as u32).to_le_bytes())?;
+    for p in q.params() {
+        f.write_all(&p.scale.to_le_bytes())?;
+        f.write_all(&p.zp.to_le_bytes())?;
+        f.write_all(&[p.bits])?;
+    }
+    write_packed(f, q.codes())
+}
+
+/// Inverse of [`write_qtensor_record`] (validation happens in
+/// `QTensor::from_parts` / `from_split`).
+pub(crate) fn read_qtensor_record(f: &mut impl Read) -> Result<QTensor> {
+    let shape = read_shape(f)?;
+    let layout_tag = read_u8(f)?;
+    let (layout_axis, cid) = match layout_tag {
+        0 => (None, None),
+        1 => (Some(read_u32(f)? as usize), None),
+        2 => (None, Some(read_packed(f)?)),
+        t => return Err(Error::Checkpoint(format!("bad layout tag {t}"))),
+    };
+    let nparams = read_u32(f)? as usize;
+    let mut params = Vec::with_capacity(nparams);
+    for _ in 0..nparams {
+        let scale = read_f32(f)?;
+        let zp = read_f32(f)?;
+        let b = read_u8(f)?;
+        params.push(QParams { scale, zp, bits: b });
+    }
+    let codes = read_packed(f)?;
+    match (layout_axis, cid) {
+        (None, Some(cid)) => QTensor::from_split(&shape, codes, cid, params),
+        (axis, None) => QTensor::from_parts(&shape, codes, params, axis),
+        _ => unreachable!(),
+    }
+}
+
+/// Write one FP32 tensor record: shape + raw little-endian payload.
+pub(crate) fn write_fp32_record(f: &mut impl Write, t: &Tensor) -> Result<()> {
+    write_shape(f, t.shape())?;
+    write_f32_slice(f, t.data())
+}
+
+pub(crate) fn read_fp32_record(f: &mut impl Read) -> Result<Tensor> {
+    let shape = read_shape(f)?;
+    let numel: usize = shape.iter().product();
+    let data = read_f32_vec(f, numel)?;
+    Tensor::new(&shape, data)
+}
+
+pub(crate) fn write_str(f: &mut impl Write, s: &str) -> Result<()> {
     f.write_all(&(s.len() as u16).to_le_bytes())?;
     f.write_all(s.as_bytes())?;
     Ok(())
 }
 
-fn read_str(f: &mut impl Read) -> Result<String> {
+pub(crate) fn read_str(f: &mut impl Read) -> Result<String> {
     let n = read_u16(f)? as usize;
     let mut buf = vec![0u8; n];
     f.read_exact(&mut buf)?;
@@ -214,30 +240,6 @@ fn read_packed(f: &mut impl Read) -> Result<Packed> {
     Packed::from_raw(bits, len, buf)
 }
 
-fn read_u8(f: &mut impl Read) -> Result<u8> {
-    let mut b = [0u8; 1];
-    f.read_exact(&mut b)?;
-    Ok(b[0])
-}
-
-fn read_u16(f: &mut impl Read) -> Result<u16> {
-    let mut b = [0u8; 2];
-    f.read_exact(&mut b)?;
-    Ok(u16::from_le_bytes(b))
-}
-
-fn read_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_f32(f: &mut impl Read) -> Result<f32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(f32::from_le_bytes(b))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +263,52 @@ mod tests {
         let q = default_quantizable(&store);
         let (_, qm) = quantize_store(&store, &q, &SplitQuantConfig::new(2)).unwrap();
         (cfg, store, qm)
+    }
+
+    /// A hand-built model exercising all three [`QLayout`] variants plus an
+    /// FP32 remainder tensor.
+    fn all_layouts_model() -> PackedModel {
+        use crate::quant::QConfig;
+        let mut rng = Rng::new(11);
+        let mut tensors = std::collections::BTreeMap::new();
+        // PerTensor
+        let t = Tensor::randn(&[6, 4], 0.0, 1.0, &mut rng);
+        tensors.insert(
+            "per_tensor.weight".to_string(),
+            QTensor::quantize(&t, &QConfig::baseline(8)).unwrap(),
+        );
+        // PerChannel (axis 0)
+        let t = Tensor::randn(&[3, 5], 0.0, 1.0, &mut rng);
+        tensors.insert(
+            "per_channel.weight".to_string(),
+            QTensor::quantize(&t, &QConfig::per_channel(4, 0)).unwrap(),
+        );
+        // Split
+        let values = [0.001f32, 0.002, -0.003, 500.0, 600.0, 700.0];
+        let ids: Vec<u8> = vec![0, 0, 0, 1, 1, 1];
+        let p0 = QParams::from_range(-0.003, 0.002, 4);
+        let p1 = QParams::from_range(0.0, 700.0, 4);
+        let codes: Vec<i8> = values
+            .iter()
+            .zip(&ids)
+            .map(|(&v, &c)| if c == 0 { p0.quantize(v) } else { p1.quantize(v) })
+            .collect();
+        tensors.insert(
+            "split.weight".to_string(),
+            QTensor::from_split(
+                &[6],
+                Packed::pack(&codes, 4).unwrap(),
+                Packed::pack_unsigned(&ids, 2).unwrap(),
+                vec![p0, p1],
+            )
+            .unwrap(),
+        );
+        let fp32 = vec![(
+            "remainder.gamma".to_string(),
+            Tensor::randn(&[7], 0.0, 1.0, &mut rng),
+        )];
+        let fp32_names = vec!["remainder.gamma".to_string()];
+        PackedModel { qmodel: QuantizedModel { tensors, fp32_names, bits: 4 }, fp32 }
     }
 
     #[test]
@@ -317,6 +365,83 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_byte_identity_all_layouts() {
+        // save → load → save again must produce byte-identical files for
+        // every QLayout variant, and the loaded tensors must compare equal
+        let pm = all_layouts_model();
+        let p1 = std::env::temp_dir().join("sq_rt_layouts_1.sqq");
+        let p2 = std::env::temp_dir().join("sq_rt_layouts_2.sqq");
+        pm.save(&p1).unwrap();
+        let loaded = PackedModel::load(&p1).unwrap();
+        loaded.save(&p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        assert_eq!(b1, b2, "save→load→save is not byte-stable");
+
+        for (name, q) in &pm.qmodel.tensors {
+            assert_eq!(loaded.qmodel.tensors[name], *q, "{name}");
+        }
+        for ((n1, t1), (n2, t2)) in pm.fp32.iter().zip(&loaded.fp32) {
+            assert_eq!(n1, n2);
+            let same = t1
+                .data()
+                .iter()
+                .zip(t2.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{n1} fp32 payload not bit-identical");
+        }
+    }
+
+    #[test]
+    fn truncated_files_error() {
+        let pm = all_layouts_model();
+        let full = std::env::temp_dir().join("sq_trunc_full.sqq");
+        pm.save(&full).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+        std::fs::remove_file(&full).ok();
+
+        let cut = std::env::temp_dir().join("sq_trunc_cut.sqq");
+        // cut at a spread of prefixes, including one byte short of valid
+        let mut cuts: Vec<usize> = (0..16).map(|i| i * bytes.len() / 16).collect();
+        cuts.push(bytes.len() - 1);
+        for n in cuts {
+            std::fs::write(&cut, &bytes[..n]).unwrap();
+            assert!(
+                PackedModel::load(&cut).is_err(),
+                "load succeeded on a {n}-byte truncation of a {}-byte file",
+                bytes.len()
+            );
+        }
+        std::fs::remove_file(&cut).ok();
+    }
+
+    #[test]
+    fn bad_magic_and_bad_layout_tag_rejected() {
+        let path = std::env::temp_dir().join("sq_bad_tag.sqq");
+        // wrong magic
+        std::fs::write(&path, b"SQXX9999............").unwrap();
+        assert!(PackedModel::load(&path).is_err());
+        // right magic, bogus layout tag (7) on the first tensor
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.push(4); // bits
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one quantized tensor
+        write_str(&mut buf, "w").unwrap();
+        buf.push(1); // rank 1
+        buf.extend_from_slice(&2u32.to_le_bytes()); // shape [2]
+        buf.push(7); // invalid layout tag
+        std::fs::write(&path, &buf).unwrap();
+        let err = PackedModel::load(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("bad layout tag"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn packed_file_much_smaller_than_fp32_checkpoint() {
         let (_cfg, store, qm) = tiny();
         let pm = PackedModel::assemble(&store, &qm);
@@ -363,7 +488,7 @@ mod tests {
         )
         .unwrap();
         let mask = Tensor::full(&[2, cfg.max_len], 1.0);
-        let logits = qbert.forward(&ids, &mask);
+        let logits = qbert.forward(&ids, &mask).unwrap();
         assert_eq!(logits.shape(), &[2, cfg.num_classes]);
         assert!(logits.data().iter().all(|v| v.is_finite()));
     }

@@ -1,0 +1,380 @@
+//! The sharded `SQSH0001` on-disk format: an `SQQM0001` payload re-framed
+//! behind a per-tensor offset index so any single layer's record (packed
+//! codes + cid plane + params, or an FP32 remainder tensor) can be read
+//! with one seek + one read, independently of the rest of the file.
+//!
+//! ```text
+//! magic "SQSH0001"
+//! u8    bits                      (provenance; each Packed carries its own)
+//! u32   n_entries
+//! index, per entry:
+//!   u16+bytes  name
+//!   u8         kind               (0 = quantized, 1 = fp32)
+//!   u8 rank, u32×rank dims        (shape, for classification without IO)
+//!   u64        offset             (absolute file offset of the record)
+//!   u64        len                (record length in bytes)
+//! records, concatenated:
+//!   quantized: shape, layout tag (+axis / +cid plane), params, codes
+//!   fp32:      shape, raw f32 LE payload
+//! ```
+//!
+//! Record encodings are byte-identical to the per-tensor sections of
+//! `SQQM0001` (shared helpers in [`crate::quant::serialize`]); the index is
+//! the only addition. `offset`/`len` are validated against the file size at
+//! open, so truncated files fail fast instead of at first fault.
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::quant::serialize::{
+    read_fp32_record, read_qtensor_record, read_str, write_fp32_record, write_qtensor_record,
+    write_str,
+};
+use crate::quant::{PackedModel, QTensor};
+use crate::tensor::Tensor;
+use crate::util::io::{read_u32, read_u64, read_u8};
+
+const MAGIC: &[u8; 8] = b"SQSH0001";
+
+const KIND_QUANT: u8 = 0;
+const KIND_FP32: u8 = 1;
+
+/// What kind of record an index entry points at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Packed quantized tensor (codes + optional cid plane + params).
+    Quant,
+    /// FP32 remainder tensor (LayerNorm, position embedding, biases, …).
+    Fp32,
+}
+
+/// One shard's payload, as materialized from disk. FP32 tensors sit behind
+/// an [`Arc`] so a [`crate::model::params::ParamStore`] can share the same
+/// allocation via `push_shared` instead of copying the data out.
+#[derive(Debug, Clone)]
+pub enum ShardData {
+    Quant(QTensor),
+    Fp32(Arc<Tensor>),
+}
+
+impl ShardData {
+    pub fn as_quant(&self) -> Option<&QTensor> {
+        match self {
+            ShardData::Quant(q) => Some(q),
+            ShardData::Fp32(_) => None,
+        }
+    }
+
+    pub fn as_fp32(&self) -> Option<&Arc<Tensor>> {
+        match self {
+            ShardData::Quant(_) => None,
+            ShardData::Fp32(t) => Some(t),
+        }
+    }
+}
+
+/// One entry of the per-tensor offset index.
+#[derive(Debug, Clone)]
+pub struct ShardIndexEntry {
+    pub kind: ShardKind,
+    pub shape: Vec<usize>,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Byte-counting sink: measures a record's encoded length without holding
+/// the bytes, so [`write_sharded`] never buffers a second copy of the
+/// payload (this subsystem exists for models that barely fit in RAM once).
+struct CountingWriter(u64);
+
+impl Write for CountingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0 += buf.len() as u64;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Write `pm` in the sharded format. Quantized tensors come first (in
+/// `BTreeMap` name order), then the FP32 remainder in its stored order —
+/// the same deterministic layout every save. Two passes: records are
+/// length-counted (not buffered) to lay out the index, then streamed
+/// straight to the file.
+pub fn write_sharded(pm: &PackedModel, path: &Path) -> Result<()> {
+    // pass 1: record lengths only
+    let mut entries: Vec<(&str, u8, &[usize], u64)> = Vec::new();
+    for (name, q) in &pm.qmodel.tensors {
+        let mut n = CountingWriter(0);
+        write_qtensor_record(&mut n, q)?;
+        entries.push((name.as_str(), KIND_QUANT, q.shape(), n.0));
+    }
+    for (name, t) in &pm.fp32 {
+        let mut n = CountingWriter(0);
+        write_fp32_record(&mut n, t)?;
+        entries.push((name.as_str(), KIND_FP32, t.shape(), n.0));
+    }
+
+    let mut header_len: u64 = 8 + 1 + 4; // magic + bits + n_entries
+    for (name, _, shape, _) in &entries {
+        header_len += (2 + name.len() + 1 + 1 + 4 * shape.len() + 8 + 8) as u64;
+    }
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&[pm.qmodel.bits])?;
+    f.write_all(&(entries.len() as u32).to_le_bytes())?;
+    let mut offset = header_len;
+    for (name, kind, shape, len) in &entries {
+        write_str(&mut f, name)?;
+        f.write_all(&[*kind])?;
+        f.write_all(&[shape.len() as u8])?;
+        for &d in *shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&offset.to_le_bytes())?;
+        f.write_all(&len.to_le_bytes())?;
+        offset += len;
+    }
+    // pass 2: stream the records
+    for q in pm.qmodel.tensors.values() {
+        write_qtensor_record(&mut f, q)?;
+    }
+    for (_, t) in &pm.fp32 {
+        write_fp32_record(&mut f, t)?;
+    }
+    Ok(())
+}
+
+/// Random-access reader over a sharded file: the index lives in memory, the
+/// records stay on disk until [`ShardReader::read`] faults them in. The file
+/// handle sits behind a `Mutex` so replicas sharing one reader can fault
+/// concurrently (one seek+read at a time; the payloads themselves are
+/// immutable once materialized).
+#[derive(Debug)]
+pub struct ShardReader {
+    file: Mutex<std::fs::File>,
+    index: HashMap<String, ShardIndexEntry>,
+    order: Vec<String>,
+    bits: u8,
+    path: PathBuf,
+}
+
+impl ShardReader {
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let file_size = f.get_ref().metadata()?.len();
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Checkpoint(format!("{path:?}: bad magic {magic:?}")));
+        }
+        let bits = read_u8(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut index = HashMap::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let kind = match read_u8(&mut f)? {
+                KIND_QUANT => ShardKind::Quant,
+                KIND_FP32 => ShardKind::Fp32,
+                k => {
+                    return Err(Error::Checkpoint(format!(
+                        "{path:?}: bad shard kind {k} for {name:?}"
+                    )))
+                }
+            };
+            let rank = read_u8(&mut f)? as usize;
+            let shape: Vec<usize> =
+                (0..rank).map(|_| Ok(read_u32(&mut f)? as usize)).collect::<Result<_>>()?;
+            let offset = read_u64(&mut f)?;
+            let len = read_u64(&mut f)?;
+            match offset.checked_add(len) {
+                Some(end) if end <= file_size => {}
+                _ => {
+                    return Err(Error::Checkpoint(format!(
+                        "{path:?}: {name:?} record [{offset}, +{len}) exceeds \
+                         file size {file_size} (truncated?)"
+                    )))
+                }
+            }
+            if index
+                .insert(name.clone(), ShardIndexEntry { kind, shape, offset, len })
+                .is_some()
+            {
+                return Err(Error::Checkpoint(format!("{path:?}: duplicate entry {name:?}")));
+            }
+            order.push(name);
+        }
+        let file = Mutex::new(f.into_inner());
+        Ok(ShardReader { file, index, order, bits, path: path.to_path_buf() })
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Entry names in file (index) order.
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ShardIndexEntry> {
+        self.index.get(name)
+    }
+
+    /// Total record payload bytes (the on-disk cost without index framing) —
+    /// comparable to [`PackedModel::payload_bytes`] modulo per-record shape
+    /// framing.
+    pub fn payload_bytes(&self) -> usize {
+        self.index.values().map(|e| e.len as usize).sum()
+    }
+
+    /// Read and parse one record: one seek + one read, nothing else touched.
+    pub fn read(&self, name: &str) -> Result<ShardData> {
+        let e = self
+            .index
+            .get(name)
+            .ok_or_else(|| Error::Checkpoint(format!("{:?}: no shard {name:?}", self.path)))?;
+        let mut buf = vec![0u8; e.len as usize];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(e.offset))?;
+            f.read_exact(&mut buf)?;
+        }
+        let mut cursor: &[u8] = &buf;
+        let data = match e.kind {
+            ShardKind::Quant => ShardData::Quant(read_qtensor_record(&mut cursor)?),
+            ShardKind::Fp32 => ShardData::Fp32(Arc::new(read_fp32_record(&mut cursor)?)),
+        };
+        if !cursor.is_empty() {
+            return Err(Error::Checkpoint(format!(
+                "{:?}: {name:?} record has {} trailing bytes (corrupt index?)",
+                self.path,
+                cursor.len()
+            )));
+        }
+        Ok(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+    use crate::model::params::ParamStore;
+    use crate::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_packed() -> PackedModel {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store);
+        let (_, qm) = quantize_store(&store, &q, &SplitQuantConfig::new(2)).unwrap();
+        PackedModel::assemble(&store, &qm)
+    }
+
+    #[test]
+    fn every_entry_roundtrips() {
+        let pm = tiny_packed();
+        let path = std::env::temp_dir().join("sq_shard_rt.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let r = ShardReader::open(&path).unwrap();
+        assert_eq!(r.bits(), pm.qmodel.bits);
+        assert_eq!(r.names().len(), pm.qmodel.tensors.len() + pm.fp32.len());
+        for (name, q) in &pm.qmodel.tensors {
+            let e = r.entry(name).unwrap();
+            assert_eq!(e.kind, ShardKind::Quant);
+            assert_eq!(e.shape, q.shape());
+            match r.read(name).unwrap() {
+                ShardData::Quant(got) => assert_eq!(got, *q, "{name}"),
+                ShardData::Fp32(_) => panic!("{name}: wrong kind"),
+            }
+        }
+        for (name, t) in &pm.fp32 {
+            let e = r.entry(name).unwrap();
+            assert_eq!(e.kind, ShardKind::Fp32);
+            match r.read(name).unwrap() {
+                ShardData::Fp32(got) => assert_eq!(got.data(), t.data(), "{name}"),
+                ShardData::Quant(_) => panic!("{name}: wrong kind"),
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_entry_reads_independently() {
+        // reading one shard must not require parsing any other record:
+        // corrupt every byte outside the target record + index and read it
+        let pm = tiny_packed();
+        let path = std::env::temp_dir().join("sq_shard_indep.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let (target, expect) = {
+            let r = ShardReader::open(&path).unwrap();
+            let name = "encoder.0.ffn.out.weight".to_string();
+            let e = r.entry(&name).unwrap();
+            ((name, e.offset, e.len), r.read("encoder.0.ffn.out.weight").unwrap())
+        };
+        let mut bytes = std::fs::read(&path).unwrap();
+        let r = ShardReader::open(&path).unwrap();
+        let header_end = r.index.values().map(|e| e.offset).min().unwrap() as usize;
+        drop(r);
+        let (name, off, len) = target;
+        for (i, b) in bytes.iter_mut().enumerate() {
+            let in_header = i < header_end;
+            let in_target = (i as u64) >= off && (i as u64) < off + len;
+            if !in_header && !in_target {
+                *b = 0xAB;
+            }
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let r = ShardReader::open(&path).unwrap();
+        match (r.read(&name).unwrap(), expect) {
+            (ShardData::Quant(a), ShardData::Quant(b)) => assert_eq!(a, b),
+            _ => panic!("kind changed"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_detected_at_open() {
+        let pm = tiny_packed();
+        let path = std::env::temp_dir().join("sq_shard_trunc.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for frac in [1, 2, 4, 9] {
+            std::fs::write(&path, &bytes[..bytes.len() * frac / 10]).unwrap();
+            assert!(ShardReader::open(&path).is_err(), "open survived {frac}0% prefix");
+        }
+        // even one missing byte invalidates the last record's bounds
+        std::fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = std::env::temp_dir().join("sq_shard_magic.sqsh");
+        std::fs::write(&path, b"SQQM0001 not a shard file").unwrap();
+        assert!(ShardReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,53 @@
+//! Shard-paged quantized model store — serve models larger than RAM.
+//!
+//! PR 2 made N serving replicas share ~1× resident weight bytes (`Arc`
+//! copy-on-write `ParamStore`); this subsystem is the other half of that
+//! sharding story: the *one* resident copy no longer has to be the whole
+//! model. Packed per-layer shards page in from disk on demand under a byte
+//! budget, so a [`crate::model::QuantizedBert`] can serve from a working
+//! set smaller than the model (the SplitQuant deployment scenario — only
+//! packed low-bit codes are ever resident, and only the hot ones).
+//!
+//! ```text
+//!            SQSH0001 file                         RAM
+//!  ┌────────────────────────────┐
+//!  │ magic ─ bits ─ n_entries   │
+//!  │ index: name kind shape     │──open──▶ ShardReader (index in memory)
+//!  │        offset len  …       │
+//!  ├────────────────────────────┤          ResidencyManager (byte budget)
+//!  │ record: embeddings.token   │──open──▶   pinned   (embeddings, LN,
+//!  │ record: embeddings.ln.γ/β  │──open──▶   pinned    biases, position)
+//!  ├────────────────────────────┤
+//!  │ record: …attn.q.weight     │──fault─▶ ┌────────── LRU, ≤ budget ───┐
+//!  │ record: …attn.k.weight     │─prefetch▶│ packed codes + cid + params│
+//!  │ record: …ffn.out.weight    │ (spare   │  … evicted least-recently- │
+//!  │ record: pooler.weight      │  budget  │    used when over budget   │
+//!  │ record: classifier.weight  │  only)   └────────────────────────────┘
+//!  └────────────────────────────┘                 ▲
+//!                               PagedModel::fetch ┘ (QuantizedBert paged
+//!                                                    linears, per matmul)
+//! ```
+//!
+//! * [`format`] — the `SQSH0001` on-disk format: the `SQQM0001` record
+//!   encoding re-framed behind a per-tensor offset index (any layer is one
+//!   seek + one read away).
+//! * [`residency`] — [`ResidencyManager`]: byte budget, LRU eviction,
+//!   pinning, fault/eviction/paged-bytes counters.
+//! * [`paged`] — [`PagedModel`]: lazy [`ShardData`] materialization with
+//!   sequential prefetch along the qbert execution order; `Arc`-shared
+//!   across replicas so N replicas page through one budget.
+//!
+//! Serving integration: `ServeConfig::residency_budget_bytes` +
+//! `QuantExecutor::paged` ([`crate::coordinator`]) put a paged model behind
+//! the batcher, with faults/evictions/paged-bytes surfaced in
+//! [`crate::coordinator::Metrics`]. See `examples/serve_paged.rs` and
+//! `tests/integration_paged.rs` for the end-to-end path (budget ≤ 50 % of
+//! the payload, logits byte-identical to fully-resident).
+
+pub mod format;
+pub mod paged;
+pub mod residency;
+
+pub use format::{write_sharded, ShardData, ShardIndexEntry, ShardKind, ShardReader};
+pub use paged::{PagedConfig, PagedModel};
+pub use residency::{ResidencyCounters, ResidencyManager};

@@ -1,0 +1,459 @@
+//! [`PagedModel`]: lazy shard materialization over a [`ShardReader`] +
+//! [`ResidencyManager`] — the "models larger than RAM" serving form.
+//!
+//! ## Pagable vs pinned
+//!
+//! A shard is **pagable** when it is a rank-2 quantized weight outside the
+//! embedding block — exactly the set [`crate::model::QuantizedBert`]
+//! executes through the fused split-dequant matmul. Everything else
+//! (embeddings, LayerNorm, position, biases — the FP32 remainder plus the
+//! token embedding) is **pinned**: loaded once at open, never evicted, not
+//! counted against the byte budget. Pinned shards are both tiny and touched
+//! on every request, so paging them would only add faults.
+//!
+//! ## Fetch path
+//!
+//! `fetch(name)` returns the resident [`ShardData`] or faults it in (one
+//! seek + one read), evicting LRU pagable shards to stay under
+//! `residency_budget_bytes`. After a demand fault, the next
+//! `prefetch_depth` shards along the **qbert execution order** (attn.q →
+//! attn.k → attn.v → attn.out → ffn.in → ffn.out per layer, then pooler,
+//! then classifier) are read ahead — but only into spare budget; prefetch
+//! never evicts.
+//!
+//! ## Replicas
+//!
+//! `PagedModel` is a cheap [`Arc`]-backed clone: N serving replicas share
+//! one reader, one residency manager and therefore ~1× resident shard
+//! bytes — the paged twin of `ParamStore::share`
+//! (`tests/integration_share.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::format::{ShardData, ShardKind, ShardReader};
+use super::residency::{ResidencyCounters, ResidencyManager};
+
+/// Knobs for [`PagedModel::open`]. The serving coordinator threads
+/// `ServeConfig::residency_budget_bytes` into this.
+#[derive(Debug, Clone)]
+pub struct PagedConfig {
+    /// Byte budget for pagable (unpinned) resident shards, in on-disk
+    /// record bytes. `usize::MAX` keeps everything resident after first use.
+    pub residency_budget_bytes: usize,
+    /// How many execution-order successors to read ahead after a demand
+    /// fault (0 disables prefetch).
+    pub prefetch_depth: usize,
+}
+
+impl Default for PagedConfig {
+    fn default() -> Self {
+        PagedConfig { residency_budget_bytes: usize::MAX, prefetch_depth: 1 }
+    }
+}
+
+struct PagedInner {
+    reader: ShardReader,
+    residency: ResidencyManager,
+    /// pagable shard names in qbert execution order
+    order: Vec<String>,
+    /// name → position in `order` (prefetch successor lookup)
+    pos: HashMap<String, usize>,
+    prefetch_depth: usize,
+    /// dequantized forms of *pinned quantized* shards (the token
+    /// embedding), materialized once and shared by every replica built via
+    /// [`PagedModel::pinned_fp32`] — N replicas hold one FP32 copy.
+    dequant_pins: Mutex<HashMap<String, Arc<Tensor>>>,
+}
+
+/// Lazily-materialized sharded model. Clone freely — clones share the
+/// reader and residency (see module docs).
+#[derive(Clone)]
+pub struct PagedModel {
+    inner: Arc<PagedInner>,
+}
+
+impl PagedModel {
+    /// Open a `SQSH0001` file: reads the index, pins the always-hot set
+    /// (FP32 remainder + embeddings), and leaves every pagable shard on
+    /// disk until first use.
+    pub fn open(path: &Path, cfg: PagedConfig) -> Result<PagedModel> {
+        let reader = ShardReader::open(path)?;
+        let residency = ResidencyManager::new(cfg.residency_budget_bytes);
+
+        let mut order: Vec<String> = Vec::new();
+        for name in reader.names() {
+            let e = reader.entry(name).expect("indexed name");
+            // the ONE fused-linear predicate, shared with QuantizedBert::new
+            if e.kind == ShardKind::Quant
+                && crate::model::qbert::is_fused_linear(name, &e.shape)
+            {
+                order.push(name.clone());
+            } else {
+                // pinned: load now, stays hot forever
+                let bytes = e.len as usize;
+                let data = reader.read(name)?;
+                residency.admit_pinned(name, Arc::new(data), bytes);
+            }
+        }
+        order.sort_by_key(|n| execution_rank(n));
+        let pos = order.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+
+        Ok(PagedModel {
+            inner: Arc::new(PagedInner {
+                reader,
+                residency,
+                order,
+                pos,
+                prefetch_depth: cfg.prefetch_depth,
+                dequant_pins: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    /// Resident handle for `name`, faulting it in if needed. Pinned shards
+    /// always hit; pagable shards may evict LRU peers (see
+    /// [`ResidencyManager`]). Prefetches execution-order successors into
+    /// spare budget after a demand fault.
+    pub fn fetch(&self, name: &str) -> Result<Arc<ShardData>> {
+        let inner = &*self.inner;
+        if let Some(data) = inner.residency.get(name) {
+            return Ok(data);
+        }
+        let bytes = self.record_bytes(name)?;
+        let data = Arc::new(inner.reader.read(name)?);
+        let data = inner.residency.admit_fault(name, data, bytes);
+
+        if let Some(&p) = inner.pos.get(name) {
+            for next in inner.order.iter().skip(p + 1).take(inner.prefetch_depth) {
+                if inner.residency.is_resident(next) {
+                    continue;
+                }
+                let Ok(nb) = self.record_bytes(next) else { break };
+                if !inner.residency.fits_without_eviction(nb) {
+                    break; // no spare budget: prefetch must not evict
+                }
+                match inner.reader.read(next) {
+                    Ok(d) => {
+                        inner.residency.admit_prefetch(next, Arc::new(d), nb);
+                    }
+                    Err(e) => {
+                        // best-effort: the demand fetch already succeeded;
+                        // a later demand fault will surface the error
+                        log::warn!("prefetch of shard {next:?} failed: {e}");
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(data)
+    }
+
+    /// The quantized tensor behind `name`, or an error if the shard holds
+    /// FP32 data.
+    pub fn fetch_quant(&self, name: &str) -> Result<Arc<ShardData>> {
+        let data = self.fetch(name)?;
+        match &*data {
+            ShardData::Quant(_) => Ok(data),
+            ShardData::Fp32(_) => {
+                Err(Error::Quant(format!("shard {name:?} is FP32, expected quantized")))
+            }
+        }
+    }
+
+    /// The FP32 working form of a **pinned** shard, shared across replicas:
+    /// FP32 shards return the cached allocation directly; pinned quantized
+    /// shards (the token embedding) are dequantized once per `PagedModel`
+    /// — not once per replica — and every caller gets the same `Arc`.
+    pub fn pinned_fp32(&self, name: &str) -> Result<Arc<Tensor>> {
+        match &*self.fetch(name)? {
+            ShardData::Fp32(t) => Ok(Arc::clone(t)),
+            ShardData::Quant(q) => {
+                let mut cache = self.inner.dequant_pins.lock().unwrap();
+                if let Some(t) = cache.get(name) {
+                    return Ok(Arc::clone(t));
+                }
+                let t = Arc::new(q.dequantize());
+                cache.insert(name.to_string(), Arc::clone(&t));
+                Ok(t)
+            }
+        }
+    }
+
+    /// Shared residency accounting (counters feed serving [`Metrics`]).
+    ///
+    /// [`Metrics`]: crate::coordinator::Metrics
+    pub fn residency(&self) -> &ResidencyManager {
+        &self.inner.residency
+    }
+
+    /// Counter snapshot — convenience for executors.
+    pub fn counters(&self) -> ResidencyCounters {
+        self.inner.residency.counters()
+    }
+
+    /// Pagable shard names in execution order.
+    pub fn pagable(&self) -> &[String] {
+        &self.inner.order
+    }
+
+    /// All entry names in file order (pinned + pagable).
+    pub fn names(&self) -> &[String] {
+        self.inner.reader.names()
+    }
+
+    /// Whether `name` pages in and out (false ⇒ pinned or unknown).
+    pub fn is_pagable(&self, name: &str) -> bool {
+        self.inner.pos.contains_key(name)
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.inner.reader.bits()
+    }
+
+    /// Total on-disk record bytes (pinned + pagable).
+    pub fn payload_bytes(&self) -> usize {
+        self.inner.reader.payload_bytes()
+    }
+
+    /// On-disk bytes of the pagable set — what the budget pages over.
+    pub fn pagable_bytes(&self) -> usize {
+        self.inner
+            .order
+            .iter()
+            .filter_map(|n| self.inner.reader.entry(n))
+            .map(|e| e.len as usize)
+            .sum()
+    }
+
+    /// Largest single pagable record — the minimum workable budget.
+    pub fn max_shard_bytes(&self) -> usize {
+        self.inner
+            .order
+            .iter()
+            .filter_map(|n| self.inner.reader.entry(n))
+            .map(|e| e.len as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The FP32-equivalent bytes of a pagable weight (shape product × 4).
+    pub fn fp32_equivalent_bytes(&self) -> usize {
+        self.inner
+            .order
+            .iter()
+            .filter_map(|n| self.inner.reader.entry(n))
+            .map(|e| e.shape.iter().product::<usize>() * 4)
+            .sum()
+    }
+
+    /// Whether two handles share one residency manager (replica check —
+    /// the paged analogue of `ParamStore::shares_tensor`).
+    pub fn shares_residency(&self, other: &PagedModel) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    fn record_bytes(&self, name: &str) -> Result<usize> {
+        self.inner
+            .reader
+            .entry(name)
+            .map(|e| e.len as usize)
+            .ok_or_else(|| Error::Checkpoint(format!("no shard {name:?}")))
+    }
+}
+
+impl std::fmt::Debug for PagedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedModel")
+            .field("entries", &self.inner.reader.names().len())
+            .field("pagable", &self.inner.order.len())
+            .field("residency", &self.inner.residency)
+            .finish()
+    }
+}
+
+/// Sort key placing pagable weights in qbert execution order. Unknown names
+/// sort after the known ones, keeping their relative file order (stable
+/// sort).
+fn execution_rank(name: &str) -> (u8, usize, u8) {
+    if let Some(rest) = name.strip_prefix("encoder.") {
+        if let Some((idx, sub)) = rest.split_once('.') {
+            if let Ok(layer) = idx.parse::<usize>() {
+                let sub_rank = match sub {
+                    "attn.q.weight" => 0,
+                    "attn.k.weight" => 1,
+                    "attn.v.weight" => 2,
+                    "attn.out.weight" => 3,
+                    "ffn.in.weight" => 4,
+                    "ffn.out.weight" => 5,
+                    _ => 6,
+                };
+                return (0, layer, sub_rank);
+            }
+        }
+    }
+    match name {
+        "pooler.weight" => (1, 0, 0),
+        "classifier.weight" => (1, 1, 0),
+        _ => (2, 0, 0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+    use crate::model::params::ParamStore;
+    use crate::quant::PackedModel;
+    use crate::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+    use crate::util::rng::Rng;
+
+    fn shard_file(tag: &str, layers: usize) -> (BertConfig, PackedModel, std::path::PathBuf) {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(7);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store);
+        let (_, qm) = quantize_store(&store, &q, &SplitQuantConfig::new(2)).unwrap();
+        let pm = PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join(format!("sq_paged_{tag}.sqsh"));
+        pm.save_sharded(&path).unwrap();
+        (cfg, pm, path)
+    }
+
+    #[test]
+    fn execution_order_is_the_forward_pass_order() {
+        let (_, _, path) = shard_file("order", 2);
+        let paged = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        std::fs::remove_file(&path).ok();
+        let expect = [
+            "encoder.0.attn.q.weight",
+            "encoder.0.attn.k.weight",
+            "encoder.0.attn.v.weight",
+            "encoder.0.attn.out.weight",
+            "encoder.0.ffn.in.weight",
+            "encoder.0.ffn.out.weight",
+            "encoder.1.attn.q.weight",
+            "encoder.1.attn.k.weight",
+            "encoder.1.attn.v.weight",
+            "encoder.1.attn.out.weight",
+            "encoder.1.ffn.in.weight",
+            "encoder.1.ffn.out.weight",
+            "pooler.weight",
+            "classifier.weight",
+        ];
+        assert_eq!(paged.pagable(), &expect);
+    }
+
+    #[test]
+    fn pinned_set_is_fp32_plus_embeddings() {
+        let (_, pm, path) = shard_file("pins", 1);
+        let paged = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        std::fs::remove_file(&path).ok();
+        for (name, _) in &pm.fp32 {
+            assert!(paged.residency().is_pinned(name), "{name} not pinned");
+        }
+        assert!(paged.residency().is_pinned("embeddings.token"));
+        for name in paged.pagable() {
+            assert!(!paged.residency().is_pinned(name), "{name} wrongly pinned");
+            assert!(!paged.residency().is_resident(name), "{name} resident before use");
+        }
+    }
+
+    #[test]
+    fn fetch_faults_once_then_hits() {
+        let (_, pm, path) = shard_file("fetch", 1);
+        let paged =
+            PagedModel::open(&path, PagedConfig { prefetch_depth: 0, ..Default::default() })
+                .unwrap();
+        let name = "encoder.0.attn.q.weight";
+        let a = paged.fetch(name).unwrap();
+        let c1 = paged.counters();
+        assert_eq!(c1.shard_faults, 1);
+        let b = paged.fetch(name).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let c2 = paged.counters();
+        assert_eq!(c2.shard_faults, 1);
+        assert!(c2.shard_hits > c1.shard_hits);
+        // the fetched tensor matches the original
+        match &*a {
+            ShardData::Quant(q) => assert_eq!(*q, pm.qmodel.tensors[name]),
+            ShardData::Fp32(_) => panic!("wrong kind"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefetch_pulls_the_next_layer_in() {
+        let (_, _, path) = shard_file("prefetch", 1);
+        let paged =
+            PagedModel::open(&path, PagedConfig { prefetch_depth: 2, ..Default::default() })
+                .unwrap();
+        paged.fetch("encoder.0.attn.q.weight").unwrap();
+        assert!(paged.residency().is_resident("encoder.0.attn.k.weight"));
+        assert!(paged.residency().is_resident("encoder.0.attn.v.weight"));
+        let c = paged.counters();
+        assert_eq!(c.shard_faults, 1);
+        assert_eq!(c.shard_prefetches, 2);
+        // the prefetched shard now hits without faulting
+        paged.fetch("encoder.0.attn.k.weight").unwrap();
+        assert_eq!(paged.counters().shard_faults, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tight_budget_pages_in_and_out() {
+        let (_, _, path) = shard_file("budget", 2);
+        let probe = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        let budget = probe.max_shard_bytes() * 2;
+        assert!(budget < probe.pagable_bytes(), "model too small for the test");
+        drop(probe);
+        let paged = PagedModel::open(
+            &path,
+            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1 },
+        )
+        .unwrap();
+        for name in paged.pagable().to_vec() {
+            paged.fetch(&name).unwrap();
+            let c = paged.counters();
+            assert!(
+                c.resident_bytes <= budget,
+                "{name}: resident {} > budget {budget}",
+                c.resident_bytes
+            );
+        }
+        let c = paged.counters();
+        assert!(c.shard_evictions > 0, "no evictions under a tight budget");
+        assert!(c.peak_resident_bytes <= budget);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replicas_share_residency() {
+        let (_, _, path) = shard_file("replica", 1);
+        let a = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        let b = a.clone();
+        assert!(a.shares_residency(&b));
+        a.fetch("encoder.0.attn.q.weight").unwrap();
+        // the replica sees the shard without faulting
+        let before = b.counters().shard_faults;
+        b.fetch("encoder.0.attn.q.weight").unwrap();
+        assert_eq!(b.counters().shard_faults, before);
+        // an independent open does NOT share
+        let c = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        assert!(!a.shares_residency(&c));
+        std::fs::remove_file(&path).ok();
+    }
+}

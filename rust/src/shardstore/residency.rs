@@ -1,0 +1,365 @@
+//! Byte-budgeted shard residency: LRU eviction over unpinned shards, with
+//! pinned (always-hot) entries tracked separately.
+//!
+//! The manager is the single accounting authority for "what is in RAM" on
+//! the paged serving path. Its invariants, property-tested below:
+//!
+//! * **Budget**: the summed bytes of *unpinned* resident shards never
+//!   exceed the budget after any `admit_fault`, provided every individual
+//!   shard fits in the budget by itself. (A shard larger than the whole
+//!   budget is admitted anyway — refusing would deadlock serving — and is
+//!   evicted as soon as anything else faults; this shows up as
+//!   `resident_bytes > budget` and a `log::warn`.)
+//! * **Pinning**: pinned entries are never evicted and never count against
+//!   the budget. Pins hold what must stay hot regardless of traffic
+//!   (embeddings, LayerNorm, biases — the FP32 remainder).
+//! * **LRU**: eviction removes the least-recently-used unpinned shard
+//!   first, where "use" is a `get` hit or the original admit. Recency is a
+//!   monotonic counter, not wall time, so behavior is deterministic.
+//! * **Prefetch never evicts**: `admit_prefetch` only caches when the shard
+//!   fits in the spare budget; speculative reads can never push demand-
+//!   fetched shards out.
+//!
+//! Shared residency: the manager sits behind the `Arc` inside
+//! [`crate::shardstore::PagedModel`], so N serving replicas cloned from one
+//! paged model hold ~1× resident shard bytes between them, matching the
+//! `ParamStore::share` semantics of `tests/integration_share.rs`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::format::ShardData;
+
+/// Counter snapshot (see [`ResidencyManager::counters`]). The first three
+/// are surfaced as serving metrics
+/// ([`crate::coordinator::Metrics::shard_faults`] & co).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResidencyCounters {
+    /// demand misses: a needed shard was not resident and was read from disk
+    pub shard_faults: usize,
+    /// unpinned shards pushed out to fit a faulting shard under the budget
+    pub shard_evictions: usize,
+    /// total bytes read from the shard file (faults + prefetches + pins)
+    pub bytes_paged_in: usize,
+    /// `get` calls answered from residency
+    pub shard_hits: usize,
+    /// shards cached ahead of use by sequential prefetch
+    pub shard_prefetches: usize,
+    /// current unpinned resident bytes (the budget-governed figure)
+    pub resident_bytes: usize,
+    /// current pinned resident bytes (not budget-governed)
+    pub pinned_bytes: usize,
+    /// high-water mark of `resident_bytes`
+    pub peak_resident_bytes: usize,
+}
+
+struct Slot {
+    data: Arc<ShardData>,
+    bytes: usize,
+    pinned: bool,
+    last_use: u64,
+}
+
+struct Inner {
+    slots: HashMap<String, Slot>,
+    clock: u64,
+    c: ResidencyCounters,
+    /// shards already warned about as over-budget — a shard larger than
+    /// the whole budget re-faults every pass, and one warn per fault would
+    /// flood stderr on the serving hot path
+    warned_oversized: std::collections::HashSet<String>,
+}
+
+/// Budgeted LRU cache of materialized shards. All methods take `&self`; the
+/// interior `Mutex` makes one manager safely shareable across serving
+/// replicas and worker threads.
+pub struct ResidencyManager {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ResidencyManager {
+    /// `budget` bounds the summed bytes of unpinned resident shards. Use
+    /// `usize::MAX` for an effectively unbounded (fully resident) cache.
+    pub fn new(budget: usize) -> ResidencyManager {
+        ResidencyManager {
+            budget,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                clock: 0,
+                c: ResidencyCounters::default(),
+                warned_oversized: std::collections::HashSet::new(),
+            }),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Look up a resident shard, refreshing its recency. `None` means the
+    /// caller must fault it in via [`ResidencyManager::admit_fault`].
+    pub fn get(&self, name: &str) -> Option<Arc<ShardData>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        match g.slots.get_mut(name) {
+            Some(slot) => {
+                slot.last_use = clock;
+                let data = Arc::clone(&slot.data);
+                g.c.shard_hits += 1;
+                Some(data)
+            }
+            None => None,
+        }
+    }
+
+    /// Admit a demand-faulted shard, evicting LRU unpinned shards until it
+    /// fits the budget. Returns the resident handle — if another thread won
+    /// the race, theirs (the bytes just read are dropped, nothing double-
+    /// counted as resident).
+    pub fn admit_fault(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> Arc<ShardData> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.slots.get(name) {
+            return Arc::clone(&slot.data);
+        }
+        g.c.shard_faults += 1;
+        g.c.bytes_paged_in += bytes;
+        evict_until_fits(&mut g, bytes, self.budget);
+        if g.c.resident_bytes + bytes > self.budget && g.warned_oversized.insert(name.to_string())
+        {
+            log::warn!(
+                "shard {name:?} ({bytes} B) exceeds the residency budget \
+                 ({} B) even with everything evictable evicted; admitting over \
+                 budget (warned once; it will re-fault every pass)",
+                self.budget
+            );
+        }
+        insert(&mut g, name, data, bytes, false)
+    }
+
+    /// Speculatively cache a shard *only if* it fits the spare budget — a
+    /// prefetch must never evict demand-fetched shards. Returns whether the
+    /// shard was cached (either by this call or already resident).
+    pub fn admit_prefetch(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.slots.contains_key(name) {
+            return true;
+        }
+        if g.c.resident_bytes + bytes > self.budget {
+            return false;
+        }
+        g.c.shard_prefetches += 1;
+        g.c.bytes_paged_in += bytes;
+        insert(&mut g, name, data, bytes, false);
+        true
+    }
+
+    /// Admit a pinned (never evicted, not budget-governed) shard — the
+    /// always-hot set loaded at open.
+    pub fn admit_pinned(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> Arc<ShardData> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.slots.get(name) {
+            return Arc::clone(&slot.data);
+        }
+        g.c.bytes_paged_in += bytes;
+        insert(&mut g, name, data, bytes, true)
+    }
+
+    /// Whether a prefetch of `bytes` would be cached right now (spare
+    /// budget, no eviction). Racy by nature — callers use it to skip the
+    /// disk read, `admit_prefetch` re-checks under the lock.
+    pub fn fits_without_eviction(&self, bytes: usize) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.c.resident_bytes + bytes <= self.budget
+    }
+
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().slots.contains_key(name)
+    }
+
+    pub fn is_pinned(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().slots.get(name).map(|s| s.pinned).unwrap_or(false)
+    }
+
+    /// Counter snapshot (cheap clone under the lock).
+    pub fn counters(&self) -> ResidencyCounters {
+        self.inner.lock().unwrap().c.clone()
+    }
+}
+
+impl std::fmt::Debug for ResidencyManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let c = self.counters();
+        f.debug_struct("ResidencyManager")
+            .field("budget", &self.budget)
+            .field("counters", &c)
+            .finish()
+    }
+}
+
+fn insert(
+    g: &mut Inner,
+    name: &str,
+    data: Arc<ShardData>,
+    bytes: usize,
+    pinned: bool,
+) -> Arc<ShardData> {
+    g.clock += 1;
+    let slot = Slot { data: Arc::clone(&data), bytes, pinned, last_use: g.clock };
+    if pinned {
+        g.c.pinned_bytes += bytes;
+    } else {
+        g.c.resident_bytes += bytes;
+        g.c.peak_resident_bytes = g.c.peak_resident_bytes.max(g.c.resident_bytes);
+    }
+    g.slots.insert(name.to_string(), slot);
+    data
+}
+
+fn evict_until_fits(g: &mut Inner, incoming: usize, budget: usize) {
+    while g.c.resident_bytes + incoming > budget {
+        let victim = g
+            .slots
+            .iter()
+            .filter(|(_, s)| !s.pinned)
+            .min_by_key(|(_, s)| s.last_use)
+            .map(|(n, _)| n.clone());
+        let Some(victim) = victim else { break };
+        let slot = g.slots.remove(&victim).expect("victim exists");
+        g.c.resident_bytes -= slot.bytes;
+        g.c.shard_evictions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::proptest::check;
+
+    fn shard(v: f32) -> Arc<ShardData> {
+        Arc::new(ShardData::Fp32(Arc::new(Tensor::full(&[1], v))))
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let m = ResidencyManager::new(100);
+        m.admit_fault("a", shard(0.0), 40);
+        m.admit_fault("b", shard(1.0), 40);
+        m.get("a"); // b is now LRU
+        m.admit_fault("c", shard(2.0), 40);
+        assert!(m.is_resident("a"));
+        assert!(!m.is_resident("b"), "b was MRU-evicted instead of LRU");
+        assert!(m.is_resident("c"));
+        let c = m.counters();
+        assert_eq!(c.shard_evictions, 1);
+        assert_eq!(c.resident_bytes, 80);
+        assert!(c.peak_resident_bytes <= 100);
+    }
+
+    #[test]
+    fn pinned_never_evicted_and_not_budgeted() {
+        let m = ResidencyManager::new(50);
+        m.admit_pinned("pin", shard(9.0), 1000);
+        for i in 0..20 {
+            m.admit_fault(&format!("s{i}"), shard(i as f32), 30);
+        }
+        assert!(m.is_resident("pin"));
+        assert!(m.is_pinned("pin"));
+        let c = m.counters();
+        assert_eq!(c.pinned_bytes, 1000);
+        assert!(c.resident_bytes <= 50, "unpinned {} over budget", c.resident_bytes);
+    }
+
+    #[test]
+    fn prefetch_never_evicts() {
+        let m = ResidencyManager::new(100);
+        m.admit_fault("hot", shard(1.0), 90);
+        assert!(!m.fits_without_eviction(20));
+        assert!(!m.admit_prefetch("spec", shard(2.0), 20));
+        assert!(m.is_resident("hot"), "prefetch evicted a demand shard");
+        assert!(!m.is_resident("spec"));
+        assert!(m.admit_prefetch("small", shard(3.0), 10));
+        assert_eq!(m.counters().shard_prefetches, 1);
+    }
+
+    #[test]
+    fn racing_admits_deduplicate() {
+        let m = ResidencyManager::new(100);
+        let first = m.admit_fault("x", shard(1.0), 10);
+        let second = m.admit_fault("x", shard(2.0), 10);
+        assert!(Arc::ptr_eq(&first, &second));
+        let c = m.counters();
+        assert_eq!(c.shard_faults, 1);
+        assert_eq!(c.resident_bytes, 10);
+    }
+
+    #[test]
+    fn oversized_shard_admitted_over_budget() {
+        // refusing would deadlock serving; it must be evicted on next fault
+        let m = ResidencyManager::new(10);
+        m.admit_fault("huge", shard(1.0), 50);
+        assert!(m.is_resident("huge"));
+        assert_eq!(m.counters().resident_bytes, 50);
+        m.admit_fault("next", shard(2.0), 5);
+        assert!(!m.is_resident("huge"));
+        assert_eq!(m.counters().resident_bytes, 5);
+    }
+
+    // ---- ISSUE-3 satellite: the LRU/residency property test
+    #[test]
+    fn property_budget_and_pinning_invariants() {
+        check("residency invariants", 40, |rng| {
+            let n_shards = rng.range(2, 12);
+            let sizes: Vec<usize> = (0..n_shards).map(|_| rng.range(1, 64)).collect();
+            let max_size = *sizes.iter().max().unwrap();
+            // budget at least the largest shard, sometimes comfortably more
+            let budget = max_size + rng.below(128);
+            let m = ResidencyManager::new(budget);
+            let n_pinned = rng.below(3);
+            for p in 0..n_pinned {
+                m.admit_pinned(&format!("pin{p}"), shard(p as f32), rng.range(1, 64));
+            }
+            let accesses = rng.range(10, 120);
+            for _ in 0..accesses {
+                let i = rng.below(n_shards);
+                let name = format!("s{i}");
+                if m.get(&name).is_none() {
+                    m.admit_fault(&name, shard(i as f32), sizes[i]);
+                }
+                let c = m.counters();
+                // never exceed the budget (every shard fits by itself)
+                assert!(
+                    c.resident_bytes <= budget,
+                    "resident {} > budget {budget}",
+                    c.resident_bytes
+                );
+                assert!(c.peak_resident_bytes <= budget);
+                // pinned entries survive arbitrary traffic
+                for p in 0..n_pinned {
+                    assert!(m.is_resident(&format!("pin{p}")), "pin{p} evicted");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_ample_budget_never_evicts() {
+        check("budget >= payload ⇒ zero evictions", 25, |rng| {
+            let n_shards = rng.range(2, 10);
+            let sizes: Vec<usize> = (0..n_shards).map(|_| rng.range(1, 64)).collect();
+            let m = ResidencyManager::new(sizes.iter().sum());
+            for _ in 0..rng.range(10, 60) {
+                let i = rng.below(n_shards);
+                let name = format!("s{i}");
+                if m.get(&name).is_none() {
+                    m.admit_fault(&name, shard(i as f32), sizes[i]);
+                }
+            }
+            let c = m.counters();
+            assert_eq!(c.shard_evictions, 0, "evicted under an ample budget");
+            assert!(c.shard_faults <= n_shards, "re-faulted a resident shard");
+        });
+    }
+}

@@ -1,0 +1,87 @@
+//! Batched binary IO helpers shared by every on-disk format in the crate
+//! (`SQCKPT1` checkpoints, `SQQM0001` packed models, `SQSH0001` shards).
+//!
+//! The original writers emitted FP32 payloads one `f32::to_le_bytes` at a
+//! time — four-byte `write_all` calls that dominate save time on large FP32
+//! remainders even through a `BufWriter`. These helpers stage each tensor's
+//! payload through a single byte buffer so the OS sees one read/write per
+//! tensor.
+
+use std::io::{Read, Write};
+
+use crate::error::Result;
+
+/// Write `data` as little-endian FP32 in one `write_all`.
+pub fn write_f32_slice(f: &mut impl Write, data: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read `n` little-endian FP32 values in one `read_exact`.
+pub fn read_f32_vec(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+pub fn read_u8(f: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+pub fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32(f: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_slice_roundtrip() {
+        let vals = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE, -0.0];
+        let mut buf = Vec::new();
+        write_f32_slice(&mut buf, &vals).unwrap();
+        assert_eq!(buf.len(), vals.len() * 4);
+        let back = read_f32_vec(&mut &buf[..], vals.len()).unwrap();
+        // bit-exact, including the sign of -0.0
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn short_reads_error() {
+        let buf = [0u8; 7];
+        assert!(read_f32_vec(&mut &buf[..], 2).is_err());
+        assert!(read_u64(&mut &buf[..]).is_err());
+    }
+}

@@ -2,6 +2,7 @@
 //! rand / proptest, so these substrates are built in-crate).
 
 pub mod fastmath;
+pub mod io;
 pub mod json;
 pub mod proptest;
 pub mod rng;

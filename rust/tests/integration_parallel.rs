@@ -79,6 +79,7 @@ fn mixed_request_sizes_serve_correct_labels_on_shared_pool() {
             workers: 3, // three serving workers share ONE kernel pool
             queue_cap: 256,
             parallel: ParallelConfig::default(),
+            ..ServeConfig::default()
         },
     );
     let rxs: Vec<_> = texts.iter().map(|t| server.submit(t).unwrap()).collect();
@@ -139,6 +140,7 @@ fn quantized_forward_agrees_between_pool_and_serial_paths() {
         (0..b * cfg.max_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
     let ids = IntTensor::new(&[b, cfg.max_len], ids).unwrap();
     let mask = Tensor::full(&[b, cfg.max_len], 1.0);
-    let gap = reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask));
+    let gap =
+        reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask).unwrap());
     assert!(gap < 1e-3, "fused/parallel forward gap {gap}");
 }
