@@ -1,6 +1,13 @@
 //! Bench P0 (§Perf): microbenchmarks of the L3 hot paths that dominate the
-//! Table-1 sweep and the serving loop — blocked matmul, quantize/dequantize,
-//! 1-D k-means (fast vs generic), packing, and the BERT executor forward.
+//! Table-1 sweep and the serving loop — blocked matmul (scalar vs f32x8
+//! engines, serial vs pooled), the fused split-dequant matmul, quantize/
+//! dequantize, plane unpack, 1-D k-means (fast vs generic), and the BERT
+//! executor forward.
+//!
+//! Besides the human table, the engine rows merge into
+//! `BENCH_kernels.json` (shape, engine, ns/iter, GB/s) so the perf
+//! trajectory is tracked across PRs — acceptance: the SIMD engine beats
+//! the scalar engine on the pooled 512³ row and a fused split-dequant row.
 //!
 //! ```sh
 //! cargo bench --bench kernel_hotpath
@@ -14,8 +21,9 @@ use splitquant::clustering::kmeans1d::lloyd_fast;
 use splitquant::model::config::BertConfig;
 use splitquant::model::params::ParamStore;
 use splitquant::model::BertModel;
-use splitquant::parallel::{self, kernels, ParallelConfig};
+use splitquant::parallel::{self, kernels, KernelKind, ParallelConfig};
 use splitquant::quant::{QConfig, QTensor};
+use splitquant::report::bench_json::{merge_write, BenchRecord};
 use splitquant::report::Table;
 use splitquant::tensor::{ops, IntTensor, Tensor};
 use splitquant::util::rng::Rng;
@@ -34,31 +42,49 @@ fn main() {
     parallel::configure(ParallelConfig { threads: 8, ..ParallelConfig::default() });
     let mut rng = Rng::new(0);
     let mut t = Table::new("§Perf — L3 hot-path microbenchmarks", &["op", "time", "rate"]);
+    let mut json: Vec<BenchRecord> = Vec::new();
 
-    // ---- parallel kernel engine vs the serial kernel (512×512×512)
+    // ---- kernel engines on 512×512×512: {serial, pool×8} × {scalar, simd}
     {
         let (m, k, n) = (512usize, 512usize, 512usize);
+        let shape = format!("{m}x{k}x{n}");
         let a = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 0.0, 1.0, &mut rng);
+        let bytes = (m * k + k * n + m * n) * 4;
         let gflops = |d: std::time::Duration| 2.0 * (m * k * n) as f64 / d.as_secs_f64() / 1e9;
-        let ds = time_n(5, || {
-            std::hint::black_box(ops::matmul_serial(&a, &b));
-        });
+        let mut times = Vec::new();
+        for (engine, kind, pooled) in [
+            ("serial-scalar", KernelKind::Scalar, false),
+            ("serial-simd", KernelKind::Simd, false),
+            ("pool8-scalar", KernelKind::Scalar, true),
+            ("pool8-simd", KernelKind::Simd, true),
+        ] {
+            let d = time_n(5, || {
+                if pooled {
+                    std::hint::black_box(kernels::matmul_with(&a, &b, kind));
+                } else {
+                    std::hint::black_box(ops::matmul_serial_with(&a, &b, kind));
+                }
+            });
+            t.row(vec![
+                format!("matmul {shape} {engine}"),
+                format!("{d:.2?}"),
+                format!("{:.2} GFLOP/s", gflops(d)),
+            ]);
+            json.push(
+                BenchRecord::new("matmul", &shape, engine, d, bytes).with("gflops", gflops(d)),
+            );
+            times.push((engine, d));
+        }
+        let get = |e: &str| times.iter().find(|(n, _)| *n == e).unwrap().1.as_secs_f64();
         t.row(vec![
-            format!("matmul {m}x{k}x{n} serial"),
-            format!("{ds:.2?}"),
-            format!("{:.2} GFLOP/s", gflops(ds)),
-        ]);
-        let dp = time_n(5, || {
-            std::hint::black_box(kernels::matmul(&a, &b));
-        });
-        t.row(vec![
-            format!("matmul {m}x{k}x{n} pool x8"),
-            format!("{dp:.2?}"),
+            format!("matmul {shape} speedups"),
+            "-".into(),
             format!(
-                "{:.2} GFLOP/s — {:.1}x vs serial (acceptance: >= 3x)",
-                gflops(dp),
-                ds.as_secs_f64() / dp.as_secs_f64()
+                "pool8 {:.1}x vs serial (same engine); simd {:.2}x vs scalar \
+                 pooled (acceptance: pool >= 3x, simd > 1x)",
+                get("serial-scalar") / get("pool8-scalar"),
+                get("pool8-scalar") / get("pool8-simd"),
             ),
         ]);
     }
@@ -81,10 +107,11 @@ fn main() {
     }
 
     // ---- fused split-dequant matmul: tiles dequantized on the fly vs
-    //      materializing FP32 weights then running the serial kernel
+    //      materializing FP32 weights then running the serial kernel, and
+    //      the scalar vs f32x8 fused engines on a real Split layout
     {
-        use splitquant::model::qbert::QLinear;
         let (m, k, n) = (2048usize, 512usize, 512usize);
+        let shape = format!("{m}x{k}x{n}");
         let x = Tensor::randn(&[m, k], 0.0, 1.0, &mut rng);
         let w = Tensor::randn(&[k, n], 0.0, 0.1, &mut rng);
         let q = QTensor::quantize(&w, &QConfig::baseline(2)).unwrap();
@@ -97,15 +124,98 @@ fn main() {
             format!("{d_mat:.2?}"),
             "-".into(),
         ]);
-        let ql = QLinear::new(q).unwrap();
-        let d_fused = time_n(5, || {
-            std::hint::black_box(ql.matmul_fused(&x));
-        });
+        // streaming bytes of the fused kernel: x + codes (+cid) + out
+        let (codes, cid) = q.fused_planes().unwrap();
+        let bytes = m * k * 4 + codes.len() + cid.len() + m * n * 4;
+        let mut times = Vec::new();
+        for (engine, kind) in
+            [("pool8-scalar", KernelKind::Scalar), ("pool8-simd", KernelKind::Simd)]
+        {
+            let d = time_n(5, || {
+                std::hint::black_box(kernels::split_matmul_pooled_with(
+                    &x,
+                    q.shape(),
+                    &codes,
+                    &cid,
+                    q.params(),
+                    kind,
+                ));
+            });
+            t.row(vec![
+                format!("fused split matmul {shape} INT2 {engine}"),
+                format!("{d:.2?}"),
+                format!("{:.1}x vs dequant+serial", d_mat.as_secs_f64() / d.as_secs_f64()),
+            ]);
+            json.push(BenchRecord::new("fused-split-matmul", &shape, engine, d, bytes));
+            times.push(d);
+        }
         t.row(vec![
-            format!("fused split matmul {m}x{k}x{n} INT2"),
-            format!("{d_fused:.2?}"),
-            format!("{:.1}x vs dequant+serial", d_mat.as_secs_f64() / d_fused.as_secs_f64()),
+            format!("fused split matmul {shape} speedup"),
+            "-".into(),
+            format!(
+                "simd {:.2}x vs scalar pooled (acceptance: > 1x)",
+                times[0].as_secs_f64() / times[1].as_secs_f64()
+            ),
         ]);
+
+        // a Split-layout (cluster-id) fused row: 3 scale groups, 2-bit cid
+        // plane — the SplitQuant deployment shape
+        let groups = [
+            splitquant::quant::QParams::from_range(-0.05, 0.05, 2),
+            splitquant::quant::QParams::from_range(-0.5, 0.5, 2),
+            splitquant::quant::QParams::from_range(-4.0, 4.0, 2),
+        ];
+        let cid3: Vec<u8> = (0..k * n).map(|i| (i % 3) as u8).collect();
+        for (engine, kind) in
+            [("pool8-scalar", KernelKind::Scalar), ("pool8-simd", KernelKind::Simd)]
+        {
+            let d = time_n(5, || {
+                std::hint::black_box(kernels::split_matmul_pooled_with(
+                    &x,
+                    q.shape(),
+                    &codes,
+                    &cid3,
+                    &groups,
+                    kind,
+                ));
+            });
+            t.row(vec![
+                format!("fused split matmul {shape} INT2 3-cluster {engine}"),
+                format!("{d:.2?}"),
+                "-".into(),
+            ]);
+            json.push(BenchRecord::new(
+                "fused-split-matmul-3cluster",
+                &shape,
+                engine,
+                d,
+                m * k * 4 + codes.len() + cid3.len() + m * n * 4,
+            ));
+        }
+    }
+
+    // ---- plane unpack: the byte-LUT fast path feeding the fused kernels
+    {
+        let numel = 1 << 20;
+        let codes: Vec<i8> = (0..numel).map(|i| ((i % 4) as i8) - 2).collect();
+        for bits in [2u8, 4] {
+            let p = splitquant::tensor::packing::Packed::pack(&codes, bits).unwrap();
+            let d = time_n(20, || {
+                std::hint::black_box(p.unpack());
+            });
+            t.row(vec![
+                format!("unpack 1M INT{bits} (LUT)"),
+                format!("{d:.2?}"),
+                format!("{:.0} Melem/s", 1.048_576 / d.as_secs_f64()),
+            ]);
+            json.push(BenchRecord::new(
+                "plane-unpack",
+                &format!("1M-int{bits}"),
+                "lut",
+                d,
+                p.byte_size() + numel,
+            ));
+        }
     }
 
     // ---- quantize / dequantize a 1M-element tensor
@@ -191,4 +301,10 @@ fn main() {
 
     println!("{}", t.render());
     println!("{}", t.render_markdown());
+
+    let path = std::path::Path::new("BENCH_kernels.json");
+    match merge_write(path, &json) {
+        Ok(()) => println!("[kernel_hotpath] wrote {} records to {}", json.len(), path.display()),
+        Err(e) => eprintln!("[kernel_hotpath] could not write {}: {e}", path.display()),
+    }
 }

@@ -19,6 +19,7 @@ use splitquant::data::{emotion, HashTokenizer};
 use splitquant::model::config::BertConfig;
 use splitquant::model::params::ParamStore;
 use splitquant::quant::PackedModel;
+use splitquant::report::bench_json::{merge_write, BenchRecord};
 use splitquant::report::Table;
 use splitquant::runtime::Runtime;
 use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
@@ -58,6 +59,8 @@ fn paged_vs_resident() {
         &format!("S0 — paged vs resident quantized serving ({requests} requests/row)"),
         &["mode", "budget", "QPS", "p50", "p99", "faults", "evictions", "paged in"],
     );
+    let mut json: Vec<BenchRecord> = Vec::new();
+    let shape = format!("L{}-h{}-{}req", cfg.layers, cfg.hidden, requests);
     for budget_pct in [0usize, 100, 50, 25] {
         let resident = budget_pct == 0;
         let budget = pagable * budget_pct / 100;
@@ -92,6 +95,20 @@ fn paged_vs_resident() {
         }
         let wall = t0.elapsed();
         let m = server.shutdown();
+        let engine =
+            if resident { "resident".to_string() } else { format!("paged{budget_pct}") };
+        json.push(
+            BenchRecord::new("serving-s0", &shape, &engine, wall / requests as u32, {
+                // bytes one request streams on average: paged-in shard bytes
+                // amortized over the row's requests
+                m.bytes_paged_in / requests.max(1)
+            })
+            .with("qps", requests as f64 / wall.as_secs_f64())
+            .with("p50_us", m.latency.quantile_us(0.50) as f64)
+            .with("p99_us", m.latency.quantile_us(0.99) as f64)
+            .with("plane_decodes", m.plane_decodes as f64)
+            .with("plane_reuses", m.plane_reuses as f64),
+        );
         t.row(vec![
             if resident { "resident".into() } else { format!("paged {budget_pct}%") },
             if resident { "-".into() } else { format!("{budget}B") },
@@ -106,12 +123,18 @@ fn paged_vs_resident() {
     std::fs::remove_file(&shards).ok();
     println!("{}", t.render());
     println!("{}", t.render_markdown());
+    let path = std::path::Path::new("BENCH_kernels.json");
+    match merge_write(path, &json) {
+        Ok(()) => println!("[serving] wrote {} records to {}", json.len(), path.display()),
+        Err(e) => eprintln!("[serving] could not write {}: {e}", path.display()),
+    }
     println!(
         "shape expectation: QPS degrades gracefully as the budget shrinks (faults\n\
-         and evictions climb). At 100% nothing evicts (first-touch faults only),\n\
-         but paged rows still trail resident: the paged path unpacks the code/cid\n\
-         planes on every matmul — the CPU price of keeping only packed low-bit\n\
-         codes resident.\n"
+         and evictions climb). At 100% nothing evicts (first-touch faults only)\n\
+         and the plane cache turns repeat matmuls into reuses (plane_reuses ≫\n\
+         plane_decodes in BENCH_kernels.json); under tight budgets evicted\n\
+         shards re-decode on re-fault — the CPU price of keeping only packed\n\
+         low-bit codes resident.\n"
     );
 }
 

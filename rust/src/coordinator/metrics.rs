@@ -32,6 +32,13 @@ pub struct Metrics {
     pub shard_evictions: usize,
     /// total bytes paged in from the shard file (faults + prefetch + pins)
     pub bytes_paged_in: usize,
+    /// code/cid plane decodes on the paged hot path (paged executors only —
+    /// each is a full unpack of one shard's low-bit planes)
+    pub plane_decodes: usize,
+    /// plane decodes skipped because the shard was still resident and its
+    /// decoded planes were cached ([`crate::model::QuantizedBert`]'s plane
+    /// cache) — the paged-matmul fast path
+    pub plane_reuses: usize,
 }
 
 impl Default for Metrics {
@@ -49,6 +56,8 @@ impl Default for Metrics {
             shard_faults: 0,
             shard_evictions: 0,
             bytes_paged_in: 0,
+            plane_decodes: 0,
+            plane_reuses: 0,
         }
     }
 }
@@ -89,8 +98,12 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let paging = if self.shard_faults + self.shard_evictions > 0 {
             format!(
-                " faults={} evictions={} paged_in={}B",
-                self.shard_faults, self.shard_evictions, self.bytes_paged_in
+                " faults={} evictions={} paged_in={}B decodes={} reuses={}",
+                self.shard_faults,
+                self.shard_evictions,
+                self.bytes_paged_in,
+                self.plane_decodes,
+                self.plane_reuses
             )
         } else {
             String::new()

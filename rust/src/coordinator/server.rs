@@ -44,6 +44,14 @@ pub trait BatchExecutor: Send + Sync {
     fn residency(&self) -> Option<ResidencyCounters> {
         None
     }
+
+    /// `(plane_decodes, plane_reuses)` of the paged plane cache
+    /// ([`crate::model::QuantizedBert::plane_stats`]), `None` when this
+    /// executor never decodes planes at matmul time. Folded into
+    /// [`Metrics`] on read alongside the residency counters.
+    fn plane_stats(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// One compiled forward executable plus its staged parameter literals.
@@ -261,6 +269,10 @@ impl BatchExecutor for QuantExecutor {
 
     fn residency(&self) -> Option<ResidencyCounters> {
         self.model.paged().map(|p| p.counters())
+    }
+
+    fn plane_stats(&self) -> Option<(usize, usize)> {
+        self.model.paged().map(|_| self.model.plane_stats())
     }
 }
 
@@ -628,13 +640,17 @@ impl Drop for Server {
     }
 }
 
-/// Copy the executor's shard-paging counters (if any) into a metrics
-/// snapshot — residency state lives in the executor, not the server.
+/// Copy the executor's shard-paging and plane-cache counters (if any) into
+/// a metrics snapshot — that state lives in the executor, not the server.
 fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
     if let Some(c) = ex.residency() {
         m.shard_faults = c.shard_faults;
         m.shard_evictions = c.shard_evictions;
         m.bytes_paged_in = c.bytes_paged_in;
+    }
+    if let Some((decodes, reuses)) = ex.plane_stats() {
+        m.plane_decodes = decodes;
+        m.plane_reuses = reuses;
     }
 }
 

@@ -11,11 +11,13 @@
 //! executor actually realizes that saving at inference time instead of
 //! re-materializing FP32 copies.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 
 use crate::error::Result;
 use crate::quant::QTensor;
-use crate::shardstore::PagedModel;
+use crate::shardstore::{PagedModel, ShardData};
 use crate::splitquant::QuantizedModel;
 use crate::tensor::ops;
 use crate::tensor::{IntTensor, Tensor};
@@ -88,15 +90,105 @@ pub(crate) fn is_fused_linear(name: &str, shape: &[usize]) -> bool {
     shape.len() == 2 && !name.starts_with("embeddings.")
 }
 
+/// Decoded code/cid planes of one paged shard — what the fused kernel
+/// actually consumes.
+struct Planes {
+    codes: Vec<i8>,
+    cid: Vec<u8>,
+}
+
+/// One cached decode. The entry holds a [`Weak`] to the shard allocation
+/// it was decoded from: if the residency manager evicted (and a later
+/// fault re-read) the shard, the pointer identity changes and the stale
+/// planes are re-decoded — the cache can never serve planes for bytes that
+/// left residency.
+struct PlaneEntry {
+    shard: Weak<ShardData>,
+    planes: Arc<Planes>,
+}
+
+/// Fix for the paged hot path re-unpacking planes on every matmul: decoded
+/// planes keyed by shard name + allocation identity, so repeated matmuls
+/// (and repeated requests) against a still-resident shard reuse one decode.
+///
+/// The cache's lifetime policy **is** the residency manager's: entries
+/// whose shard allocation has been dropped (dead `Weak`) are swept on
+/// every miss, so decoded planes exist only for resident shards — no
+/// second eviction policy to mis-tune, and no cyclic-LRU thrash when the
+/// execution order is longer than a fixed cap. Memory therefore tracks the
+/// residency budget scaled by the unpack ratio (≈ 2 bytes/element decoded
+/// vs ~0.5 packed at INT2+cid), the same ratio the fully-resident backend
+/// pays for *all* linears up front. Decode/reuse counts surface in serving
+/// [`crate::coordinator::Metrics`] via `plane_stats`.
+///
+/// The cache is per-executor, not per-`PagedModel`: replicas share packed
+/// shard bytes (one residency manager) but decode independently — decoded
+/// planes are working state, not model state.
+struct PlaneCache {
+    map: Mutex<HashMap<String, PlaneEntry>>,
+    decodes: AtomicUsize,
+    reuses: AtomicUsize,
+}
+
+impl PlaneCache {
+    fn new() -> PlaneCache {
+        PlaneCache {
+            map: Mutex::new(HashMap::new()),
+            decodes: AtomicUsize::new(0),
+            reuses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Planes for `name` as currently materialized in `shard`: reuse the
+    /// cached decode when the shard allocation is unchanged, else decode
+    /// (outside the lock — workers decoding different layers don't
+    /// serialize) and cache. A racing decode of the same shard keeps the
+    /// first inserted entry.
+    fn get(&self, name: &str, shard: &Arc<ShardData>, q: &QTensor) -> Result<Arc<Planes>> {
+        {
+            let map = self.map.lock().unwrap();
+            if let Some(e) = map.get(name) {
+                if e.shard.upgrade().is_some_and(|s| Arc::ptr_eq(&s, shard)) {
+                    self.reuses.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Arc::clone(&e.planes));
+                }
+            }
+        }
+        let (codes, cid) = q.fused_planes()?;
+        let planes = Arc::new(Planes { codes, cid });
+        self.decodes.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        if let Some(e) = map.get(name) {
+            // another worker decoded the same shard while we did — keep one
+            if e.shard.upgrade().is_some_and(|s| Arc::ptr_eq(&s, shard)) {
+                return Ok(Arc::clone(&e.planes));
+            }
+        }
+        // drop planes of evicted shards (their Weak is dead) — the sweep
+        // that keeps decoded bytes proportional to *resident* shards
+        map.retain(|_, e| e.shard.strong_count() > 0);
+        map.insert(
+            name.to_string(),
+            PlaneEntry { shard: Arc::downgrade(shard), planes: Arc::clone(&planes) },
+        );
+        Ok(planes)
+    }
+
+    /// `(decodes, reuses)` so far.
+    fn stats(&self) -> (usize, usize) {
+        (self.decodes.load(Ordering::Relaxed), self.reuses.load(Ordering::Relaxed))
+    }
+}
+
 /// Where the quantized linear weights live during execution.
 enum Linears {
     /// All fused linears resident in their unpacked deployment form.
     Resident(BTreeMap<String, QLinear>),
     /// Packed shards paged in on demand under a byte budget
     /// ([`crate::shardstore`]). The packed [`QTensor`] is the resident
-    /// form; the code/cid planes are unpacked per matmul, trading CPU for
-    /// keeping only low-bit codes in RAM.
-    Paged(PagedModel),
+    /// form; the code/cid planes decode through the [`PlaneCache`], so
+    /// repeated matmuls against a still-resident shard pay one decode.
+    Paged { model: PagedModel, planes: PlaneCache },
 }
 
 /// BERT-Tiny with quantized linear weights executed fused; embeddings and
@@ -162,7 +254,11 @@ impl QuantizedBert {
             }
             fp32.push_shared(name, t);
         }
-        Ok(QuantizedBert { cfg, fp32, linears: Linears::Paged(paged) })
+        Ok(QuantizedBert {
+            cfg,
+            fp32,
+            linears: Linears::Paged { model: paged, planes: PlaneCache::new() },
+        })
     }
 
     /// `Err` only on the paged backend: a shard fault can fail on IO or an
@@ -174,13 +270,31 @@ impl QuantizedBert {
                 Some(q) => q.matmul_fused(x),
                 None => ops::matmul(x, self.fp32.get(name)?),
             },
-            Linears::Paged(paged) => {
-                if paged.is_pagable(name) {
-                    let shard = paged.fetch_quant(name)?;
+            Linears::Paged { model, planes } => {
+                if model.is_pagable(name) {
+                    let shard = model.fetch_quant(name)?;
                     let q = shard.as_quant().expect("fetch_quant returned quantized");
+                    // shard shapes come from disk: a stale/corrupt file must
+                    // surface as the documented Err, not a kernel panic
+                    if x.shape()[1] != q.shape()[0] {
+                        return Err(crate::error::Error::Quant(format!(
+                            "paged shard {name:?}: activations {:?} do not \
+                             match weights {:?}",
+                            x.shape(),
+                            q.shape()
+                        )));
+                    }
                     // same planes, same kernel as QLinear::matmul_fused —
-                    // logits stay byte-identical to the resident path
-                    q.matmul_fused(x)?
+                    // logits stay byte-identical to the resident path; the
+                    // plane cache only skips re-decoding them
+                    let p = planes.get(name, &shard, q)?;
+                    crate::parallel::kernels::split_matmul(
+                        x,
+                        q.shape(),
+                        &p.codes,
+                        &p.cid,
+                        q.params(),
+                    )
                 } else {
                     ops::matmul(x, self.fp32.get(name)?)
                 }
@@ -275,7 +389,7 @@ impl QuantizedBert {
             Linears::Resident(qlinears) => {
                 qlinears.values().map(|q| q.resident_bytes()).sum()
             }
-            Linears::Paged(paged) => paged.counters().resident_bytes,
+            Linears::Paged { model, .. } => model.counters().resident_bytes,
         }
     }
 
@@ -285,14 +399,14 @@ impl QuantizedBert {
             Linears::Resident(qlinears) => {
                 qlinears.values().map(|q| q.shape().iter().product::<usize>() * 4).sum()
             }
-            Linears::Paged(paged) => paged.fp32_equivalent_bytes(),
+            Linears::Paged { model, .. } => model.fp32_equivalent_bytes(),
         }
     }
 
     pub fn num_quantized_linears(&self) -> usize {
         match &self.linears {
             Linears::Resident(qlinears) => qlinears.len(),
-            Linears::Paged(paged) => paged.pagable().len(),
+            Linears::Paged { model, .. } => model.pagable().len(),
         }
     }
 
@@ -306,7 +420,19 @@ impl QuantizedBert {
     pub fn paged(&self) -> Option<&PagedModel> {
         match &self.linears {
             Linears::Resident(_) => None,
-            Linears::Paged(p) => Some(p),
+            Linears::Paged { model, .. } => Some(model),
+        }
+    }
+
+    /// `(plane_decodes, plane_reuses)` of the paged plane cache — how often
+    /// a matmul had to unpack the code/cid planes vs reusing a cached
+    /// decode. `(0, 0)` on the resident backend (planes are decoded once at
+    /// construction there). Folded into serving
+    /// [`crate::coordinator::Metrics`].
+    pub fn plane_stats(&self) -> (usize, usize) {
+        match &self.linears {
+            Linears::Resident(_) => (0, 0),
+            Linears::Paged { planes, .. } => planes.stats(),
         }
     }
 }
@@ -415,6 +541,50 @@ mod tests {
         assert!(c.shard_evictions > 0, "half-budget forward never evicted");
         assert!(c.resident_bytes <= budget);
         assert!(c.peak_resident_bytes <= budget);
+    }
+
+    #[test]
+    fn paged_plane_cache_reuses_decodes_within_residency() {
+        use crate::shardstore::{PagedConfig, PagedModel};
+        // 1 layer ⇒ 8 pagable linears (attn q/k/v/out, ffn in/out, pooler,
+        // classifier); with an unbounded budget every shard stays resident,
+        // so the second forward must reuse every decode instead of
+        // re-unpacking the planes per matmul
+        let cfg = BertConfig {
+            vocab_size: 128,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 10,
+            num_classes: 4,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(12);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = default_quantizable(&store);
+        let (_, qm) = quantize_store(&store, &q, &SplitQuantConfig::new(2)).unwrap();
+        let pm = crate::quant::PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_qbert_planes.sqsh");
+        pm.save_sharded(&path).unwrap();
+        let paged = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        let qbert = QuantizedBert::from_paged(cfg.clone(), paged).unwrap();
+        std::fs::remove_file(&path).ok();
+        let nlin = qbert.num_quantized_linears();
+        assert_eq!(nlin, 8);
+
+        let (ids, mask) = batch(&cfg, 2, 4);
+        let a = qbert.forward(&ids, &mask).unwrap();
+        let (d1, r1) = qbert.plane_stats();
+        assert_eq!(d1, nlin, "first forward decodes each linear once");
+        assert_eq!(r1, 0);
+        let b = qbert.forward(&ids, &mask).unwrap();
+        let (d2, r2) = qbert.plane_stats();
+        assert_eq!(d2, nlin, "still-resident shards must not re-decode");
+        assert_eq!(r2, nlin, "second forward reuses every decode");
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "cached planes changed the logits");
+        }
     }
 
     #[test]

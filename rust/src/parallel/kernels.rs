@@ -8,6 +8,16 @@
 //! is bit-identical to the serial one — property-tested below, with a 1e-5
 //! tolerance to keep the contract honest if the inner loops ever diverge.
 //!
+//! Two micro-kernel families execute those chunks
+//! ([`crate::parallel::KernelKind`], default [`KernelKind::Simd`] when the
+//! `simd` feature is compiled in): the scalar quad kernels, and the
+//! explicit f32x8 tile kernels from [`crate::tensor::simd`] — packed-B
+//! panels + register accumulation for the plain matmul, 8-lane in-register
+//! dequant for the fused tiles. The families are **bit-identical** (same
+//! per-element IEEE op sequence), so engine choice never changes results;
+//! the remainder-torture tests below assert exact equality across
+//! serial/pooled × scalar/SIMD.
+//!
 //! The fused split-dequant matmul is the Rust twin of the L1 `split_matmul`
 //! Pallas kernel: weight tiles are reconstructed `w = (q − zp)·(1/s)` from
 //! int codes + cluster ids into a per-worker scratch tile (cache-resident,
@@ -19,7 +29,7 @@ use crate::quant::QParams;
 use crate::tensor::ops;
 use crate::tensor::Tensor;
 
-use super::{config, global, should_parallelize};
+use super::{config, global, kernel_kind, should_parallelize, KernelKind};
 
 /// Rows per task: oversplit by 4× the thread count so the zero-skip
 /// fast path (padded batch rows cost almost nothing) load-balances.
@@ -27,9 +37,17 @@ fn rows_per_task(rows: usize, threads: usize) -> usize {
     rows.div_ceil(threads.max(1) * 4).max(1)
 }
 
-/// `C = A(m×k) @ B(k×n)` on the worker pool, unconditionally parallel.
-/// Use [`ops::matmul`] for the size-aware dispatching entry point.
+/// `C = A(m×k) @ B(k×n)` on the worker pool, unconditionally parallel,
+/// under the process-wide kernel choice. Use [`ops::matmul`] for the
+/// size-aware dispatching entry point.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_with(a, b, kernel_kind())
+}
+
+/// Pooled matmul with an explicit micro-kernel choice (benches / engine
+/// agreement tests). On the SIMD engine B is packed into 8-wide panels
+/// **once**, then shared immutably by every row-chunk task.
+pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
@@ -40,6 +58,22 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let pool = global();
     let rows_per = rows_per_task(m, pool.threads());
     let (ad, bd) = (a.data(), b.data());
+    #[cfg(feature = "simd")]
+    if kind.effective() == KernelKind::Simd {
+        let pb = crate::tensor::simd::PackedB::pack(bd, k, n);
+        let pb = &pb;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let r0 = ci * rows_per;
+            let rows = r0..r0 + chunk.len() / n;
+            tasks.push(Box::new(move || {
+                crate::tensor::simd::matmul_rows_simd(ad, pb, chunk, rows)
+            }));
+        }
+        pool.scope(tasks);
+        return Tensor::new(&[m, n], out).unwrap();
+    }
+    let _ = kind; // scalar fallback when the simd feature is compiled out
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
         let r0 = ci * rows_per;
@@ -82,8 +116,9 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// Fused split-dequant matmul: `y = x @ dq(W)` where `W` lives as int
 /// codes (+ optional per-element cluster ids selecting a `QParams` group).
-/// Dispatches serial/parallel by size; `wshape` is `[k, n]`. An empty
-/// `cid` means a single param group (per-tensor layout).
+/// Dispatches serial/parallel by size under the process-wide kernel
+/// choice; `wshape` is `[k, n]`. An empty `cid` means a single param group
+/// (per-tensor layout).
 ///
 /// The pooled path requires `m ≫ threads`: every task re-dequantizes the
 /// W tiles it streams through, so with T threads the reconstruction
@@ -97,6 +132,18 @@ pub fn split_matmul(
     cid: &[u8],
     params: &[QParams],
 ) -> Tensor {
+    split_matmul_with(x, wshape, codes, cid, params, kernel_kind())
+}
+
+/// [`split_matmul`] with an explicit micro-kernel choice.
+pub fn split_matmul_with(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    kind: KernelKind,
+) -> Tensor {
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let (k2, n) = (wshape[0], wshape[1]);
     assert_eq!(k, k2, "fused matmul inner dims {k} vs {k2}");
@@ -104,9 +151,9 @@ pub fn split_matmul(
     assert!(cid.is_empty() || cid.len() == k * n, "fused matmul cid len");
     assert!(!params.is_empty(), "fused matmul needs at least one param group");
     if should_parallelize(2 * m * k * n) && m >= 8 * super::effective_threads() {
-        split_matmul_pooled(x, wshape, codes, cid, params)
+        split_matmul_pooled_with(x, wshape, codes, cid, params, kind)
     } else {
-        split_matmul_serial(x, wshape, codes, cid, params)
+        split_matmul_serial_with(x, wshape, codes, cid, params, kind)
     }
 }
 
@@ -118,12 +165,24 @@ pub fn split_matmul_serial(
     cid: &[u8],
     params: &[QParams],
 ) -> Tensor {
+    split_matmul_serial_with(x, wshape, codes, cid, params, kernel_kind())
+}
+
+/// [`split_matmul_serial`] with an explicit micro-kernel choice.
+pub fn split_matmul_serial_with(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    kind: KernelKind,
+) -> Tensor {
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let n = wshape[1];
     let group = DequantGroups::new(params);
     let mut out = vec![0.0f32; m * n];
     if m * n > 0 {
-        split_matmul_rows(x.data(), codes, cid, &group, &mut out, 0..m, k, n);
+        split_matmul_rows(x.data(), codes, cid, &group, &mut out, 0..m, k, n, kind);
     }
     Tensor::new(&[m, n], out).unwrap()
 }
@@ -135,6 +194,18 @@ pub fn split_matmul_pooled(
     codes: &[i8],
     cid: &[u8],
     params: &[QParams],
+) -> Tensor {
+    split_matmul_pooled_with(x, wshape, codes, cid, params, kernel_kind())
+}
+
+/// [`split_matmul_pooled`] with an explicit micro-kernel choice.
+pub fn split_matmul_pooled_with(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    kind: KernelKind,
 ) -> Tensor {
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let n = wshape[1];
@@ -155,7 +226,7 @@ pub fn split_matmul_pooled(
         let r0 = ci * rows_per;
         let rows = r0..r0 + chunk.len() / n;
         tasks.push(Box::new(move || {
-            split_matmul_rows(xd, codes, cid, groups, chunk, rows, k, n);
+            split_matmul_rows(xd, codes, cid, groups, chunk, rows, k, n, kind);
         }));
     }
     pool.scope(tasks);
@@ -178,13 +249,37 @@ impl DequantGroups {
     }
 }
 
-/// Inner fused kernel for one output row chunk. Tiles W as
+/// Inner fused kernel dispatch for one output row chunk: scalar quad
+/// kernel or the f32x8 tile kernel, chosen per call. Both share the exact
+/// tiling (`tile_k × tile_n`, `tile_k` a multiple of 4) and per-element
+/// op order, so the choice never changes bits.
+#[allow(clippy::too_many_arguments)]
+fn split_matmul_rows(
+    xd: &[f32],
+    codes: &[i8],
+    cid: &[u8],
+    groups: &DequantGroups,
+    out_chunk: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    kind: KernelKind,
+) {
+    #[cfg(feature = "simd")]
+    if kind.effective() == KernelKind::Simd {
+        return split_matmul_rows_simd(xd, codes, cid, groups, out_chunk, rows, k, n);
+    }
+    let _ = kind;
+    split_matmul_rows_scalar(xd, codes, cid, groups, out_chunk, rows, k, n)
+}
+
+/// Scalar fused kernel for one output row chunk. Tiles W as
 /// `tile_k × tile_n`, dequantizing each tile into a worker-local scratch
 /// buffer before streaming all chunk rows through it. `tile_k` is a
 /// multiple of 4, so the k-quad boundaries (and the zero-skip over padded
 /// activation rows) line up exactly with the serial kernel's unroll.
 #[allow(clippy::too_many_arguments)]
-fn split_matmul_rows(
+fn split_matmul_rows_scalar(
     xd: &[f32],
     codes: &[i8],
     cid: &[u8],
@@ -253,6 +348,141 @@ fn split_matmul_rows(
                         *o += av * bv;
                     }
                 }
+            }
+            k0 += kt;
+        }
+        n0 += nt;
+    }
+}
+
+/// f32x8 fused kernel for one output row chunk — same tiling as
+/// [`split_matmul_rows_scalar`], with two differences that keep every bit
+/// identical while cutting memory traffic:
+///
+/// * tile dequant runs 8 lanes per step in registers: codes widen
+///   `i8 → f32x8`, then one `(q − zp) · inv` vector expression (per-tensor:
+///   splatted constants; split layout: per-lane gather of the cluster's
+///   scale/zero-point — fed by the word-at-a-time LUT unpack in
+///   [`crate::tensor::packing`]);
+/// * the FMA sweeps 8-wide C strips with register accumulation (strip
+///   loaded once per k-tile, not re-read/re-written every quad), with the
+///   scratch column strip hot across all chunk rows.
+#[cfg(feature = "simd")]
+#[allow(clippy::too_many_arguments)]
+fn split_matmul_rows_simd(
+    xd: &[f32],
+    codes: &[i8],
+    cid: &[u8],
+    groups: &DequantGroups,
+    out_chunk: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    use crate::tensor::simd::{F32x8, LANES};
+    let cfg = config();
+    let tk = (cfg.tile_k.max(4) / 4) * 4;
+    let tn = cfg.tile_n.max(8).min(n.max(1));
+    let mut scratch = vec![0.0f32; tk * tn];
+    let per_tensor = cid.is_empty();
+    let (i0, z0) = (groups.inv[0], groups.zp[0]);
+    let mut n0 = 0;
+    while n0 < n {
+        let nt = tn.min(n - n0);
+        let w8 = nt - nt % LANES;
+        let mut k0 = 0;
+        while k0 < k {
+            let kt = tk.min(k - k0);
+            // ---- dequantize the W tile, 8 lanes per step
+            for kk in 0..kt {
+                let wrow = (k0 + kk) * n + n0;
+                let srow = &mut scratch[kk * nt..(kk + 1) * nt];
+                if per_tensor {
+                    let (zv, iv) = (F32x8::splat(z0), F32x8::splat(i0));
+                    let mut j = 0;
+                    while j < w8 {
+                        let q = F32x8::from_i8(&codes[wrow + j..wrow + j + LANES]);
+                        q.sub(zv).mul(iv).store(&mut srow[j..j + LANES]);
+                        j += LANES;
+                    }
+                    for (j, s) in srow.iter_mut().enumerate().skip(w8) {
+                        *s = (codes[wrow + j] as f32 - z0) * i0;
+                    }
+                } else {
+                    let mut j = 0;
+                    while j < w8 {
+                        let mut zp = [0.0f32; LANES];
+                        let mut inv = [0.0f32; LANES];
+                        let ids = &cid[wrow + j..wrow + j + LANES];
+                        for ((z, v), &c) in zp.iter_mut().zip(&mut inv).zip(ids) {
+                            *z = groups.zp[c as usize];
+                            *v = groups.inv[c as usize];
+                        }
+                        let q = F32x8::from_i8(&codes[wrow + j..wrow + j + LANES]);
+                        q.sub(F32x8::from_array(zp))
+                            .mul(F32x8::from_array(inv))
+                            .store(&mut srow[j..j + LANES]);
+                        j += LANES;
+                    }
+                    for (j, s) in srow.iter_mut().enumerate().skip(w8) {
+                        let c = cid[wrow + j] as usize;
+                        *s = (codes[wrow + j] as f32 - groups.zp[c]) * groups.inv[c];
+                    }
+                }
+            }
+            // ---- FMA: 8-wide C strip outer, rows inner (the kt×8 scratch
+            //      column strip stays L1-hot across every chunk row)
+            let k4 = kt - kt % 4;
+            let mut j = 0;
+            while j < nt {
+                let w = LANES.min(nt - j);
+                for (ri, i) in rows.clone().enumerate() {
+                    let arow = &xd[i * k + k0..i * k + k0 + kt];
+                    let ostrip = &mut out_chunk[ri * n + n0 + j..ri * n + n0 + j + w];
+                    let mut acc = if w == LANES {
+                        F32x8::load(ostrip)
+                    } else {
+                        F32x8::load_partial(ostrip)
+                    };
+                    let strip = |kk: usize| {
+                        let s = &scratch[kk * nt + j..kk * nt + j + w];
+                        if w == LANES {
+                            F32x8::load(s)
+                        } else {
+                            F32x8::load_partial(s)
+                        }
+                    };
+                    let mut kk = 0;
+                    while kk < k4 {
+                        let (a0, a1, a2, a3) =
+                            (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                        if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                            kk += 4;
+                            continue; // same zero-skip as the scalar quad
+                        }
+                        // scalar association order: ((a0·b0 + a1·b1) + a2·b2) + a3·b3
+                        let t = F32x8::splat(a0)
+                            .mul(strip(kk))
+                            .add(F32x8::splat(a1).mul(strip(kk + 1)))
+                            .add(F32x8::splat(a2).mul(strip(kk + 2)))
+                            .add(F32x8::splat(a3).mul(strip(kk + 3)));
+                        acc = acc.add(t);
+                        kk += 4;
+                    }
+                    for kk in k4..kt {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        acc = acc.add(F32x8::splat(av).mul(strip(kk)));
+                    }
+                    if w == LANES {
+                        acc.store(ostrip);
+                    } else {
+                        acc.store_partial(ostrip);
+                    }
+                }
+                j += LANES;
             }
             k0 += kt;
         }
@@ -385,17 +615,163 @@ mod tests {
             zero_some_rows(&mut x, rng);
             let (codes, cid, params) = rand_qweight(rng, k, n, bits);
             let want = reference_fused(&x, k, n, &codes, &cid, &params);
-            for got in [
-                split_matmul_serial(&x, &[k, n], &codes, &cid, &params),
-                split_matmul_pooled(&x, &[k, n], &codes, &cid, &params),
-            ] {
-                assert!(
-                    got.max_abs_diff(&want) <= 1e-5,
-                    "gap {} at {m}x{k}x{n} INT{bits}",
-                    got.max_abs_diff(&want)
-                );
+            for kind in [KernelKind::Scalar, KernelKind::Simd] {
+                for got in [
+                    split_matmul_serial_with(&x, &[k, n], &codes, &cid, &params, kind),
+                    split_matmul_pooled_with(&x, &[k, n], &codes, &cid, &params, kind),
+                ] {
+                    assert!(
+                        got.max_abs_diff(&want) <= 1e-5,
+                        "gap {} at {m}x{k}x{n} INT{bits} {kind:?}",
+                        got.max_abs_diff(&want)
+                    );
+                }
             }
         });
+    }
+
+    #[test]
+    fn property_fused_engines_are_bit_identical() {
+        // the contract the SIMD tile kernel is built on: same IEEE op
+        // sequence per element ⇒ exact equality, not tolerance
+        check("fused SIMD == scalar == serial (exact)", 40, |rng| {
+            let m = rng.range(1, 24);
+            let k = rng.range(1, 70);
+            let n = rng.range(1, 70);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let mut x = rand_tensor(rng, m, k);
+            zero_some_rows(&mut x, rng);
+            let (codes, cid, params) = rand_qweight(rng, k, n, bits);
+            let run = |pooled: bool, kind: KernelKind| {
+                if pooled {
+                    split_matmul_pooled_with(&x, &[k, n], &codes, &cid, &params, kind)
+                } else {
+                    split_matmul_serial_with(&x, &[k, n], &codes, &cid, &params, kind)
+                }
+            };
+            let base = run(false, KernelKind::Scalar);
+            for (label, pooled, kind) in [
+                ("serial-simd", false, KernelKind::Simd),
+                ("pooled-scalar", true, KernelKind::Scalar),
+                ("pooled-simd", true, KernelKind::Simd),
+            ] {
+                let got = run(pooled, kind);
+                assert_eq!(base.data(), got.data(), "{label} at {m}x{k}x{n} INT{bits}");
+            }
+        });
+    }
+
+    #[test]
+    fn remainder_torture_all_engines_exact() {
+        // ragged N/K remainders around the lane (8) and quad (4) widths,
+        // plus the tile boundaries — every engine must agree exactly
+        let mut rng = Rng::new(23);
+        let dims = [1usize, 7, 8, 9, 63, 64, 65];
+        for &k in &dims {
+            for &n in &dims {
+                for m in [1usize, 5] {
+                    let mut x = rand_tensor(&mut rng, m, k);
+                    zero_some_rows(&mut x, &mut rng);
+                    let b = rand_tensor(&mut rng, k, n);
+                    let base = ops::matmul_serial_with(&x, &b, KernelKind::Scalar);
+                    for got in [
+                        ops::matmul_serial_with(&x, &b, KernelKind::Simd),
+                        matmul_with(&x, &b, KernelKind::Scalar),
+                        matmul_with(&x, &b, KernelKind::Simd),
+                    ] {
+                        assert_eq!(base.data(), got.data(), "matmul {m}x{k}x{n}");
+                    }
+                    let (codes, cid, params) = rand_qweight(&mut rng, k, n, 4);
+                    let fbase = split_matmul_serial_with(
+                        &x, &[k, n], &codes, &cid, &params, KernelKind::Scalar,
+                    );
+                    for kind in [KernelKind::Scalar, KernelKind::Simd] {
+                        for got in [
+                            split_matmul_serial_with(&x, &[k, n], &codes, &cid, &params, kind),
+                            split_matmul_pooled_with(&x, &[k, n], &codes, &cid, &params, kind),
+                        ] {
+                            assert_eq!(fbase.data(), got.data(), "fused {m}x{k}x{n} {kind:?}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torture_empty_rows_and_degenerate_clusters() {
+        let mut rng = Rng::new(31);
+        let (k, n) = (65usize, 9usize);
+
+        // all-zero activations (every quad takes the zero-skip)
+        let x0 = Tensor::zeros(&[3, k]);
+        // zero rows (m = 0)
+        let xe = Tensor::new(&[0, k], vec![]).unwrap();
+        let (codes, _, _) = rand_qweight(&mut rng, k, n, 4);
+
+        // single-cluster split: cid all zeros, one param group — must match
+        // the per-tensor layout (empty cid) bit for bit
+        let p = QParams::from_range(-0.7, 0.9, 4);
+        let cid0 = vec![0u8; k * n];
+        // empty cluster: three groups, ids only ever use {0, 2}
+        let params3 =
+            vec![p, QParams::from_range(-2.0, 2.0, 4), QParams::from_range(-0.1, 0.1, 4)];
+        let cid_gap: Vec<u8> = (0..k * n).map(|i| if i % 3 == 0 { 2 } else { 0 }).collect();
+
+        for x in [&x0, &xe] {
+            let per_tensor =
+                split_matmul_serial_with(x, &[k, n], &codes, &[], &[p], KernelKind::Scalar);
+            for kind in [KernelKind::Scalar, KernelKind::Simd] {
+                let single = split_matmul_serial_with(x, &[k, n], &codes, &cid0, &[p], kind);
+                assert_eq!(per_tensor.data(), single.data(), "single-cluster {kind:?}");
+                let gap_ser =
+                    split_matmul_serial_with(x, &[k, n], &codes, &cid_gap, &params3, kind);
+                let gap_pool =
+                    split_matmul_pooled_with(x, &[k, n], &codes, &cid_gap, &params3, kind);
+                assert_eq!(gap_ser.data(), gap_pool.data(), "empty-cluster {kind:?}");
+            }
+        }
+
+        // a real x through the empty-cluster layout, against the dequant
+        // reference
+        let x = rand_tensor(&mut rng, 4, k);
+        let want = reference_fused(&x, k, n, &codes, &cid_gap, &params3);
+        for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            let got = split_matmul_serial_with(&x, &[k, n], &codes, &cid_gap, &params3, kind);
+            assert!(got.max_abs_diff(&want) <= 1e-5, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn all_qlayout_variants_agree_across_engines() {
+        use crate::quant::{QConfig, QTensor};
+        let mut rng = Rng::new(17);
+        let x = rand_tensor(&mut rng, 6, 24);
+
+        // PerTensor and Split run the fused kernels directly
+        let w = Tensor::randn(&[24, 18], 0.0, 0.5, &mut rng);
+        let qt = QTensor::quantize(&w, &QConfig::baseline(4)).unwrap();
+        let (codes, cid) = qt.fused_planes().unwrap();
+        let base =
+            split_matmul_serial_with(&x, qt.shape(), &codes, &cid, qt.params(), KernelKind::Scalar);
+        let simd =
+            split_matmul_serial_with(&x, qt.shape(), &codes, &cid, qt.params(), KernelKind::Simd);
+        assert_eq!(base.data(), simd.data(), "PerTensor");
+
+        let (codes, cid, params) = rand_qweight(&mut rng, 24, 18, 2);
+        if !cid.is_empty() {
+            let b = split_matmul_serial_with(&x, &[24, 18], &codes, &cid, &params, KernelKind::Scalar);
+            let s = split_matmul_serial_with(&x, &[24, 18], &codes, &cid, &params, KernelKind::Simd);
+            assert_eq!(b.data(), s.data(), "Split");
+        }
+
+        // PerChannel is rejected by the fused path; its dequantized weights
+        // still must agree across the plain matmul engines
+        let qc = QTensor::quantize(&w, &QConfig::per_channel(4, 1)).unwrap();
+        let dq = qc.dequantize();
+        let b = ops::matmul_serial_with(&x, &dq, KernelKind::Scalar);
+        let s = ops::matmul_serial_with(&x, &dq, KernelKind::Simd);
+        assert_eq!(b.data(), s.data(), "PerChannel (dequantized)");
     }
 
     #[test]

@@ -30,6 +30,47 @@ use std::sync::OnceLock;
 
 pub use pool::WorkerPool;
 
+/// Which micro-kernel family the engine executes.
+///
+/// The two families are **bit-identical** (the SIMD kernels replay the
+/// scalar kernels' exact IEEE operation sequence per output element — see
+/// [`crate::tensor::simd`]), so this is purely a performance knob. `Simd`
+/// silently degrades to `Scalar` when the crate is built without the
+/// `simd` feature ([`KernelKind::effective`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The auto-vectorized scalar quad kernels (the only engine before the
+    /// `simd` feature existed; always compiled, always the fallback).
+    Scalar,
+    /// Explicit f32x8 tile kernels: packed-B panels + register
+    /// accumulation for `matmul_rows`, 8-lane in-register dequant for the
+    /// fused split-dequant tiles.
+    Simd,
+}
+
+impl Default for KernelKind {
+    /// `Simd` when compiled in, `Scalar` otherwise.
+    fn default() -> Self {
+        if cfg!(feature = "simd") {
+            KernelKind::Simd
+        } else {
+            KernelKind::Scalar
+        }
+    }
+}
+
+impl KernelKind {
+    /// The kind that will actually execute: `Simd` requires the `simd`
+    /// feature; without it every request degrades to `Scalar`.
+    pub fn effective(self) -> KernelKind {
+        if cfg!(feature = "simd") {
+            self
+        } else {
+            KernelKind::Scalar
+        }
+    }
+}
+
 /// Tuning knobs for the kernel engine. Process-wide: the first
 /// [`configure`] (or the first kernel dispatch, whichever comes first)
 /// freezes the values for the lifetime of the process, because the pool
@@ -50,11 +91,22 @@ pub struct ParallelConfig {
     /// calling thread: pool dispatch costs ~1–2µs and small serving shapes
     /// (batch-1 forward) are latency-sensitive.
     pub serial_flops: usize,
+    /// Micro-kernel family for the matmul / fused split-dequant hot paths.
+    /// Defaults to [`KernelKind::Simd`] when the `simd` feature is
+    /// compiled in; results are bit-identical either way. Surfaced in
+    /// `ServeConfig.parallel`.
+    pub kernel: KernelKind,
 }
 
 impl Default for ParallelConfig {
     fn default() -> Self {
-        ParallelConfig { threads: 0, tile_k: 64, tile_n: 256, serial_flops: 4_000_000 }
+        ParallelConfig {
+            threads: 0,
+            tile_k: 64,
+            tile_n: 256,
+            serial_flops: 4_000_000,
+            kernel: KernelKind::default(),
+        }
     }
 }
 
@@ -108,6 +160,15 @@ pub fn should_parallelize(flops: usize) -> bool {
     flops >= cfg.serial_flops && !pool::in_pool_worker() && effective_threads() > 1
 }
 
+/// The process-wide micro-kernel choice after the feature-gate fallback —
+/// what the no-suffix kernel entry points (`ops::matmul`,
+/// `kernels::split_matmul`, …) execute. The `_with` variants take an
+/// explicit [`KernelKind`] instead, so benches and property tests can pit
+/// the engines against each other inside one process.
+pub fn kernel_kind() -> KernelKind {
+    config().kernel.effective()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +188,17 @@ mod tests {
     fn small_problems_stay_serial() {
         // 2·8·8·8 = 1024 flops is far below any sane serial_flops
         assert!(!should_parallelize(1024));
+    }
+
+    #[test]
+    fn kernel_kind_degrades_without_the_feature() {
+        assert_eq!(KernelKind::Scalar.effective(), KernelKind::Scalar);
+        if cfg!(feature = "simd") {
+            assert_eq!(KernelKind::Simd.effective(), KernelKind::Simd);
+            assert_eq!(KernelKind::default(), KernelKind::Simd);
+        } else {
+            assert_eq!(KernelKind::Simd.effective(), KernelKind::Scalar);
+            assert_eq!(KernelKind::default(), KernelKind::Scalar);
+        }
     }
 }

@@ -212,11 +212,23 @@ impl QTensor {
 
     /// `y = x @ dq(W)` without materializing the FP32 weight matrix:
     /// per-cluster tiles are dequantized on the fly inside the blocked
-    /// matmul (see [`crate::parallel::kernels::split_matmul`]). Unpacks the
-    /// code/cid planes per call — deployment executors that call this in a
-    /// loop should hold the unpacked form instead (see
-    /// [`crate::model::qbert::QLinear`]).
+    /// matmul (see [`crate::parallel::kernels::split_matmul`]), under the
+    /// process-wide micro-kernel choice
+    /// ([`crate::parallel::kernel_kind`]). Unpacks the code/cid planes per
+    /// call — deployment executors that call this in a loop should hold
+    /// the unpacked form instead (see [`crate::model::qbert::QLinear`]).
     pub fn matmul_fused(&self, x: &Tensor) -> Result<Tensor> {
+        self.matmul_fused_with(x, crate::parallel::kernel_kind())
+    }
+
+    /// [`QTensor::matmul_fused`] with an explicit micro-kernel choice —
+    /// the engines are bit-identical, so this only matters for benches and
+    /// engine-agreement tests.
+    pub fn matmul_fused_with(
+        &self,
+        x: &Tensor,
+        kind: crate::parallel::KernelKind,
+    ) -> Result<Tensor> {
         if x.shape().len() != 2 || x.shape()[1] != self.shape[0] {
             return Err(Error::Quant(format!(
                 "matmul_fused: activations {:?} do not match weights {:?}",
@@ -225,12 +237,13 @@ impl QTensor {
             )));
         }
         let (codes, cid) = self.fused_planes()?;
-        Ok(crate::parallel::kernels::split_matmul(
+        Ok(crate::parallel::kernels::split_matmul_with(
             x,
             &self.shape,
             &codes,
             &cid,
             &self.params,
+            kind,
         ))
     }
 

@@ -1,0 +1,142 @@
+//! Machine-readable benchmark records — `BENCH_kernels.json`.
+//!
+//! The bench binaries print human tables; this sidecar gives CI and later
+//! PRs something diffable: a flat JSON array of rows, each keyed by
+//! `(bench, shape, engine)` with `ns_per_iter` and a streaming `gb_per_s`
+//! rate (total bytes read + written per iteration over wall time — an
+//! engine-neutral figure that is meaningful for both FLOP-bound matmuls
+//! and byte-bound serving rows). Re-running a bench **merges** by key into
+//! the existing file, so `kernel_hotpath` and `serving` can share one
+//! `BENCH_kernels.json` and a partial re-run never loses the other rows.
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::json::{obj, Json};
+
+/// One benchmark row. `extra` carries bench-specific metrics (`gflops`,
+/// `qps`, …) that land as additional JSON fields.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub bench: String,
+    pub shape: String,
+    pub engine: String,
+    pub ns_per_iter: f64,
+    pub gb_per_s: f64,
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    /// Build a row from a per-iteration wall time and the bytes one
+    /// iteration streams (inputs read + outputs written).
+    pub fn new(
+        bench: &str,
+        shape: &str,
+        engine: &str,
+        per_iter: Duration,
+        bytes_per_iter: usize,
+    ) -> BenchRecord {
+        let secs = per_iter.as_secs_f64();
+        BenchRecord {
+            bench: bench.to_string(),
+            shape: shape.to_string(),
+            engine: engine.to_string(),
+            ns_per_iter: per_iter.as_nanos() as f64,
+            gb_per_s: if secs > 0.0 { bytes_per_iter as f64 / secs / 1e9 } else { 0.0 },
+            extra: Vec::new(),
+        }
+    }
+
+    /// Attach a bench-specific metric (builder style).
+    pub fn with(mut self, key: &str, value: f64) -> BenchRecord {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("bench", Json::from(self.bench.as_str())),
+            ("shape", Json::from(self.shape.as_str())),
+            ("engine", Json::from(self.engine.as_str())),
+            ("ns_per_iter", Json::from(self.ns_per_iter)),
+            ("gb_per_s", Json::from(self.gb_per_s)),
+        ];
+        for (k, v) in &self.extra {
+            pairs.push((k.as_str(), Json::from(*v)));
+        }
+        obj(pairs)
+    }
+}
+
+fn row_key(j: &Json) -> Option<(String, String, String)> {
+    Some((
+        j.get("bench").ok()?.as_str().ok()?.to_string(),
+        j.get("shape").ok()?.as_str().ok()?.to_string(),
+        j.get("engine").ok()?.as_str().ok()?.to_string(),
+    ))
+}
+
+/// Merge `records` into the JSON array at `path` (replace rows with the
+/// same `(bench, shape, engine)` key, append new ones, keep the rest) and
+/// write it back. A missing or malformed file starts fresh.
+pub fn merge_write(path: &Path, records: &[BenchRecord]) -> Result<()> {
+    let mut entries: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()).ok())
+        .unwrap_or_default();
+    for r in records {
+        let k = (r.bench.clone(), r.shape.clone(), r.engine.clone());
+        let j = r.to_json();
+        if let Some(slot) = entries.iter_mut().find(|e| row_key(e).as_ref() == Some(&k)) {
+            *slot = j;
+        } else {
+            entries.push(j);
+        }
+    }
+    std::fs::write(path, Json::Arr(entries).to_string()).map_err(Error::Io)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_computes_rates_and_serializes() {
+        let r = BenchRecord::new("matmul", "512x512x512", "pool8-simd",
+            Duration::from_millis(10), 3 * 512 * 512 * 4)
+            .with("gflops", 26.8);
+        assert!((r.ns_per_iter - 1e7).abs() < 1.0);
+        assert!(r.gb_per_s > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("engine").unwrap().as_str().unwrap(), "pool8-simd");
+        assert!((j.get("gflops").unwrap().as_f64().unwrap() - 26.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_replaces_by_key_and_appends_new() {
+        let path = std::env::temp_dir().join("sq_bench_json_merge.json");
+        std::fs::remove_file(&path).ok();
+        let a = BenchRecord::new("m", "s1", "scalar", Duration::from_micros(5), 1000);
+        let b = BenchRecord::new("m", "s1", "simd", Duration::from_micros(2), 1000);
+        merge_write(&path, &[a.clone(), b]).unwrap();
+        // re-run of one row replaces it in place, the other row survives
+        let a2 = BenchRecord::new("m", "s1", "scalar", Duration::from_micros(4), 1000);
+        merge_write(&path, &[a2]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let scalar = arr
+            .iter()
+            .find(|e| e.get("engine").unwrap().as_str().unwrap() == "scalar")
+            .unwrap();
+        assert!((scalar.get("ns_per_iter").unwrap().as_f64().unwrap() - 4000.0).abs() < 1.0);
+        // a malformed file starts fresh instead of erroring
+        std::fs::write(&path, "not json").unwrap();
+        merge_write(&path, &[a]).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

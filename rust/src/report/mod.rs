@@ -1,4 +1,7 @@
-//! ASCII / markdown table rendering for benchmark and CLI output.
+//! ASCII / markdown table rendering for benchmark and CLI output, plus the
+//! machine-readable bench-record sidecar ([`bench_json`]).
+
+pub mod bench_json;
 
 /// A simple aligned table.
 #[derive(Debug, Clone, Default)]

@@ -4,5 +4,7 @@
 pub mod dense;
 pub mod ops;
 pub mod packing;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 pub use dense::{IntTensor, Tensor};

@@ -14,7 +14,8 @@ pub const NEG_INF: f32 = -1e9;
 /// Size-aware dispatch: large products fan out row-partitioned over the
 /// [`crate::parallel`] worker pool; everything else (and any call made from
 /// inside a pool worker) runs [`matmul_serial`] on the calling thread. Both
-/// engines share [`matmul_rows`], so the result is identical either way.
+/// engines share the same micro-kernels, so the result is identical either
+/// way.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let n = b.shape()[1];
@@ -24,25 +25,51 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_serial(a, b)
 }
 
-/// Serial `C = A(m×k) @ B(k×n)`.
-///
-/// i–k–j loop with the k dimension unrolled 4-wide: each pass over a C row
-/// performs 4 FMAs per element against 4 consecutive B rows, amortizing the
-/// C-row load/store traffic that bounds the naive i–k–j form (§Perf: 15 →
-/// ~28 GFLOP/s single-core with `target-cpu=native`).
+/// Serial `C = A(m×k) @ B(k×n)` under the process-wide kernel choice
+/// ([`crate::parallel::kernel_kind`]). Both engines are bit-identical, so
+/// dispatch never changes results.
 pub fn matmul_serial(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_serial_with(a, b, crate::parallel::kernel_kind())
+}
+
+/// Serial matmul with an explicit micro-kernel choice (benches / engine
+/// agreement tests).
+///
+/// Scalar engine: i–k–j loop with the k dimension unrolled 4-wide
+/// (`matmul_rows`) — each pass over a C row performs 4 FMAs per element
+/// against 4 consecutive B rows, amortizing the C-row load/store traffic
+/// that bounds the naive i–k–j form (§Perf: 15 → ~28 GFLOP/s single-core
+/// with `target-cpu=native`).
+///
+/// SIMD engine: B is repacked once into 8-wide panels and the rows run
+/// through [`crate::tensor::simd::matmul_rows_simd`] (register
+/// accumulation — C traffic drops from `k/4` passes to one). The packing
+/// pass only pays for itself when it amortizes over several output rows,
+/// so skinny dispatches (`m < 4` or `n < 8`, e.g. batch-1 serving
+/// projections) stay on the scalar kernel — bit-identical anyway.
+pub fn matmul_serial_with(a: &Tensor, b: &Tensor, kind: crate::parallel::KernelKind) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
+    #[cfg(feature = "simd")]
+    if kind.effective() == crate::parallel::KernelKind::Simd && m >= 4 && n >= 8 {
+        let pb = super::simd::PackedB::pack(b.data(), k, n);
+        super::simd::matmul_rows_simd(a.data(), &pb, &mut out, 0..m);
+        return Tensor::new(&[m, n], out).unwrap();
+    }
+    let _ = kind; // scalar fallback (feature off, or shape below the packing payoff)
     matmul_rows(a.data(), b.data(), &mut out, 0..m, k, n);
     Tensor::new(&[m, n], out).unwrap()
 }
 
 /// Compute output rows `rows` of `A(m×k) @ B(k×n)` into `out_chunk`
 /// (`rows.len() × n`, pre-zeroed). `ad` is indexed by absolute row, so
-/// disjoint chunks can run concurrently — this is the kernel both the
-/// serial path and the pool tasks execute, keeping them bit-identical.
+/// disjoint chunks can run concurrently — this is the **scalar** kernel
+/// both the serial path and the pool tasks execute, keeping them
+/// bit-identical. Its SIMD twin ([`crate::tensor::simd::matmul_rows_simd`])
+/// replays the same per-element IEEE op sequence, so engine choice never
+/// changes bits either.
 pub(crate) fn matmul_rows(
     ad: &[f32],
     bd: &[f32],
@@ -439,6 +466,34 @@ mod tests {
         let a = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng);
         let t = transpose2(&transpose2(&a));
         assert!(a.max_abs_diff(&t) < 1e-7);
+    }
+
+    #[test]
+    fn property_simd_serial_is_bit_identical_to_scalar_serial() {
+        use crate::parallel::KernelKind;
+        crate::util::proptest::check("simd serial == scalar serial (exact)", 40, |rng| {
+            let m = rng.range(1, 34);
+            let k = rng.range(1, 41); // includes k % 4 != 0
+            let n = rng.range(1, 35); // includes n % 8 != 0
+            let vals = crate::util::proptest::gen_values_with_outliers(rng, m * k, 0.05);
+            let mut a = Tensor::new(&[m, k], vals).unwrap();
+            // zero whole rows: the quad zero-skip must agree across engines
+            for i in 0..m {
+                if rng.chance(0.3) {
+                    for v in &mut a.data_mut()[i * k..(i + 1) * k] {
+                        *v = 0.0;
+                    }
+                }
+            }
+            let b = Tensor::new(
+                &[k, n],
+                crate::util::proptest::gen_values_with_outliers(rng, k * n, 0.05),
+            )
+            .unwrap();
+            let scalar = matmul_serial_with(&a, &b, KernelKind::Scalar);
+            let simd = matmul_serial_with(&a, &b, KernelKind::Simd);
+            assert_eq!(scalar.data(), simd.data(), "engines diverged at {m}x{k}x{n}");
+        });
     }
 
     #[test]

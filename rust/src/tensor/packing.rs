@@ -7,6 +7,85 @@
 
 use crate::error::{Error, Result};
 
+/// 256-entry byte LUT for 2-bit signed codes: one packed byte expands to 4
+/// codes in one indexed copy (two bytes per 8-lane SIMD dequant step).
+static LUT2: [[i8; 4]; 256] = lut_signed2();
+/// 256-entry byte LUT for 4-bit signed codes: one byte → 2 codes.
+static LUT4: [[i8; 2]; 256] = lut_signed4();
+/// Unsigned twins (cluster-id planes are 2-bit unsigned).
+static ULUT2: [[u8; 4]; 256] = lut_unsigned2();
+static ULUT4: [[u8; 2]; 256] = lut_unsigned4();
+
+const fn lut_signed2() -> [[i8; 4]; 256] {
+    let mut t = [[0i8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < 4 {
+            t[b][j] = (((b >> (2 * j)) & 0x3) as i16 - 2) as i8;
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+const fn lut_signed4() -> [[i8; 2]; 256] {
+    let mut t = [[0i8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b][0] = ((b & 0xf) as i16 - 8) as i8;
+        t[b][1] = (((b >> 4) & 0xf) as i16 - 8) as i8;
+        b += 1;
+    }
+    t
+}
+
+const fn lut_unsigned2() -> [[u8; 4]; 256] {
+    let mut t = [[0u8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < 4 {
+            t[b][j] = ((b >> (2 * j)) & 0x3) as u8;
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+const fn lut_unsigned4() -> [[u8; 2]; 256] {
+    let mut t = [[0u8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b][0] = (b & 0xf) as u8;
+        t[b][1] = ((b >> 4) & 0xf) as u8;
+        b += 1;
+    }
+    t
+}
+
+/// Expand packed bytes through a per-byte LUT: whole bytes append `P`
+/// codes at a time, the ragged tail takes a prefix of the last byte's
+/// entry. Shared shape of the four plane-unpack fast paths.
+fn unpack_via_lut<T: Copy, const P: usize>(
+    bytes: &[u8],
+    len: usize,
+    lut: &[[T; P]; 256],
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(len);
+    let full = len / P;
+    for &b in &bytes[..full] {
+        out.extend_from_slice(&lut[b as usize]);
+    }
+    let tail = len - full * P;
+    if tail > 0 {
+        out.extend_from_slice(&lut[bytes[full] as usize][..tail]);
+    }
+    out
+}
+
 /// Bit-packed buffer of signed `bits`-wide integer codes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Packed {
@@ -41,7 +120,27 @@ impl Packed {
     }
 
     /// Unpack back to signed codes.
+    ///
+    /// The 2/4/8-bit widths — the only ones on the inference hot path —
+    /// take a byte-at-a-time LUT fast path (2-bit: 256→4 codes, 4-bit:
+    /// 256→2), expanding 8 lanes every 2–4 byte lookups instead of one
+    /// shift/mask/bias per element; this feeds the fused SIMD dequant tile
+    /// ([`crate::parallel::kernels`]) and the paged executor's plane
+    /// decode. Other widths use the generic loop; [`Packed::get`] is
+    /// untouched. LUT == generic is property-tested below.
     pub fn unpack(&self) -> Vec<i8> {
+        match self.bits {
+            2 => unpack_via_lut(&self.bytes, self.len, &LUT2),
+            4 => unpack_via_lut(&self.bytes, self.len, &LUT4),
+            8 => self.bytes.iter().map(|&b| (b as i16 - 128) as i8).collect(),
+            _ => self.unpack_generic(),
+        }
+    }
+
+    /// The pre-LUT per-element unpack loop — kept as the reference the
+    /// fast paths are property-tested against, and as the implementation
+    /// for the off-hot-path widths.
+    fn unpack_generic(&self) -> Vec<i8> {
         let per_byte = 8 / self.bits as usize;
         let qmin = -(1i16 << (self.bits - 1));
         let mask = ((1u16 << self.bits) - 1) as u8;
@@ -76,8 +175,19 @@ impl Packed {
         Ok(Packed { bits, len: codes.len(), bytes })
     }
 
-    /// Unpack as unsigned codes.
+    /// Unpack as unsigned codes (LUT fast path for the 2/4-bit cluster-id
+    /// planes, byte copy for 8-bit — same contract as [`Packed::unpack`]).
     pub fn unpack_unsigned(&self) -> Vec<u8> {
+        match self.bits {
+            2 => unpack_via_lut(&self.bytes, self.len, &ULUT2),
+            4 => unpack_via_lut(&self.bytes, self.len, &ULUT4),
+            8 => self.bytes.clone(),
+            _ => self.unpack_unsigned_generic(),
+        }
+    }
+
+    /// Reference per-element unsigned unpack (see [`Packed::unpack_generic`]).
+    fn unpack_unsigned_generic(&self) -> Vec<u8> {
         let per_byte = 8 / self.bits as usize;
         let mask = ((1u16 << self.bits) - 1) as u8;
         (0..self.len)
@@ -190,6 +300,44 @@ mod tests {
                 assert_eq!(p.get(i), codes[i]);
             }
         });
+    }
+
+    #[test]
+    fn property_lut_unpack_matches_generic_across_widths_and_tails() {
+        // the LUT fast paths (2/4/8-bit) against the per-element reference
+        // loop, over every width and ragged tail lengths
+        check("LUT unpack == generic unpack", 60, |rng| {
+            let bits = (rng.below(8) + 1) as u8; // 1..=8, incl. non-LUT widths
+            let qmin = -(1i16 << (bits - 1));
+            let qmax = (1i16 << (bits - 1)) - 1;
+            let n = rng.range(1, 400); // ragged vs the 2/4-codes-per-byte expansion
+            let codes: Vec<i8> = (0..n)
+                .map(|_| (qmin + rng.below((qmax - qmin + 1) as usize) as i16) as i8)
+                .collect();
+            let p = Packed::pack(&codes, bits).unwrap();
+            assert_eq!(p.unpack(), p.unpack_generic(), "bits={bits} n={n}");
+            assert_eq!(p.unpack(), codes, "bits={bits} n={n}");
+            let ucodes: Vec<u8> = codes.iter().map(|&c| (c as i16 - qmin) as u8).collect();
+            let up = Packed::pack_unsigned(&ucodes, bits).unwrap();
+            assert_eq!(up.unpack_unsigned(), up.unpack_unsigned_generic(), "u bits={bits}");
+            assert_eq!(up.unpack_unsigned(), ucodes, "u bits={bits}");
+        });
+    }
+
+    #[test]
+    fn lut_unpack_handles_every_tail_length() {
+        // deterministic sweep of all tail remainders for the LUT widths
+        for bits in [2u8, 4, 8] {
+            let qmin = -(1i16 << (bits - 1));
+            let qmax = (1i16 << (bits - 1)) - 1;
+            let span = (qmax - qmin + 1) as i16;
+            for n in 0..=9usize {
+                let codes: Vec<i8> =
+                    (0..n).map(|i| (qmin + (i as i16 * 7) % span) as i8).collect();
+                let p = Packed::pack(&codes, bits).unwrap();
+                assert_eq!(p.unpack(), codes, "bits={bits} n={n}");
+            }
+        }
     }
 
     #[test]

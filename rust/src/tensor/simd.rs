@@ -1,0 +1,279 @@
+//! Explicit 8-lane f32 micro-kernels for the matmul hot path (§Perf).
+//!
+//! [`F32x8`] is a portable `std::simd`-style lane type: a fixed `[f32; 8]`
+//! whose lane-wise ops compile to a single AVX instruction (or an SSE pair)
+//! on x86-64 — no nightly features, no external crates, no intrinsics. The
+//! win over the auto-vectorized scalar kernels comes from the *kernel
+//! structure* built on top of it, not from the type itself:
+//!
+//! * [`PackedB`] — B repacked once per dispatch into 8-wide column panels
+//!   (panel-major, rows contiguous), so the inner loop streams aligned
+//!   8-lane slices instead of striding across B rows;
+//! * [`matmul_rows_simd`] — register accumulation: each output 8-lane strip
+//!   is loaded once, accumulated across the whole k extent, stored once.
+//!   The scalar quad kernel re-reads and re-writes the C row every 4 k
+//!   steps, so its C traffic is `k/4 × m×n×8` bytes; here it is `m×n×8`.
+//!   Panels are swept in the outer loop, so one k×8 panel stays L1-resident
+//!   across every row of the chunk.
+//!
+//! ## Bit-identity contract
+//!
+//! Every lane op mirrors the scalar kernels' exact f32 expression — same
+//! k-quad boundaries, same zero-skip, same association order, and **no**
+//! `mul_add` (a fused multiply-add would round differently than the scalar
+//! `a*b + c`). Per output element the sequence of IEEE operations is
+//! identical to the scalar `ops::matmul_rows`, so the SIMD engine is
+//! bit-exact against the scalar and serial engines — asserted by the
+//! remainder-torture and property tests in `parallel::kernels`.
+
+use std::ops::Range;
+
+/// Lane width of the micro-kernels (one AVX ymm register of f32).
+pub const LANES: usize = 8;
+
+/// Portable 8-lane f32 vector. Lane-wise ops are written as fixed-width
+/// array zips, which LLVM reliably lowers to vector instructions at
+/// `opt-level=3` without any target-feature gating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F32x8([f32; LANES]);
+
+impl F32x8 {
+    /// All lanes = `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Wrap an explicit lane array (per-lane gathers, e.g. the per-cluster
+    /// scale/zero-point lookup in the fused dequant tile).
+    #[inline(always)]
+    pub fn from_array(lanes: [f32; LANES]) -> F32x8 {
+        F32x8(lanes)
+    }
+
+    /// Load 8 lanes from the head of `s` (`s.len() >= 8`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&s[..LANES]);
+        F32x8(a)
+    }
+
+    /// Load `s.len() <= 8` lanes, zero-padding the tail — ragged-N panel
+    /// edges. Zero lanes stay exactly 0.0 through the kernels (they only
+    /// ever accumulate products against zero-padded B lanes) and are never
+    /// stored back.
+    #[inline(always)]
+    pub fn load_partial(s: &[f32]) -> F32x8 {
+        debug_assert!(s.len() <= LANES);
+        let mut a = [0.0f32; LANES];
+        a[..s.len()].copy_from_slice(s);
+        F32x8(a)
+    }
+
+    /// Widen 8 `i8` codes to f32 lanes (`s.len() >= 8`) — the in-register
+    /// half of the fused dequant tile.
+    #[inline(always)]
+    pub fn from_i8(s: &[i8]) -> F32x8 {
+        let mut a = [0.0f32; LANES];
+        for (l, &q) in a.iter_mut().zip(&s[..LANES]) {
+            *l = q as f32;
+        }
+        F32x8(a)
+    }
+
+    /// Store all 8 lanes to the head of `out` (`out.len() >= 8`).
+    #[inline(always)]
+    pub fn store(self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Store the first `out.len() <= 8` lanes (ragged-N tail strips).
+    #[inline(always)]
+    pub fn store_partial(self, out: &mut [f32]) {
+        let w = out.len();
+        debug_assert!(w <= LANES);
+        out.copy_from_slice(&self.0[..w]);
+    }
+
+    /// Lane-wise `self + o`. Plain IEEE add — matches the scalar kernels.
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut r = [0.0f32; LANES];
+        for (r, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+            *r = a + b;
+        }
+        F32x8(r)
+    }
+
+    /// Lane-wise `self - o`.
+    #[inline(always)]
+    pub fn sub(self, o: F32x8) -> F32x8 {
+        let mut r = [0.0f32; LANES];
+        for (r, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+            *r = a - b;
+        }
+        F32x8(r)
+    }
+
+    /// Lane-wise `self * o`. Deliberately NOT fused with a following add:
+    /// the bit-identity contract requires the scalar `a*b + c` rounding.
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut r = [0.0f32; LANES];
+        for (r, (a, b)) in r.iter_mut().zip(self.0.iter().zip(&o.0)) {
+            *r = a * b;
+        }
+        F32x8(r)
+    }
+}
+
+/// B(k×n) repacked into 8-wide column panels: panel `p` holds columns
+/// `[8p, 8p+8)` with the k rows contiguous (`k × 8` floats per panel), the
+/// tail panel zero-padded to full width. Packed **once per dispatch** —
+/// the pooled engine shares one `PackedB` across every row-chunk task —
+/// then the inner loop is pure 8-lane FMA over contiguous slices.
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Repack row-major `bd` (`k*n` floats). One streaming pass over B.
+    pub fn pack(bd: &[f32], k: usize, n: usize) -> PackedB {
+        debug_assert_eq!(bd.len(), k * n);
+        let panels = n.div_ceil(LANES);
+        let mut data = vec![0.0f32; panels * k * LANES];
+        for p in 0..panels {
+            let c0 = p * LANES;
+            let w = LANES.min(n - c0);
+            let base = p * k * LANES;
+            for kk in 0..k {
+                let dst = base + kk * LANES;
+                data[dst..dst + w].copy_from_slice(&bd[kk * n + c0..kk * n + c0 + w]);
+            }
+        }
+        PackedB { k, n, data }
+    }
+
+    #[inline(always)]
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * LANES..(p + 1) * self.k * LANES]
+    }
+}
+
+/// Compute output rows `rows` of `A @ B` into `out_chunk` (`rows.len() × n`,
+/// pre-zeroed or carrying prior partial sums) — the SIMD twin of the
+/// scalar `ops::matmul_rows`, bit-identical to it (see module docs).
+///
+/// Loop order is panel → row → k: one k×8 panel stays cache-resident
+/// across every row, each 8-lane C strip is loaded/stored exactly once.
+pub fn matmul_rows_simd(ad: &[f32], b: &PackedB, out_chunk: &mut [f32], rows: Range<usize>) {
+    let (k, n) = (b.k, b.n);
+    let k4 = k - k % 4;
+    let panels = n.div_ceil(LANES);
+    for p in 0..panels {
+        let c0 = p * LANES;
+        let w = LANES.min(n - c0);
+        let pan = b.panel(p);
+        for (ri, i) in rows.clone().enumerate() {
+            let arow = &ad[i * k..(i + 1) * k];
+            let ostrip = &mut out_chunk[ri * n + c0..ri * n + c0 + w];
+            let mut acc =
+                if w == LANES { F32x8::load(ostrip) } else { F32x8::load_partial(ostrip) };
+            let mut kk = 0;
+            while kk < k4 {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                    kk += 4;
+                    continue; // padded/sparse rows — same skip as the scalar quad
+                }
+                let b0 = F32x8::load(&pan[kk * LANES..(kk + 1) * LANES]);
+                let b1 = F32x8::load(&pan[(kk + 1) * LANES..(kk + 2) * LANES]);
+                let b2 = F32x8::load(&pan[(kk + 2) * LANES..(kk + 3) * LANES]);
+                let b3 = F32x8::load(&pan[(kk + 3) * LANES..(kk + 4) * LANES]);
+                // association order of the scalar kernel:
+                // ((a0*b0 + a1*b1) + a2*b2) + a3*b3, then += into C
+                let t = F32x8::splat(a0)
+                    .mul(b0)
+                    .add(F32x8::splat(a1).mul(b1))
+                    .add(F32x8::splat(a2).mul(b2))
+                    .add(F32x8::splat(a3).mul(b3));
+                acc = acc.add(t);
+                kk += 4;
+            }
+            for kk in k4..k {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = F32x8::load(&pan[kk * LANES..(kk + 1) * LANES]);
+                acc = acc.add(F32x8::splat(av).mul(brow));
+            }
+            if w == LANES {
+                acc.store(ostrip);
+            } else {
+                acc.store_partial(ostrip);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_are_elementwise() {
+        let a = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8::splat(2.0);
+        assert_eq!(a.add(b).0, [3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(a.mul(b).0, [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        assert_eq!(a.sub(b).0, [-1.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn partial_load_zero_pads_and_partial_store_truncates() {
+        let v = F32x8::load_partial(&[1.0, 2.0, 3.0]);
+        assert_eq!(v.0, [1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut out = [9.0f32; 3];
+        v.store_partial(&mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_i8_widens() {
+        let v = F32x8::from_i8(&[-2, -1, 0, 1, 2, 3, -8, 7]);
+        assert_eq!(v.0, [-2.0, -1.0, 0.0, 1.0, 2.0, 3.0, -8.0, 7.0]);
+    }
+
+    #[test]
+    fn packed_b_panels_cover_ragged_widths() {
+        // 3×11: two panels, tail width 3, zero-padded
+        let (k, n) = (3usize, 11usize);
+        let bd: Vec<f32> = (0..k * n).map(|v| v as f32 + 1.0).collect();
+        let pb = PackedB::pack(&bd, k, n);
+        for kk in 0..k {
+            assert_eq!(pb.panel(0)[kk * LANES..kk * LANES + LANES], bd[kk * n..kk * n + 8]);
+            assert_eq!(pb.panel(1)[kk * LANES..kk * LANES + 3], bd[kk * n + 8..kk * n + 11]);
+            assert_eq!(pb.panel(1)[kk * LANES + 3..(kk + 1) * LANES], [0.0; 5]);
+        }
+    }
+
+    #[test]
+    fn simd_rows_match_naive() {
+        let (m, k, n) = (4usize, 10usize, 13usize);
+        let ad: Vec<f32> = (0..m * k).map(|v| (v as f32 * 0.37).sin()).collect();
+        let bd: Vec<f32> = (0..k * n).map(|v| (v as f32 * 0.11).cos()).collect();
+        let pb = PackedB::pack(&bd, k, n);
+        let mut got = vec![0.0f32; m * n];
+        matmul_rows_simd(&ad, &pb, &mut got, 0..m);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| ad[i * k + kk] * bd[kk * n + j]).sum();
+                assert!((got[i * n + j] - want).abs() < 1e-4, "({i},{j})");
+            }
+        }
+    }
+}

@@ -118,6 +118,25 @@ fn parallel_kernels_match_serial_at_model_scale() {
 }
 
 #[test]
+fn kernel_engines_are_bit_identical_at_model_scale() {
+    use splitquant::parallel::KernelKind;
+    force_parallel();
+    // ragged model-scale shapes: every engine × dispatch combination must
+    // produce the same bits, not just the same floats to tolerance
+    let mut rng = Rng::new(9);
+    let a = Tensor::randn(&[257, 129], 0.0, 1.0, &mut rng);
+    let b = Tensor::randn(&[129, 201], 0.0, 1.0, &mut rng);
+    let base = ops::matmul_serial_with(&a, &b, KernelKind::Scalar);
+    for (label, got) in [
+        ("serial-simd", ops::matmul_serial_with(&a, &b, KernelKind::Simd)),
+        ("pooled-scalar", kernels::matmul_with(&a, &b, KernelKind::Scalar)),
+        ("pooled-simd", kernels::matmul_with(&a, &b, KernelKind::Simd)),
+    ] {
+        assert_eq!(base.data(), got.data(), "{label} diverged");
+    }
+}
+
+#[test]
 fn quantized_forward_agrees_between_pool_and_serial_paths() {
     use splitquant::model::QuantizedBert;
     use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
