@@ -1,0 +1,211 @@
+//! Mixed-precision autotuning walkthrough: pick per-layer bit-widths under
+//! a packed-byte budget and beat the uniform low-bit baseline.
+//!
+//! ```sh
+//! cargo run --release --example autotune_budget            # full demo
+//! cargo run --release --example autotune_budget -- --smoke # CI lane, seconds
+//! ```
+//!
+//! No artifacts needed (pure-Rust executor). The demo:
+//!
+//! 1. runs the **per-layer sensitivity sweep** — for every quantizable layer
+//!    group and every width in {2, 4, 8}, quantize only that layer (an O(1)
+//!    copy-on-write share of the FP32 store) and measure calibration-logit
+//!    KL vs the FP32 reference plus the exact packed byte cost;
+//! 2. allocates bits under a budget equal to the **uniform-INT4 packed
+//!    size** with the greedy Lagrangian sweep → a serializable `BitPlan`;
+//! 3. expands the plan through `AutoTunePass`, packs the model into the
+//!    sharded `SQSH0001` format, and **validates the realized payload
+//!    against the budget** through `BitPlan::validate_sharded`;
+//! 4. compares argmax fidelity vs the FP32 model against uniform INT2 /
+//!    INT4 / INT8 — the plan must beat uniform INT2 at ≤ uniform-INT4
+//!    bytes — and merges machine-readable rows into `BENCH_autotune.json`
+//!    keyed by (budget, scheme).
+//!
+//! Fidelity (argmax agreement with the FP32 reference) stands in for task
+//! accuracy so the demo runs on a random init; with a trained checkpoint the
+//! same pipeline optimizes real accuracy (see the `autotune` CLI command).
+
+use std::path::Path;
+use std::time::Instant;
+
+use splitquant::autotune::{allocate, sweep, AutoTunePass, BitPlan, SweepConfig};
+use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+use splitquant::eval::{agreement_with_reference, predictions_rust};
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::{PackedModel, QuantPipeline, SplitQuantPass};
+use splitquant::report::bench_json::{merge_write, BenchRecord};
+use splitquant::report::{bytes, pct, Table};
+use splitquant::shardstore::ShardReader;
+use splitquant::util::rng::Rng;
+
+fn main() -> splitquant::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = if smoke {
+        // tiny synthetic model: the whole walkthrough runs in seconds
+        BertConfig {
+            vocab_size: 512,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 16,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        }
+    } else {
+        BertConfig {
+            vocab_size: 4096,
+            hidden: 64,
+            layers: 2,
+            heads: 2,
+            ffn: 128,
+            max_len: 32,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        }
+    };
+    let mut rng = Rng::new(7);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (calib_set, eval_set) = emotion::load_small(1, if smoke { 32 } else { 64 }, 192);
+    let (calib, _) = pad_to_batches(&calib_set, &tok, 16);
+    let (eval_batches, n_eval) = pad_to_batches(&eval_set, &tok, 16);
+
+    // ---- 1. sensitivity sweep -------------------------------------------
+    let sweep_cfg = SweepConfig::default();
+    let t0 = Instant::now();
+    let table = sweep(&cfg, &store, &calib, &sweep_cfg)?;
+    println!(
+        "[autotune] swept {} layer groups x {:?} bits over {} calibration examples in {:?}",
+        table.layers.len(),
+        sweep_cfg.candidates,
+        table.examples,
+        t0.elapsed()
+    );
+    let mut sens = Table::new(
+        "per-layer sensitivity: mean calibration KL vs FP32 (and packed bytes)",
+        &["layer", "KL@INT2", "KL@INT4", "KL@INT8", "bytes@INT2", "bytes@INT8"],
+    );
+    for l in &table.layers {
+        sens.row(vec![
+            l.layer.clone(),
+            format!("{:.3e}", l.options[0].kl),
+            format!("{:.3e}", l.options[1].kl),
+            format!("{:.3e}", l.options[2].kl),
+            bytes(l.options[0].bytes),
+            bytes(l.options[2].bytes),
+        ]);
+    }
+    println!("{}", sens.render());
+
+    // ---- 2. allocate under the uniform-INT4 budget ----------------------
+    let budget = table.uniform_bytes(4).expect("4 is a sweep candidate");
+    let plan = allocate(&table, budget)?;
+    println!(
+        "[autotune] budget {} (= uniform INT4) -> plan {} ({} planned, predicted KL {:.3e})",
+        bytes(budget),
+        plan.summary(),
+        bytes(plan.planned_bytes),
+        plan.planned_kl
+    );
+    // the plan serializes; a deployment host can replay it without re-sweeping
+    let plan_path = std::env::temp_dir().join("sq_autotune_budget_plan.json");
+    plan.save(&plan_path)?;
+    let reloaded = BitPlan::load(&plan_path)?;
+    std::fs::remove_file(&plan_path).ok();
+    assert_eq!(reloaded.layers, plan.layers, "plan JSON round-trip drifted");
+
+    // ---- 3. expand the plan + uniform baselines -------------------------
+    let t_plan = Instant::now();
+    let tuned = QuantPipeline::new()
+        .pass(AutoTunePass::new(plan.clone(), sweep_cfg.base))
+        .run(&store)?;
+    let plan_dur = t_plan.elapsed();
+    println!("[autotune] provenance: {:?}", tuned.provenance);
+    let realized = tuned.quantized_model().quantized_bytes();
+    assert_eq!(realized, plan.planned_bytes, "byte accounting must be exact");
+    assert!(realized <= budget, "realized {realized} B blew the {budget} B budget");
+
+    // sharded artifact: deployment-side validation of the realized payload
+    let shards = std::env::temp_dir().join("sq_autotune_budget_demo.sqsh");
+    let pm = PackedModel::assemble(&store, &tuned.quantized_model());
+    pm.save_sharded(&shards)?;
+    let validated = plan.validate_sharded(&shards)?;
+    let on_disk = ShardReader::open(&shards)?.quantized_payload_bytes();
+    std::fs::remove_file(&shards).ok();
+    assert_eq!(validated, realized);
+    println!(
+        "[autotune] sharded artifact validated: {} packed payload <= {} budget \
+         ({} on-disk record bytes)",
+        bytes(validated),
+        bytes(budget),
+        bytes(on_disk)
+    );
+
+    // ---- 4. fidelity comparison + BENCH_autotune.json -------------------
+    // one FP32 reference pass; every candidate scores against it
+    let ref_preds = predictions_rust(&cfg, &store, &eval_batches, n_eval)?;
+    let budget_key = format!("budget={budget}B");
+    let mut rows: Vec<BenchRecord> = Vec::new();
+    let mut cmp = Table::new(
+        "budget-constrained BitPlan vs uniform bit-widths (argmax fidelity vs FP32)",
+        &["scheme", "packed bytes", "vs budget", "fidelity"],
+    );
+    let mut uniform_agree = std::collections::BTreeMap::new();
+    for bits in [2u8, 4, 8] {
+        let t_u = Instant::now();
+        let a = QuantPipeline::new().pass(SplitQuantPass::bits(bits)).run(&store)?;
+        let dur = t_u.elapsed();
+        let ub = a.quantized_model().quantized_bytes();
+        let agree = agreement_with_reference(&cfg, &ref_preds, &a.eval, &eval_batches, n_eval)?;
+        uniform_agree.insert(bits, agree);
+        cmp.row(vec![
+            format!("uniform INT{bits}"),
+            bytes(ub),
+            format!("{:+.1}%", 100.0 * (ub as f64 - budget as f64) / budget as f64),
+            pct(agree),
+        ]);
+        rows.push(
+            BenchRecord::new("autotune", &budget_key, &format!("uniform-int{bits}"), dur, ub)
+                .with("realized_bytes", ub as f64)
+                .with("agreement", agree),
+        );
+    }
+    let plan_agree =
+        agreement_with_reference(&cfg, &ref_preds, &tuned.eval, &eval_batches, n_eval)?;
+    cmp.row(vec![
+        format!("BitPlan {}", plan.summary()),
+        bytes(realized),
+        format!("{:+.1}%", 100.0 * (realized as f64 - budget as f64) / budget as f64),
+        pct(plan_agree),
+    ]);
+    rows.push(
+        BenchRecord::new("autotune", &budget_key, "bitplan", plan_dur, realized)
+            .with("realized_bytes", realized as f64)
+            .with("agreement", plan_agree)
+            .with("planned_kl", plan.planned_kl),
+    );
+    println!("{}", cmp.render());
+
+    merge_write(Path::new("BENCH_autotune.json"), &rows)?;
+    println!("[autotune] rows merged into BENCH_autotune.json by (budget, scheme)");
+
+    // the acceptance claim: at <= uniform-INT4 bytes, the plan beats the
+    // uniform-INT2 baseline
+    let int2 = uniform_agree[&2];
+    assert!(realized <= budget);
+    assert!(
+        plan_agree > int2,
+        "BitPlan fidelity {plan_agree} must beat uniform INT2 {int2} at <= INT4 bytes"
+    );
+    println!(
+        "[autotune] OK: BitPlan {} at {} ({} under budget) beats uniform INT2 by {}",
+        plan.summary(),
+        bytes(realized),
+        bytes(budget - realized),
+        pct(plan_agree - int2)
+    );
+    Ok(())
+}

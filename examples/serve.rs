@@ -2,8 +2,16 @@
 //! executables, reporting latency percentiles and throughput.
 //!
 //! ```sh
-//! cargo run --release --example serve -- [requests] [workers] [ckpt]
+//! cargo run --release --example serve -- [requests] [workers] [ckpt] [kernel]
 //! ```
+//!
+//! `kernel` picks the micro-kernel family (`scalar` | `simd`, default:
+//! `simd` when compiled in) via `ServeConfig::parallel.kernel` — the PR-4
+//! engine knob. The engines are bit-identical, so this only moves the
+//! latency/throughput numbers. The PR-3 paging knob
+//! (`ServeConfig::residency_budget_bytes`) stays `None` here — this demo
+//! serves FP32 weights through PJRT; see `examples/serve_paged.rs` for a
+//! quantized model served under a residency byte budget.
 //!
 //! Uses `checkpoints/emotion.bin` when present (train one with the
 //! `train_and_quantize` example), otherwise serves a randomly initialized
@@ -38,6 +46,7 @@ use std::time::{Duration, Instant};
 use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
 use splitquant::data::{emotion, HashTokenizer};
 use splitquant::model::params::ParamStore;
+use splitquant::parallel::{KernelKind, ParallelConfig};
 use splitquant::report::Table;
 use splitquant::runtime::Runtime;
 use splitquant::util::rng::Rng;
@@ -47,6 +56,17 @@ fn main() -> splitquant::Result<()> {
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let ckpt = args.get(2).cloned().unwrap_or_else(|| "checkpoints/emotion.bin".to_string());
+    let kernel = match args.get(3) {
+        None => KernelKind::default(),
+        Some(s) => KernelKind::from_flag(s).ok_or_else(|| {
+            splitquant::Error::Coordinator(format!("unknown kernel {s:?} (use scalar|simd)"))
+        })?,
+    };
+    println!(
+        "[serve] kernel engine: {kernel:?} (effective {:?}); residency budget: unbounded \
+         (FP32/PJRT path — see serve_paged for the paging knob)",
+        kernel.effective()
+    );
 
     let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
     let cfg = rt.manifest.bert.clone();
@@ -78,13 +98,15 @@ fn main() -> splitquant::Result<()> {
         let server = Server::start(
             exec.clone(),
             tok.clone(),
-            // parallel: ParallelConfig::default() — auto thread count; set
-            // `parallel.threads` explicitly to pin the kernel pool size
+            // auto thread count; set `parallel.threads` explicitly to pin
+            // the kernel pool size. `parallel.kernel` is the CLI's engine
+            // choice (process-wide: the first Server::start wins)
             ServeConfig {
                 max_wait: Duration::from_millis(2),
                 workers,
                 queue_cap: 8192,
-                ..ServeConfig::default()
+                parallel: ParallelConfig { kernel, ..ParallelConfig::default() },
+                residency_budget_bytes: None,
             },
         );
         let t0 = Instant::now();

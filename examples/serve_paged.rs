@@ -3,8 +3,13 @@
 //! RAM" scenario, scaled down so it runs anywhere in seconds.
 //!
 //! ```sh
-//! cargo run --release --example serve_paged -- [requests] [budget_pct]
+//! cargo run --release --example serve_paged -- [requests] [budget_pct] [kernel]
 //! ```
+//!
+//! `kernel` (`scalar` | `simd`, default `simd` when compiled in) picks the
+//! micro-kernel family via `ServeConfig::parallel.kernel` — both modes below
+//! run the chosen engine, and the logit agreement assertion holds either way
+//! because the engines are bit-identical.
 //!
 //! No artifacts needed (pure-Rust fused executor). The demo quantizes a
 //! random BERT-Tiny with SplitQuant INT2, writes the sharded `SQSH0001`
@@ -28,6 +33,7 @@ use splitquant::coordinator::{QuantExecutor, ServeConfig, Server};
 use splitquant::data::{emotion, HashTokenizer};
 use splitquant::model::config::BertConfig;
 use splitquant::model::params::ParamStore;
+use splitquant::parallel::{KernelKind, ParallelConfig};
 use splitquant::quant::PackedModel;
 use splitquant::report::Table;
 use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
@@ -37,6 +43,13 @@ fn main() -> splitquant::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
     let budget_pct: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(35);
+    let kernel = match args.get(2) {
+        None => KernelKind::default(),
+        Some(s) => KernelKind::from_flag(s).ok_or_else(|| {
+            splitquant::Error::Coordinator(format!("unknown kernel {s:?} (use scalar|simd)"))
+        })?,
+    };
+    println!("[serve_paged] kernel engine: {kernel:?} (effective {:?})", kernel.effective());
 
     let cfg = BertConfig {
         vocab_size: 4096,
@@ -83,8 +96,11 @@ fn main() -> splitquant::Result<()> {
             max_wait: Duration::from_millis(2),
             workers: 2,
             queue_cap: 4096,
+            // PR-4 engine knob + PR-3 paging knob, both surfaced here: the
+            // paged mode serves the same traffic under a byte budget smaller
+            // than the packed payload, on the selected micro-kernel family
+            parallel: ParallelConfig { kernel, ..ParallelConfig::default() },
             residency_budget_bytes: paged_mode.then_some(budget),
-            ..ServeConfig::default()
         };
         let (exec, peek) = if paged_mode {
             let ex = QuantExecutor::paged(cfg.clone(), &shards, vec![1, 8], &serve_cfg)?;

@@ -131,4 +131,34 @@ fn main() {
     ]);
     println!("{}", r.render());
     assert_eq!(resident, store.byte_size(), "replicas must not duplicate weights");
+
+    // ---- mixed precision: where does a between-uniform-widths budget land?
+    // (the ISSUE-5 autotuner; sensitivity from a small calibration slice)
+    use splitquant::autotune::{allocate, sweep, SweepConfig};
+    use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (calib_set, _) = emotion::load_small(0, 10, 32);
+    let (calib, _) = pad_to_batches(&calib_set, &tok, 16);
+    let table = sweep(&cfg, &store, &calib[..1], &SweepConfig::default()).unwrap();
+    let mut a = Table::new(
+        "autotuned BitPlan bytes between the uniform widths (budget = uniform INT4)",
+        &["assignment", "packed bytes", "% of FP32"],
+    );
+    for bits in [2u8, 4, 8] {
+        let ub = table.uniform_bytes(bits).unwrap();
+        a.row(vec![
+            format!("uniform INT{bits}"),
+            bytes(ub),
+            format!("{:.2}%", 100.0 * ub as f64 / fp32_bytes as f64),
+        ]);
+    }
+    let budget = table.uniform_bytes(4).unwrap();
+    let plan = allocate(&table, budget).unwrap();
+    a.row(vec![
+        format!("BitPlan {}", plan.summary()),
+        bytes(plan.planned_bytes),
+        format!("{:.2}%", 100.0 * plan.planned_bytes as f64 / fp32_bytes as f64),
+    ]);
+    println!("{}", a.render());
+    assert!(plan.planned_bytes <= budget, "plan must respect the byte budget");
 }

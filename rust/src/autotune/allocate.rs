@@ -1,0 +1,302 @@
+//! Bit allocation under a byte budget: a greedy Lagrangian sweep over the
+//! sensitivity table.
+//!
+//! Every layer starts at the cheapest candidate width (the floor). Each
+//! possible upgrade (e.g. INT2 → INT4 for one layer) has a marginal gain:
+//! KL reduction per extra packed byte. Per layer, the upgrade chain is
+//! **convexified** (consecutive steps merge while a later step's gain
+//! matches or beats an earlier one — the classic lower-convex-hull trick
+//! that keeps greedy selection chain-valid) and non-improving tail steps
+//! are dropped (an upgrade that doesn't reduce KL never earns its bytes).
+//!
+//! The surviving steps form one global **upgrade schedule**, sorted by gain
+//! (descending, deterministic tie-breaking by layer name then target
+//! width). A plan for budget *B* is the longest prefix of that schedule
+//! that fits: the schedule is budget-independent, so a larger budget's plan
+//! strictly extends a smaller one — monotonicity (more bytes ⇒ predicted
+//! distortion no worse) holds **by construction**, and is property-tested
+//! below and in `tests/integration_autotune.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+use super::plan::BitPlan;
+use super::sensitivity::SensitivityTable;
+
+/// One upgrade step of the global schedule: move `layer` from option
+/// `from_idx` to `to_idx` (consecutive, or merged across several widths by
+/// convexification) for `dbytes` extra bytes and `dkl` less distortion.
+#[derive(Debug, Clone)]
+struct Step {
+    layer: usize,
+    to_idx: usize,
+    dbytes: usize,
+    dkl: f64,
+    gain: f64,
+}
+
+/// Choose per-layer bit-widths under `budget_bytes` (packed quantized
+/// payload, [`crate::quant::QTensor::byte_size`] accounting). Errors when
+/// the table is empty, malformed (bytes/bits not strictly increasing), or
+/// the budget cannot even fit the all-floor assignment.
+pub fn allocate(table: &SensitivityTable, budget_bytes: usize) -> Result<BitPlan> {
+    if table.layers.is_empty() {
+        return Err(Error::Quant("allocate: empty sensitivity table".into()));
+    }
+    for l in &table.layers {
+        if l.options.is_empty() {
+            return Err(Error::Quant(format!("allocate: layer {:?} has no options", l.layer)));
+        }
+    }
+
+    // The floor: every layer at its cheapest candidate.
+    let mut level: Vec<usize> = vec![0; table.layers.len()];
+    let mut bytes: usize = table.layers.iter().map(|l| l.options[0].bytes).sum();
+    let mut kl: f64 = table.layers.iter().map(|l| l.options[0].kl).sum();
+    if bytes > budget_bytes {
+        let floor_bits = table.layers.iter().map(|l| l.options[0].bits).min().unwrap_or(0);
+        return Err(Error::Quant(format!(
+            "budget {budget_bytes} B is below the all-INT{floor_bits} floor ({bytes} B) — \
+             nothing to allocate"
+        )));
+    }
+
+    // Longest affordable prefix of the budget-independent schedule.
+    for step in upgrade_schedule(table)? {
+        if bytes + step.dbytes > budget_bytes {
+            break;
+        }
+        level[step.layer] = step.to_idx;
+        bytes += step.dbytes;
+        kl -= step.dkl;
+    }
+
+    let layers: BTreeMap<String, u8> = table
+        .layers
+        .iter()
+        .zip(&level)
+        .map(|(l, &li)| (l.layer.clone(), l.options[li].bits))
+        .collect();
+    Ok(BitPlan { layers, budget_bytes, planned_bytes: bytes, planned_kl: kl })
+}
+
+/// Build the global upgrade schedule: per-layer convexified chains, merged
+/// and sorted by marginal gain. Within a layer gains strictly decrease
+/// after convexification, so any deterministic tie-break preserves chain
+/// order across layers.
+fn upgrade_schedule(table: &SensitivityTable) -> Result<Vec<Step>> {
+    let mut all: Vec<Step> = Vec::new();
+    for (li, layer) in table.layers.iter().enumerate() {
+        for w in layer.options.windows(2) {
+            if w[1].bits <= w[0].bits || w[1].bytes <= w[0].bytes {
+                return Err(Error::Quant(format!(
+                    "sensitivity options for {:?} must have strictly increasing bits and bytes \
+                     (got INT{}@{}B then INT{}@{}B)",
+                    layer.layer, w[0].bits, w[0].bytes, w[1].bits, w[1].bytes
+                )));
+            }
+        }
+        // Raw consecutive steps, then convexify: merge while a later step's
+        // gain is not strictly worse than its predecessor's.
+        let mut hull: Vec<Step> = Vec::new();
+        for j in 1..layer.options.len() {
+            let dbytes = layer.options[j].bytes - layer.options[j - 1].bytes;
+            let dkl = layer.options[j - 1].kl - layer.options[j].kl;
+            let mut s = Step { layer: li, to_idx: j, dbytes, dkl, gain: dkl / dbytes as f64 };
+            while let Some(prev) = hull.last() {
+                if s.gain >= prev.gain {
+                    let prev = hull.pop().expect("non-empty");
+                    let dbytes = prev.dbytes + s.dbytes;
+                    let dkl = prev.dkl + s.dkl;
+                    let gain = dkl / dbytes as f64;
+                    s = Step { layer: li, to_idx: s.to_idx, dbytes, dkl, gain };
+                } else {
+                    break;
+                }
+            }
+            hull.push(s);
+        }
+        // Gains now strictly decrease along the chain, so non-improving
+        // steps form a suffix; drop them (never spend bytes for ≤ 0 gain).
+        while hull.last().is_some_and(|s| s.gain <= 0.0) {
+            hull.pop();
+        }
+        all.extend(hull);
+    }
+    all.sort_by(|a, b| {
+        b.gain
+            .total_cmp(&a.gain)
+            .then_with(|| table.layers[a.layer].layer.cmp(&table.layers[b.layer].layer))
+            .then_with(|| a.to_idx.cmp(&b.to_idx))
+    });
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::sensitivity::{BitOption, LayerSensitivity};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn opt(bits: u8, bytes: usize, kl: f64) -> BitOption {
+        BitOption { bits, bytes, kl, max_abs_delta: 0.0 }
+    }
+
+    fn layer(name: &str, options: Vec<BitOption>) -> LayerSensitivity {
+        LayerSensitivity {
+            layer: name.to_string(),
+            params: vec![format!("{name}.weight")],
+            options,
+        }
+    }
+
+    /// Random but well-formed table: strictly increasing bytes, arbitrary
+    /// (possibly non-monotone) KL so convexification gets exercised.
+    fn random_table(rng: &mut Rng) -> SensitivityTable {
+        let nl = rng.range(1, 6);
+        let layers = (0..nl)
+            .map(|i| {
+                let base_bytes = rng.range(10, 200);
+                let mut bytes = base_bytes;
+                let mut options = Vec::new();
+                for &bits in &[2u8, 4, 8] {
+                    options.push(opt(bits, bytes, rng.range_f64(0.0, 2.0)));
+                    bytes += rng.range(1, 300);
+                }
+                layer(&format!("layer.{i}"), options)
+            })
+            .collect();
+        SensitivityTable { layers, examples: 1 }
+    }
+
+    fn recompute(table: &SensitivityTable, plan: &BitPlan) -> (usize, f64) {
+        let mut bytes = 0usize;
+        let mut kl = 0.0f64;
+        for l in &table.layers {
+            let bits = plan.layers[&l.layer];
+            let o = l.options.iter().find(|o| o.bits == bits).unwrap();
+            bytes += o.bytes;
+            kl += o.kl;
+        }
+        (bytes, kl)
+    }
+
+    #[test]
+    fn spends_budget_on_the_sensitive_layer_first() {
+        // "hot" collapses from 10.0 to ~0 KL; "cold" barely moves — the
+        // first upgrade bytes must go to hot
+        let table = SensitivityTable {
+            layers: vec![
+                layer("cold", vec![opt(2, 100, 0.02), opt(4, 200, 0.01), opt(8, 400, 0.005)]),
+                layer("hot", vec![opt(2, 100, 10.0), opt(4, 200, 0.5), opt(8, 400, 0.1)]),
+            ],
+            examples: 1,
+        };
+        let plan = allocate(&table, 300).unwrap();
+        assert_eq!(plan.layers["hot"], 4);
+        assert_eq!(plan.layers["cold"], 2);
+        assert_eq!(plan.planned_bytes, 300);
+    }
+
+    #[test]
+    fn convexification_jumps_straight_to_int8() {
+        // 2→4 barely helps but 4→8 collapses the loss: the merged 2→8 step
+        // must be offered (and taken) as one unit
+        let table = SensitivityTable {
+            layers: vec![layer("l", vec![opt(2, 100, 5.0), opt(4, 150, 4.9), opt(8, 200, 0.1)])],
+            examples: 1,
+        };
+        let plan = allocate(&table, 200).unwrap();
+        assert_eq!(plan.layers["l"], 8);
+        // and with a budget that only fits the partial step, nothing is taken
+        let plan = allocate(&table, 160).unwrap();
+        assert_eq!(plan.layers["l"], 2);
+    }
+
+    #[test]
+    fn non_improving_upgrades_are_never_bought() {
+        // INT8 measures *worse* than INT4 (calibration noise): even with an
+        // unlimited budget the plan stops at INT4
+        let table = SensitivityTable {
+            layers: vec![layer("l", vec![opt(2, 100, 5.0), opt(4, 200, 1.0), opt(8, 400, 1.2)])],
+            examples: 1,
+        };
+        let plan = allocate(&table, usize::MAX).unwrap();
+        assert_eq!(plan.layers["l"], 4);
+    }
+
+    #[test]
+    fn budget_below_floor_errors() {
+        let table =
+            SensitivityTable { layers: vec![layer("l", vec![opt(2, 100, 1.0)])], examples: 1 };
+        assert!(allocate(&table, 99).is_err());
+        assert!(allocate(&table, 100).is_ok());
+    }
+
+    #[test]
+    fn malformed_options_rejected() {
+        let table = SensitivityTable {
+            layers: vec![layer("l", vec![opt(2, 100, 1.0), opt(4, 100, 0.5)])],
+            examples: 1,
+        };
+        assert!(allocate(&table, 1000).is_err());
+    }
+
+    #[test]
+    fn property_plan_never_exceeds_budget() {
+        check("plan fits budget", 60, |rng| {
+            let table = random_table(rng);
+            let floor: usize = table.layers.iter().map(|l| l.options[0].bytes).sum();
+            let ceil: usize = table.layers.iter().map(|l| l.options[2].bytes).sum();
+            let budget = rng.range(floor, ceil + 50);
+            let plan = allocate(&table, budget).unwrap();
+            assert!(plan.planned_bytes <= budget, "{} > {budget}", plan.planned_bytes);
+            // the reported totals match the assignment exactly
+            let (bytes, kl) = recompute(&table, &plan);
+            assert_eq!(bytes, plan.planned_bytes);
+            assert!((kl - plan.planned_kl).abs() < 1e-9, "{kl} vs {}", plan.planned_kl);
+        });
+    }
+
+    #[test]
+    fn property_larger_budget_never_hurts() {
+        check("monotone in budget", 60, |rng| {
+            let table = random_table(rng);
+            let floor: usize = table.layers.iter().map(|l| l.options[0].bytes).sum();
+            let ceil: usize = table.layers.iter().map(|l| l.options[2].bytes).sum();
+            let mut b1 = rng.range(floor, ceil + 1);
+            let mut b2 = rng.range(floor, ceil + 1);
+            if b1 > b2 {
+                std::mem::swap(&mut b1, &mut b2);
+            }
+            let p1 = allocate(&table, b1).unwrap();
+            let p2 = allocate(&table, b2).unwrap();
+            assert!(
+                p2.planned_kl <= p1.planned_kl + 1e-12,
+                "budget {b2} ({}) worse than {b1} ({})",
+                p2.planned_kl,
+                p1.planned_kl
+            );
+            // larger budget strictly extends the smaller plan's upgrades
+            for (l, &bits) in &p1.layers {
+                assert!(p2.layers[l] >= bits, "{l} downgraded {bits} -> {}", p2.layers[l]);
+            }
+        });
+    }
+
+    #[test]
+    fn property_allocation_is_deterministic() {
+        check("deterministic allocation", 40, |rng| {
+            let table = random_table(rng);
+            let floor: usize = table.layers.iter().map(|l| l.options[0].bytes).sum();
+            let budget = floor + rng.range(0, 500);
+            let a = allocate(&table, budget).unwrap();
+            let b = allocate(&table, budget).unwrap();
+            assert_eq!(a.layers, b.layers);
+            assert_eq!(a.planned_bytes, b.planned_bytes);
+            assert_eq!(a.planned_kl.to_bits(), b.planned_kl.to_bits());
+        });
+    }
+}

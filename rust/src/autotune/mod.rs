@@ -1,0 +1,233 @@
+//! Sensitivity-guided mixed-precision autotuner: per-layer bit allocation
+//! under a packed-byte budget.
+//!
+//! SplitQuant keeps outliers representable at low bit-widths; this subsystem
+//! decides *which* layers get which widths. The repo previously quantized
+//! every layer at one global width (with hand-written per-layer overrides
+//! from PR 2) — the autotuner closes the ROADMAP's "adaptive mixed-precision
+//! search" item by making the assignment automatic:
+//!
+//! ```text
+//!  FP32 store ──┐                                 (one O(1) share per candidate,
+//!               ▼                                  copy-on-write — never cloned)
+//!  [1] sensitivity sweep      layer × {2,4,8}: quantize ONE layer, forward the
+//!      (sensitivity.rs)       calibration batches, record KL vs FP32 logits +
+//!               │             exact packed bytes (QTensor::byte_size)
+//!               ▼
+//!  [2] greedy Lagrangian      convexified per-layer upgrade chains, merged into
+//!      allocation             one gain-sorted schedule; a budget buys the
+//!      (allocate.rs)          longest affordable prefix → BitPlan (plan.rs,
+//!               │             JSON-serializable, deterministic)
+//!               ▼
+//!  [3] AutoTunePass           expands the plan into per-layer SplitQuantConfig
+//!      (this module)          overrides on one QuantPipeline pass; provenance
+//!               │             records budget + assignment histogram
+//!               ▼
+//!  [4] validation             PackedModel::save_sharded → BitPlan::validate_sharded
+//!                             re-reads every quantized shard and checks the
+//!                             realized payload against the budget
+//! ```
+//!
+//! See `examples/autotune_budget.rs` for the end-to-end walkthrough (budget =
+//! uniform-INT4 bytes, plan beats uniform-INT2 accuracy) and the `autotune`
+//! CLI subcommand for checkpoint workflows.
+
+pub mod allocate;
+pub mod plan;
+pub mod sensitivity;
+
+pub use allocate::allocate;
+pub use plan::BitPlan;
+pub use sensitivity::{
+    candidate_artifact, logit_distortion, sweep, BitOption, LayerSensitivity, SensitivityTable,
+    SweepConfig,
+};
+
+use crate::error::{Error, Result};
+use crate::model::params::ParamStore;
+use crate::quant::pipeline::{ModelArtifact, QuantPass, SplitQuantPass};
+use crate::splitquant::{default_quantizable, SplitQuantConfig};
+
+/// Quantizable parameters grouped into layer units that share one bit-width
+/// decision: `P.weight` + `P.bias` group under stem `P`; standalone tensors
+/// (e.g. `embeddings.token`) form their own group. Order follows the
+/// store's parameter order (deterministic).
+pub fn layer_groups(store: &ParamStore) -> Vec<(String, Vec<String>)> {
+    let mut order: Vec<String> = Vec::new();
+    let mut groups: std::collections::BTreeMap<String, Vec<String>> = Default::default();
+    for name in default_quantizable(store) {
+        let stem = name
+            .strip_suffix(".weight")
+            .or_else(|| name.strip_suffix(".bias"))
+            .unwrap_or(name.as_str())
+            .to_string();
+        if !groups.contains_key(&stem) {
+            order.push(stem.clone());
+        }
+        groups.entry(stem).or_default().push(name);
+    }
+    order
+        .into_iter()
+        .map(|l| {
+            let params = groups.remove(&l).expect("group recorded above");
+            (l, params)
+        })
+        .collect()
+}
+
+/// A [`QuantPass`] that expands a [`BitPlan`] into per-layer
+/// [`SplitQuantConfig`] overrides on one [`SplitQuantPass`]: every layer
+/// group is quantized at its planned width in a single pipeline pass, and
+/// the artifact's provenance records the budget and the assignment
+/// histogram. The plan must cover exactly the store's quantizable layer
+/// groups (a stale plan against a different model errors instead of
+/// silently misquantizing).
+#[derive(Debug, Clone)]
+pub struct AutoTunePass {
+    plan: BitPlan,
+    base: SplitQuantConfig,
+}
+
+impl AutoTunePass {
+    /// Apply `plan` on top of `base` (which supplies cluster count, seed,
+    /// and every non-`bits` knob).
+    pub fn new(plan: BitPlan, base: SplitQuantConfig) -> AutoTunePass {
+        AutoTunePass { plan, base }
+    }
+
+    /// The plan this pass expands.
+    pub fn plan(&self) -> &BitPlan {
+        &self.plan
+    }
+}
+
+impl QuantPass for AutoTunePass {
+    fn name(&self) -> String {
+        format!(
+            "autotune(budget={}B, planned={}B, {})",
+            self.plan.budget_bytes,
+            self.plan.planned_bytes,
+            self.plan.summary()
+        )
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let groups = layer_groups(&model.eval);
+        for name in self.plan.layers.keys() {
+            if !groups.iter().any(|(l, _)| l == name) {
+                return Err(Error::Quant(format!(
+                    "bit plan layer {name:?} does not exist in this model"
+                )));
+            }
+        }
+        let mut pass = SplitQuantPass::with_config(self.base);
+        let mut quantizable = Vec::new();
+        for (layer, params) in &groups {
+            let Some(&bits) = self.plan.layers.get(layer) else {
+                return Err(Error::Quant(format!(
+                    "bit plan has no assignment for layer {layer:?}"
+                )));
+            };
+            for p in params {
+                pass = pass.layer_bits(p, bits);
+                quantizable.push(p.clone());
+            }
+        }
+        pass.quantizable(quantizable).apply(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::BertConfig;
+    use crate::quant::pipeline::QuantPipeline;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn tiny_store() -> ParamStore {
+        let cfg = BertConfig {
+            vocab_size: 64,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 8,
+            num_classes: 3,
+            ln_eps: 1e-12,
+        };
+        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(0))
+    }
+
+    #[test]
+    fn layer_groups_pair_weights_with_biases() {
+        let store = tiny_store();
+        let groups = layer_groups(&store);
+        let by_name: BTreeMap<&str, &Vec<String>> =
+            groups.iter().map(|(l, p)| (l.as_str(), p)).collect();
+        assert_eq!(
+            by_name["encoder.0.attn.q"],
+            &vec![
+                "encoder.0.attn.q.weight".to_string(),
+                "encoder.0.attn.q.bias".to_string()
+            ]
+        );
+        assert_eq!(by_name["embeddings.token"], &vec!["embeddings.token".to_string()]);
+        // groups partition the quantizable set exactly
+        let total: usize = groups.iter().map(|(_, p)| p.len()).sum();
+        assert_eq!(total, default_quantizable(&store).len());
+        // deterministic across calls
+        assert_eq!(groups, layer_groups(&store));
+    }
+
+    #[test]
+    fn autotune_pass_applies_planned_widths() {
+        let store = tiny_store();
+        let mut layers = BTreeMap::new();
+        for (l, _) in layer_groups(&store) {
+            layers.insert(l, 2u8);
+        }
+        layers.insert("classifier".to_string(), 8);
+        layers.insert("pooler".to_string(), 4);
+        let plan =
+            BitPlan { layers, budget_bytes: 1 << 20, planned_bytes: 0, planned_kl: 0.0 };
+        let artifact = QuantPipeline::new()
+            .pass(AutoTunePass::new(plan, SplitQuantConfig::new(2)))
+            .run(&store)
+            .unwrap();
+        assert_eq!(artifact.tensors["classifier.weight"].bits(), 8);
+        assert_eq!(artifact.tensors["classifier.bias"].bits(), 8);
+        assert_eq!(artifact.tensors["pooler.weight"].bits(), 4);
+        assert_eq!(artifact.tensors["encoder.0.attn.q.weight"].bits(), 2);
+        assert_eq!(artifact.tensors["embeddings.token"].bits(), 2);
+        assert!(artifact.provenance[0].starts_with("autotune(budget="));
+        // every quantizable param was packed
+        assert_eq!(artifact.tensors.len(), default_quantizable(&store).len());
+    }
+
+    #[test]
+    fn autotune_pass_rejects_mismatched_plans() {
+        let store = tiny_store();
+        // missing layer
+        let mut layers = BTreeMap::new();
+        layers.insert("classifier".to_string(), 8u8);
+        let partial =
+            BitPlan { layers, budget_bytes: 0, planned_bytes: 0, planned_kl: 0.0 };
+        assert!(QuantPipeline::new()
+            .pass(AutoTunePass::new(partial, SplitQuantConfig::new(2)))
+            .run(&store)
+            .is_err());
+        // phantom layer
+        let mut layers = BTreeMap::new();
+        for (l, _) in layer_groups(&store) {
+            layers.insert(l, 2u8);
+        }
+        layers.insert("nonexistent.layer".to_string(), 4);
+        let phantom =
+            BitPlan { layers, budget_bytes: 0, planned_bytes: 0, planned_kl: 0.0 };
+        assert!(QuantPipeline::new()
+            .pass(AutoTunePass::new(phantom, SplitQuantConfig::new(2)))
+            .run(&store)
+            .is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! The serializable bit-allocation plan and its realized-payload validation.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::shardstore::{ShardData, ShardKind, ShardReader};
+use crate::util::json::{obj, Json};
+
+/// A per-layer bit assignment chosen under a byte budget — the autotuner's
+/// output and the [`crate::autotune::AutoTunePass`] input. Serializable to
+/// JSON ([`BitPlan::save`] / [`BitPlan::load`]) so a plan computed once on
+/// a calibration host can be replayed at deployment time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitPlan {
+    /// Bit-width per layer group (stem name, e.g. `encoder.0.attn.q`).
+    pub layers: BTreeMap<String, u8>,
+    /// The byte budget the plan was allocated under (packed quantized
+    /// payload, [`crate::quant::QTensor::byte_size`] accounting).
+    pub budget_bytes: usize,
+    /// Predicted packed bytes of the assignment (exact: byte cost depends
+    /// only on element count, bit-width and cluster count, so the realized
+    /// artifact matches this figure — asserted in the integration tests).
+    pub planned_bytes: usize,
+    /// Predicted logit distortion (sum of per-layer calibration KL under
+    /// the additive single-layer approximation).
+    pub planned_kl: f64,
+}
+
+impl BitPlan {
+    /// Layer count per assigned width, ascending (e.g. `{2: 5, 4: 3, 8: 2}`).
+    pub fn bits_histogram(&self) -> BTreeMap<u8, usize> {
+        let mut h = BTreeMap::new();
+        for &bits in self.layers.values() {
+            *h.entry(bits).or_insert(0usize) += 1;
+        }
+        h
+    }
+
+    /// Compact human label, e.g. `b2×5 b4×3 b8×2`.
+    pub fn summary(&self) -> String {
+        self.bits_histogram()
+            .iter()
+            .map(|(bits, n)| format!("b{bits}×{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// JSON form (layer map plus budget/planned figures).
+    pub fn to_json(&self) -> Json {
+        let layers: BTreeMap<String, Json> = self
+            .layers
+            .iter()
+            .map(|(name, &bits)| (name.clone(), Json::from(bits as usize)))
+            .collect();
+        obj(vec![
+            ("budget_bytes", Json::from(self.budget_bytes)),
+            ("planned_bytes", Json::from(self.planned_bytes)),
+            ("planned_kl", Json::from(self.planned_kl)),
+            ("layers", Json::Obj(layers)),
+        ])
+    }
+
+    /// Inverse of [`BitPlan::to_json`].
+    pub fn from_json(j: &Json) -> Result<BitPlan> {
+        let mut layers = BTreeMap::new();
+        for (name, bits) in j.get("layers")?.as_obj()? {
+            let b = bits.as_usize()?;
+            if !(1..=8).contains(&b) {
+                return Err(Error::Quant(format!("bit plan: {name:?} has invalid width {b}")));
+            }
+            layers.insert(name.clone(), b as u8);
+        }
+        Ok(BitPlan {
+            layers,
+            budget_bytes: j.get("budget_bytes")?.as_usize()?,
+            planned_bytes: j.get("planned_bytes")?.as_usize()?,
+            planned_kl: j.get("planned_kl")?.as_f64()?,
+        })
+    }
+
+    /// Write the plan as JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a plan saved with [`BitPlan::save`].
+    pub fn load(path: &Path) -> Result<BitPlan> {
+        let text = std::fs::read_to_string(path)?;
+        BitPlan::from_json(&Json::parse(&text)?)
+    }
+
+    /// Validate a realized sharded artifact (`SQSH0001`) against the plan's
+    /// budget: fault in every quantized shard and sum its packed byte cost
+    /// under the same [`crate::quant::QTensor::byte_size`] accounting the
+    /// allocator used. Returns the realized bytes; errors if they exceed
+    /// the budget (the deployment-time guard that a mis-paired plan/model
+    /// cannot silently blow the size contract).
+    pub fn validate_sharded(&self, path: &Path) -> Result<usize> {
+        let reader = ShardReader::open(path)?;
+        let mut realized = 0usize;
+        for name in reader.names() {
+            // the index knows each entry's kind without I/O — only the
+            // quantized records are faulted in and decoded
+            if reader.entry(name).map(|e| e.kind) != Some(ShardKind::Quant) {
+                continue;
+            }
+            if let ShardData::Quant(q) = reader.read(name)? {
+                realized += q.byte_size();
+            }
+        }
+        if realized > self.budget_bytes {
+            return Err(Error::Quant(format!(
+                "realized quantized payload {realized} B exceeds the {} B budget \
+                 (plan {}, {} on-disk record bytes)",
+                self.budget_bytes,
+                self.summary(),
+                reader.quantized_payload_bytes()
+            )));
+        }
+        Ok(realized)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_plan() -> BitPlan {
+        let mut layers = BTreeMap::new();
+        layers.insert("classifier".to_string(), 8u8);
+        layers.insert("encoder.0.attn.q".to_string(), 2u8);
+        layers.insert("encoder.0.ffn.in".to_string(), 4u8);
+        BitPlan { layers, budget_bytes: 1234, planned_bytes: 1200, planned_kl: 0.125 }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = demo_plan();
+        let j = p.to_json();
+        let q = BitPlan::from_json(&j).unwrap();
+        assert_eq!(p, q);
+        // and through the text form (f64 Display round-trips)
+        let q2 = BitPlan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(p, q2);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = demo_plan();
+        let path = std::env::temp_dir().join("sq_bitplan_rt.json");
+        p.save(&path).unwrap();
+        let q = BitPlan::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn invalid_widths_rejected() {
+        let j = Json::parse(
+            r#"{"budget_bytes":10,"planned_bytes":5,"planned_kl":0.1,"layers":{"x":16}}"#,
+        )
+        .unwrap();
+        assert!(BitPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn summary_histogram() {
+        let p = demo_plan();
+        assert_eq!(p.summary(), "b2×1 b4×1 b8×1");
+        assert_eq!(p.bits_histogram().get(&8), Some(&1));
+    }
+}

@@ -1,0 +1,246 @@
+//! Per-layer sensitivity sweep: how much does quantizing **one** layer at a
+//! candidate bit-width distort the model's logits, and what does it cost in
+//! packed bytes?
+//!
+//! For every quantizable layer group (weight + bias, or a standalone tensor
+//! like the token embedding) and every candidate bit-width, the sweep
+//! quantizes *only that layer* through the existing
+//! [`crate::quant::pipeline::QuantPipeline`] + [`SplitQuantPass`] route, runs
+//! the calibration batches through the pure-Rust executor, and records
+//!
+//! * the mean per-example KL divergence between the FP32 reference logits
+//!   and the candidate's logits (the allocator's objective),
+//! * the max absolute logit delta (a worst-case diagnostic), and
+//! * the **exact** packed byte cost from [`crate::quant::QTensor::byte_size`]
+//!   (codes + cluster-id plane + per-group parameters — the paper-§6
+//!   accounting the byte budget is denominated in).
+//!
+//! Every candidate artifact starts as an O(1) [`ParamStore::share`] view of
+//! the one FP32 store (copy-on-write rewrites only the swept layer's
+//! tensors), so a full sweep over L layers × B bit-widths never deep-clones
+//! the model — `tests/integration_autotune.rs` pins this with
+//! `Arc::ptr_eq`-level accounting.
+
+use crate::data::batch::TextBatch;
+use crate::error::{Error, Result};
+use crate::model::bert::BertModel;
+use crate::model::config::BertConfig;
+use crate::model::params::ParamStore;
+use crate::quant::pipeline::{ModelArtifact, QuantPipeline, SplitQuantPass};
+use crate::splitquant::SplitQuantConfig;
+use crate::tensor::Tensor;
+
+/// Sweep configuration: which bit-widths to try and the base SplitQuant
+/// config (cluster count, seed, …) each candidate inherits.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Candidate bit-widths, deduplicated and sorted ascending before use.
+    pub candidates: Vec<u8>,
+    /// Base [`SplitQuantConfig`] every candidate derives from (only `bits`
+    /// is overridden per candidate).
+    pub base: SplitQuantConfig,
+}
+
+impl Default for SweepConfig {
+    /// The standard low-bit ladder {2, 4, 8} over the paper-default
+    /// SplitQuant config (k = 3, greedy k-means++).
+    fn default() -> Self {
+        SweepConfig { candidates: vec![2, 4, 8], base: SplitQuantConfig::new(2) }
+    }
+}
+
+/// One measured (layer, bit-width) cell of the sensitivity table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitOption {
+    /// Candidate bit-width.
+    pub bits: u8,
+    /// Exact packed byte cost of the layer's parameters at this width
+    /// (sum of [`crate::quant::QTensor::byte_size`] over the group).
+    pub bytes: usize,
+    /// Mean per-example KL(fp32 ‖ candidate) over the calibration logits.
+    pub kl: f64,
+    /// Max `|fp32 − candidate|` over all calibration logits.
+    pub max_abs_delta: f64,
+}
+
+/// Sensitivity measurements for one layer group across all candidates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSensitivity {
+    /// Layer group name (parameter stem, e.g. `encoder.0.attn.q`).
+    pub layer: String,
+    /// The group's parameter names (e.g. `…weight` + `…bias`).
+    pub params: Vec<String>,
+    /// One entry per candidate bit-width, ascending.
+    pub options: Vec<BitOption>,
+}
+
+/// The full per-layer × per-bit-width sensitivity table — the allocator's
+/// input ([`crate::autotune::allocate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensitivityTable {
+    /// One row per quantizable layer group, in model (store) order.
+    pub layers: Vec<LayerSensitivity>,
+    /// Calibration examples each measurement averaged over.
+    pub examples: usize,
+}
+
+impl SensitivityTable {
+    /// Total packed bytes of a **uniform** assignment at `bits` (every layer
+    /// at the same width) — the natural budget reference points. `None`
+    /// when `bits` was not among the sweep candidates.
+    pub fn uniform_bytes(&self, bits: u8) -> Option<usize> {
+        let mut total = 0usize;
+        for l in &self.layers {
+            total += l.options.iter().find(|o| o.bits == bits)?.bytes;
+        }
+        Some(total)
+    }
+}
+
+/// Quantize **only** `params` at `bits` (base config otherwise), returning
+/// the candidate artifact. The artifact's eval view is an O(1) share of
+/// `store`: every tensor outside `params` stays pointer-shared (this is the
+/// sweep's inner loop — it must never deep-clone the FP32 store).
+pub fn candidate_artifact(
+    store: &ParamStore,
+    params: &[String],
+    bits: u8,
+    base: &SplitQuantConfig,
+) -> Result<ModelArtifact> {
+    let cfg = SplitQuantConfig { bits, ..*base };
+    QuantPipeline::new()
+        .pass(SplitQuantPass::with_config(cfg).quantizable(params.to_vec()))
+        .run(store)
+}
+
+/// Run the sensitivity sweep: for each quantizable layer group × candidate
+/// bit-width, quantize only that layer and measure logit distortion against
+/// the FP32 reference over `batches`. Deterministic for a given
+/// `(store, batches, sweep config)` — candidates re-seed k-means from the
+/// base config, and the executor is bit-stable across engines.
+pub fn sweep(
+    cfg: &BertConfig,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    sweep_cfg: &SweepConfig,
+) -> Result<SensitivityTable> {
+    if batches.is_empty() {
+        return Err(Error::Quant("sensitivity sweep needs at least one calibration batch".into()));
+    }
+    let mut candidates = sweep_cfg.candidates.clone();
+    candidates.sort_unstable();
+    candidates.dedup();
+    if candidates.is_empty() {
+        return Err(Error::Quant("sensitivity sweep needs at least one candidate bit-width".into()));
+    }
+
+    // FP32 reference logits, one forward per calibration batch.
+    let fp32 = BertModel::new(cfg.clone(), store.share())?;
+    let refs: Vec<Tensor> = batches.iter().map(|b| fp32.forward(&b.ids, &b.mask)).collect();
+    let examples: usize = refs.iter().map(|l| l.shape()[0]).sum();
+
+    let groups = super::layer_groups(store);
+    let mut layers = Vec::with_capacity(groups.len());
+    for (layer, params) in groups {
+        let mut options = Vec::with_capacity(candidates.len());
+        for &bits in &candidates {
+            let artifact = candidate_artifact(store, &params, bits, &sweep_cfg.base)?;
+            let bytes: usize = artifact.tensors.values().map(|q| q.byte_size()).sum();
+            let model = BertModel::new(cfg.clone(), artifact.eval.share())?;
+            let mut kl_sum = 0.0f64;
+            let mut max_abs = 0.0f64;
+            for (b, r) in batches.iter().zip(&refs) {
+                let logits = model.forward(&b.ids, &b.mask);
+                let (dk, da) = logit_distortion(r, &logits);
+                kl_sum += dk;
+                max_abs = max_abs.max(da);
+            }
+            options.push(BitOption {
+                bits,
+                bytes,
+                kl: kl_sum / examples.max(1) as f64,
+                max_abs_delta: max_abs,
+            });
+        }
+        layers.push(LayerSensitivity { layer, params, options });
+    }
+    Ok(SensitivityTable { layers, examples })
+}
+
+/// Logit distortion between two `(rows × classes)` logit matrices: the sum
+/// over rows of KL(softmax(reference) ‖ softmax(candidate)) plus the max
+/// absolute element delta. Panics on shape mismatch (caller bug).
+pub fn logit_distortion(reference: &Tensor, candidate: &Tensor) -> (f64, f64) {
+    assert_eq!(reference.shape(), candidate.shape(), "logit shapes must match");
+    let (rows, cols) = reference.as_2d();
+    let mut kl = 0.0f64;
+    let mut max_abs = 0.0f64;
+    for i in 0..rows {
+        let r = &reference.data()[i * cols..(i + 1) * cols];
+        let c = &candidate.data()[i * cols..(i + 1) * cols];
+        kl += kl_softmax(r, c);
+        for (a, b) in r.iter().zip(c) {
+            max_abs = max_abs.max(((a - b) as f64).abs());
+        }
+    }
+    (kl, max_abs)
+}
+
+/// KL(softmax(p_logits) ‖ softmax(q_logits)) in f64, with the candidate
+/// probabilities floored at 1e-12 so a collapsed candidate row stays finite.
+fn kl_softmax(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    let p = softmax64(p_logits);
+    let q = softmax64(q_logits);
+    p.iter()
+        .zip(&q)
+        .map(|(&pi, &qi)| if pi > 0.0 { pi * (pi / qi.max(1e-12)).ln() } else { 0.0 })
+        .sum()
+}
+
+fn softmax64(logits: &[f32]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&v| ((v as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kl_zero_on_identical_logits() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, -0.3, 2.0, 1.0, 0.0]).unwrap();
+        let (kl, max_abs) = logit_distortion(&t, &t);
+        assert_eq!(kl, 0.0);
+        assert_eq!(max_abs, 0.0);
+    }
+
+    #[test]
+    fn kl_positive_and_grows_with_perturbation() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[4, 6], 0.0, 1.0, &mut rng);
+        let mut small = a.clone();
+        let mut big = a.clone();
+        for (i, v) in small.data_mut().iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.01 } else { -0.01 };
+        }
+        for (i, v) in big.data_mut().iter_mut().enumerate() {
+            *v += if i % 2 == 0 { 0.5 } else { -0.5 };
+        }
+        let (kl_s, da_s) = logit_distortion(&a, &small);
+        let (kl_b, da_b) = logit_distortion(&a, &big);
+        assert!(kl_s > 0.0 && kl_b > kl_s, "{kl_s} vs {kl_b}");
+        assert!(da_b > da_s);
+    }
+
+    #[test]
+    fn kl_finite_on_collapsed_candidate() {
+        // an extreme candidate row must not produce inf/NaN
+        let r = Tensor::new(&[1, 3], vec![0.0, 0.0, 0.0]).unwrap();
+        let c = Tensor::new(&[1, 3], vec![100.0, -100.0, -100.0]).unwrap();
+        let (kl, _) = logit_distortion(&r, &c);
+        assert!(kl.is_finite() && kl > 0.0);
+    }
+}

@@ -99,6 +99,75 @@ pub fn accuracy_rust(
     Ok(hits as f64 / seen.max(1) as f64)
 }
 
+/// Per-batch argmax predictions through the pure-Rust executor, stopping
+/// after the batch that covers the `n`-th example (no dead forwards past
+/// the cap). Precompute these once when scoring several candidates against
+/// the same reference ([`agreement_with_reference`]).
+pub fn predictions_rust(
+    cfg: &BertConfig,
+    store: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let m = BertModel::new(cfg.clone(), store.share())?;
+    let mut out = Vec::new();
+    let mut seen = 0usize;
+    for b in batches {
+        if seen >= n {
+            break;
+        }
+        let p = argmax_rows(&m.forward(&b.ids, &b.mask));
+        seen += p.len();
+        out.push(p);
+    }
+    Ok(out)
+}
+
+/// Top-1 agreement of `candidate` against precomputed reference predictions
+/// ([`predictions_rust`]) over the first `n` examples.
+pub fn agreement_with_reference(
+    cfg: &BertConfig,
+    reference_preds: &[Vec<i32>],
+    candidate: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+) -> Result<f64> {
+    let cm = BertModel::new(cfg.clone(), candidate.share())?;
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    for (b, rp) in batches.iter().zip(reference_preds) {
+        if seen >= n {
+            break;
+        }
+        let cp = argmax_rows(&cm.forward(&b.ids, &b.mask));
+        for (r, c) in rp.iter().zip(&cp) {
+            if seen >= n {
+                break;
+            }
+            hits += usize::from(r == c);
+            seen += 1;
+        }
+    }
+    Ok(hits as f64 / seen.max(1) as f64)
+}
+
+/// Top-1 agreement between two weight sets through the pure-Rust executor:
+/// the fraction of the first `n` examples whose argmax under `candidate`
+/// matches the one under `reference`. This is the fidelity figure the
+/// mixed-precision autotuner ([`crate::autotune`]) optimizes for — unlike
+/// task accuracy it is meaningful even for untrained or synthetic setups,
+/// and for a trained checkpoint it lower-bounds the accuracy retained.
+pub fn agreement_rust(
+    cfg: &BertConfig,
+    reference: &ParamStore,
+    candidate: &ParamStore,
+    batches: &[TextBatch],
+    n: usize,
+) -> Result<f64> {
+    let refs = predictions_rust(cfg, reference, batches, n)?;
+    agreement_with_reference(cfg, &refs, candidate, batches, n)
+}
+
 /// Accuracy through a PJRT forward executable (`bert_fwd_b{B}`); batches must
 /// match the executable's batch size.
 pub fn accuracy_pjrt(
@@ -247,6 +316,21 @@ mod tests {
         let (b1, b2) = (b1.unwrap(), b2.unwrap());
         assert!(b2 > b1, "split {b2} should exceed baseline {b1}");
         assert!(b2 < b1 * 3, "split {b2} must stay under 3x baseline {b1}");
+    }
+
+    #[test]
+    fn agreement_is_one_for_identical_stores_and_degrades_with_bits() {
+        let (cfg, store, batches, n) = tiny_setup();
+        let same = agreement_rust(&cfg, &store, &store, &batches, n).unwrap();
+        assert_eq!(same, 1.0);
+        let (int8, _) =
+            prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(8))).unwrap();
+        let (int2, _) =
+            prepare_store(&store, &WeightMethod::SplitQuant(SplitQuantConfig::new(2))).unwrap();
+        let a8 = agreement_rust(&cfg, &store, &int8, &batches, n).unwrap();
+        let a2 = agreement_rust(&cfg, &store, &int2, &batches, n).unwrap();
+        assert!(a8 >= a2, "INT8 fidelity {a8} below INT2 {a2}");
+        assert!(a8 > 0.5, "INT8 should track the FP32 argmax closely ({a8})");
     }
 
     #[test]

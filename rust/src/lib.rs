@@ -14,12 +14,15 @@
 //!   pure-Rust quantized-inference executor, the parallel kernel engine
 //!   ([`parallel`]: persistent worker pool + cache-blocked kernels), the
 //!   shard-paged model store ([`shardstore`]: serve models larger than RAM
-//!   under a residency byte budget), the PJRT runtime bridge and a batched
-//!   serving coordinator. Python never runs on the request path.
+//!   under a residency byte budget), the sensitivity-guided mixed-precision
+//!   autotuner ([`autotune`]: per-layer bit allocation under a packed-byte
+//!   budget), the PJRT runtime bridge and a batched serving coordinator.
+//!   Python never runs on the request path.
 //!
 //! The public API is organized by subsystem; see `DESIGN.md` for the
 //! paper → module map and `EXPERIMENTS.md` for reproduced results.
 
+pub mod autotune;
 pub mod baselines;
 pub mod clustering;
 pub mod coordinator;

@@ -92,6 +92,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "eval" => cmd_eval(&flags),
         "table1" => cmd_table1(&flags),
         "quantize" => cmd_quantize(&flags),
+        "autotune" => cmd_autotune(&flags),
         "analyze" => cmd_analyze(&flags),
         "serve" => cmd_serve(&flags),
         "verify-runtime" => cmd_verify(&flags),
@@ -119,6 +120,8 @@ fn print_usage() {
                            [--act-quant none|tensor|split] [--engine rust|pjrt]\n\
            table1          --ckpt-emotion F --ckpt-spam F [--bits 2,4,8]\n\
            quantize        --ckpt F --bits B [--out F.sqq]  write a packed model\n\
+           autotune        --ckpt F [--budget-bytes N] [--bits 2,4,8] [--calib-batches 2]\n\
+                           [--out plan.json] [--pack F.sqsh]   mixed-precision bit plan\n\
            analyze         --ckpt F [--bits 2] [--k 3]   per-tensor split analysis\n\
            serve           --ckpt F --requests N [--workers W]\n\
            verify-runtime  [--ckpt F]\n\
@@ -352,6 +355,128 @@ fn cmd_quantize(flags: &Flags) -> Result<()> {
         splitquant::report::bytes(packed as usize),
         100.0 * packed as f64 / fp32 as f64,
     );
+    Ok(())
+}
+
+/// Sensitivity sweep → budgeted bit allocation → (optionally) a packed
+/// mixed-precision model validated against the budget. Pure-Rust path — no
+/// AOT artifacts needed. Default budget: the uniform-INT4 packed size, so
+/// the plan answers "what is the best sub-INT4-sized model?".
+fn cmd_autotune(flags: &Flags) -> Result<()> {
+    let task = flags.get("task", "emotion");
+    let ckpt = flags.get("ckpt", &format!("checkpoints/{task}.bin"));
+    let seed = flags.u64("seed", 0);
+    let out = flags.get("out", &format!("checkpoints/{task}.bitplan.json"));
+    // manifest config when artifacts exist (same shapes train/eval use);
+    // the stock BERT-Tiny config otherwise — the sweep itself is pure Rust
+    let cfg = match Runtime::new(&artifacts_dir(flags)) {
+        Ok(rt) => rt.manifest.bert.clone(),
+        Err(_) => splitquant::model::config::BertConfig::default(),
+    };
+    let store = if Path::new(&ckpt).exists() {
+        println!("[autotune] checkpoint {ckpt}");
+        let s = ParamStore::load(Path::new(&ckpt))?;
+        s.check_order(&cfg.param_order())?;
+        s
+    } else {
+        eprintln!("[autotune] no checkpoint at {ckpt}; sweeping a random init (fidelity only)");
+        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(seed ^ 0xA070))
+    };
+    let (train_set, test_set) = load_task(&task, seed)?;
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    // tokenize only the calibration slice, not the full training corpus
+    let ncal = flags.usize("calib-batches", 2).max(1);
+    let take = (ncal * 32).min(train_set.len());
+    let calib_set = splitquant::data::TextDataset {
+        name: train_set.name.clone(),
+        texts: train_set.texts[..take].to_vec(),
+        labels: train_set.labels[..take].to_vec(),
+        num_classes: train_set.num_classes,
+        class_names: train_set.class_names.clone(),
+    };
+    let (calib, _) = pad_to_batches(&calib_set, &tok, 32);
+    let mut candidates: Vec<u8> = Vec::new();
+    for part in flags.get("bits", "2,4,8").split(',') {
+        candidates.push(part.trim().parse().map_err(|_| {
+            splitquant::Error::Quant(format!("--bits: invalid width {part:?} (use e.g. 2,4,8)"))
+        })?);
+    }
+    let sweep_cfg = splitquant::autotune::SweepConfig {
+        candidates,
+        ..splitquant::autotune::SweepConfig::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let table = splitquant::autotune::sweep(&cfg, &store, &calib, &sweep_cfg)?;
+    println!(
+        "[autotune] swept {} layer groups x {} widths over {} calibration examples in {:?}",
+        table.layers.len(),
+        table.layers.first().map(|l| l.options.len()).unwrap_or(0),
+        table.examples,
+        t0.elapsed()
+    );
+
+    let budget = match flags.usize("budget-bytes", 0) {
+        0 => table.uniform_bytes(4).ok_or_else(|| {
+            splitquant::Error::Quant(
+                "no --budget-bytes given and INT4 not among the sweep candidates".into(),
+            )
+        })?,
+        b => b,
+    };
+    let plan = splitquant::autotune::allocate(&table, budget)?;
+
+    let widths: Vec<u8> = table
+        .layers
+        .first()
+        .map(|l| l.options.iter().map(|o| o.bits).collect())
+        .unwrap_or_default();
+    let headers: Vec<String> = std::iter::once("layer".to_string())
+        .chain(widths.iter().map(|b| format!("KL@INT{b}")))
+        .chain(["plan".to_string(), "plan bytes".to_string()])
+        .collect();
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("per-layer sensitivity (mean calibration KL vs FP32)", &hrefs);
+    for l in &table.layers {
+        let bits = plan.layers[&l.layer];
+        let chosen = l.options.iter().find(|o| o.bits == bits).expect("plan bits swept");
+        let mut row = vec![l.layer.clone()];
+        row.extend(l.options.iter().map(|o| format!("{:.3e}", o.kl)));
+        row.push(format!("INT{bits}"));
+        row.push(splitquant::report::bytes(chosen.bytes));
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!(
+        "[autotune] budget {} -> plan {} ({} planned, predicted KL {:.3e})",
+        splitquant::report::bytes(budget),
+        plan.summary(),
+        splitquant::report::bytes(plan.planned_bytes),
+        plan.planned_kl
+    );
+    plan.save(Path::new(&out))?;
+    println!("[autotune] bit plan -> {out}");
+
+    if let Some(pack) = flags.0.get("pack") {
+        let artifact = splitquant::quant::QuantPipeline::new()
+            .pass(splitquant::autotune::AutoTunePass::new(plan.clone(), sweep_cfg.base))
+            .run(&store)?;
+        let qm = artifact.quantized_model();
+        let pm = splitquant::quant::PackedModel::assemble(&store, &qm);
+        pm.save_sharded(Path::new(pack))?;
+        let realized = plan.validate_sharded(Path::new(pack))?;
+        let (eval_batches, n) = pad_to_batches(&test_set, &tok, 32);
+        let agree =
+            splitquant::eval::agreement_rust(&cfg, &store, &artifact.eval, &eval_batches, n)?;
+        println!(
+            "[autotune] packed sharded model -> {pack} ({} quantized payload, \
+             validated against the {} budget)",
+            splitquant::report::bytes(realized),
+            splitquant::report::bytes(budget)
+        );
+        println!("[autotune] provenance: {:?}", artifact.provenance);
+        println!("[autotune] plan fidelity vs FP32 argmax on {n} test examples: {}", pct(agree));
+    }
     Ok(())
 }
 

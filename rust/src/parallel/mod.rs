@@ -60,6 +60,18 @@ impl Default for KernelKind {
 }
 
 impl KernelKind {
+    /// Parse a CLI flag value (`"scalar"` | `"simd"`), shared by the
+    /// example/CLI surfaces; `None` for anything else. The parsed `Simd`
+    /// still degrades through [`KernelKind::effective`] when the feature
+    /// is compiled out.
+    pub fn from_flag(s: &str) -> Option<KernelKind> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "simd" => Some(KernelKind::Simd),
+            _ => None,
+        }
+    }
+
     /// The kind that will actually execute: `Simd` requires the `simd`
     /// feature; without it every request degrades to `Scalar`.
     pub fn effective(self) -> KernelKind {
@@ -188,6 +200,13 @@ mod tests {
     fn small_problems_stay_serial() {
         // 2·8·8·8 = 1024 flops is far below any sane serial_flops
         assert!(!should_parallelize(1024));
+    }
+
+    #[test]
+    fn kernel_kind_parses_cli_flags() {
+        assert_eq!(KernelKind::from_flag("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::from_flag("simd"), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::from_flag("avx512"), None);
     }
 
     #[test]

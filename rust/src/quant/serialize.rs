@@ -395,6 +395,46 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_byte_identity_mixed_precision() {
+        // a BitPlan-style artifact (different layers at different widths)
+        // must reload byte-identically with per-layer bit metadata intact
+        use crate::quant::pipeline::{QuantPipeline, SplitQuantPass};
+        let (_, store, _) = tiny();
+        let artifact = QuantPipeline::new()
+            .pass(
+                SplitQuantPass::bits(2)
+                    .layer_bits("classifier.weight", 8)
+                    .layer_bits("classifier.bias", 8)
+                    .layer_bits("pooler.weight", 4),
+            )
+            .run(&store)
+            .unwrap();
+        let pm = PackedModel::assemble(&store, &artifact.quantized_model());
+
+        let p1 = std::env::temp_dir().join("sq_rt_mixed_1.sqq");
+        let p2 = std::env::temp_dir().join("sq_rt_mixed_2.sqq");
+        pm.save(&p1).unwrap();
+        let loaded = PackedModel::load(&p1).unwrap();
+        loaded.save(&p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        assert_eq!(b1, b2, "mixed-precision save→load→save is not byte-stable");
+
+        // every per-layer width (and each param group's bits) survived
+        assert_eq!(loaded.qmodel.tensors["classifier.weight"].bits(), 8);
+        assert_eq!(loaded.qmodel.tensors["classifier.bias"].bits(), 8);
+        assert_eq!(loaded.qmodel.tensors["pooler.weight"].bits(), 4);
+        assert_eq!(loaded.qmodel.tensors["encoder.0.attn.q.weight"].bits(), 2);
+        for (name, q) in &pm.qmodel.tensors {
+            let l = &loaded.qmodel.tensors[name];
+            assert_eq!(l, q, "{name}");
+            assert!(l.params().iter().all(|p| p.bits == q.params()[0].bits), "{name}");
+        }
+    }
+
+    #[test]
     fn truncated_files_error() {
         let pm = all_layouts_model();
         let full = std::env::temp_dir().join("sq_trunc_full.sqq");

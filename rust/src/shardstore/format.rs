@@ -238,6 +238,19 @@ impl ShardReader {
         self.index.values().map(|e| e.len as usize).sum()
     }
 
+    /// On-disk record bytes of the **quantized** entries only — the payload
+    /// a mixed-precision bit plan controls (FP32 remainder excluded). The
+    /// autotuner's budget check re-reads the shards and validates the
+    /// in-memory accounting twin of this figure
+    /// ([`crate::autotune::BitPlan::validate_sharded`]).
+    pub fn quantized_payload_bytes(&self) -> usize {
+        self.index
+            .values()
+            .filter(|e| e.kind == ShardKind::Quant)
+            .map(|e| e.len as usize)
+            .sum()
+    }
+
     /// Read and parse one record: one seek + one read, nothing else touched.
     pub fn read(&self, name: &str) -> Result<ShardData> {
         let e = self

@@ -1,0 +1,259 @@
+//! End-to-end coverage for the mixed-precision autotuner (ISSUE 5): the
+//! sensitivity sweep shares one FP32 store across candidates (`Arc::ptr_eq`
+//! accounting), sweeps are deterministic, allocation respects the budget and
+//! is monotone in it, and an [`AutoTunePass`]-quantized model round-trips
+//! through the packed + sharded formats byte-identically with the realized
+//! payload validated against the budget.
+
+use std::sync::Arc;
+
+use splitquant::autotune::{
+    allocate, candidate_artifact, layer_groups, sweep, AutoTunePass, BitPlan, SweepConfig,
+};
+use splitquant::data::batch::TextBatch;
+use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+use splitquant::eval::agreement_rust;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::{PackedModel, QuantPipeline, SplitQuantPass};
+use splitquant::splitquant::SplitQuantConfig;
+
+fn tiny_setup() -> (BertConfig, ParamStore, Vec<TextBatch>, usize) {
+    let cfg = BertConfig {
+        vocab_size: 512,
+        hidden: 16,
+        layers: 1,
+        heads: 2,
+        ffn: 32,
+        max_len: 16,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = splitquant::util::rng::Rng::new(0);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let (_, test) = emotion::load_small(0, 10, 96);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (batches, n) = pad_to_batches(&test, &tok, 16);
+    (cfg, store, batches, n)
+}
+
+#[test]
+fn sweep_time_requantization_shares_the_fp32_store() {
+    // ISSUE-5 satellite: each candidate is an O(1) `share()` view — the
+    // sweep must never deep-clone the FP32 store per (layer, bits) cell
+    let (_, store, _, _) = tiny_setup();
+    let groups = layer_groups(&store);
+    let (_, params) = groups
+        .iter()
+        .find(|(l, _)| l == "encoder.0.attn.q")
+        .expect("attn.q group exists");
+    let base = SplitQuantConfig::new(2);
+    let a2 = candidate_artifact(&store, params, 2, &base).unwrap();
+    let a8 = candidate_artifact(&store, params, 8, &base).unwrap();
+
+    for name in store.names() {
+        if params.contains(name) {
+            // the swept layer was copy-on-written
+            assert!(!a2.eval.shares_tensor(&store, name), "{name} should have diverged");
+        } else {
+            // everything else is the same allocation, Arc::ptr_eq-level
+            assert!(
+                Arc::ptr_eq(&store.handle(name).unwrap(), &a2.eval.handle(name).unwrap()),
+                "{name} was cloned by the sweep"
+            );
+            assert!(a8.eval.shares_tensor(&store, name), "{name} was cloned by the sweep");
+        }
+    }
+    // N candidates cost 1x the store + only the swept layer's tensors each
+    let touched: usize = params.iter().map(|n| store.get(n).unwrap().byte_size()).sum();
+    assert_eq!(
+        ParamStore::resident_bytes([&store, &a2.eval, &a8.eval]),
+        store.byte_size() + 2 * touched
+    );
+}
+
+#[test]
+fn single_layer_sweeps_are_deterministic_across_runs() {
+    let (cfg, store, batches, _) = tiny_setup();
+    let calib = &batches[..2];
+    let sweep_cfg = SweepConfig::default();
+    let a = sweep(&cfg, &store, calib, &sweep_cfg).unwrap();
+    let b = sweep(&cfg, &store, calib, &sweep_cfg).unwrap();
+    assert_eq!(a.examples, b.examples);
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.layer, lb.layer);
+        assert_eq!(la.params, lb.params);
+        for (oa, ob) in la.options.iter().zip(&lb.options) {
+            assert_eq!(oa.bits, ob.bits);
+            assert_eq!(oa.bytes, ob.bytes, "{}", la.layer);
+            // bit-exact: the sweep is a pure function of (store, batches, cfg)
+            assert_eq!(oa.kl.to_bits(), ob.kl.to_bits(), "{}", la.layer);
+            assert_eq!(oa.max_abs_delta.to_bits(), ob.max_abs_delta.to_bits());
+        }
+    }
+}
+
+#[test]
+fn allocation_respects_budget_and_is_monotone_on_real_sensitivities() {
+    let (cfg, store, batches, _) = tiny_setup();
+    let table = sweep(&cfg, &store, &batches[..2], &SweepConfig::default()).unwrap();
+    let floor = table.uniform_bytes(2).unwrap();
+    let ceil = table.uniform_bytes(8).unwrap();
+    assert!(allocate(&table, floor - 1).is_err(), "sub-floor budget must error");
+
+    let mut last_kl = f64::INFINITY;
+    for step in 0..=4 {
+        let budget = floor + (ceil - floor) * step / 4;
+        let plan = allocate(&table, budget).unwrap();
+        assert!(plan.planned_bytes <= budget, "{} > {budget}", plan.planned_bytes);
+        assert!(plan.planned_kl <= last_kl + 1e-12, "KL rose with budget");
+        last_kl = plan.planned_kl;
+        // every quantizable layer group got an assignment
+        assert_eq!(plan.layers.len(), table.layers.len());
+    }
+}
+
+#[test]
+fn autotuned_plan_end_to_end_beats_the_uniform_floor() {
+    let (cfg, store, batches, n) = tiny_setup();
+    let calib = &batches[..2];
+    let sweep_cfg = SweepConfig::default();
+    let table = sweep(&cfg, &store, calib, &sweep_cfg).unwrap();
+
+    // the acceptance budget: uniform-INT4 packed size
+    let budget = table.uniform_bytes(4).unwrap();
+    let plan = allocate(&table, budget).unwrap();
+    assert!(
+        plan.layers.values().any(|&b| b > 2),
+        "an INT4-sized budget must afford upgrades over the INT2 floor"
+    );
+
+    // expand the plan through the pipeline
+    let artifact = QuantPipeline::new()
+        .pass(AutoTunePass::new(plan.clone(), sweep_cfg.base))
+        .run(&store)
+        .unwrap();
+    assert!(artifact.provenance[0].starts_with("autotune(budget="), "{:?}", artifact.provenance);
+    let qm = artifact.quantized_model();
+    let realized = qm.quantized_bytes();
+    // byte cost is exact: planned == realized, and within budget
+    assert_eq!(realized, plan.planned_bytes);
+    assert!(realized <= budget);
+    // per-layer widths landed as planned
+    for (layer, params) in layer_groups(&store) {
+        for p in &params {
+            assert_eq!(qm.tensors[p].bits(), plan.layers[&layer], "{p}");
+        }
+    }
+
+    // sharded artifact: realized payload validated against the budget
+    let shards = std::env::temp_dir().join("sq_autotune_e2e.sqsh");
+    let pm = PackedModel::assemble(&store, &qm);
+    pm.save_sharded(&shards).unwrap();
+    let validated = plan.validate_sharded(&shards).unwrap();
+    assert_eq!(validated, realized);
+    {
+        let reader = splitquant::shardstore::ShardReader::open(&shards).unwrap();
+        assert!(reader.quantized_payload_bytes() > 0);
+    }
+    std::fs::remove_file(&shards).ok();
+
+    // a too-small budget on the same artifact fails validation
+    let starved = BitPlan { budget_bytes: realized / 2, ..plan.clone() };
+    let shards2 = std::env::temp_dir().join("sq_autotune_starved.sqsh");
+    pm.save_sharded(&shards2).unwrap();
+    assert!(starved.validate_sharded(&shards2).is_err());
+    std::fs::remove_file(&shards2).ok();
+
+    // fidelity: the plan (at <= INT4 bytes) must not lose to uniform INT2
+    let int2 = QuantPipeline::new().pass(SplitQuantPass::bits(2)).run(&store).unwrap();
+    let plan_agree = agreement_rust(&cfg, &store, &artifact.eval, &batches, n).unwrap();
+    let int2_agree = agreement_rust(&cfg, &store, &int2.eval, &batches, n).unwrap();
+    assert!(
+        plan_agree >= int2_agree,
+        "plan fidelity {plan_agree} below uniform INT2 {int2_agree}"
+    );
+}
+
+#[test]
+fn mixed_precision_packed_model_reloads_byte_identically() {
+    // ISSUE-5 satellite: a BitPlan-quantized model must round-trip with its
+    // per-layer bit-width metadata intact
+    let (cfg, store, batches, _) = tiny_setup();
+    let sweep_cfg = SweepConfig::default();
+    let table = sweep(&cfg, &store, &batches[..1], &sweep_cfg).unwrap();
+    let plan = allocate(&table, table.uniform_bytes(4).unwrap()).unwrap();
+    let artifact = QuantPipeline::new()
+        .pass(AutoTunePass::new(plan.clone(), sweep_cfg.base))
+        .run(&store)
+        .unwrap();
+    let pm = PackedModel::assemble(&store, &artifact.quantized_model());
+
+    let p1 = std::env::temp_dir().join("sq_autotune_rt_1.sqq");
+    let p2 = std::env::temp_dir().join("sq_autotune_rt_2.sqq");
+    pm.save(&p1).unwrap();
+    let loaded = PackedModel::load(&p1).unwrap();
+    loaded.save(&p2).unwrap();
+    let b1 = std::fs::read(&p1).unwrap();
+    let b2 = std::fs::read(&p2).unwrap();
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(b1, b2, "mixed-precision save->load->save is not byte-stable");
+    for (layer, params) in layer_groups(&store) {
+        for p in &params {
+            assert_eq!(loaded.qmodel.tensors[p].bits(), plan.layers[&layer], "{p}");
+            assert_eq!(loaded.qmodel.tensors[p], pm.qmodel.tensors[p], "{p}");
+        }
+    }
+}
+
+#[test]
+fn mixed_precision_model_serves_through_the_deployment_executor() {
+    // QuantizedBert's fused path must handle per-layer bit-widths: each
+    // QLinear carries its own width, so a BitPlan artifact serves exactly
+    // like the fake-quant eval view (within the fused-kernel idiom's 1e-3)
+    let (cfg, store, batches, _) = tiny_setup();
+    let sweep_cfg = SweepConfig::default();
+    let table = sweep(&cfg, &store, &batches[..1], &sweep_cfg).unwrap();
+    let plan = allocate(&table, table.uniform_bytes(4).unwrap()).unwrap();
+    let artifact = QuantPipeline::new()
+        .pass(AutoTunePass::new(plan, sweep_cfg.base))
+        .run(&store)
+        .unwrap();
+    let qm = artifact.quantized_model();
+    let reference =
+        splitquant::model::BertModel::new(cfg.clone(), artifact.eval.share()).unwrap();
+    let fused = splitquant::model::QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+    let b = &batches[0];
+    let gap = reference
+        .forward(&b.ids, &b.mask)
+        .max_abs_diff(&fused.forward(&b.ids, &b.mask).unwrap());
+    assert!(gap < 1e-3, "mixed-precision fused forward gap {gap}");
+}
+
+#[test]
+fn bit_plan_json_roundtrip_through_disk() {
+    let (cfg, store, batches, _) = tiny_setup();
+    let table = sweep(&cfg, &store, &batches[..1], &SweepConfig::default()).unwrap();
+    let plan = allocate(&table, table.uniform_bytes(4).unwrap()).unwrap();
+    let path = std::env::temp_dir().join("sq_autotune_plan.json");
+    plan.save(&path).unwrap();
+    let loaded = BitPlan::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(plan.layers, loaded.layers);
+    assert_eq!(plan.budget_bytes, loaded.budget_bytes);
+    assert_eq!(plan.planned_bytes, loaded.planned_bytes);
+    assert_eq!(plan.planned_kl.to_bits(), loaded.planned_kl.to_bits());
+
+    // and a reloaded plan drives the pass identically
+    let a = QuantPipeline::new()
+        .pass(AutoTunePass::new(plan, SplitQuantConfig::new(2)))
+        .run(&store)
+        .unwrap();
+    let b = QuantPipeline::new()
+        .pass(AutoTunePass::new(loaded, SplitQuantConfig::new(2)))
+        .run(&store)
+        .unwrap();
+    assert_eq!(a.quantized_model(), b.quantized_model());
+}
