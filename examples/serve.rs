@@ -5,10 +5,14 @@
 //! cargo run --release --example serve -- [requests] [workers] [ckpt] [kernel]
 //! ```
 //!
-//! `kernel` picks the micro-kernel family (`scalar` | `simd`, default:
-//! `simd` when compiled in) via `ServeConfig::parallel.kernel` — the PR-4
-//! engine knob. The engines are bit-identical, so this only moves the
-//! latency/throughput numbers. The PR-3 paging knob
+//! `kernel` picks the micro-kernel family (`scalar` | `simd` | `int8`,
+//! default: `simd` when compiled in) via `ServeConfig::parallel.kernel` —
+//! the PR-4 engine knob, extended in PR-6 with the integer datapath. The
+//! `scalar`/`simd` engines are bit-identical, so they only move the
+//! latency/throughput numbers; `int8` additionally quantizes activations
+//! on the fused quantized path (this demo serves FP32 weights through
+//! PJRT, where `int8` rides the f32 kernels — see `serve_paged` for the
+//! engine on packed weights). The PR-3 paging knob
 //! (`ServeConfig::residency_budget_bytes`) stays `None` here — this demo
 //! serves FP32 weights through PJRT; see `examples/serve_paged.rs` for a
 //! quantized model served under a residency byte budget.
@@ -59,7 +63,9 @@ fn main() -> splitquant::Result<()> {
     let kernel = match args.get(3) {
         None => KernelKind::default(),
         Some(s) => KernelKind::from_flag(s).ok_or_else(|| {
-            splitquant::Error::Coordinator(format!("unknown kernel {s:?} (use scalar|simd)"))
+            splitquant::Error::Coordinator(format!(
+                "unknown kernel {s:?} (valid engines: scalar|simd|int8)"
+            ))
         })?,
     };
     println!(

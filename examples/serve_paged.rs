@@ -6,10 +6,13 @@
 //! cargo run --release --example serve_paged -- [requests] [budget_pct] [kernel]
 //! ```
 //!
-//! `kernel` (`scalar` | `simd`, default `simd` when compiled in) picks the
-//! micro-kernel family via `ServeConfig::parallel.kernel` — both modes below
-//! run the chosen engine, and the logit agreement assertion holds either way
-//! because the engines are bit-identical.
+//! `kernel` (`scalar` | `simd` | `int8`, default `simd` when compiled in)
+//! picks the micro-kernel family via `ServeConfig::parallel.kernel` — both
+//! modes below run the chosen engine, and the logit agreement assertion
+//! holds for every engine: `scalar`/`simd` are bit-identical f32 paths, and
+//! `int8` (the PR-6 integer datapath: activations quantized per call, raw
+//! packed codes consumed by an i8×i8→i32 kernel) is deterministic, so the
+//! resident and paged modes still agree label-for-label on it.
 //!
 //! No artifacts needed (pure-Rust fused executor). The demo quantizes a
 //! random BERT-Tiny with SplitQuant INT2, writes the sharded `SQSH0001`
@@ -46,7 +49,9 @@ fn main() -> splitquant::Result<()> {
     let kernel = match args.get(2) {
         None => KernelKind::default(),
         Some(s) => KernelKind::from_flag(s).ok_or_else(|| {
-            splitquant::Error::Coordinator(format!("unknown kernel {s:?} (use scalar|simd)"))
+            splitquant::Error::Coordinator(format!(
+                "unknown kernel {s:?} (valid engines: scalar|simd|int8)"
+            ))
         })?,
     };
     println!("[serve_paged] kernel engine: {kernel:?} (effective {:?})", kernel.effective());

@@ -44,7 +44,11 @@ fn main() {
     let mut t = Table::new("§Perf — L3 hot-path microbenchmarks", &["op", "time", "rate"]);
     let mut json: Vec<BenchRecord> = Vec::new();
 
-    // ---- kernel engines on 512×512×512: {serial, pool×8} × {scalar, simd}
+    // ---- kernel engines on 512×512×512: {serial, pool×8} × {scalar, simd,
+    //      int8}. On plain f32×f32 matmuls the int8 engine rides the f32x8
+    //      kernels (there are no packed codes to consume), so its rows pin
+    //      the dispatch overhead of the engine knob, not an integer datapath
+    //      — the integer rows live in the fused section below.
     {
         let (m, k, n) = (512usize, 512usize, 512usize);
         let shape = format!("{m}x{k}x{n}");
@@ -56,8 +60,10 @@ fn main() {
         for (engine, kind, pooled) in [
             ("serial-scalar", KernelKind::Scalar, false),
             ("serial-simd", KernelKind::Simd, false),
+            ("serial-int8", KernelKind::Int8, false),
             ("pool8-scalar", KernelKind::Scalar, true),
             ("pool8-simd", KernelKind::Simd, true),
+            ("pool8-int8", KernelKind::Int8, true),
         ] {
             let d = time_n(5, || {
                 if pooled {
@@ -158,6 +164,36 @@ fn main() {
             ),
         ]);
 
+        // the PR-6 integer datapath on the same per-tensor INT2 planes:
+        // activations quantized to i8 per call, raw codes consumed by the
+        // i8×i8→i32 kernel, weight zero-points folded into the epilogue.
+        // `scalar-int8` is the always-serial scalar reference twin — the
+        // bit-exactness oracle doubling as the single-core baseline row.
+        // streamed bytes: i16 activation plane + codes (+cid) + f32 out
+        let bytes_i8 = m * k * 2 + codes.len() + cid.len() + m * n * 4;
+        for (engine, int8_ref) in [("pool8-int8", false), ("scalar-int8", true)] {
+            let d = time_n(5, || {
+                std::hint::black_box(if int8_ref {
+                    kernels::split_matmul_int8_reference(
+                        &x,
+                        q.shape(),
+                        &codes,
+                        &cid,
+                        q.params(),
+                        None,
+                    )
+                } else {
+                    kernels::split_matmul_int8(&x, q.shape(), &codes, &cid, q.params(), None)
+                });
+            });
+            t.row(vec![
+                format!("fused int8 matmul {shape} INT2 {engine}"),
+                format!("{d:.2?}"),
+                format!("{:.1}x vs dequant+serial", d_mat.as_secs_f64() / d.as_secs_f64()),
+            ]);
+            json.push(BenchRecord::new("fused-split-matmul", &shape, engine, d, bytes_i8));
+        }
+
         // a Split-layout (cluster-id) fused row: 3 scale groups, 2-bit cid
         // plane — the SplitQuant deployment shape
         let groups = [
@@ -190,6 +226,37 @@ fn main() {
                 engine,
                 d,
                 m * k * 4 + codes.len() + cid3.len() + m * n * 4,
+            ));
+        }
+
+        // integer datapath on the 3-cluster Split layout: per-element cid
+        // gather + per-cluster i32 code-sum correction in the epilogue
+        for (engine, int8_ref) in [("pool8-int8", false), ("scalar-int8", true)] {
+            let d = time_n(5, || {
+                std::hint::black_box(if int8_ref {
+                    kernels::split_matmul_int8_reference(
+                        &x,
+                        q.shape(),
+                        &codes,
+                        &cid3,
+                        &groups,
+                        None,
+                    )
+                } else {
+                    kernels::split_matmul_int8(&x, q.shape(), &codes, &cid3, &groups, None)
+                });
+            });
+            t.row(vec![
+                format!("fused int8 matmul {shape} INT2 3-cluster {engine}"),
+                format!("{d:.2?}"),
+                "-".into(),
+            ]);
+            json.push(BenchRecord::new(
+                "fused-split-matmul-3cluster",
+                &shape,
+                engine,
+                d,
+                m * k * 2 + codes.len() + cid3.len() + m * n * 4,
             ));
         }
     }
@@ -282,7 +349,7 @@ fn main() {
         use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
         let store2 = ParamStore::init_bert(&cfg.param_order(), &mut rng);
         let q = default_quantizable(&store2);
-        let (_, qm) = quantize_store(&store2, &q, &SplitQuantConfig::new(2)).unwrap();
+        let (eval_store, qm) = quantize_store(&store2, &q, &SplitQuantConfig::new(2)).unwrap();
         let qmodel = QuantizedBert::new(cfg.clone(), &store2, &qm).unwrap();
         let d = time_n(5, || {
             std::hint::black_box(qmodel.forward(&ids, &mask).unwrap());
@@ -297,6 +364,44 @@ fn main() {
                     / qmodel.fp32_equivalent_bytes() as f64
             ),
         ]);
+
+        // the same packed model on the int8 engine: throughput + fidelity.
+        // Agreement is top-1 vs the FP32 reference over held-out batches —
+        // the f32 fused engine's agreement is recorded next to it so the
+        // json separates weight-quantization loss from integer-datapath loss
+        let mut qint8 = QuantizedBert::new(cfg.clone(), &store2, &qm).unwrap();
+        qint8.set_kernel(KernelKind::Int8);
+        let d_i8 = time_n(5, || {
+            std::hint::black_box(qint8.forward(&ids, &mask).unwrap());
+        });
+        t.row(vec![
+            "QuantizedBert fwd b32 (int8 engine)".into(),
+            format!("{d_i8:.2?}"),
+            format!("{:.0} samples/s", 32.0 / d_i8.as_secs_f64()),
+        ]);
+        {
+            use splitquant::data::{emotion, pad_to_batches, HashTokenizer};
+            use splitquant::eval;
+            let (_, test) = emotion::load_small(0, 10, 128);
+            let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+            let (batches, n) = pad_to_batches(&test, &tok, 32);
+            let refs = eval::predictions_rust(&cfg, &store2, &batches, n).unwrap();
+            let a_i8 = eval::agreement_int8(&cfg, &refs, &store2, &qm, &batches, n, None).unwrap();
+            let a_f32 = eval::agreement_rust(&cfg, &store2, &eval_store, &batches, n).unwrap();
+            t.row(vec![
+                "QuantizedBert agreement vs FP32 (INT2 weights)".into(),
+                "-".into(),
+                format!("int8 engine {a_i8:.3}, f32 engine {a_f32:.3} over {n} examples"),
+            ]);
+            json.push(
+                BenchRecord::new("qbert-agreement-vs-fp32", "bert-tiny-int2", "int8", d_i8, 0)
+                    .with("agreement", a_i8),
+            );
+            json.push(
+                BenchRecord::new("qbert-agreement-vs-fp32", "bert-tiny-int2", "f32", d, 0)
+                    .with("agreement", a_f32),
+            );
+        }
     }
 
     println!("{}", t.render());

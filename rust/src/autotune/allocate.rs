@@ -141,7 +141,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn opt(bits: u8, bytes: usize, kl: f64) -> BitOption {
-        BitOption { bits, bytes, kl, max_abs_delta: 0.0 }
+        BitOption { bits, bytes, kl, kl_int8: None, max_abs_delta: 0.0 }
     }
 
     fn layer(name: &str, options: Vec<BitOption>) -> LayerSensitivity {

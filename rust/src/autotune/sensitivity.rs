@@ -39,13 +39,23 @@ pub struct SweepConfig {
     /// Base [`SplitQuantConfig`] every candidate derives from (only `bits`
     /// is overridden per candidate).
     pub base: SplitQuantConfig,
+    /// Also measure each candidate through the deployment executor
+    /// ([`crate::model::qbert::QuantizedBert`]) on the
+    /// [`crate::parallel::KernelKind::Int8`] engine with dynamic activation
+    /// quantization, filling [`BitOption::kl_int8`]. Off by default — it
+    /// roughly doubles the sweep's forward count.
+    pub int8_fidelity: bool,
 }
 
 impl Default for SweepConfig {
     /// The standard low-bit ladder {2, 4, 8} over the paper-default
     /// SplitQuant config (k = 3, greedy k-means++).
     fn default() -> Self {
-        SweepConfig { candidates: vec![2, 4, 8], base: SplitQuantConfig::new(2) }
+        SweepConfig {
+            candidates: vec![2, 4, 8],
+            base: SplitQuantConfig::new(2),
+            int8_fidelity: false,
+        }
     }
 }
 
@@ -59,6 +69,14 @@ pub struct BitOption {
     pub bytes: usize,
     /// Mean per-example KL(fp32 ‖ candidate) over the calibration logits.
     pub kl: f64,
+    /// Mean per-example KL(fp32 ‖ candidate) with the candidate executed on
+    /// the integer engine ([`SweepConfig::int8_fidelity`]): same packed
+    /// weights, activations quantized to 8 bits dynamically. `None` when
+    /// the int8 fidelity column was not requested. The gap to [`kl`]
+    /// isolates how much the integer datapath itself costs per layer.
+    ///
+    /// [`kl`]: BitOption::kl
+    pub kl_int8: Option<f64>,
     /// Max `|fp32 − candidate|` over all calibration logits.
     pub max_abs_delta: f64,
 }
@@ -155,10 +173,25 @@ pub fn sweep(
                 kl_sum += dk;
                 max_abs = max_abs.max(da);
             }
+            let kl_int8 = if sweep_cfg.int8_fidelity {
+                let qm = artifact.quantized_model();
+                let mut qbert =
+                    crate::model::qbert::QuantizedBert::new(cfg.clone(), store, &qm)?;
+                qbert.set_kernel(crate::parallel::KernelKind::Int8);
+                let mut sum = 0.0f64;
+                for (b, r) in batches.iter().zip(&refs) {
+                    let logits = qbert.forward(&b.ids, &b.mask)?;
+                    sum += logit_distortion(r, &logits).0;
+                }
+                Some(sum / examples.max(1) as f64)
+            } else {
+                None
+            };
             options.push(BitOption {
                 bits,
                 bytes,
                 kl: kl_sum / examples.max(1) as f64,
+                kl_int8,
                 max_abs_delta: max_abs,
             });
         }

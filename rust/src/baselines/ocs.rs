@@ -12,6 +12,7 @@
 //! back (`w ← 2·dq(q(w/2))` for split channels). This matches how the OCS
 //! paper evaluates weight quantization without changing the network graph.
 
+use crate::error::Result;
 use crate::quant::{QConfig, QParams};
 use crate::tensor::Tensor;
 
@@ -29,7 +30,7 @@ pub struct OcsResult {
 /// Apply OCS along the trailing axis (out-channels of an (in, out) linear
 /// weight). `expand_ratio` is the fraction of extra channels to create
 /// (OCS paper uses 1–5 %; each split halves the current max-|w| channel).
-pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> OcsResult {
+pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> Result<OcsResult> {
     let (rows, cols) = t.as_2d();
     let n_extra = ((cols as f64 * expand_ratio).ceil() as usize).max(1);
 
@@ -63,7 +64,7 @@ pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> OcsResult
             all.push(t.data()[r * cols + o] * f);
         }
     }
-    let (lo, hi) = cfg.observer.range(&all, cfg.bits);
+    let (lo, hi) = cfg.observer.range(&all, cfg.bits)?;
     let p = if cfg.symmetric {
         QParams::symmetric_from_range(lo, hi, cfg.bits)
     } else {
@@ -80,11 +81,11 @@ pub fn ocs_fake_quant(t: &Tensor, cfg: &QConfig, expand_ratio: f64) -> OcsResult
             out[r * cols + o] += p.fake(t.data()[r * cols + o] * f);
         }
     }
-    OcsResult {
+    Ok(OcsResult {
         fake_quant: Tensor::new(t.shape(), out).unwrap(),
         channels_split: touched.iter().filter(|&&k| k > 1).count(),
         expanded_channels: cols + n_extra,
-    }
+    })
 }
 
 /// Store-level OCS baseline over the quantizable set (rank-2+ tensors only;
@@ -121,7 +122,7 @@ mod tests {
         let t = weight_with_outlier_channel(64, 32, 8.0);
         let cfg = QConfig::baseline(4);
         let plain = crate::quant::qtensor::fake_quant_tensor(&t, &cfg).unwrap();
-        let ocs = ocs_fake_quant(&t, &cfg, 0.10);
+        let ocs = ocs_fake_quant(&t, &cfg, 0.10).unwrap();
         let mse = |a: &Tensor| -> f64 {
             a.data()
                 .iter()
@@ -142,7 +143,7 @@ mod tests {
     fn ocs_preserves_function_at_high_bits() {
         // INT8 with mild expansion: reconstruction ~ exact
         let t = weight_with_outlier_channel(16, 8, 2.0);
-        let r = ocs_fake_quant(&t, &QConfig::baseline(8), 0.25);
+        let r = ocs_fake_quant(&t, &QConfig::baseline(8), 0.25).unwrap();
         assert!(t.max_abs_diff(&r.fake_quant) < 0.05);
     }
 
@@ -150,7 +151,7 @@ mod tests {
     fn repeated_split_halves_repeatedly() {
         // with many splits allowed, the same outlier channel is halved again
         let t = weight_with_outlier_channel(4, 2, 100.0);
-        let r = ocs_fake_quant(&t, &QConfig::baseline(2), 2.0); // 4 extra
+        let r = ocs_fake_quant(&t, &QConfig::baseline(2), 2.0).unwrap(); // 4 extra
         assert_eq!(r.expanded_channels, 2 + 4);
         assert_eq!(r.channels_split, 1, "all splits should hit the outlier channel");
     }
@@ -158,7 +159,7 @@ mod tests {
     #[test]
     fn expansion_accounting() {
         let t = weight_with_outlier_channel(8, 10, 5.0);
-        let r = ocs_fake_quant(&t, &QConfig::baseline(4), 0.2);
+        let r = ocs_fake_quant(&t, &QConfig::baseline(4), 0.2).unwrap();
         assert_eq!(r.expanded_channels, 12);
     }
 }

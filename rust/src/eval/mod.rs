@@ -168,6 +168,47 @@ pub fn agreement_rust(
     agreement_with_reference(cfg, &refs, candidate, batches, n)
 }
 
+/// Top-1 agreement of the **integer deployment path** against precomputed
+/// FP32 reference predictions ([`predictions_rust`]): the candidate packed
+/// model executes through [`crate::model::qbert::QuantizedBert`] on the
+/// [`crate::parallel::KernelKind::Int8`] engine — fused quantized weights,
+/// activations quantized to 8 bits (calibrated `act` params when given,
+/// per-call min–max otherwise). This is the int8-engine fidelity column the
+/// kernel bench reports next to its throughput rows; without the `simd`
+/// feature the engine degrades to the f32 path and the figure measures
+/// weight quantization alone.
+pub fn agreement_int8(
+    cfg: &BertConfig,
+    reference_preds: &[Vec<i32>],
+    store: &ParamStore,
+    qm: &splitquant::QuantizedModel,
+    batches: &[TextBatch],
+    n: usize,
+    act: Option<&ActQuantParams>,
+) -> Result<f64> {
+    let mut qbert = crate::model::qbert::QuantizedBert::new(cfg.clone(), store, qm)?;
+    qbert.set_kernel(crate::parallel::KernelKind::Int8);
+    if let Some(a) = act {
+        qbert.set_act_params(a.clone());
+    }
+    let mut hits = 0usize;
+    let mut seen = 0usize;
+    for (b, rp) in batches.iter().zip(reference_preds) {
+        if seen >= n {
+            break;
+        }
+        let cp = qbert.predict(&b.ids, &b.mask)?;
+        for (r, c) in rp.iter().zip(&cp) {
+            if seen >= n {
+                break;
+            }
+            hits += usize::from(r == c);
+            seen += 1;
+        }
+    }
+    Ok(hits as f64 / seen.max(1) as f64)
+}
+
 /// Accuracy through a PJRT forward executable (`bert_fwd_b{B}`); batches must
 /// match the executable's batch size.
 pub fn accuracy_pjrt(
@@ -331,6 +372,17 @@ mod tests {
         let a2 = agreement_rust(&cfg, &store, &int2, &batches, n).unwrap();
         assert!(a8 >= a2, "INT8 fidelity {a8} below INT2 {a2}");
         assert!(a8 > 0.5, "INT8 should track the FP32 argmax closely ({a8})");
+    }
+
+    #[test]
+    fn int8_engine_agreement_tracks_the_f32_reference() {
+        let (cfg, store, batches, n) = tiny_setup();
+        let quantizable = splitquant::default_quantizable(&store);
+        let (_, qm) = splitquant::quantize_store(&store, &quantizable, &SplitQuantConfig::new(8))
+            .unwrap();
+        let refs = predictions_rust(&cfg, &store, &batches, n).unwrap();
+        let a = agreement_int8(&cfg, &refs, &store, &qm, &batches, n, None).unwrap();
+        assert!(a > 0.5, "int8 engine agreement {a}");
     }
 
     #[test]

@@ -16,9 +16,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
 use crate::error::Result;
-use crate::quant::QTensor;
+use crate::parallel::{kernels, KernelKind};
+use crate::quant::{QParams, QTensor};
 use crate::shardstore::{PagedModel, ShardData};
-use crate::splitquant::QuantizedModel;
+use crate::splitquant::{ActQuantParams, QuantizedModel};
 use crate::tensor::ops;
 use crate::tensor::{IntTensor, Tensor};
 
@@ -201,6 +202,25 @@ pub struct QuantizedBert {
     fp32: ParamStore,
     /// quantized linears by parameter name — resident or paged
     linears: Linears,
+    /// Per-executor kernel-engine override. `None` (the default) uses the
+    /// process-wide [`crate::parallel::kernel_kind`], preserving the
+    /// `ServeConfig.parallel` routing; `Some(KernelKind::Int8)` switches the
+    /// fused linears to the integer datapath.
+    kernel: Option<KernelKind>,
+    /// Calibrated per-tensor activation params ([`ActQuantizePass`]
+    /// artifact), deployed at layer boundaries on the Int8 engine. Without
+    /// them the integer path quantizes each activation tensor dynamically.
+    ///
+    /// [`ActQuantizePass`]: crate::quant::ActQuantizePass
+    act_params: Option<ActQuantParams>,
+    /// Route Int8 matmuls through the scalar reference twin
+    /// ([`kernels::split_matmul_int8_reference`]) — the end-to-end
+    /// bit-equality oracle, settable only from in-module tests.
+    int8_reference: bool,
+    /// OCS-style duplicate-and-halve escape hatch on the activation path:
+    /// columns whose max |activation| exceeds `ratio ×` the mean column max
+    /// are split before integer quantization. `None` = off (the default).
+    act_ocs_ratio: Option<f32>,
 }
 
 impl QuantizedBert {
@@ -220,7 +240,15 @@ impl QuantizedBert {
                 fp32.set(name, q.dequantize())?;
             }
         }
-        Ok(QuantizedBert { cfg, fp32, linears: Linears::Resident(qlinears) })
+        Ok(QuantizedBert {
+            cfg,
+            fp32,
+            linears: Linears::Resident(qlinears),
+            kernel: None,
+            act_params: None,
+            int8_reference: false,
+            act_ocs_ratio: None,
+        })
     }
 
     /// Build from a paged shard store ([`crate::shardstore::PagedModel`]):
@@ -258,17 +286,108 @@ impl QuantizedBert {
             cfg,
             fp32,
             linears: Linears::Paged { model: paged, planes: PlaneCache::new() },
+            kernel: None,
+            act_params: None,
+            int8_reference: false,
+            act_ocs_ratio: None,
         })
+    }
+
+    /// Override the kernel engine for this executor's fused linears (e.g.
+    /// [`KernelKind::Int8`] for integer-only inference). Without the `simd`
+    /// feature both `Simd` and `Int8` degrade to `Scalar` — logits stay
+    /// valid, only the datapath changes.
+    pub fn set_kernel(&mut self, kind: KernelKind) {
+        self.kernel = Some(kind);
+    }
+
+    /// Deploy calibrated activation parameters (an
+    /// [`crate::quant::ActQuantizePass`] artifact) at the layer boundaries:
+    /// on the Int8 engine each fused linear whose input corresponds to an
+    /// activation site quantizes with the calibrated scale/zero-point
+    /// instead of a per-call min–max scan. Inputs without a site (the
+    /// attention context) stay dynamically quantized.
+    pub fn set_act_params(&mut self, params: ActQuantParams) {
+        self.act_params = Some(params);
+    }
+
+    /// Enable the OCS-style duplicate-and-halve escape hatch on the
+    /// activation path: before integer quantization, columns whose max
+    /// |activation| exceeds `ratio ×` the mean column max are halved and
+    /// duplicated (exact in f32), tightening the per-tensor activation
+    /// scale. Expanded matmuls fall back to dynamic ranges — a range
+    /// calibrated on unexpanded activations would give the win back.
+    pub fn set_act_ocs_ratio(&mut self, ratio: f32) {
+        self.act_ocs_ratio = Some(ratio);
+    }
+
+    /// Calibrated per-tensor params for activation site `site`, when
+    /// deployed. Chunk slot 0 carries the per-tensor value (the
+    /// `ActQuantizePass` artifact stores `[p, p, p]`).
+    fn act_for(&self, site: usize) -> Option<&QParams> {
+        self.act_params.as_ref().and_then(|a| a.per_site.get(site)).map(|s| &s[0])
+    }
+
+    /// One fused quantized-weight matmul under this executor's engine
+    /// selection — the single dispatch point both backends (resident and
+    /// paged) route through, so engine behavior can never differ between
+    /// them.
+    fn fused_matmul(
+        &self,
+        x: &Tensor,
+        wshape: &[usize],
+        codes: &[i8],
+        cid: &[u8],
+        params: &[QParams],
+        act: Option<&QParams>,
+    ) -> Tensor {
+        let Some(kind) = self.kernel else {
+            // no override: the process-wide engine (`ServeConfig.parallel`)
+            return kernels::split_matmul(x, wshape, codes, cid, params);
+        };
+        if kind.effective() != KernelKind::Int8 {
+            return kernels::split_matmul_with(x, wshape, codes, cid, params, kind);
+        }
+        if let Some(ratio) = self.act_ocs_ratio {
+            let outliers = kernels::act_outlier_columns(x, ratio);
+            if !outliers.is_empty() {
+                let (xe, we, ce, ie) =
+                    kernels::ocs_expand_acts(x, wshape, codes, cid, &outliers);
+                return if self.int8_reference {
+                    kernels::split_matmul_int8_reference(&xe, &we, &ce, &ie, params, None)
+                } else {
+                    kernels::split_matmul_int8(&xe, &we, &ce, &ie, params, None)
+                };
+            }
+        }
+        if self.int8_reference {
+            kernels::split_matmul_int8_reference(x, wshape, codes, cid, params, act)
+        } else {
+            kernels::split_matmul_int8(x, wshape, codes, cid, params, act)
+        }
+    }
+
+    /// Plain FP32 matmul under this executor's engine selection. `Int8` has
+    /// no integer form for f32×f32 operands — it rides the f32 engines on
+    /// this path ([`ops::matmul_with`] maps it to the f32x8 family).
+    fn plain_matmul(&self, x: &Tensor, w: &Tensor) -> Tensor {
+        match self.kernel {
+            Some(kind) => ops::matmul_with(x, w, kind),
+            None => ops::matmul(x, w),
+        }
     }
 
     /// `Err` only on the paged backend: a shard fault can fail on IO or an
     /// unsupported layout — surfaced as a `classify` error, never a panic
-    /// in a serving worker.
-    fn linear(&self, name: &str, x: &Tensor) -> Result<Tensor> {
+    /// in a serving worker. `act` is the calibrated activation-range param
+    /// for this linear's *input* site (Int8 engine only; `None` = dynamic).
+    fn linear(&self, name: &str, x: &Tensor, act: Option<&QParams>) -> Result<Tensor> {
         let mut y = match &self.linears {
             Linears::Resident(qlinears) => match qlinears.get(name) {
-                Some(q) => q.matmul_fused(x),
-                None => ops::matmul(x, self.fp32.get(name)?),
+                Some(ql) => {
+                    self.fused_matmul(x, ql.q.shape(), &ql.codes, &ql.cid, ql.q.params(), act)
+                }
+                None => self.plain_matmul(x, self.fp32.get(name)?),
             },
             Linears::Paged { model, planes } => {
                 if model.is_pagable(name) {
@@ -284,19 +403,13 @@ impl QuantizedBert {
                             q.shape()
                         )));
                     }
-                    // same planes, same kernel as QLinear::matmul_fused —
+                    // same planes, same dispatch as the resident arm —
                     // logits stay byte-identical to the resident path; the
                     // plane cache only skips re-decoding them
                     let p = planes.get(name, &shard, q)?;
-                    crate::parallel::kernels::split_matmul(
-                        x,
-                        q.shape(),
-                        &p.codes,
-                        &p.cid,
-                        q.params(),
-                    )
+                    self.fused_matmul(x, q.shape(), &p.codes, &p.cid, q.params(), act)
                 } else {
-                    ops::matmul(x, self.fp32.get(name)?)
+                    self.plain_matmul(x, self.fp32.get(name)?)
                 }
             }
         };
@@ -340,14 +453,25 @@ impl QuantizedBert {
             cfg.ln_eps,
         );
 
+        // Calibrated activation sites (`BertConfig::act_sites` order):
+        // site 0 = embeddings.out, then per layer i the triple
+        // {3i+1: attn.out, 3i+2: ffn.gelu, 3i+3: ffn.out}, then
+        // 3L+1 = pooler.out. Each fused linear's *input* maps to the site
+        // recorded at that tensor: q/k/v of layer i read the previous
+        // layer's output (site 3i; embeddings.out for i = 0), ffn.in reads
+        // attn.out, ffn.out reads ffn.gelu, the pooler reads the final
+        // layer output and the classifier reads pooler.out. The attention
+        // context feeding attn.out.weight has no calibration site — it
+        // quantizes dynamically on the Int8 engine.
         for i in 0..cfg.layers {
             let pre = format!("encoder.{i}");
-            let q = self.linear(&format!("{pre}.attn.q.weight"), &x)?;
-            let k = self.linear(&format!("{pre}.attn.k.weight"), &x)?;
-            let v = self.linear(&format!("{pre}.attn.v.weight"), &x)?;
+            let xin = self.act_for(3 * i);
+            let q = self.linear(&format!("{pre}.attn.q.weight"), &x, xin)?;
+            let k = self.linear(&format!("{pre}.attn.k.weight"), &x, xin)?;
+            let v = self.linear(&format!("{pre}.attn.v.weight"), &x, xin)?;
 
             let ctx = super::bert::attention_ctx(&q, &k, &v, mask, b, l, h, a, hd, scale);
-            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx)?;
+            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx, None)?;
             let mut res = x.clone();
             res.add_assign(&attn);
             x = ops::layer_norm(
@@ -357,8 +481,16 @@ impl QuantizedBert {
                 cfg.ln_eps,
             );
 
-            let mid = ops::gelu(&self.linear(&format!("{pre}.ffn.in.weight"), &x)?);
-            let mut ff = self.linear(&format!("{pre}.ffn.out.weight"), &mid)?;
+            let mid = ops::gelu(&self.linear(
+                &format!("{pre}.ffn.in.weight"),
+                &x,
+                self.act_for(3 * i + 1),
+            )?);
+            let mut ff = self.linear(
+                &format!("{pre}.ffn.out.weight"),
+                &mid,
+                self.act_for(3 * i + 2),
+            )?;
             ff.add_assign(&x);
             x = ops::layer_norm(
                 &ff,
@@ -373,8 +505,9 @@ impl QuantizedBert {
             cls.data_mut()[bi * h..(bi + 1) * h]
                 .copy_from_slice(&x.data()[bi * l * h..bi * l * h + h]);
         }
-        let pooled = ops::tanh(&self.linear("pooler.weight", &cls)?);
-        self.linear("classifier.weight", &pooled)
+        let pooled =
+            ops::tanh(&self.linear("pooler.weight", &cls, self.act_for(3 * cfg.layers))?);
+        self.linear("classifier.weight", &pooled, self.act_for(3 * cfg.layers + 1))
     }
 
     pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Result<Vec<i32>> {
@@ -584,6 +717,108 @@ mod tests {
         assert_eq!(r2, nlin, "second forward reuses every decode");
         for (x, y) in a.data().iter().zip(b.data()) {
             assert_eq!(x.to_bits(), y.to_bits(), "cached planes changed the logits");
+        }
+    }
+
+    #[test]
+    fn int8_engine_matches_scalar_reference_bit_for_bit_end_to_end() {
+        // acceptance: KernelKind::Int8 end-to-end logits bit-identical to
+        // the scalar i8 reference path (exact i32 accumulation, one shared
+        // float epilogue). Without the `simd` feature both executors
+        // degrade to the same f32 engine and equality holds trivially.
+        let (cfg, store, qm) = setup(4);
+        let (ids, mask) = batch(&cfg, 3, 2);
+
+        let mut main = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        main.set_kernel(KernelKind::Int8);
+        let mut oracle = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        oracle.set_kernel(KernelKind::Int8);
+        oracle.int8_reference = true; // in-module: route the scalar twin
+
+        let a = main.forward(&ids, &mask).unwrap();
+        let b = oracle.forward(&ids, &mask).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "int8 logits diverged from reference");
+        }
+
+        // different datapath, same model: the gap to the f32 engines is
+        // activation-quantization error only
+        let f32e = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        let c = f32e.forward(&ids, &mask).unwrap();
+        let gap = a.max_abs_diff(&c);
+        assert!(gap < 1.0, "int8 vs f32 gap {gap}");
+        if cfg!(feature = "simd") {
+            assert!(gap > 0.0, "int8 engine never engaged");
+        }
+    }
+
+    #[test]
+    fn paged_int8_is_bit_identical_to_resident_int8() {
+        use crate::shardstore::{PagedConfig, PagedModel};
+        let (cfg, store, qm) = setup(2);
+        let mut resident = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        resident.set_kernel(KernelKind::Int8);
+        let pm = crate::quant::PackedModel::assemble(&store, &qm);
+        let path = std::env::temp_dir().join("sq_qbert_paged_int8.sqsh");
+        pm.save_sharded(&path).unwrap();
+        let paged = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        let mut qbert = QuantizedBert::from_paged(cfg.clone(), paged).unwrap();
+        qbert.set_kernel(KernelKind::Int8);
+        std::fs::remove_file(&path).ok();
+        let (ids, mask) = batch(&cfg, 3, 1);
+        let a = resident.forward(&ids, &mask).unwrap();
+        let b = qbert.forward(&ids, &mask).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "paged int8 logits diverged");
+        }
+    }
+
+    #[test]
+    fn calibrated_act_params_are_consulted_and_stay_bit_exact() {
+        let (cfg, store, qm) = setup(8);
+        let (ids, mask) = batch(&cfg, 2, 3);
+        let n_sites = cfg.act_sites().len();
+        let p = crate::quant::QParams::from_range(-4.0, 4.0, 8);
+        let act = ActQuantParams { per_site: vec![[p, p, p]; n_sites], bits: 8 };
+
+        let mut dynamic = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        dynamic.set_kernel(KernelKind::Int8);
+        let mut calibrated = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        calibrated.set_kernel(KernelKind::Int8);
+        calibrated.set_act_params(act.clone());
+        let mut oracle = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        oracle.set_kernel(KernelKind::Int8);
+        oracle.set_act_params(act);
+        oracle.int8_reference = true;
+
+        let d = dynamic.forward(&ids, &mask).unwrap();
+        let c = calibrated.forward(&ids, &mask).unwrap();
+        let o = oracle.forward(&ids, &mask).unwrap();
+        for (x, y) in c.data().iter().zip(o.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "calibrated int8 diverged from reference");
+        }
+        if cfg!(feature = "simd") {
+            // calibrated scale ≠ per-call min–max scale ⇒ different logits:
+            // proof the deployed params are actually consulted
+            assert_ne!(c.data(), d.data(), "calibrated ranges never engaged");
+        }
+    }
+
+    #[test]
+    fn act_ocs_hatch_keeps_the_int8_oracle_contract() {
+        let (cfg, store, qm) = setup(4);
+        let (ids, mask) = batch(&cfg, 2, 6);
+        let mut main = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        main.set_kernel(KernelKind::Int8);
+        main.set_act_ocs_ratio(3.0);
+        let mut oracle = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        oracle.set_kernel(KernelKind::Int8);
+        oracle.set_act_ocs_ratio(3.0);
+        oracle.int8_reference = true;
+        let a = main.forward(&ids, &mask).unwrap();
+        let b = oracle.forward(&ids, &mask).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "ocs int8 diverged from reference");
         }
     }
 

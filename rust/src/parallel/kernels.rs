@@ -8,15 +8,23 @@
 //! is bit-identical to the serial one — property-tested below, with a 1e-5
 //! tolerance to keep the contract honest if the inner loops ever diverge.
 //!
-//! Two micro-kernel families execute those chunks
+//! Three micro-kernel families execute those chunks
 //! ([`crate::parallel::KernelKind`], default [`KernelKind::Simd`] when the
-//! `simd` feature is compiled in): the scalar quad kernels, and the
-//! explicit f32x8 tile kernels from [`crate::tensor::simd`] — packed-B
-//! panels + register accumulation for the plain matmul, 8-lane in-register
-//! dequant for the fused tiles. The families are **bit-identical** (same
-//! per-element IEEE op sequence), so engine choice never changes results;
-//! the remainder-torture tests below assert exact equality across
-//! serial/pooled × scalar/SIMD.
+//! `simd` feature is compiled in): the scalar quad kernels, the explicit
+//! f32x8 tile kernels from [`crate::tensor::simd`] — packed-B panels +
+//! register accumulation for the plain matmul, 8-lane in-register dequant
+//! for the fused tiles — and the i8×i8→i32 integer kernels behind
+//! [`KernelKind::Int8`]. The two f32 families are **bit-identical** (same
+//! per-element IEEE op sequence), so scalar-vs-SIMD choice never changes
+//! results; the remainder-torture tests below assert exact equality across
+//! serial/pooled × scalar/SIMD. The integer family changes the datapath of
+//! *fused* matmuls (activations quantize to i8 per call, accumulation is
+//! exact i32, f32 appears only in the dequantize epilogue), so it differs
+//! from the f32 engines by the activation quantization error — while its
+//! own SIMD strips and scalar reference twin
+//! ([`split_matmul_int8_reference`]) stay bit-identical to each other
+//! across every dispatch/partition, because integer sums are exact in any
+//! order and the float epilogue is one fixed shared expression.
 //!
 //! The fused split-dequant matmul is the Rust twin of the L1 `split_matmul`
 //! Pallas kernel: weight tiles are reconstructed `w = (q − zp)·(1/s)` from
@@ -59,7 +67,9 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
     let rows_per = rows_per_task(m, pool.threads());
     let (ad, bd) = (a.data(), b.data());
     #[cfg(feature = "simd")]
-    if kind.effective() == KernelKind::Simd {
+    if kind.effective() != KernelKind::Scalar {
+        // Simd and Int8 share the f32x8 family here: a plain f32×f32
+        // matmul has no integer inputs for the i8 engine to exploit
         let pb = crate::tensor::simd::PackedB::pack(bd, k, n);
         let pb = &pb;
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
@@ -177,6 +187,14 @@ pub fn split_matmul_serial_with(
     params: &[QParams],
     kind: KernelKind,
 ) -> Tensor {
+    #[cfg(feature = "simd")]
+    if kind.effective() == KernelKind::Int8 {
+        if let Some(out) = int8_fused(x, wshape, codes, cid, params, None, false, false) {
+            return out;
+        }
+        // empty/non-finite activations: integer scaling is undefined there
+        return split_matmul_serial_with(x, wshape, codes, cid, params, KernelKind::Simd);
+    }
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let n = wshape[1];
     let group = DequantGroups::new(params);
@@ -207,6 +225,13 @@ pub fn split_matmul_pooled_with(
     params: &[QParams],
     kind: KernelKind,
 ) -> Tensor {
+    #[cfg(feature = "simd")]
+    if kind.effective() == KernelKind::Int8 {
+        if let Some(out) = int8_fused(x, wshape, codes, cid, params, None, true, false) {
+            return out;
+        }
+        return split_matmul_pooled_with(x, wshape, codes, cid, params, KernelKind::Simd);
+    }
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let n = wshape[1];
     let group = DequantGroups::new(params);
@@ -247,6 +272,198 @@ impl DequantGroups {
             zp: params.iter().map(|p| p.zp).collect(),
         }
     }
+}
+
+/// Per-call activation quantization for the integer engine: min–max over
+/// the activation tensor, widened to include 0 so the zero-point stays in
+/// the i8 range and padded zero rows quantize losslessly. `None` when the
+/// data is empty or contains a non-finite value — integer scaling is
+/// undefined there and the caller falls back to the f32 path.
+#[cfg(feature = "simd")]
+fn act_qparams(xd: &[f32]) -> Option<QParams> {
+    if xd.is_empty() {
+        return None;
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xd {
+        if !v.is_finite() {
+            return None;
+        }
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    Some(QParams::from_range(lo.min(0.0), hi.max(0.0), 8))
+}
+
+/// Shared body of the integer fused matmul: quantize the activations once
+/// per call (calibrated params when supplied, per-call min–max otherwise),
+/// then run the i8 row kernels — SIMD strips or the scalar reference —
+/// over a serial or pooled row partition. All four combinations are
+/// bit-identical (exact i32 accumulation + one shared float epilogue).
+#[cfg(feature = "simd")]
+#[allow(clippy::too_many_arguments)]
+fn int8_fused(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    act: Option<&QParams>,
+    pooled: bool,
+    reference: bool,
+) -> Option<Tensor> {
+    use crate::tensor::simd::{matmul_rows_i8, matmul_rows_i8_ref, quantize_acts_i8, I8Plane};
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let n = wshape[1];
+    let mut out = vec![0.0f32; m * n];
+    if m * n == 0 {
+        return Some(Tensor::new(&[m, n], out).unwrap());
+    }
+    let xp = match act {
+        Some(p) => *p,
+        None => act_qparams(x.data())?,
+    };
+    let xc = quantize_acts_i8(x.data(), &xp);
+    let zps: Vec<f32> = params.iter().map(|p| p.zp).collect();
+    let inv: Vec<f32> = params.iter().map(|p| 1.0 / p.scale).collect();
+    let plane = I8Plane { codes, cid, zps: &zps, inv: &inv, k, n };
+    let inv_x = 1.0 / xp.scale;
+    let kernel: fn(&[i16], &I8Plane, f32, &mut [f32], Range<usize>) =
+        if reference { matmul_rows_i8_ref } else { matmul_rows_i8 };
+    if pooled {
+        let pool = global();
+        let rows_per = m.div_ceil(pool.threads()).max(1);
+        let (xc, plane) = (&xc, &plane);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let r0 = ci * rows_per;
+            let rows = r0..r0 + chunk.len() / n;
+            tasks.push(Box::new(move || kernel(xc, plane, inv_x, chunk, rows)));
+        }
+        pool.scope(tasks);
+    } else {
+        kernel(&xc, &plane, inv_x, &mut out, 0..m);
+    }
+    Some(Tensor::new(&[m, n], out).unwrap())
+}
+
+/// Explicit entry to the integer fused matmul — what
+/// [`split_matmul_with`] runs under [`KernelKind::Int8`], with the option
+/// of a pre-calibrated activation range: `act = Some(p)` skips the
+/// per-call min–max scan and uses the calibrated scale/zero-point (the
+/// `ActQuantizePass` artifact deployed at model layer boundaries), `None`
+/// quantizes dynamically. Dispatches serial/pooled by size like
+/// [`split_matmul`]. Falls back to the f32 path when integer scaling is
+/// infeasible (empty or non-finite dynamic activations) or the `simd`
+/// feature is compiled out — the documented `Int8 → Scalar` degradation.
+pub fn split_matmul_int8(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    act: Option<&QParams>,
+) -> Tensor {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let n = wshape[1];
+    let pooled = should_parallelize(2 * m * k * n) && m >= 8 * super::effective_threads();
+    #[cfg(feature = "simd")]
+    if let Some(out) = int8_fused(x, wshape, codes, cid, params, act, pooled, false) {
+        return out;
+    }
+    let _ = (act, pooled);
+    split_matmul_with(x, wshape, codes, cid, params, KernelKind::Simd)
+}
+
+/// Scalar reference twin of [`split_matmul_int8`]: one output element at a
+/// time through `tensor::simd::matmul_rows_i8_ref`, always serial, with
+/// the identical activation quantization and fallback rules — so a
+/// verification harness can push a whole model through both paths and
+/// assert **bit equality** end to end (the qbert int8 oracle test does).
+pub fn split_matmul_int8_reference(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    params: &[QParams],
+    act: Option<&QParams>,
+) -> Tensor {
+    #[cfg(feature = "simd")]
+    if let Some(out) = int8_fused(x, wshape, codes, cid, params, act, false, true) {
+        return out;
+    }
+    let _ = act;
+    split_matmul_serial_with(x, wshape, codes, cid, params, KernelKind::Simd)
+}
+
+/// Activation-path outlier channels for the OCS-style escape hatch:
+/// columns of `x` whose max |value| exceeds `ratio ×` the mean column
+/// max |value|. Empty when the activations are degenerate (all zero or
+/// non-finite), so the caller skips the expansion.
+pub fn act_outlier_columns(x: &Tensor, ratio: f32) -> Vec<usize> {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    if m == 0 || k == 0 {
+        return Vec::new();
+    }
+    let mut colmax = vec![0.0f32; k];
+    for row in x.data().chunks(k) {
+        for (cm, &v) in colmax.iter_mut().zip(row) {
+            *cm = cm.max(v.abs());
+        }
+    }
+    let mean = colmax.iter().sum::<f32>() / k as f32;
+    if mean <= 0.0 || !mean.is_finite() {
+        return Vec::new();
+    }
+    (0..k).filter(|&c| colmax[c] > ratio * mean).collect()
+}
+
+/// OCS-style duplicate-and-halve on the **activation** path (the
+/// weight-side analogue is [`crate::baselines::ocs`]): each outlier column
+/// `c` of `x` is halved in place and a halved copy appended, while the
+/// matching k-row of the weight code/cid planes is duplicated. Halving is
+/// exact in f32 and the consumer's sum restores the product, so
+/// `x'·dq(W') = x·dq(W)` up to summation order — but the activation range
+/// the integer engine quantizes over shrinks by up to 2× per split, which
+/// is the whole point: an outlier channel stops stretching the per-tensor
+/// activation scale. Returns the expanded `(x, wshape, codes, cid)`; feed
+/// them to [`split_matmul_int8`] with `act = None` so the dynamic range
+/// scan sees the tightened values (a range calibrated on the unexpanded
+/// activations would give the win back).
+pub fn ocs_expand_acts(
+    x: &Tensor,
+    wshape: &[usize],
+    codes: &[i8],
+    cid: &[u8],
+    outliers: &[usize],
+) -> (Tensor, [usize; 2], Vec<i8>, Vec<u8>) {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let n = wshape[1];
+    let ke = k + outliers.len();
+    let xd = x.data();
+    let mut xe = vec![0.0f32; m * ke];
+    for r in 0..m {
+        let src = &xd[r * k..(r + 1) * k];
+        let dst = &mut xe[r * ke..(r + 1) * ke];
+        dst[..k].copy_from_slice(src);
+        for (j, &c) in outliers.iter().enumerate() {
+            let half = src[c] * 0.5;
+            dst[c] = half;
+            dst[k + j] = half;
+        }
+    }
+    let mut ce = Vec::with_capacity(ke * n);
+    ce.extend_from_slice(codes);
+    let mut ie = Vec::with_capacity(if cid.is_empty() { 0 } else { ke * n });
+    ie.extend_from_slice(cid);
+    for &c in outliers {
+        ce.extend_from_slice(&codes[c * n..(c + 1) * n]);
+        if !cid.is_empty() {
+            ie.extend_from_slice(&cid[c * n..(c + 1) * n]);
+        }
+    }
+    (Tensor::new(&[m, ke], xe).unwrap(), [ke, n], ce, ie)
 }
 
 /// Inner fused kernel dispatch for one output row chunk: scalar quad
@@ -721,7 +938,10 @@ mod tests {
         for x in [&x0, &xe] {
             let per_tensor =
                 split_matmul_serial_with(x, &[k, n], &codes, &[], &[p], KernelKind::Scalar);
-            for kind in [KernelKind::Scalar, KernelKind::Simd] {
+            // Int8 joins the loop: all-zero activations quantize to exact
+            // zero codes (the range is widened to include 0), so its output
+            // is the same all-zero plane as the f32 engines
+            for kind in [KernelKind::Scalar, KernelKind::Simd, KernelKind::Int8] {
                 let single = split_matmul_serial_with(x, &[k, n], &codes, &cid0, &[p], kind);
                 assert_eq!(per_tensor.data(), single.data(), "single-cluster {kind:?}");
                 let gap_ser =
@@ -772,6 +992,75 @@ mod tests {
         let b = ops::matmul_serial_with(&x, &dq, KernelKind::Scalar);
         let s = ops::matmul_serial_with(&x, &dq, KernelKind::Simd);
         assert_eq!(b.data(), s.data(), "PerChannel (dequantized)");
+        // Int8 on a plain f32 matmul rides the f32x8 family — bit-equal to
+        // the Simd engine (there are no integer inputs to exploit)
+        let i = ops::matmul_serial_with(&x, &dq, KernelKind::Int8);
+        assert_eq!(s.data(), i.data(), "PerChannel (int8 = f32x8 on plain matmul)");
+    }
+
+    #[test]
+    fn int8_all_fused_layouts_match_reference_twin() {
+        use crate::quant::{QConfig, QTensor};
+        let mut rng = Rng::new(19);
+        let x = rand_tensor(&mut rng, 6, 24);
+
+        // PerTensor layout through a real QTensor
+        let w = Tensor::randn(&[24, 18], 0.0, 0.5, &mut rng);
+        let qt = QTensor::quantize(&w, &QConfig::baseline(4)).unwrap();
+        let (codes, cid) = qt.fused_planes().unwrap();
+        let main = split_matmul_int8(&x, qt.shape(), &codes, &cid, qt.params(), None);
+        let oracle =
+            split_matmul_int8_reference(&x, qt.shape(), &codes, &cid, qt.params(), None);
+        assert_eq!(main.data(), oracle.data(), "PerTensor");
+
+        // Split layout
+        let params = vec![
+            QParams::from_range(-0.4, 0.4, 2),
+            QParams::from_range(-1.5, 1.5, 2),
+            QParams::from_range(-0.05, 0.08, 2),
+        ];
+        let codes: Vec<i8> = (0..24 * 18).map(|v| ((v % 4) as i8) - 2).collect();
+        let cid: Vec<u8> = (0..24 * 18).map(|v| (v % 3) as u8).collect();
+        let main = split_matmul_int8(&x, &[24, 18], &codes, &cid, &params, None);
+        let oracle = split_matmul_int8_reference(&x, &[24, 18], &codes, &cid, &params, None);
+        assert_eq!(main.data(), oracle.data(), "Split");
+    }
+
+    #[test]
+    fn ocs_act_escape_hatch_preserves_function_and_tightens_int8_error() {
+        let mut rng = Rng::new(23);
+        let (m, k, n) = (4usize, 24usize, 16usize);
+        let mut x = Tensor::randn(&[m, k], 0.0, 0.5, &mut rng);
+        // plant an outlier activation channel that stretches the range
+        for r in 0..m {
+            x.data_mut()[r * k + 5] = if r % 2 == 0 { 30.0 } else { -30.0 };
+        }
+        let (codes, cid, params) = rand_qweight(&mut rng, k, n, 4);
+        let outliers = act_outlier_columns(&x, 4.0);
+        assert!(outliers.contains(&5), "outlier channel not detected: {outliers:?}");
+        let (xe, we, ce, ie) = ocs_expand_acts(&x, &[k, n], &codes, &cid, &outliers);
+        assert_eq!(we, [k + outliers.len(), n]);
+
+        // function preserved on the f32 path (up to summation order)
+        let want = split_matmul(&x, &[k, n], &codes, &cid, &params);
+        let got = split_matmul(&xe, &we, &ce, &ie, &params);
+        assert!(got.max_abs_diff(&want) <= 1e-3, "{}", got.max_abs_diff(&want));
+
+        // the integer engine gets a ~2× tighter activation scale out of it
+        let int8_plain = split_matmul_int8(&x, &[k, n], &codes, &cid, &params, None);
+        let int8_ocs = split_matmul_int8(&xe, &we, &ce, &ie, &params, None);
+        let err = |t: &Tensor| t.max_abs_diff(&want) as f64;
+        if cfg!(feature = "simd") {
+            assert!(
+                err(&int8_ocs) < err(&int8_plain),
+                "ocs {} vs plain {}",
+                err(&int8_ocs),
+                err(&int8_plain)
+            );
+        } else {
+            // feature off: both entries degrade to the same f32 engine
+            assert!(err(&int8_ocs) <= 1e-3 && err(&int8_plain) <= 1e-5);
+        }
     }
 
     #[test]
@@ -785,6 +1074,138 @@ mod tests {
             let got = split_matmul(&x, &[k, n], &codes, &cid, &params);
             assert!(got.max_abs_diff(&want) <= 1e-5, "{m}x{k}x{n}");
         }
+    }
+
+    #[test]
+    fn property_int8_twins_and_partitions_are_bit_identical() {
+        // the integer-engine contract: exact i32 accumulation + one shared
+        // float epilogue ⇒ SIMD strips == scalar reference == pooled, as
+        // exact equality (without the `simd` feature every path below
+        // degrades to the same f32 engine and equality still holds)
+        check("int8 SIMD/ref × serial/pooled exact", 40, |rng| {
+            let m = rng.range(1, 24);
+            let k = rng.range(1, 70);
+            let n = rng.range(1, 70);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let mut x = rand_tensor(rng, m, k);
+            zero_some_rows(&mut x, rng);
+            let (codes, cid, params) = rand_qweight(rng, k, n, bits);
+            let base = split_matmul_int8_reference(&x, &[k, n], &codes, &cid, &params, None);
+            for got in [
+                split_matmul_int8(&x, &[k, n], &codes, &cid, &params, None),
+                split_matmul_serial_with(&x, &[k, n], &codes, &cid, &params, KernelKind::Int8),
+                split_matmul_pooled_with(&x, &[k, n], &codes, &cid, &params, KernelKind::Int8),
+            ] {
+                assert_eq!(base.data(), got.data(), "{m}x{k}x{n} INT{bits}");
+            }
+            // calibrated activation params take the same route in both twins
+            let p = QParams::from_range(-3.0, 3.0, 8);
+            let a = split_matmul_int8(&x, &[k, n], &codes, &cid, &params, Some(&p));
+            let b = split_matmul_int8_reference(&x, &[k, n], &codes, &cid, &params, Some(&p));
+            assert_eq!(a.data(), b.data(), "calibrated {m}x{k}x{n}");
+        });
+    }
+
+    #[test]
+    fn property_int8_matches_float_within_act_quant_error() {
+        // the int8 engine differs from the f32 fused path only by the
+        // activation fake-quant: |x_fake − x| ≤ step/2 in range, so the
+        // output gap is bounded by k · step/2 · max|dq(W)|
+        check("int8 fused ≈ f32 fused (act-quant bounded)", 30, |rng| {
+            let m = rng.range(1, 16);
+            let k = rng.range(1, 41);
+            let n = rng.range(1, 24);
+            let bits = [2u8, 4, 8][rng.below(3)];
+            let x = rand_tensor(rng, m, k);
+            let (codes, cid, params) = rand_qweight(rng, k, n, bits);
+            let want = reference_fused(&x, k, n, &codes, &cid, &params);
+            let got = split_matmul_int8(&x, &[k, n], &codes, &cid, &params, None);
+            if !cfg!(feature = "simd") {
+                // degraded to the f32 scalar engine — plain tolerance
+                assert!(got.max_abs_diff(&want) <= 1e-5);
+                return;
+            }
+            let (lo, hi) = crate::util::stats::min_max(x.data());
+            let step = (hi.max(0.0) - lo.min(0.0)).max(1e-8) / 255.0;
+            let wmax = params
+                .iter()
+                .map(|p| {
+                    let (dlo, dhi) = p.dequant_range();
+                    dlo.abs().max(dhi.abs())
+                })
+                .fold(0.0f32, f32::max);
+            let bound = k as f32 * step * wmax * 0.75 + 1e-3;
+            assert!(
+                got.max_abs_diff(&want) <= bound,
+                "gap {} > bound {bound} at {m}x{k}x{n} INT{bits}",
+                got.max_abs_diff(&want)
+            );
+        });
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn int8_epilogue_torture_ragged_shapes_and_layouts() {
+        // the requantize-epilogue contract at the micro-kernel level:
+        // i32→f32 dequant AND i32→i8 re-quant, SIMD strips vs scalar
+        // reference, bit-identical across ragged shapes straddling the
+        // lane width, per-tensor and split layouts, zero/empty rows
+        use crate::tensor::simd::{
+            matmul_rows_i8, matmul_rows_i8_ref, matmul_rows_i8_requant,
+            matmul_rows_i8_requant_ref, quantize_acts_i8, I8Plane,
+        };
+        let mut rng = Rng::new(41);
+        let dims = [1usize, 7, 8, 9, 63, 64, 65];
+        let out_p = QParams::from_range(-6.0, 6.0, 8);
+        for &k in &dims {
+            for &n in &dims {
+                for m in [1usize, 5] {
+                    let mut x = rand_tensor(&mut rng, m, k);
+                    zero_some_rows(&mut x, &mut rng);
+                    let (lo, hi) = crate::util::stats::min_max(x.data());
+                    let xp = QParams::from_range(lo.min(0.0), hi.max(0.0), 8);
+                    let xc = quantize_acts_i8(x.data(), &xp);
+                    let inv_x = 1.0 / xp.scale;
+                    for &split in &[false, true] {
+                        let (codes, cid, params) = loop {
+                            let (c, id, p) = rand_qweight(&mut rng, k, n, 4);
+                            if id.is_empty() != split {
+                                break (c, id, p);
+                            }
+                        };
+                        let zps: Vec<f32> = params.iter().map(|p| p.zp).collect();
+                        let inv: Vec<f32> = params.iter().map(|p| 1.0 / p.scale).collect();
+                        let plane =
+                            I8Plane { codes: &codes, cid: &cid, zps: &zps, inv: &inv, k, n };
+                        let mut a = vec![0.0f32; m * n];
+                        let mut b = vec![0.0f32; m * n];
+                        matmul_rows_i8(&xc, &plane, inv_x, &mut a, 0..m);
+                        matmul_rows_i8_ref(&xc, &plane, inv_x, &mut b, 0..m);
+                        for (u, v) in a.iter().zip(&b) {
+                            assert_eq!(
+                                u.to_bits(),
+                                v.to_bits(),
+                                "f32 epilogue {m}x{k}x{n} split={split}"
+                            );
+                        }
+                        let mut qa = vec![0i8; m * n];
+                        let mut qb = vec![0i8; m * n];
+                        matmul_rows_i8_requant(&xc, &plane, inv_x, &out_p, &mut qa, 0..m);
+                        matmul_rows_i8_requant_ref(&xc, &plane, inv_x, &out_p, &mut qb, 0..m);
+                        assert_eq!(qa, qb, "i8 requant epilogue {m}x{k}x{n} split={split}");
+                    }
+                }
+            }
+        }
+        // m = 0: empty row range writes nothing and must not panic
+        let (codes, cid, params) = rand_qweight(&mut rng, 8, 8, 4);
+        let zps: Vec<f32> = params.iter().map(|p| p.zp).collect();
+        let inv: Vec<f32> = params.iter().map(|p| 1.0 / p.scale).collect();
+        let plane = I8Plane { codes: &codes, cid: &cid, zps: &zps, inv: &inv, k: 8, n: 8 };
+        let mut empty: Vec<f32> = vec![];
+        matmul_rows_i8(&[], &plane, 1.0, &mut empty, 0..0);
+        matmul_rows_i8_ref(&[], &plane, 1.0, &mut empty, 0..0);
+        assert!(empty.is_empty());
     }
 
     #[test]

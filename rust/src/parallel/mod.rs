@@ -32,11 +32,17 @@ pub use pool::WorkerPool;
 
 /// Which micro-kernel family the engine executes.
 ///
-/// The two families are **bit-identical** (the SIMD kernels replay the
+/// The f32 families are **bit-identical** (the SIMD kernels replay the
 /// scalar kernels' exact IEEE operation sequence per output element — see
-/// [`crate::tensor::simd`]), so this is purely a performance knob. `Simd`
-/// silently degrades to `Scalar` when the crate is built without the
-/// `simd` feature ([`KernelKind::effective`]).
+/// [`crate::tensor::simd`]), so `Scalar` vs `Simd` is purely a performance
+/// knob. `Int8` changes the *datapath* of fused quantized-weight matmuls —
+/// activations are quantized per call and products accumulate exactly in
+/// i32 until a float epilogue — so its outputs differ from the f32 engines
+/// by the activation quantization error, while its own SIMD and scalar
+/// reference twins stay bit-identical to each other (integer accumulation
+/// is exact in any order). `Simd`/`Int8` silently degrade to `Scalar` when
+/// the crate is built without the `simd` feature
+/// ([`KernelKind::effective`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelKind {
     /// The auto-vectorized scalar quad kernels (the only engine before the
@@ -46,6 +52,13 @@ pub enum KernelKind {
     /// accumulation for `matmul_rows`, 8-lane in-register dequant for the
     /// fused split-dequant tiles.
     Simd,
+    /// Integer datapath for the fused split-dequant matmul: activations
+    /// are quantized to i8 per call, products accumulate in i32 with
+    /// per-cluster zero-point correction folded into the integer plane,
+    /// and f32 only appears in the requantize/dequantize epilogue (see
+    /// [`crate::tensor::simd`]'s i8 kernel family). Plain f32×f32 matmuls
+    /// have no integer inputs to exploit and run the f32x8 family.
+    Int8,
 }
 
 impl Default for KernelKind {
@@ -60,20 +73,23 @@ impl Default for KernelKind {
 }
 
 impl KernelKind {
-    /// Parse a CLI flag value (`"scalar"` | `"simd"`), shared by the
-    /// example/CLI surfaces; `None` for anything else. The parsed `Simd`
-    /// still degrades through [`KernelKind::effective`] when the feature
-    /// is compiled out.
+    /// Parse a CLI flag value (`"scalar"` | `"simd"` | `"int8"`), shared
+    /// by the example/CLI surfaces; `None` for anything else. The parsed
+    /// `Simd`/`Int8` still degrade through [`KernelKind::effective`] when
+    /// the feature is compiled out.
     pub fn from_flag(s: &str) -> Option<KernelKind> {
         match s {
             "scalar" => Some(KernelKind::Scalar),
             "simd" => Some(KernelKind::Simd),
+            "int8" => Some(KernelKind::Int8),
             _ => None,
         }
     }
 
-    /// The kind that will actually execute: `Simd` requires the `simd`
-    /// feature; without it every request degrades to `Scalar`.
+    /// The kind that will actually execute: `Simd` and `Int8` require the
+    /// `simd` feature (the integer kernels live in [`crate::tensor::simd`]
+    /// next to their f32x8 siblings); without it every request degrades to
+    /// `Scalar`.
     pub fn effective(self) -> KernelKind {
         if cfg!(feature = "simd") {
             self
@@ -105,7 +121,10 @@ pub struct ParallelConfig {
     pub serial_flops: usize,
     /// Micro-kernel family for the matmul / fused split-dequant hot paths.
     /// Defaults to [`KernelKind::Simd`] when the `simd` feature is
-    /// compiled in; results are bit-identical either way. Surfaced in
+    /// compiled in; `Scalar` and `Simd` are bit-identical, while
+    /// [`KernelKind::Int8`] switches fused quantized-weight matmuls to the
+    /// integer datapath (dynamic activation quantization — differs from the
+    /// f32 engines only by that quantization error). Surfaced in
     /// `ServeConfig.parallel`.
     pub kernel: KernelKind,
 }
@@ -206,6 +225,7 @@ mod tests {
     fn kernel_kind_parses_cli_flags() {
         assert_eq!(KernelKind::from_flag("scalar"), Some(KernelKind::Scalar));
         assert_eq!(KernelKind::from_flag("simd"), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::from_flag("int8"), Some(KernelKind::Int8));
         assert_eq!(KernelKind::from_flag("avx512"), None);
     }
 
@@ -214,9 +234,11 @@ mod tests {
         assert_eq!(KernelKind::Scalar.effective(), KernelKind::Scalar);
         if cfg!(feature = "simd") {
             assert_eq!(KernelKind::Simd.effective(), KernelKind::Simd);
+            assert_eq!(KernelKind::Int8.effective(), KernelKind::Int8);
             assert_eq!(KernelKind::default(), KernelKind::Simd);
         } else {
             assert_eq!(KernelKind::Simd.effective(), KernelKind::Scalar);
+            assert_eq!(KernelKind::Int8.effective(), KernelKind::Scalar);
             assert_eq!(KernelKind::default(), KernelKind::Scalar);
         }
     }

@@ -16,8 +16,8 @@ pub mod serialize;
 
 pub use observer::Observer;
 pub use pipeline::{
-    ActCalibratePass, BaselinePass, BnFold, BnFoldWith, ModelArtifact, OcsPass, QuantPass,
-    QuantPipeline, SplitQuantPass,
+    ActCalibratePass, ActQuantizePass, BaselinePass, BnFold, BnFoldWith, ModelArtifact,
+    OcsPass, QuantPass, QuantPipeline, SplitQuantPass,
 };
 pub use qconfig::{Granularity, QConfig};
 pub use qtensor::{QLayout, QTensor};

@@ -7,6 +7,7 @@
 //! * [`Observer::MseSearch`] — shrink the min-max range over a grid and keep
 //!   the one minimizing reconstruction MSE (a stronger classical baseline).
 
+use crate::error::{Error, Result};
 use crate::util::stats;
 
 use super::scheme::{quant_mse, QParams};
@@ -30,9 +31,26 @@ pub enum Observer {
 
 impl Observer {
     /// Compute the quantization range `[beta, alpha]` for `values`.
-    pub fn range(&self, values: &[f32], bits: u8) -> (f32, f32) {
-        assert!(!values.is_empty(), "observer on empty data");
-        match *self {
+    ///
+    /// Errors deterministically — instead of returning a garbage range —
+    /// on an empty slice (an empty calibration batch) and on any NaN/±inf
+    /// value: every observer reduces the data through min/max, sorting, or
+    /// histogramming, all of which silently poison the range under
+    /// non-finite input.
+    pub fn range(&self, values: &[f32], bits: u8) -> Result<(f32, f32)> {
+        if values.is_empty() {
+            return Err(Error::Quant(format!(
+                "{} observer on empty calibration data",
+                self.label()
+            )));
+        }
+        if let Some(bad) = values.iter().find(|v| !v.is_finite()) {
+            return Err(Error::Quant(format!(
+                "{} observer on non-finite calibration value {bad}",
+                self.label()
+            )));
+        }
+        Ok(match *self {
             Observer::MinMax => stats::min_max(values),
             Observer::Percentile { pct } => {
                 let mut sorted: Vec<f32> = values.to_vec();
@@ -64,7 +82,7 @@ impl Observer {
                 best
             }
             Observer::Entropy { bins } => entropy_range(values, bits, bins),
-        }
+        })
     }
 
     /// Short label for reports.
@@ -167,7 +185,7 @@ mod tests {
     #[test]
     fn minmax_keeps_outlier() {
         let v = normal_with_outlier(1000, 500.0);
-        let (lo, hi) = Observer::MinMax.range(&v, 8);
+        let (lo, hi) = Observer::MinMax.range(&v, 8).unwrap();
         assert_eq!(hi, 500.0);
         assert!(lo < 0.0);
     }
@@ -175,7 +193,7 @@ mod tests {
     #[test]
     fn percentile_clips_outlier() {
         let v = normal_with_outlier(1000, 500.0);
-        let (lo, hi) = Observer::Percentile { pct: 99.0 }.range(&v, 8);
+        let (lo, hi) = Observer::Percentile { pct: 99.0 }.range(&v, 8).unwrap();
         assert!(hi < 10.0, "hi={hi}");
         assert!(lo > -10.0);
         assert!(lo < hi);
@@ -184,8 +202,8 @@ mod tests {
     #[test]
     fn percentile_100_equals_minmax() {
         let v = normal_with_outlier(500, 42.0);
-        let a = Observer::Percentile { pct: 100.0 }.range(&v, 8);
-        let b = Observer::MinMax.range(&v, 8);
+        let a = Observer::Percentile { pct: 100.0 }.range(&v, 8).unwrap();
+        let b = Observer::MinMax.range(&v, 8).unwrap();
         assert_eq!(a, b);
     }
 
@@ -196,8 +214,8 @@ mod tests {
         // which is exactly the paper's point about clipping losing signal)
         let v = normal_with_outlier(2000, 20.0);
         let bits = 4;
-        let (lo_m, hi_m) = Observer::MinMax.range(&v, bits);
-        let (lo_s, hi_s) = Observer::MseSearch { steps: 40 }.range(&v, bits);
+        let (lo_m, hi_m) = Observer::MinMax.range(&v, bits).unwrap();
+        let (lo_s, hi_s) = Observer::MseSearch { steps: 40 }.range(&v, bits).unwrap();
         let mse_m = quant_mse(&v, &QParams::from_range(lo_m, hi_m, bits));
         let mse_s = quant_mse(&v, &QParams::from_range(lo_s, hi_s, bits));
         assert!(mse_s < mse_m, "search {mse_s} vs minmax {mse_m}");
@@ -213,7 +231,7 @@ mod tests {
     #[test]
     fn entropy_clips_outlier_but_keeps_bulk() {
         let v = normal_with_outlier(4000, 100.0);
-        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 4);
+        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 4).unwrap();
         // the clip must land far below the outlier but cover the bulk
         assert!(hi < 50.0, "hi={hi}");
         assert!(hi > 2.0, "hi={hi}");
@@ -224,8 +242,8 @@ mod tests {
     fn entropy_without_outliers_keeps_most_of_the_range() {
         let mut rng = Rng::new(3);
         let v: Vec<f32> = (0..4000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
-        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 8);
-        let (mlo, mhi) = Observer::MinMax.range(&v, 8);
+        let (lo, hi) = Observer::Entropy { bins: 512 }.range(&v, 8).unwrap();
+        let (mlo, mhi) = Observer::MinMax.range(&v, 8).unwrap();
         assert!(hi >= mhi * 0.5, "hi {hi} vs minmax {mhi}");
         assert!(lo <= mlo * 0.5, "lo {lo} vs minmax {mlo}");
     }
@@ -237,8 +255,8 @@ mod tests {
         // trade-off) and reconstructs the *bulk* far better than min-max
         let v = normal_with_outlier(4000, 200.0);
         let bits = 4;
-        let (l1, h1) = Observer::MinMax.range(&v, bits);
-        let (l2, h2) = Observer::Entropy { bins: 512 }.range(&v, bits);
+        let (l1, h1) = Observer::MinMax.range(&v, bits).unwrap();
+        let (l2, h2) = Observer::Entropy { bins: 512 }.range(&v, bits).unwrap();
         let bulk = &v[..4000]; // outlier excluded
         let m1 = quant_mse(bulk, &QParams::from_range(l1, h1, bits));
         let m2 = quant_mse(bulk, &QParams::from_range(l2, h2, bits));
@@ -246,10 +264,45 @@ mod tests {
     }
 
     #[test]
+    fn empty_calibration_data_is_a_deterministic_error() {
+        for obs in [
+            Observer::MinMax,
+            Observer::Percentile { pct: 99.0 },
+            Observer::MseSearch { steps: 10 },
+            Observer::Entropy { bins: 128 },
+        ] {
+            let err = obs.range(&[], 8).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("empty calibration data"), "{obs:?}: {msg}");
+            assert!(msg.contains(&obs.label()), "{obs:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn non_finite_calibration_values_are_a_deterministic_error() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for obs in [
+                Observer::MinMax,
+                Observer::Percentile { pct: 99.0 },
+                Observer::MseSearch { steps: 10 },
+                Observer::Entropy { bins: 128 },
+            ] {
+                let mut v = normal_with_outlier(50, 3.0);
+                v[17] = bad;
+                let err = obs.range(&v, 8).unwrap_err();
+                assert!(
+                    err.to_string().contains("non-finite calibration value"),
+                    "{obs:?} on {bad}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn entropy_all_positive_data_keeps_positive_beta() {
         let mut rng = Rng::new(4);
         let v: Vec<f32> = (0..1000).map(|_| rng.f32() * 5.0 + 1.0).collect();
-        let (lo, _hi) = Observer::Entropy { bins: 256 }.range(&v, 8);
+        let (lo, _hi) = Observer::Entropy { bins: 256 }.range(&v, 8).unwrap();
         assert!(lo >= 0.99, "lo={lo}");
     }
 }

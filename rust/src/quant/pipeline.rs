@@ -37,12 +37,13 @@ use crate::model::config::BertConfig;
 use crate::model::params::ParamStore;
 use crate::splitquant::bn_fold::fold_bn;
 use crate::splitquant::{
-    default_quantizable, split_quantize, split_quantize_pair, ActCalibrator, ActQuantMode,
-    ActQuantParams, QuantizedModel, SplitQuantConfig,
+    default_quantizable, params_from_samples, split_quantize, split_quantize_pair,
+    ActCalibrator, ActQuantMode, ActQuantParams, QuantizedModel, SplitQuantConfig,
 };
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::rng::Rng;
 
+use super::observer::Observer;
 use super::qconfig::QConfig;
 use super::qtensor::QTensor;
 
@@ -424,7 +425,7 @@ impl QuantPass for OcsPass {
             let fq = {
                 let t = model.eval.get(name)?;
                 if t.shape().len() >= 2 {
-                    ocs_fake_quant(t, &self.cfg, self.expand_ratio).fake_quant
+                    ocs_fake_quant(t, &self.cfg, self.expand_ratio)?.fake_quant
                 } else {
                     QTensor::quantize(t, &self.cfg)?.dequantize()
                 }
@@ -472,6 +473,61 @@ impl QuantPass for ActCalibratePass {
             bert.forward_hooked(ids, mask, Some(&mut hook));
         }
         model.act_params = Some(cal.to_params(self.bits, self.mode));
+        Ok(())
+    }
+}
+
+/// Observer-based activation quantization (the integer-inference front end):
+/// pool every calibration value seen at each activation site, reduce each
+/// pool with a [`Observer`] from `quant/observer.rs` (min-max, percentile,
+/// MSE search, entropy), and store the resulting **per-tensor** scale /
+/// zero-point parameters on [`ModelArtifact::act_params`]. Ranges are widened
+/// to include 0 so a zero activation always quantizes exactly — the invariant
+/// the `KernelKind::Int8` datapath's fallback-parity rules rely on.
+///
+/// Where [`ActCalibratePass`] records per-chunk min-max ranges for the
+/// fake-quant evaluation path (paper §4.2), this pass feeds the real integer
+/// kernels: the produced params are what
+/// [`crate::model::qbert::QuantizedBert`] consumes to quantize activations at
+/// layer boundaries. Empty calibration sets or non-finite activations
+/// surface as a deterministic [`crate::error::Error::Quant`] from the
+/// observer, never as a garbage range.
+pub struct ActQuantizePass {
+    cfg: BertConfig,
+    batches: Vec<(IntTensor, Tensor)>,
+    bits: u8,
+    observer: Observer,
+}
+
+impl ActQuantizePass {
+    pub fn new(
+        cfg: BertConfig,
+        batches: Vec<(IntTensor, Tensor)>,
+        bits: u8,
+        observer: Observer,
+    ) -> ActQuantizePass {
+        ActQuantizePass { cfg, batches, bits, observer }
+    }
+}
+
+impl QuantPass for ActQuantizePass {
+    fn name(&self) -> String {
+        format!("act_quantize(bits={}, {})", self.bits, self.observer.label())
+    }
+
+    fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let bert = crate::model::bert::BertModel::new(self.cfg.clone(), model.eval.share())?;
+        let n_sites = self.cfg.act_sites().len();
+        let mut samples: Vec<Vec<f32>> = vec![Vec::new(); n_sites];
+        for (ids, mask) in &self.batches {
+            let mut hook = |site: usize, t: &mut Tensor| {
+                samples[site].extend_from_slice(t.data());
+            };
+            bert.forward_hooked(ids, mask, Some(&mut hook));
+        }
+        let params = params_from_samples(&samples, self.bits, self.observer)?;
+        let per_site = params.into_iter().map(|p| [p, p, p]).collect();
+        model.act_params = Some(ActQuantParams { per_site, bits: self.bits });
         Ok(())
     }
 }
@@ -609,6 +665,51 @@ mod tests {
         assert_eq!(act.per_site.len(), cfg.act_sites().len());
         assert_eq!(artifact.provenance.len(), 2);
         assert_eq!(act.bits, 8);
+    }
+
+    #[test]
+    fn act_quantize_pass_produces_per_tensor_zero_pinned_params() {
+        let (cfg, store) = tiny_store();
+        let mut rng = Rng::new(9);
+        let l = cfg.max_len;
+        let batches: Vec<(IntTensor, Tensor)> = (0..2)
+            .map(|_| {
+                let ids: Vec<i32> =
+                    (0..4 * l).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+                (IntTensor::new(&[4, l], ids).unwrap(), Tensor::full(&[4, l], 1.0))
+            })
+            .collect();
+        let artifact = QuantPipeline::new()
+            .pass(SplitQuantPass::bits(8))
+            .pass(ActQuantizePass::new(cfg.clone(), batches, 8, Observer::MinMax))
+            .run(&store)
+            .unwrap();
+        let act = artifact.act_params.as_ref().unwrap();
+        assert_eq!(act.per_site.len(), cfg.act_sites().len());
+        assert_eq!(act.bits, 8);
+        for site in &act.per_site {
+            // per-tensor: all three chunk slots share one param set
+            assert_eq!(site[0], site[1]);
+            assert_eq!(site[1], site[2]);
+            // zero-pinned range: 0.0 must quantize exactly
+            let p = &site[0];
+            assert_eq!(p.dequantize(p.quantize(0.0)), 0.0, "zero not exact: {p:?}");
+        }
+        assert!(artifact.provenance[1].starts_with("act_quantize(bits=8"));
+    }
+
+    #[test]
+    fn act_quantize_pass_surfaces_observer_errors() {
+        // no calibration batches ⇒ empty per-site pools ⇒ deterministic error
+        let (cfg, store) = tiny_store();
+        let err = QuantPipeline::new()
+            .pass(ActQuantizePass::new(cfg, Vec::new(), 8, Observer::MinMax))
+            .run(&store)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("empty calibration data"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]

@@ -35,7 +35,7 @@ impl QTensor {
     pub fn quantize(t: &Tensor, cfg: &QConfig) -> Result<QTensor> {
         match cfg.granularity {
             Granularity::PerTensor => {
-                let (beta, alpha) = cfg.observer.range(t.data(), cfg.bits);
+                let (beta, alpha) = cfg.observer.range(t.data(), cfg.bits)?;
                 let p = mk_params(beta, alpha, cfg);
                 let codes: Vec<i8> = t.data().iter().map(|&v| p.quantize(v)).collect();
                 Ok(QTensor {
@@ -54,10 +54,10 @@ impl QTensor {
                 let params: Vec<QParams> = groups
                     .iter()
                     .map(|g| {
-                        let (beta, alpha) = cfg.observer.range(g, cfg.bits);
-                        mk_params(beta, alpha, cfg)
+                        let (beta, alpha) = cfg.observer.range(g, cfg.bits)?;
+                        Ok(mk_params(beta, alpha, cfg))
                     })
-                    .collect();
+                    .collect::<Result<_>>()?;
                 let codes: Vec<i8> = t
                     .data()
                     .iter()

@@ -11,6 +11,7 @@
 //! * per-tensor parameters (baseline: all three chunks share one range), or
 //! * per-chunk parameters (SplitQuant activation splitting).
 
+use crate::error::Result;
 use crate::model::config::{chunk_spans, BertConfig};
 use crate::quant::{Observer, QParams};
 use crate::tensor::Tensor;
@@ -175,12 +176,12 @@ pub fn params_from_samples(
     samples: &[Vec<f32>], // [site] -> pooled values
     bits: u8,
     observer: Observer,
-) -> Vec<QParams> {
+) -> Result<Vec<QParams>> {
     samples
         .iter()
         .map(|vals| {
-            let (lo, hi) = observer.range(vals, bits);
-            QParams::from_range(lo.min(0.0), hi.max(0.0), bits)
+            let (lo, hi) = observer.range(vals, bits)?;
+            Ok(QParams::from_range(lo.min(0.0), hi.max(0.0), bits))
         })
         .collect()
 }

@@ -38,7 +38,7 @@ use crate::model::params::ParamStore;
 use crate::quant::pipeline::{QuantPipeline, SplitQuantPass};
 use crate::quant::QTensor;
 
-pub use activation_split::{ActCalibrator, ActQuantMode, ActQuantParams};
+pub use activation_split::{params_from_samples, ActCalibrator, ActQuantMode, ActQuantParams};
 pub use weight_split::{split_quantize, split_quantize_pair, SplitTensor};
 
 /// SplitQuant configuration.

@@ -25,6 +25,17 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     matmul_serial(a, b)
 }
 
+/// [`matmul`] with an explicit micro-kernel choice threaded through both
+/// dispatch arms (pooled row partition vs serial).
+pub fn matmul_with(a: &Tensor, b: &Tensor, kind: crate::parallel::KernelKind) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    if m >= 2 && crate::parallel::should_parallelize(2 * m * k * n) {
+        return crate::parallel::kernels::matmul_with(a, b, kind);
+    }
+    matmul_serial_with(a, b, kind)
+}
+
 /// Serial `C = A(m×k) @ B(k×n)` under the process-wide kernel choice
 /// ([`crate::parallel::kernel_kind`]). Both engines are bit-identical, so
 /// dispatch never changes results.
@@ -53,7 +64,9 @@ pub fn matmul_serial_with(a: &Tensor, b: &Tensor, kind: crate::parallel::KernelK
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
     #[cfg(feature = "simd")]
-    if kind.effective() == crate::parallel::KernelKind::Simd && m >= 4 && n >= 8 {
+    if kind.effective() != crate::parallel::KernelKind::Scalar && m >= 4 && n >= 8 {
+        // `Int8` rides the f32x8 family on plain f32×f32 matmuls — the
+        // integer datapath only applies to fused quantized-weight matmuls
         let pb = super::simd::PackedB::pack(b.data(), k, n);
         super::simd::matmul_rows_simd(a.data(), &pb, &mut out, 0..m);
         return Tensor::new(&[m, n], out).unwrap();

@@ -25,8 +25,27 @@
 //! identical to the scalar `ops::matmul_rows`, so the SIMD engine is
 //! bit-exact against the scalar and serial engines — asserted by the
 //! remainder-torture and property tests in `parallel::kernels`.
+//!
+//! ## The i8×i8→i32 family
+//!
+//! [`matmul_rows_i8`] (and its scalar twin [`matmul_rows_i8_ref`]) are the
+//! integer micro-kernels behind `KernelKind::Int8`: activations arrive as
+//! zero-point-corrected i8 codes widened to i16, weights stay as their
+//! packed i8 codes, and products accumulate **exactly** in one i32
+//! accumulator per cluster group (per-cluster zero-point correction is
+//! folded into the epilogue via the running code sum, so the inner loop
+//! never touches the weight zero-points, let alone f32). Because integer
+//! accumulation is associative, the SIMD strips and the scalar reference
+//! produce identical accumulators in any order; the only float math is the
+//! shared [`i8_epilogue`] (or its i8-requantizing twin), evaluated with one
+//! fixed expression per output element — so the two twins are bit-identical
+//! by construction, and stay so across serial/pooled row partitions.
+//! Accumulator headroom: `|xc| ≤ 255`, `|w| ≤ 128` ⇒ safe for `k < 65_000`
+//! (far above any transformer hidden size; debug builds catch overflow).
 
 use std::ops::Range;
+
+use crate::quant::QParams;
 
 /// Lane width of the micro-kernels (one AVX ymm register of f32).
 pub const LANES: usize = 8;
@@ -220,6 +239,233 @@ pub fn matmul_rows_simd(ad: &[f32], b: &PackedB, out_chunk: &mut [f32], rows: Ra
     }
 }
 
+/// Borrowed view of one quantized weight plane for the i8 kernels: packed
+/// codes, optional per-element cluster ids, and the per-cluster constants
+/// the epilogue needs. Built once per fused dispatch (the planes are the
+/// same buffers the f32 fused kernel and the paged plane cache hold — the
+/// integer engine adds no weight-side memory).
+pub struct I8Plane<'a> {
+    /// Weight codes, row-major `k × n`.
+    pub codes: &'a [i8],
+    /// Cluster id per element (`k × n`), or empty for a single group.
+    pub cid: &'a [u8],
+    /// Per-cluster zero-points (integral, as stored in `QParams.zp`).
+    pub zps: &'a [f32],
+    /// Per-cluster reciprocal scales `1 / s_g`.
+    pub inv: &'a [f32],
+    /// Inner dimension (rows of W).
+    pub k: usize,
+    /// Output width (columns of W).
+    pub n: usize,
+}
+
+/// Quantize an activation slice for the integer engine: each value becomes
+/// its i8 code with the activation zero-point already subtracted, widened
+/// to i16 (`x_q − Z_x ∈ [−255, 254]`). `p` must come from a zero-inclusive
+/// range (the fused dispatch widens ranges to include 0), which pins
+/// `Z_x` inside the i8 range so the subtraction is exact.
+pub fn quantize_acts_i8(xd: &[f32], p: &QParams) -> Vec<i16> {
+    let zp = p.zp as i16;
+    xd.iter().map(|&v| p.quantize(v) as i16 - zp).collect()
+}
+
+/// The integer engine's dequantize epilogue — the **only** float math in
+/// the i8 datapath, shared verbatim by the SIMD strips and the scalar
+/// reference so the twins stay bit-identical:
+///
+/// ```text
+/// out = inv_x · Σ_g (acc_g − zp_g · cnt_g) · inv_g
+/// ```
+///
+/// `acc_g = Σ xc·w_q` and `cnt_g = Σ xc` over the k-elements of cluster
+/// `g` are exact i32 sums; subtracting `zp_g · cnt_g` here is the
+/// per-cluster zero-point correction folded out of the inner loop.
+#[inline(always)]
+pub fn i8_epilogue(acc: &[i32], cnt: &[i32], zps: &[f32], inv: &[f32], inv_x: f32) -> f32 {
+    let mut s = 0.0f32;
+    for ((&a, &c), (&z, &v)) in acc.iter().zip(cnt).zip(zps.iter().zip(inv)) {
+        s += (a as f32 - z * c as f32) * v;
+    }
+    s * inv_x
+}
+
+/// Scalar reference twin of [`matmul_rows_i8`]: one output element at a
+/// time, per-cluster i32 accumulators, the shared [`i8_epilogue`]. This is
+/// the ground truth the SIMD strips (and the end-to-end qbert int8 path)
+/// are torture-tested against.
+pub fn matmul_rows_i8_ref(
+    xc: &[i16],
+    w: &I8Plane,
+    inv_x: f32,
+    out_chunk: &mut [f32],
+    rows: Range<usize>,
+) {
+    i8_rows_ref_core(xc, w, out_chunk, rows, |acc, cnt| {
+        i8_epilogue(acc, cnt, w.zps, w.inv, inv_x)
+    });
+}
+
+/// Integer micro-kernel for one output row chunk: 8-wide column strips
+/// with per-cluster `[i32; 8]` lane accumulators (per-tensor planes take a
+/// vector fast path whose code sum hoists out of the lanes), then the
+/// shared [`i8_epilogue`] per lane. Bit-identical to
+/// [`matmul_rows_i8_ref`] — integer accumulation is exact in any order and
+/// the epilogue expression is the same.
+pub fn matmul_rows_i8(
+    xc: &[i16],
+    w: &I8Plane,
+    inv_x: f32,
+    out_chunk: &mut [f32],
+    rows: Range<usize>,
+) {
+    i8_rows_simd_core(xc, w, out_chunk, rows, |acc, cnt| {
+        i8_epilogue(acc, cnt, w.zps, w.inv, inv_x)
+    });
+}
+
+/// [`matmul_rows_i8_ref`] with the i32→i8 re-quantizing epilogue: the
+/// dequantized value is immediately re-quantized under `out_p`
+/// (`QParams::quantize`), producing the next layer's activation codes
+/// without a f32 round trip through memory.
+pub fn matmul_rows_i8_requant_ref(
+    xc: &[i16],
+    w: &I8Plane,
+    inv_x: f32,
+    out_p: &QParams,
+    out_chunk: &mut [i8],
+    rows: Range<usize>,
+) {
+    i8_rows_ref_core(xc, w, out_chunk, rows, |acc, cnt| {
+        out_p.quantize(i8_epilogue(acc, cnt, w.zps, w.inv, inv_x))
+    });
+}
+
+/// [`matmul_rows_i8`] with the i32→i8 re-quantizing epilogue — SIMD twin
+/// of [`matmul_rows_i8_requant_ref`], bit-identical to it (same
+/// accumulators, same epilogue expression, same `QParams::quantize`
+/// rounding).
+pub fn matmul_rows_i8_requant(
+    xc: &[i16],
+    w: &I8Plane,
+    inv_x: f32,
+    out_p: &QParams,
+    out_chunk: &mut [i8],
+    rows: Range<usize>,
+) {
+    i8_rows_simd_core(xc, w, out_chunk, rows, |acc, cnt| {
+        out_p.quantize(i8_epilogue(acc, cnt, w.zps, w.inv, inv_x))
+    });
+}
+
+/// Scalar accumulation core, generic over the epilogue (f32 dequant or i8
+/// re-quant) so both public twins share one loop body.
+fn i8_rows_ref_core<T: Copy>(
+    xc: &[i16],
+    w: &I8Plane,
+    out_chunk: &mut [T],
+    rows: Range<usize>,
+    epi: impl Fn(&[i32], &[i32]) -> T,
+) {
+    let (k, n) = (w.k, w.n);
+    let groups = w.inv.len();
+    let mut acc = vec![0i32; groups];
+    let mut cnt = vec![0i32; groups];
+    for (ri, i) in rows.enumerate() {
+        let xrow = &xc[i * k..(i + 1) * k];
+        for j in 0..n {
+            acc.fill(0);
+            cnt.fill(0);
+            if w.cid.is_empty() {
+                let (a, c) = (&mut acc[0], &mut cnt[0]);
+                for (kk, &xq) in xrow.iter().enumerate() {
+                    let xv = xq as i32;
+                    *a += xv * w.codes[kk * n + j] as i32;
+                    *c += xv;
+                }
+            } else {
+                for (kk, &xq) in xrow.iter().enumerate() {
+                    let xv = xq as i32;
+                    let g = w.cid[kk * n + j] as usize;
+                    acc[g] += xv * w.codes[kk * n + j] as i32;
+                    cnt[g] += xv;
+                }
+            }
+            out_chunk[ri * n + j] = epi(&acc, &cnt);
+        }
+    }
+}
+
+/// Strip accumulation core: panels of 8 output columns, per-cluster
+/// `[i32; 8]` accumulators held in registers across the whole k extent.
+/// The per-tensor fast path accumulates one vector lane set and hoists the
+/// activation code sum (column-independent without cluster ids); the split
+/// path gathers the cluster id per lane. Zero activation codes are skipped
+/// — exact for integers, `acc += 0` and `cnt += 0` change nothing.
+fn i8_rows_simd_core<T: Copy>(
+    xc: &[i16],
+    w: &I8Plane,
+    out_chunk: &mut [T],
+    rows: Range<usize>,
+    epi: impl Fn(&[i32], &[i32]) -> T,
+) {
+    let (k, n) = (w.k, w.n);
+    let groups = w.inv.len();
+    let panels = n.div_ceil(LANES);
+    let mut acc = vec![[0i32; LANES]; groups];
+    let mut cnt = vec![[0i32; LANES]; groups];
+    let mut acc_l = vec![0i32; groups];
+    let mut cnt_l = vec![0i32; groups];
+    for p in 0..panels {
+        let c0 = p * LANES;
+        let width = LANES.min(n - c0);
+        for (ri, i) in rows.clone().enumerate() {
+            let xrow = &xc[i * k..(i + 1) * k];
+            for a in acc.iter_mut() {
+                *a = [0; LANES];
+            }
+            for c in cnt.iter_mut() {
+                *c = [0; LANES];
+            }
+            if w.cid.is_empty() {
+                let a = &mut acc[0];
+                let mut rowsum = 0i32;
+                for (kk, &xq) in xrow.iter().enumerate() {
+                    let xv = xq as i32;
+                    if xv == 0 {
+                        continue;
+                    }
+                    rowsum += xv;
+                    let crow = &w.codes[kk * n + c0..kk * n + c0 + width];
+                    for (al, &q) in a[..width].iter_mut().zip(crow) {
+                        *al += xv * q as i32;
+                    }
+                }
+                cnt[0] = [rowsum; LANES];
+            } else {
+                for (kk, &xq) in xrow.iter().enumerate() {
+                    let xv = xq as i32;
+                    if xv == 0 {
+                        continue;
+                    }
+                    let base = kk * n + c0;
+                    for l in 0..width {
+                        let g = w.cid[base + l] as usize;
+                        acc[g][l] += xv * w.codes[base + l] as i32;
+                        cnt[g][l] += xv;
+                    }
+                }
+            }
+            for l in 0..width {
+                for g in 0..groups {
+                    acc_l[g] = acc[g][l];
+                    cnt_l[g] = cnt[g][l];
+                }
+                out_chunk[ri * n + c0 + l] = epi(&acc_l, &cnt_l);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +505,64 @@ mod tests {
             assert_eq!(pb.panel(1)[kk * LANES..kk * LANES + 3], bd[kk * n + 8..kk * n + 11]);
             assert_eq!(pb.panel(1)[kk * LANES + 3..(kk + 1) * LANES], [0.0; 5]);
         }
+    }
+
+    fn i8_fixture(
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (Vec<i16>, Vec<i8>, Vec<u8>, Vec<f32>, Vec<f32>, QParams) {
+        let xp = QParams::from_range(-1.0, 1.0, 8);
+        let x: Vec<f32> = (0..m * k).map(|v| (v as f32 * 0.7).sin()).collect();
+        let xc = quantize_acts_i8(&x, &xp);
+        let wp = [QParams::from_range(-0.5, 0.5, 4), QParams::from_range(-2.0, 2.0, 4)];
+        let codes: Vec<i8> = (0..k * n).map(|v| ((v % 15) as i8) - 8).collect();
+        let cid: Vec<u8> = (0..k * n).map(|v| (v % 2) as u8).collect();
+        let zps: Vec<f32> = wp.iter().map(|p| p.zp).collect();
+        let inv: Vec<f32> = wp.iter().map(|p| 1.0 / p.scale).collect();
+        (xc, codes, cid, zps, inv, xp)
+    }
+
+    #[test]
+    fn i8_twins_are_bit_identical_and_match_float_reference() {
+        let (m, k, n) = (3usize, 7usize, 11usize);
+        let (xc, codes, cid, zps, inv, xp) = i8_fixture(m, k, n);
+        let plane = I8Plane { codes: &codes, cid: &cid, zps: &zps, inv: &inv, k, n };
+        let inv_x = 1.0 / xp.scale;
+        let mut simd = vec![0.0f32; m * n];
+        let mut refr = vec![0.0f32; m * n];
+        matmul_rows_i8(&xc, &plane, inv_x, &mut simd, 0..m);
+        matmul_rows_i8_ref(&xc, &plane, inv_x, &mut refr, 0..m);
+        for (a, b) in simd.iter().zip(&refr) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // against a plain float x_dq @ dq(W) reference
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f64;
+                for kk in 0..k {
+                    let xf = xc[i * k + kk] as f64 / xp.scale as f64;
+                    let g = cid[kk * n + j] as usize;
+                    let wf = (codes[kk * n + j] as f64 - zps[g] as f64) * inv[g] as f64;
+                    want += xf * wf;
+                }
+                assert!((simd[i * n + j] as f64 - want).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_requant_twins_are_bit_identical() {
+        let (m, k, n) = (2usize, 9usize, 13usize);
+        let (xc, codes, cid, zps, inv, xp) = i8_fixture(m, k, n);
+        let plane = I8Plane { codes: &codes, cid: &cid, zps: &zps, inv: &inv, k, n };
+        let inv_x = 1.0 / xp.scale;
+        let out_p = QParams::from_range(-4.0, 4.0, 8);
+        let mut simd = vec![0i8; m * n];
+        let mut refr = vec![0i8; m * n];
+        matmul_rows_i8_requant(&xc, &plane, inv_x, &out_p, &mut simd, 0..m);
+        matmul_rows_i8_requant_ref(&xc, &plane, inv_x, &out_p, &mut refr, 0..m);
+        assert_eq!(simd, refr);
     }
 
     #[test]

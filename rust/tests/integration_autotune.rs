@@ -95,6 +95,33 @@ fn single_layer_sweeps_are_deterministic_across_runs() {
 }
 
 #[test]
+fn int8_fidelity_column_fills_only_when_requested() {
+    let (cfg, store, batches, _) = tiny_setup();
+    let calib = &batches[..1];
+    let off = sweep(&cfg, &store, calib, &SweepConfig::default()).unwrap();
+    for l in &off.layers {
+        for o in &l.options {
+            assert!(o.kl_int8.is_none(), "{}: column filled without opting in", l.layer);
+        }
+    }
+    let on_cfg = SweepConfig { int8_fidelity: true, ..SweepConfig::default() };
+    let on = sweep(&cfg, &store, calib, &on_cfg).unwrap();
+    for l in &on.layers {
+        for o in &l.options {
+            let kli = o.kl_int8.expect("int8 column requested");
+            assert!(kli.is_finite() && kli >= 0.0, "{}: kl_int8 {kli}", l.layer);
+        }
+    }
+    // the f32 columns are untouched by the extra measurement
+    for (la, lb) in off.layers.iter().zip(&on.layers) {
+        for (oa, ob) in la.options.iter().zip(&lb.options) {
+            assert_eq!(oa.kl.to_bits(), ob.kl.to_bits(), "{}", la.layer);
+            assert_eq!(oa.bytes, ob.bytes);
+        }
+    }
+}
+
+#[test]
 fn allocation_respects_budget_and_is_monotone_on_real_sensitivities() {
     let (cfg, store, batches, _) = tiny_setup();
     let table = sweep(&cfg, &store, &batches[..2], &SweepConfig::default()).unwrap();
