@@ -1,0 +1,515 @@
+//! A hand-rolled Rust lexer for the `sq-lint` invariant linter.
+//!
+//! The linter's rules are *lexical*: they need a faithful token stream
+//! (identifiers, punctuation, literals) with comments and string contents
+//! kept out of it — `mul_add` in a doc comment is prose, `"unwrap()"` in a
+//! string literal is data — plus line numbers so findings and
+//! `sq-lint: allow` comments can be matched up. Nothing here parses Rust
+//! grammar; the rule engine works on token patterns and brace/paren
+//! matching, which is all the repo's invariants need (no external crates,
+//! per the sandbox rules — this is the whole point of hand-rolling).
+//!
+//! Handled faithfully, because the rules depend on it:
+//! * line (`//`) and nested block (`/* /* */ */`) comments — captured
+//!   separately for the `safety-comment` rule and allow-comment parsing;
+//! * string, byte-string, raw-string (`r#"…"#`, any hash count) and char
+//!   literals — their contents never become tokens;
+//! * `'a` lifetimes vs `'x'` char literals;
+//! * raw identifiers (`r#fn`).
+
+/// What kind of lexeme a [`Token`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `let`, `matmul`, …).
+    Ident,
+    /// `'a`-style lifetime (the leading quote is kept in the text).
+    Lifetime,
+    /// String / char / numeric literal (contents opaque to the rules).
+    Literal,
+    /// A single punctuation character (`{`, `(`, `.`, `#`, …).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == TokKind::Punct && self.text == s
+    }
+}
+
+/// One comment (either style), with the line it *starts* on and its full
+/// text including the `//` / `/*` delimiters.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+    /// Line the comment ends on (same as `line` for `//` comments).
+    pub end_line: usize,
+}
+
+/// The lexed form of one source file.
+#[derive(Debug, Default)]
+pub struct LexFile {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+impl LexFile {
+    /// `true` if any token sits on `line` (used to tell a trailing comment
+    /// from one on a line of its own).
+    pub fn line_has_token(&self, line: usize) -> bool {
+        self.tokens.iter().any(|t| t.line == line)
+    }
+
+    /// The first token line strictly greater than `line`, if any.
+    pub fn next_token_line(&self, line: usize) -> Option<usize> {
+        self.tokens.iter().map(|t| t.line).filter(|&l| l > line).min()
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated constructs
+/// simply run to end-of-file (the linter must not panic on the tree it is
+/// guarding).
+pub fn lex(src: &str) -> LexFile {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = LexFile::default();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let at = |i: usize| -> char {
+        if i < n {
+            cs[i]
+        } else {
+            '\0'
+        }
+    };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // line comment
+        if c == '/' && at(i + 1) == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                text: cs[start..i].iter().collect(),
+                line,
+                end_line: line,
+            });
+            continue;
+        }
+
+        // nested block comment
+        if c == '/' && at(i + 1) == '*' {
+            let start = i;
+            let start_line = line;
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && at(i + 1) == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && at(i + 1) == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                text: cs[start..i].iter().collect(),
+                line: start_line,
+                end_line: line,
+            });
+            continue;
+        }
+
+        // raw strings (r"…", r#"…"#, br#"…"#) and raw identifiers (r#fn)
+        if (c == 'r' || c == 'b') && {
+            let mut j = i + 1;
+            if c == 'b' && at(j) == 'r' {
+                j += 1;
+            }
+            let raw_prefixed = j > i + 1 || c == 'r';
+            let mut hashes = 0usize;
+            while at(j + hashes) == '#' {
+                hashes += 1;
+            }
+            raw_prefixed && (at(j + hashes) == '"' || (hashes == 1 && is_ident_start(at(j + 1))))
+        } {
+            let mut j = i + 1;
+            if c == 'b' && at(j) == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while at(j + hashes) == '#' {
+                hashes += 1;
+            }
+            if at(j + hashes) == '"' {
+                // raw (byte) string: runs to `"` followed by `hashes` hashes
+                let start_line = line;
+                let mut k = j + hashes + 1;
+                loop {
+                    if k >= n {
+                        break;
+                    }
+                    if cs[k] == '\n' {
+                        line += 1;
+                        k += 1;
+                        continue;
+                    }
+                    if cs[k] == '"' {
+                        let mut h = 0usize;
+                        while h < hashes && at(k + 1 + h) == '#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            k += 1 + hashes;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::from("\"raw\""),
+                    line: start_line,
+                });
+                i = k;
+                continue;
+            }
+            // raw identifier r#name: token text is the bare name
+            let mut k = j + 1;
+            while k < n && is_ident_continue(cs[k]) {
+                k += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Ident,
+                text: cs[j + 1..k].iter().collect(),
+                line,
+            });
+            i = k;
+            continue;
+        }
+
+        // string / byte-string literal
+        if c == '"' || (c == 'b' && at(i + 1) == '"') {
+            let start_line = line;
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < n {
+                if cs[j] == '\\' {
+                    if at(j + 1) == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                } else if cs[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Literal,
+                text: String::from("\"str\""),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+
+        // char literal vs lifetime
+        if c == '\'' || (c == 'b' && at(i + 1) == '\'') {
+            let q = if c == 'b' { i + 1 } else { i };
+            let is_char = at(q + 1) == '\\' || at(q + 2) == '\'' || !is_ident_start(at(q + 1));
+            if is_char {
+                let mut j = q + 1;
+                while j < n {
+                    if cs[j] == '\\' {
+                        j += 2;
+                    } else if cs[j] == '\'' {
+                        j += 1;
+                        break;
+                    } else {
+                        if cs[j] == '\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                out.tokens.push(Token {
+                    kind: TokKind::Literal,
+                    text: String::from("'c'"),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // lifetime: `'` + ident, no closing quote
+            let mut j = q + 1;
+            while j < n && is_ident_continue(cs[j]) {
+                j += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Lifetime,
+                text: cs[q..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+
+        // identifier / keyword
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(cs[i]) {
+                i += 1;
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Ident,
+                text: cs[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+
+        // numeric literal (digits, suffixes, `_`; a `.` only when it starts
+        // a fraction — `0..10` must keep its range dots as punctuation)
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (is_ident_continue(cs[i])) {
+                i += 1;
+            }
+            if at(i) == '.' && at(i + 1).is_ascii_digit() {
+                i += 1;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+            }
+            out.tokens.push(Token {
+                kind: TokKind::Literal,
+                text: cs[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+
+        // everything else: single-char punctuation
+        out.tokens.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+
+    out
+}
+
+/// Token index ranges (`[start, end)`) covering test-only code: items
+/// under a `#[cfg(test)]` / `#[test]` attribute, attribute included.
+///
+/// Detection is deliberately conservative and lexical: an attribute whose
+/// identifier list is exactly `test`, or starts with `cfg` and mentions
+/// `test` without `not`, marks the following item (attributes chain; the
+/// item body is the brace-matched block, or nothing if a `;` lands first).
+pub fn test_regions(lex: &LexFile) -> Vec<(usize, usize)> {
+    let toks = &lex.tokens;
+    let n = toks.len();
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !(toks[i].is_punct("#") && i + 1 < n && toks[i + 1].is_punct("[")) {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        // bracket-match the attribute body
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < n && depth > 0 {
+            if toks[j].is_punct("[") {
+                depth += 1;
+            } else if toks[j].is_punct("]") {
+                depth -= 1;
+            } else if toks[j].kind == TokKind::Ident {
+                idents.push(&toks[j].text);
+            }
+            j += 1;
+        }
+        let is_test_attr = idents.as_slice() == ["test"]
+            || (idents.first() == Some(&"cfg")
+                && idents.iter().any(|s| *s == "test")
+                && !idents.iter().any(|s| *s == "not"));
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // skip any further attributes on the same item
+        let mut k = j;
+        while k + 1 < n && toks[k].is_punct("#") && toks[k + 1].is_punct("[") {
+            let mut d = 1usize;
+            k += 2;
+            while k < n && d > 0 {
+                if toks[k].is_punct("[") {
+                    d += 1;
+                } else if toks[k].is_punct("]") {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // find the item body: first `{` before a top-level `;`
+        let mut body_end = None;
+        let mut m = k;
+        while m < n {
+            if toks[m].is_punct(";") {
+                body_end = Some(m + 1);
+                break;
+            }
+            if toks[m].is_punct("{") {
+                let mut d = 1usize;
+                let mut p = m + 1;
+                while p < n && d > 0 {
+                    if toks[p].is_punct("{") {
+                        d += 1;
+                    } else if toks[p].is_punct("}") {
+                        d -= 1;
+                    }
+                    p += 1;
+                }
+                body_end = Some(p);
+                break;
+            }
+            m += 1;
+        }
+        let end = body_end.unwrap_or(n);
+        regions.push((attr_start, end));
+        i = end;
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lex: &LexFile) -> Vec<&str> {
+        lex.tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_their_contents() {
+        let src = "let a = \"mul_add()\"; // mul_add\n/* unsafe */ let b = 1;";
+        let lex = lex(src);
+        assert_eq!(idents(&lex), ["let", "a", "let", "b"]);
+        assert_eq!(lex.comments.len(), 2);
+        assert!(lex.comments[0].text.contains("mul_add"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_count() {
+        let src = "let s = r##\"quote \"# inside unwrap()\"##; call();";
+        let lex = lex(src);
+        assert_eq!(idents(&lex), ["let", "s", "call"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner unsafe */ still comment */ fn f() {}";
+        let lex = lex(src);
+        assert_eq!(idents(&lex), ["fn", "f"]);
+        assert_eq!(lex.comments.len(), 1);
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let src = "fn f<'a>(x: &'a u8) { let c = 'x'; let e = '\\n'; }";
+        let lex = lex(src);
+        let lifetimes: Vec<_> =
+            lex.tokens.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(idents(&lex).contains(&"c"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "/* a\nb\nc */\nlet x = \"p\nq\";\nlet y = 2;";
+        let lex = lex(src);
+        let y = lex.tokens.iter().find(|t| t.is_ident("y")).unwrap();
+        assert_eq!(y.line, 6);
+    }
+
+    #[test]
+    fn range_dots_stay_punctuation() {
+        let src = "for i in 0..10 {}";
+        let lex = lex(src);
+        let dots = lex.tokens.iter().filter(|t| t.is_punct(".")).count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn cfg_test_region_covers_module_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n fn t() { inner(); }\n}\nfn after() {}";
+        let lex = lex(src);
+        let regions = test_regions(&lex);
+        assert_eq!(regions.len(), 1);
+        let (s, e) = regions[0];
+        let inner = lex.tokens.iter().position(|t| t.is_ident("inner")).unwrap();
+        let after = lex.tokens.iter().position(|t| t.is_ident("after")).unwrap();
+        assert!(s < inner && inner < e);
+        assert!(after >= e);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nfn live() { body(); }";
+        let lex = lex(src);
+        assert!(test_regions(&lex).is_empty());
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let src = "let r#fn = 1; let r = 2;";
+        let lex = lex(src);
+        assert_eq!(idents(&lex), ["let", "fn", "let", "r"]);
+    }
+}

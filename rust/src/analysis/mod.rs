@@ -1,0 +1,226 @@
+//! `sq-lint` (§Static analysis): a self-contained source-level linter that
+//! machine-checks the repo's bit-exactness, determinism and concurrency
+//! contracts — the invariants that otherwise live only in doc comments and
+//! runtime property tests.
+//!
+//! * [`lexer`] — hand-rolled Rust lexer (no external crates): token stream
+//!   with comments, strings, raw strings, nested block comments and
+//!   `#[cfg(test)]`-region tracking handled faithfully.
+//! * [`rules`] — the rule engine: six repo-specific rules with per-module
+//!   scoping and a `// sq-lint: allow(<rule>) — <reason>` escape hatch
+//!   (see [`rules::RULES`] for the shipped set).
+//!
+//! Entry points: [`lint_tree`] walks a source root (the `splitquant lint`
+//! subcommand and the self-lint unit test both use it); [`lint_source`]
+//! lints one file's text (the fixture corpus uses it directly).
+//!
+//! The linter lints **its own source tree in a unit test**
+//! (`repo_source_tree_lints_clean`), so a patch that violates a contract —
+//! or removes an allow-comment's justification — fails `cargo test` as
+//! well as the CI `sq-lint` lane. Fixture files under `testdata/` are
+//! lexer/rule test inputs, not compiled code: the walker skips any
+//! directory named `testdata`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+pub use rules::{lint_source, Finding, RULES};
+
+/// Outcome of linting a whole tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files visited.
+    pub files: usize,
+    /// All findings, allowed ones included, ordered by (path, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Findings not covered by an allow comment — the CI-failing set.
+    pub fn unallowed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.allowed)
+    }
+
+    pub fn allowed_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.allowed).count()
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic order,
+/// skipping `testdata/` fixture directories). Paths in the findings are
+/// relative to `root` with `/` separators — the same keys the rules'
+/// per-module scoping uses.
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut report = LintReport::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        report.files += 1;
+        report.findings.extend(lint_source(&rel, &src));
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            if entry.file_name() == "testdata" {
+                continue; // rule/lexer fixtures, not source code
+            }
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::rules::*;
+    use super::*;
+
+    fn by_rule<'a>(fs: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+        fs.iter().filter(|f| f.rule == rule).collect()
+    }
+
+    // ------------------------------------------------ fixture corpus --
+    // One positive (rule fires) + one negative (rule stays quiet) fixture
+    // per rule, as real files under testdata/ so the lexer runs on honest
+    // multi-line sources rather than inline strings.
+
+    #[test]
+    fn fixture_no_fma_fires() {
+        let fs = lint_source("tensor/simd.rs", include_str!("testdata/no_fma_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_NO_FMA).len(), 2, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_fma_quiet_on_prose_and_lookalikes() {
+        let fs = lint_source("tensor/simd.rs", include_str!("testdata/no_fma_neg.rs"));
+        assert!(by_rule(&fs, RULE_NO_FMA).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_nested_dispatch_fires() {
+        let fs = lint_source("model/x.rs", include_str!("testdata/nested_dispatch_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_NESTED_DISPATCH).len(), 2, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_nested_dispatch_quiet_on_prebuilt_tasks() {
+        let fs = lint_source("model/x.rs", include_str!("testdata/nested_dispatch_neg.rs"));
+        assert!(by_rule(&fs, RULE_NESTED_DISPATCH).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_det_iter_fires() {
+        let fs = lint_source("autotune/x.rs", include_str!("testdata/det_iter_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_DET_ITER).len(), 3, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_det_iter_quiet_on_btreemap_and_lookups() {
+        let fs = lint_source("autotune/x.rs", include_str!("testdata/det_iter_neg.rs"));
+        assert!(by_rule(&fs, RULE_DET_ITER).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_det_iter_scoped_to_artifact_dirs() {
+        // the same source outside autotune//quant//report/ is not flagged
+        let fs = lint_source("model/x.rs", include_str!("testdata/det_iter_pos.rs"));
+        assert!(by_rule(&fs, RULE_DET_ITER).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_panic_fires() {
+        let fs = lint_source("coordinator/x.rs", include_str!("testdata/no_panic_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_NO_PANIC).len(), 4, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_panic_quiet_on_tests_ranges_and_fallbacks() {
+        let fs = lint_source("coordinator/x.rs", include_str!("testdata/no_panic_neg.rs"));
+        assert!(by_rule(&fs, RULE_NO_PANIC).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_safety_fires() {
+        let fs = lint_source("runtime/x.rs", include_str!("testdata/safety_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_SAFETY).len(), 1, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_safety_quiet_with_comment_above_or_trailing() {
+        let fs = lint_source("runtime/x.rs", include_str!("testdata/safety_neg.rs"));
+        assert!(by_rule(&fs, RULE_SAFETY).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_lock_io_fires() {
+        let fs = lint_source("shardstore/x.rs", include_str!("testdata/lock_io_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_LOCK_IO).len(), 2, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_lock_io_quiet_when_guard_dropped_first() {
+        let fs = lint_source("shardstore/x.rs", include_str!("testdata/lock_io_neg.rs"));
+        assert!(by_rule(&fs, RULE_LOCK_IO).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_lexer_torture_produces_no_findings() {
+        // mul_add in a raw string, unwrap in a normal string, unsafe inside
+        // a nested block comment, sq-lint text inside a string: all inert
+        let fs = lint_source("tensor/simd.rs", include_str!("testdata/torture.rs"));
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn block_comment_allow_is_rejected() {
+        let src = "/* sq-lint: allow(no-fma) — wrong comment style */\nfn f() {}";
+        let fs = lint_source("model/x.rs", src);
+        assert_eq!(by_rule(&fs, RULE_ALLOW_SYNTAX).len(), 1, "{fs:?}");
+    }
+
+    // ------------------------------------------------------ self-lint --
+
+    #[test]
+    fn repo_source_tree_lints_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+        let report = lint_tree(&root).expect("walking rust/src");
+        assert!(report.files > 30, "walker only found {} files", report.files);
+        let bad: Vec<String> = report.unallowed().map(|f| f.to_string()).collect();
+        assert!(
+            bad.is_empty(),
+            "sq-lint: {} unallowed finding(s) in the repo tree:\n{}",
+            bad.len(),
+            bad.join("\n")
+        );
+    }
+
+    #[test]
+    fn walker_skips_testdata_fixtures() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust")
+            .join("src")
+            .join("analysis");
+        let report = lint_tree(&root).expect("walking analysis/");
+        // exactly this module's three source files, none of the fixtures
+        assert_eq!(report.files, 3, "{report:?}");
+    }
+}

@@ -1,0 +1,734 @@
+//! The `sq-lint` rule engine: repo-specific invariant checks over the
+//! token stream of [`super::lexer`], with per-module scoping and a
+//! `// sq-lint: allow(<rule>) — <reason>` escape hatch.
+//!
+//! Every rule machine-checks a contract the repo otherwise states only in
+//! doc comments and property tests:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `no-fma` | bit-identity: no `mul_add`/`fma` in the kernel files — an FMA rounds once where the engines must round per op |
+//! | `no-nested-dispatch` | no pooled kernel entry point called lexically inside a `WorkerPool::scope(...)` argument — nested dispatch would deadlock or silently serialize |
+//! | `deterministic-iteration` | no `HashMap`/`HashSet` iteration in `autotune/`, `quant/`, `report/`, where ordering leaks into serialized `BitPlan`/bench artifacts |
+//! | `no-panic-in-serving` | no `unwrap()`/`expect(`/`panic!` (and, under `coordinator/` + `shardstore/`, no `[idx]` indexing) in non-test serving code |
+//! | `safety-comment` | every `unsafe` token carries a `// SAFETY:` comment immediately above (or trailing on the same line) |
+//! | `lock-across-io` | no lock guard held across file IO or pooled dispatch (deadlock/stall heuristic for the shard-fault path) |
+//!
+//! Scoping notes (deliberate, documented here and in ROADMAP):
+//! * `no-panic-in-serving`'s indexing facet covers `coordinator/` and
+//!   `shardstore/` only — the kernels under `parallel/` index raw output
+//!   buffers in their innermost loops by design (shape-checked at entry),
+//!   and annotating every hot-loop subscript would bury real findings.
+//!   The `unwrap`/`expect`/`panic!` facet still covers `parallel/`.
+//! * `lock-across-io` treats `util::sync::lock_recover` exactly like
+//!   `.lock()` — poison recovery does not change what the guard holds.
+//!
+//! An allow comment must be a `//` line comment, name a real rule, and
+//! carry a reason after the closing paren; a malformed one is itself a
+//! finding (`allow-syntax`), so typos cannot silently disable a check.
+
+use super::lexer::{lex, test_regions, Comment, LexFile, TokKind, Token};
+
+/// Rule identifiers (stable strings: used in allow comments and CI logs).
+pub const RULE_NO_FMA: &str = "no-fma";
+pub const RULE_NESTED_DISPATCH: &str = "no-nested-dispatch";
+pub const RULE_DET_ITER: &str = "deterministic-iteration";
+pub const RULE_NO_PANIC: &str = "no-panic-in-serving";
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_LOCK_IO: &str = "lock-across-io";
+pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
+
+/// `(name, one-line description)` for every shipped rule, in report order.
+pub const RULES: &[(&str, &str)] = &[
+    (RULE_NO_FMA, "mul_add/fma banned in kernel files (bit-identity contract)"),
+    (RULE_NESTED_DISPATCH, "pooled kernel call inside a WorkerPool scope(...) argument"),
+    (RULE_DET_ITER, "HashMap/HashSet iteration in autotune/, quant/, report/"),
+    (RULE_NO_PANIC, "unwrap/expect/panic!/[idx] in non-test serving code"),
+    (RULE_SAFETY, "unsafe without an immediately-preceding // SAFETY: comment"),
+    (RULE_LOCK_IO, "lock guard held across file IO or pooled dispatch"),
+    (RULE_ALLOW_SYNTAX, "malformed or unknown sq-lint allow comment"),
+];
+
+/// Files under the bit-identity contract (relative to the lint root).
+const FMA_FILES: &[&str] = &["tensor/simd.rs", "tensor/ops.rs", "parallel/kernels.rs"];
+
+/// Pool-dispatching kernel entry points (exact identifier match — note
+/// `matmul_rows` and friends are micro-kernels, not dispatchers, and must
+/// NOT appear here).
+const POOLED: &[&str] = &[
+    "matmul",
+    "matmul_with",
+    "batch_matmul",
+    "split_matmul",
+    "split_matmul_with",
+    "split_matmul_pooled",
+    "split_matmul_pooled_with",
+    "split_matmul_int8",
+    "matmul_fused",
+];
+
+/// Identifiers that mean "this statement performs file IO".
+const IO_IDENTS: &[&str] = &[
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "seek",
+    "write_all",
+    "sync_all",
+    "flush",
+    "File",
+    "OpenOptions",
+    "create_dir_all",
+    "remove_file",
+    "remove_dir_all",
+    "rename",
+    "fs",
+];
+
+/// Map-iteration adaptors whose order is the map's internal order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// One lint finding. `allowed` is set when a well-formed
+/// `sq-lint: allow` comment covers the finding's rule and line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+    pub allowed: bool,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let tag = if self.allowed { " (allowed)" } else { "" };
+        write!(f, "{}:{}: [{}] {}{}", self.path, self.line, self.rule, self.msg, tag)
+    }
+}
+
+/// A parsed, well-formed allow comment.
+#[derive(Debug)]
+struct Allow {
+    rule: String,
+    /// Source lines this allow suppresses: its own line (trailing form) or
+    /// the next line that has any token (own-line form).
+    covers: Vec<usize>,
+}
+
+struct Ctx<'a> {
+    rel: &'a str,
+    lex: &'a LexFile,
+    tests: Vec<(usize, usize)>,
+}
+
+impl<'a> Ctx<'a> {
+    fn toks(&self) -> &[Token] {
+        &self.lex.tokens
+    }
+
+    fn in_test(&self, idx: usize) -> bool {
+        self.tests.iter().any(|&(s, e)| idx >= s && idx < e)
+    }
+
+    fn in_dir(&self, dirs: &[&str]) -> bool {
+        dirs.iter().any(|d| self.rel.starts_with(d))
+    }
+
+    fn finding(&self, rule: &'static str, line: usize, msg: String) -> Finding {
+        Finding { rule, path: self.rel.to_string(), line, msg, allowed: false }
+    }
+}
+
+/// Index of the matching closer for the opener at `open_idx` (whose text
+/// must be `open`). Returns `toks.len()` if unbalanced.
+fn match_close(toks: &[Token], open_idx: usize, open: &str, close: &str) -> usize {
+    let mut depth = 1usize;
+    let mut j = open_idx + 1;
+    while j < toks.len() {
+        if toks[j].is_punct(open) {
+            depth += 1;
+        } else if toks[j].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Index of the first token of the statement containing `idx` (the token
+/// after the nearest preceding `;`, `{` or `}`).
+fn statement_start(toks: &[Token], idx: usize) -> usize {
+    let mut j = idx;
+    while j > 0 {
+        let t = &toks[j - 1];
+        if t.is_punct(";") || t.is_punct("{") || t.is_punct("}") {
+            return j;
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// Index just past the statement containing `idx`: the first `;` at
+/// bracket depth 0, or the closing `}` of the enclosing block.
+fn statement_end(toks: &[Token], idx: usize) -> usize {
+    let mut depth = 0isize;
+    let mut j = idx;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is_punct("(") || t.is_punct("[") || t.is_punct("{") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+        } else if t.is_punct("}") {
+            if depth == 0 {
+                return j;
+            }
+            depth -= 1;
+        } else if t.is_punct(";") && depth <= 0 {
+            return j;
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Index of the `}` closing the innermost block containing `idx`.
+fn enclosing_block_end(toks: &[Token], idx: usize) -> usize {
+    let mut depth = 0isize;
+    let mut j = idx + 1;
+    while j < toks.len() {
+        if toks[j].is_punct("{") {
+            depth += 1;
+        } else if toks[j].is_punct("}") {
+            if depth == 0 {
+                return j;
+            }
+            depth -= 1;
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+fn prev_is(toks: &[Token], idx: usize, text: &str) -> bool {
+    idx > 0 && (toks[idx - 1].is_punct(text) || toks[idx - 1].is_ident(text))
+}
+
+fn next_is_punct(toks: &[Token], idx: usize, text: &str) -> bool {
+    toks.get(idx + 1).is_some_and(|t| t.is_punct(text))
+}
+
+// ---------------------------------------------------------------- rules --
+
+fn rule_no_fma(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !FMA_FILES.contains(&ctx.rel) {
+        return;
+    }
+    for t in ctx.toks() {
+        if t.kind == TokKind::Ident && (t.text == "mul_add" || t.text == "fma") {
+            out.push(ctx.finding(
+                RULE_NO_FMA,
+                t.line,
+                format!(
+                    "`{}` breaks the bit-identity contract: an FMA rounds once where \
+                     every engine must round per IEEE op",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+fn rule_nested_dispatch(ctx: &Ctx, out: &mut Vec<Finding>) {
+    let toks = ctx.toks();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("scope") && next_is_punct(toks, i, "(") && !prev_is(toks, i, "fn"))
+        {
+            continue;
+        }
+        let close = match_close(toks, i + 1, "(", ")");
+        for j in i + 2..close {
+            if toks[j].kind == TokKind::Ident
+                && POOLED.contains(&toks[j].text.as_str())
+                && next_is_punct(toks, j, "(")
+                && !prev_is(toks, j, "fn")
+            {
+                out.push(ctx.finding(
+                    RULE_NESTED_DISPATCH,
+                    toks[j].line,
+                    format!(
+                        "pooled `{}` called inside a WorkerPool `scope(...)` argument — \
+                         nested dispatch deadlocks or silently serializes",
+                        toks[j].text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn rule_det_iter(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !ctx.in_dir(&["autotune/", "quant/", "report/"]) {
+        return;
+    }
+    let toks = ctx.toks();
+    // pass 1: names bound (let / field / param) to a HashMap or HashSet
+    let mut maps: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is_ident("HashMap") || toks[i].is_ident("HashSet")) {
+            continue;
+        }
+        let stmt = statement_start(toks, i);
+        // nearest binder marker (`=` of a let, or the `:` of an annotation)
+        // walking back from the type name
+        let mut j = i;
+        while j > stmt {
+            j -= 1;
+            let t = &toks[j];
+            let single_eq = t.is_punct("=")
+                && !next_is_punct(toks, j, "=")
+                && !next_is_punct(toks, j, ">")
+                && !(j > 0
+                    && matches!(
+                        toks[j - 1].text.as_str(),
+                        "=" | "<" | ">" | "!" | "+" | "-" | "*" | "/" | "%" | "&" | "|" | "^"
+                    ));
+            let single_colon =
+                t.is_punct(":") && !next_is_punct(toks, j, ":") && !prev_is(toks, j, ":");
+            if single_eq || single_colon {
+                if j > 0 && toks[j - 1].kind == TokKind::Ident {
+                    let name = toks[j - 1].text.clone();
+                    if !maps.contains(&name) {
+                        maps.push(name);
+                    }
+                }
+                break;
+            }
+        }
+    }
+    if maps.is_empty() {
+        return;
+    }
+    // pass 2a: `name.iter()` / `.keys()` / … method chains
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && maps.iter().any(|m| m == &t.text)
+            && next_is_punct(toks, i, ".")
+            && toks
+                .get(i + 2)
+                .is_some_and(|m| m.kind == TokKind::Ident && ITER_METHODS.contains(&m.text.as_str()))
+            && next_is_punct(toks, i + 2, "(")
+        {
+            out.push(ctx.finding(
+                RULE_DET_ITER,
+                t.line,
+                format!(
+                    "`{}.{}()` iterates a HashMap/HashSet — ordering is nondeterministic \
+                     and leaks into serialized artifacts; use BTreeMap or sort first",
+                    t.text,
+                    toks[i + 2].text
+                ),
+            ));
+        }
+    }
+    // pass 2b: `for … in <expr mentioning a map> {`
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("for") || ctx.in_test(i) {
+            continue;
+        }
+        // find the `in` of this for-loop header (skip pattern parens)
+        let mut j = i + 1;
+        let mut depth = 0isize;
+        while j < toks.len() {
+            let t = &toks[j];
+            if t.is_punct("(") || t.is_punct("[") {
+                depth += 1;
+            } else if t.is_punct(")") || t.is_punct("]") {
+                depth -= 1;
+            } else if t.is_ident("in") && depth == 0 {
+                break;
+            } else if t.is_punct("{") || t.is_punct(";") {
+                j = toks.len(); // not a for-loop header we understand
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            continue;
+        }
+        // header runs to the body `{` at depth 0
+        let mut k = j + 1;
+        depth = 0;
+        while k < toks.len() {
+            let t = &toks[k];
+            if t.is_punct("(") || t.is_punct("[") {
+                depth += 1;
+            } else if t.is_punct(")") || t.is_punct("]") {
+                depth -= 1;
+            } else if t.is_punct("{") && depth == 0 {
+                break;
+            }
+            // a called ident (`store.names()`) yields its *return* value —
+            // only a bare map name iterates the map itself
+            if t.kind == TokKind::Ident
+                && maps.iter().any(|m| m == &t.text)
+                && !next_is_punct(toks, k, "(")
+            {
+                out.push(ctx.finding(
+                    RULE_DET_ITER,
+                    t.line,
+                    format!(
+                        "`for … in` over HashMap/HashSet `{}` — ordering is \
+                         nondeterministic; use BTreeMap or sort first",
+                        t.text
+                    ),
+                ));
+            }
+            k += 1;
+        }
+    }
+}
+
+fn rule_no_panic(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !ctx.in_dir(&["coordinator/", "shardstore/", "parallel/"]) {
+        return;
+    }
+    let toks = ctx.toks();
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        if (t.is_ident("unwrap") || t.is_ident("expect"))
+            && prev_is(toks, i, ".")
+            && next_is_punct(toks, i, "(")
+        {
+            out.push(ctx.finding(
+                RULE_NO_PANIC,
+                t.line,
+                format!(
+                    "`.{}()` in serving code — return an Error (or lock_recover for \
+                     mutexes), or allow-annotate if provably infallible",
+                    t.text
+                ),
+            ));
+        } else if t.is_ident("panic") && next_is_punct(toks, i, "!") {
+            out.push(ctx.finding(
+                RULE_NO_PANIC,
+                t.line,
+                "`panic!` in serving code — return an Error, or allow-annotate with the \
+                 invariant that makes this unreachable"
+                    .to_string(),
+            ));
+        }
+    }
+    // indexing facet: coordinator/ + shardstore/ only (parallel/ kernels
+    // index raw buffers in hot loops by design — see module docs)
+    if !ctx.in_dir(&["coordinator/", "shardstore/"]) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if ctx.in_test(i) || !toks[i].is_punct("[") || i == 0 {
+            continue;
+        }
+        let p = &toks[i - 1];
+        // an index expression follows a value (ident or closing bracket);
+        // `let [a] = …` slice patterns follow the `let` keyword instead
+        let indexes = (p.kind == TokKind::Ident && p.text != "let")
+            || p.is_punct(")")
+            || p.is_punct("]");
+        if !indexes {
+            continue;
+        }
+        let close = match_close(toks, i, "[", "]");
+        let mut has_range = false;
+        let mut j = i + 1;
+        while j + 1 < close {
+            if toks[j].is_punct(".") && toks[j + 1].is_punct(".") {
+                has_range = true;
+                break;
+            }
+            j += 1;
+        }
+        if !has_range {
+            out.push(ctx.finding(
+                RULE_NO_PANIC,
+                toks[i].line,
+                "`[idx]` indexing in serving code can panic — use .get() with an Error, \
+                 or allow-annotate the bound that holds"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn rule_safety(ctx: &Ctx, out: &mut Vec<Finding>) {
+    let toks = ctx.toks();
+    for t in toks {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        let line = t.line;
+        let covered = ctx.lex.comments.iter().any(|c| {
+            if !c.text.contains("SAFETY:") {
+                return false;
+            }
+            if c.line == line {
+                return true; // trailing on the same line
+            }
+            // immediately above: no *token* line strictly between the
+            // comment's end and the unsafe token (comments/blanks are fine)
+            c.end_line < line
+                && !toks.iter().any(|o| o.line > c.end_line && o.line < line)
+        });
+        if !covered {
+            out.push(ctx.finding(
+                RULE_SAFETY,
+                line,
+                "`unsafe` without an immediately-preceding `// SAFETY:` comment stating \
+                 the invariant it relies on"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn rule_lock_io(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !ctx.in_dir(&["coordinator/", "shardstore/", "model/", "runtime/"]) {
+        return;
+    }
+    let toks = ctx.toks();
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        let is_lock = (t.is_ident("lock") && prev_is(toks, i, ".") && next_is_punct(toks, i, "("))
+            || (t.is_ident("lock_recover") && next_is_punct(toks, i, "("));
+        if !is_lock {
+            continue;
+        }
+        let stmt = statement_start(toks, i);
+        let let_bound = toks[stmt].is_ident("let");
+        // a let-bound guard lives to the end of the enclosing block; a
+        // statement-level temporary only to the end of its statement
+        let end = if let_bound {
+            enclosing_block_end(toks, i)
+        } else {
+            statement_end(toks, i)
+        };
+        for j in i + 1..end.min(toks.len()) {
+            let o = &toks[j];
+            let io = o.kind == TokKind::Ident && IO_IDENTS.contains(&o.text.as_str());
+            let dispatch = o.kind == TokKind::Ident
+                && next_is_punct(toks, j, "(")
+                && (POOLED.contains(&o.text.as_str())
+                    || (o.text == "scope" && prev_is(toks, j, ".")));
+            if io || dispatch {
+                out.push(ctx.finding(
+                    RULE_LOCK_IO,
+                    t.line,
+                    format!(
+                        "lock guard held across `{}` (line {}) — IO or pooled dispatch \
+                         under a lock stalls every other locker; drop the guard first",
+                        o.text, o.line
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- allow comments --
+
+fn known_rule(name: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == name && *r != RULE_ALLOW_SYNTAX)
+}
+
+fn parse_allows(ctx: &Ctx, out: &mut Vec<Finding>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in &ctx.lex.comments {
+        // a candidate allow *starts* with `sq-lint:` right after the
+        // comment delimiters — prose that merely mentions the convention
+        // (like this module's own docs) is not an allow attempt
+        let body = c
+            .text
+            .trim_start_matches(|ch| ch == '/' || ch == '*' || ch == '!')
+            .trim_start();
+        if !body.starts_with("sq-lint:") {
+            continue;
+        }
+        if !c.text.starts_with("//") {
+            out.push(ctx.finding(
+                RULE_ALLOW_SYNTAX,
+                c.line,
+                "sq-lint allow must be a `//` line comment (block comments don't suppress)"
+                    .to_string(),
+            ));
+            continue;
+        }
+        let rest = body["sq-lint:".len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else {
+            out.push(ctx.finding(
+                RULE_ALLOW_SYNTAX,
+                c.line,
+                format!("expected `sq-lint: allow(<rule>) — <reason>`, got `{}`", c.text.trim()),
+            ));
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            out.push(ctx.finding(
+                RULE_ALLOW_SYNTAX,
+                c.line,
+                "unterminated `allow(` — missing `)`".to_string(),
+            ));
+            continue;
+        };
+        let rule = body[..close].trim().to_string();
+        if !known_rule(&rule) {
+            out.push(ctx.finding(
+                RULE_ALLOW_SYNTAX,
+                c.line,
+                format!("unknown rule `{rule}` in allow comment"),
+            ));
+            continue;
+        }
+        let reason = body[close + 1..]
+            .trim_start_matches(|ch: char| {
+                ch.is_whitespace() || ch == '-' || ch == '—' || ch == '–' || ch == ':'
+            })
+            .trim();
+        if reason.is_empty() {
+            out.push(ctx.finding(
+                RULE_ALLOW_SYNTAX,
+                c.line,
+                format!("allow({rule}) without a reason — state why the finding is safe"),
+            ));
+            continue;
+        }
+        let covers = if ctx.lex.line_has_token(c.line) {
+            vec![c.line] // trailing form: covers its own line only
+        } else {
+            // own-line form: covers the next line that has code on it
+            ctx.lex.next_token_line(c.line).map(|l| vec![l]).unwrap_or_default()
+        };
+        allows.push(Allow { rule, covers });
+    }
+    allows
+}
+
+// --------------------------------------------------------------- driver --
+
+/// Lint one file's source text. `rel` is the path relative to the lint
+/// root (unix separators), e.g. `"coordinator/server.rs"` — the rules'
+/// per-module scoping keys off it.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let tests = test_regions(&lexed);
+    let ctx = Ctx { rel, lex: &lexed, tests };
+    let mut out = Vec::new();
+    rule_no_fma(&ctx, &mut out);
+    rule_nested_dispatch(&ctx, &mut out);
+    rule_det_iter(&ctx, &mut out);
+    rule_no_panic(&ctx, &mut out);
+    rule_safety(&ctx, &mut out);
+    rule_lock_io(&ctx, &mut out);
+    let allows = parse_allows(&ctx, &mut out);
+    for f in &mut out {
+        if f.rule != RULE_ALLOW_SYNTAX
+            && allows.iter().any(|a| a.rule == f.rule && a.covers.contains(&f.line))
+        {
+            f.allowed = true;
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unallowed(fs: &[Finding]) -> usize {
+        fs.iter().filter(|f| !f.allowed).count()
+    }
+
+    #[test]
+    fn rules_table_is_consistent() {
+        assert_eq!(RULES.len(), 7);
+        assert!(known_rule(RULE_NO_FMA));
+        assert!(!known_rule("allow-syntax")); // can't allow the meta rule
+        assert!(!known_rule("no-such-rule"));
+    }
+
+    #[test]
+    fn scoping_keeps_out_of_scope_files_clean() {
+        // mul_add outside the kernel files is not this rule's business
+        let fs = lint_source("model/bert.rs", "fn f(a: f32) -> f32 { a.mul_add(2.0, 1.0) }");
+        assert!(fs.iter().all(|f| f.rule != RULE_NO_FMA), "{fs:?}");
+    }
+
+    #[test]
+    fn trailing_allow_covers_its_own_line_only() {
+        let src = "fn f(v: &[u8]) {\n\
+                   let a = v.first().unwrap(); // sq-lint: allow(no-panic-in-serving) — test one\n\
+                   let b = v.last().unwrap();\n}";
+        let fs = lint_source("coordinator/x.rs", src);
+        let allowed: Vec<_> = fs.iter().filter(|f| f.allowed).collect();
+        assert_eq!(allowed.len(), 1, "{fs:?}");
+        assert_eq!(allowed[0].line, 2);
+        assert_eq!(unallowed(&fs), 1);
+    }
+
+    #[test]
+    fn own_line_allow_covers_the_next_code_line() {
+        let src = "fn f(v: &[u8]) {\n\
+                   // sq-lint: allow(no-panic-in-serving) — caller checked non-empty\n\
+                   let a = v.first().unwrap();\n}";
+        let fs = lint_source("coordinator/x.rs", src);
+        assert_eq!(unallowed(&fs), 0, "{fs:?}");
+        assert_eq!(fs.len(), 1);
+    }
+
+    #[test]
+    fn malformed_allow_is_itself_a_finding() {
+        for bad in [
+            "// sq-lint: allow(no-panic-in-serving)", // no reason
+            "// sq-lint: allow(not-a-rule) — reason", // unknown rule
+            "// sq-lint: disable(no-fma) — reason",   // wrong verb
+        ] {
+            let fs = lint_source("model/x.rs", &format!("{bad}\nfn f() {{}}"));
+            assert!(
+                fs.iter().any(|f| f.rule == RULE_ALLOW_SYNTAX && !f.allowed),
+                "`{bad}` should be an allow-syntax finding: {fs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "// sq-lint: allow(no-fma) — wrong rule on purpose\n\
+                   fn f(v: &[u8]) { v.first().unwrap(); }";
+        let fs = lint_source("coordinator/x.rs", src);
+        assert_eq!(unallowed(&fs), 1, "{fs:?}");
+    }
+}

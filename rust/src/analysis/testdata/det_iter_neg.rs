@@ -1,0 +1,16 @@
+//! Fixture (negative): BTreeMap iteration is ordered, HashMap point
+//! lookups and size queries don't leak ordering — no findings.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn emit(plan: &BTreeMap<String, u8>, stats: &HashMap<String, u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, bits) in plan {
+        out.push(format!("{name}={bits}"));
+    }
+    if let Some(hits) = stats.get("total") {
+        out.push(hits.to_string());
+    }
+    out.push(stats.len().to_string());
+    out
+}

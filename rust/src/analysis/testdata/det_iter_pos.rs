@@ -1,0 +1,18 @@
+//! Fixture (positive): HashMap iteration in an artifact-producing module —
+//! three findings: a `for … in`, a `.keys()`, and a `.drain()`.
+
+use std::collections::HashMap;
+
+pub fn emit(plan: &HashMap<String, u8>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (name, bits) in plan {
+        out.push(format!("{name}={bits}"));
+    }
+    let names: Vec<&String> = plan.keys().collect();
+    out.push(names.len().to_string());
+    let mut index = HashMap::new();
+    index.insert(1u8, 2u8);
+    let drained: Vec<(u8, u8)> = index.drain().collect();
+    out.push(drained.len().to_string());
+    out
+}

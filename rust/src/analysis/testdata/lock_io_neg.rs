@@ -1,0 +1,15 @@
+//! Fixture (negative): guard dropped (inner block) before the IO happens,
+//! and a statement-level temporary that touches no IO.
+
+pub fn fault(file: &Mutex<State>, buf: &mut Vec<u8>) -> io::Result<u64> {
+    let off = {
+        let state = file.lock().unwrap();
+        state.offset()
+    };
+    read_at(off, buf)?;
+    Ok(off)
+}
+
+pub fn counter(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}

@@ -1,0 +1,15 @@
+//! Fixture (positive): a lock guard held across file IO, and one held
+//! across pooled dispatch — two findings (`lock_recover` counts as a lock).
+
+pub fn fault(file: &Mutex<File>, buf: &mut Vec<u8>) -> io::Result<()> {
+    let mut f = file.lock().unwrap();
+    f.seek(SeekFrom::Start(0))?;
+    f.read_exact(buf)
+}
+
+pub fn dispatch(m: &Mutex<State>, a: &Tensor, b: &Tensor) -> Tensor {
+    let guard = lock_recover(m);
+    let out = matmul(a, b);
+    drop(guard);
+    out
+}

@@ -1,0 +1,13 @@
+//! Fixture (negative): pooled calls *before* entering the pool, prebuilt
+//! task vectors, micro-kernel names and the `scope` definition itself are
+//! all fine.
+
+pub fn good(pool: &WorkerPool, a: &Tensor, b: &Tensor, tasks: Vec<Task>) {
+    let _warm = matmul(a, b); // dispatch before the scope: not nested
+    pool.scope(tasks); // tasks built elsewhere: lexically clean
+    let _rows = matmul_rows(a, b); // micro-kernel, not a dispatcher
+}
+
+pub fn scope(tasks: Vec<Task>) {
+    run(tasks) // a fn *named* scope is not a pool submit
+}

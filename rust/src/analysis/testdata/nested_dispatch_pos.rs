@@ -1,0 +1,9 @@
+//! Fixture (positive): pooled kernel entry points called lexically inside
+//! a `WorkerPool::scope(...)` argument — two findings.
+
+pub fn bad(pool: &WorkerPool, a: &Tensor, b: &Tensor) {
+    pool.scope(vec![Box::new(move || {
+        let _ = matmul(a, b);
+    })]);
+    pool.scope(vec![Box::new(move || drop(split_matmul(a, b)))]);
+}

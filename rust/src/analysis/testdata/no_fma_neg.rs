@@ -1,0 +1,9 @@
+//! Fixture (negative): mul_add in prose, strings and lookalike
+//! identifiers must NOT fire `no-fma` — the rule matches whole tokens.
+
+pub fn matmul_rows(a: &[f32], out: &mut f32) {
+    // a real kernel must not use mul_add (that is the whole contract)
+    let s = "calling .mul_add() or fma() in a string is data, not code";
+    let mul_add_sites = s.len(); // lookalike binder, not the intrinsic
+    *out = a.len() as f32 + mul_add_sites as f32;
+}

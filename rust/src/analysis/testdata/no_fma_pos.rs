@@ -1,0 +1,14 @@
+//! Fixture (positive): FMA intrinsics in a kernel-scoped file must fire
+//! `no-fma` — once for `mul_add`, once for `fma`.
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc = a[i].mul_add(b[i], acc);
+    }
+    acc
+}
+
+pub fn fused(x: f64, y: f64, z: f64) -> f64 {
+    fma(x, y, z)
+}

@@ -1,0 +1,20 @@
+//! Fixture (negative): range slicing, `unwrap_or` fallbacks and
+//! `#[cfg(test)]` code are all exempt.
+
+pub fn admit(v: &[u32]) -> u32 {
+    let head = &v[..1];
+    head.first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_code_may_unwrap_and_index() {
+        let v = vec![1u32, 2];
+        assert_eq!(admit(&v), 1);
+        let x = v.last().unwrap();
+        assert_eq!(*x + v[0], 3);
+    }
+}

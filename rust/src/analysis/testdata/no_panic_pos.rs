@@ -1,0 +1,11 @@
+//! Fixture (positive): four ways serving code can panic — `unwrap`,
+//! `expect`, `panic!` and `[idx]` indexing.
+
+pub fn admit(v: &[u32], o: Option<u32>) -> u32 {
+    let a = o.unwrap();
+    let b = o.expect("always present");
+    if v.is_empty() {
+        panic!("empty batch");
+    }
+    a + b + v[0]
+}

@@ -1,0 +1,18 @@
+//! Fixture (negative): every accepted `// SAFETY:` placement — a comment
+//! block directly above, and the trailing same-line form.
+
+pub fn deref(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` points at a live byte (fixture;
+    // a second comment line between SAFETY and the keyword is fine).
+    unsafe { *p }
+}
+
+// SAFETY: this impl is a fixture; the type owns no thread-affine state.
+unsafe impl Send for Fixture {}
+
+pub struct Fixture;
+
+pub fn trailing(p: *const u8) -> u8 {
+    let v = unsafe { *p }; // SAFETY: trailing-comment form, same line.
+    v
+}

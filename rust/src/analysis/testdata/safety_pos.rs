@@ -1,0 +1,5 @@
+//! Fixture (positive): `unsafe` with no `// SAFETY:` comment — one finding.
+
+pub fn deref(p: *const u8) -> u8 {
+    unsafe { *p }
+}

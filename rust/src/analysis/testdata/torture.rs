@@ -1,0 +1,12 @@
+//! Lexer torture fixture: linted as `tensor/simd.rs`, must produce ZERO
+//! findings — every trigger below is hidden in a string or comment.
+
+pub fn tricky() -> String {
+    let raw = r##"call .mul_add(x, y) then fma() and .unwrap() // sq-lint: allow(no-fma) — fake"##;
+    let s = "unsafe { panic!(\"no\") }";
+    /* block comments can nest: /* inner unsafe mul_add */ and resume */
+    let lifetime_not_char: &'static str = "ok";
+    let c = 'x';
+    let esc = '\'';
+    format!("{raw}{s}{lifetime_not_char}{c}{esc}")
+}

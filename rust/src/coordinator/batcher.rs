@@ -27,7 +27,9 @@ impl BatchPolicy {
         BatchPolicy { sizes, max_wait }
     }
 
+    #[allow(clippy::unwrap_used)]
     pub fn max_batch(&self) -> usize {
+        // sq-lint: allow(no-panic-in-serving) — `new` asserts `sizes` non-empty, so `last()` is always `Some`
         *self.sizes.last().unwrap()
     }
 

@@ -24,6 +24,11 @@
 //! Kernel-level parallelism comes from the process-wide
 //! [`crate::parallel`] pool, shared by all workers.
 
+// The serving path must not panic on bad input (sq-lint rule
+// `no-panic-in-serving`); clippy backs that up at compile time for this
+// module tree. Test modules and provably-infallible sites opt out locally.
+#![deny(clippy::unwrap_used)]
+
 pub mod batcher;
 pub mod metrics;
 pub mod server;

@@ -27,6 +27,7 @@ use crate::runtime::Runtime;
 use crate::shardstore::{PagedConfig, PagedModel, ResidencyCounters};
 use crate::splitquant::QuantizedModel;
 use crate::tensor::{IntTensor, Tensor};
+use crate::util::sync::{into_inner_recover, lock_recover, wait_recover, wait_timeout_recover};
 
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
@@ -153,10 +154,16 @@ impl BatchExecutor for PjrtExecutor {
                 Error::Coordinator(format!("no executable for batch size {batch_size}"))
             })?;
         let n = staged.params.len();
-        let request = [
-            i32_literal(ids, &staged.exe.spec.inputs[n])?,
-            f32_literal(mask, &staged.exe.spec.inputs[n + 1])?,
-        ];
+        let (ids_spec, mask_spec) =
+            match (staged.exe.spec.inputs.get(n), staged.exe.spec.inputs.get(n + 1)) {
+                (Some(a), Some(b)) => (a, b),
+                _ => {
+                    return Err(Error::Coordinator(format!(
+                        "bert_fwd_b{batch_size}: manifest lost its ids/mask input slots"
+                    )))
+                }
+            };
+        let request = [i32_literal(ids, ids_spec)?, f32_literal(mask, mask_spec)?];
         let inputs = assemble_literal_refs(&staged.params, &request);
         let logits = staged.exe.run_f32_refs(&inputs)?;
         Ok(argmax_rows(&logits))
@@ -362,7 +369,7 @@ impl IngressQueue {
 
     /// Non-blocking enqueue (admission control).
     fn try_push(&self, p: Pending) -> std::result::Result<(), PushError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if !st.open {
             return Err(PushError::Closed);
         }
@@ -377,9 +384,9 @@ impl IngressQueue {
 
     /// Blocking enqueue: waits for queue space (backpressure).
     fn push(&self, p: Pending) -> std::result::Result<(), PushError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         while st.open && st.queue.len() >= self.cap {
-            st = self.not_full.wait(st).unwrap();
+            st = wait_recover(&self.not_full, st);
         }
         if !st.open {
             return Err(PushError::Closed);
@@ -393,7 +400,7 @@ impl IngressQueue {
     /// Close the queue: wakes the batcher (to flush + exit) and any
     /// blocked submitters (to fail fast).
     fn close(&self) {
-        self.state.lock().unwrap().open = false;
+        lock_recover(&self.state).open = false;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -453,7 +460,7 @@ impl Server {
                 .spawn(move || {
                     'run: loop {
                         let batch = {
-                            let mut st = ingress.state.lock().unwrap();
+                            let mut st = lock_recover(&ingress.state);
                             loop {
                                 let pending = st.queue.len();
                                 let decision = if st.open {
@@ -481,20 +488,20 @@ impl Server {
                                 // nothing dispatchable: sleep until enqueue
                                 // (not_empty) or the oldest deadline
                                 polls.fetch_add(1, Ordering::Relaxed);
-                                if st.queue.is_empty() {
-                                    st = ingress.not_empty.wait(st).unwrap();
-                                } else {
-                                    let oldest =
-                                        st.queue.front().unwrap().submitted.elapsed();
-                                    let wait = policy
-                                        .max_wait
-                                        .saturating_sub(oldest)
-                                        .max(Duration::from_micros(50));
-                                    let (g, _timeout) = ingress
-                                        .not_empty
-                                        .wait_timeout(st, wait)
-                                        .unwrap();
-                                    st = g;
+                                match st.queue.front().map(|p| p.submitted.elapsed()) {
+                                    None => st = wait_recover(&ingress.not_empty, st),
+                                    Some(oldest) => {
+                                        let wait = policy
+                                            .max_wait
+                                            .saturating_sub(oldest)
+                                            .max(Duration::from_micros(50));
+                                        let (g, _timeout) = wait_timeout_recover(
+                                            &ingress.not_empty,
+                                            st,
+                                            wait,
+                                        );
+                                        st = g;
+                                    }
                                 }
                             }
                         };
@@ -503,6 +510,7 @@ impl Server {
                         }
                     }
                 })
+                // sq-lint: allow(no-panic-in-serving) — server construction, not the request path: no batcher thread means no server
                 .expect("spawn batcher")
         };
 
@@ -517,7 +525,7 @@ impl Server {
                     .name(format!("sq-worker-{wi}"))
                     .spawn(move || loop {
                         let batch = {
-                            let guard = work_rx.lock().unwrap();
+                            let guard = lock_recover(&work_rx);
                             guard.recv()
                         };
                         let Ok(WorkBatch { requests, size }) = batch else { break };
@@ -529,8 +537,19 @@ impl Server {
                             ids[i * max_len..(i + 1) * max_len].copy_from_slice(&p.ids);
                             mask[i * max_len..(i + 1) * max_len].copy_from_slice(&p.mask);
                         }
-                        let ids = IntTensor::new(&[size, max_len], ids).unwrap();
-                        let mask = Tensor::new(&[size, max_len], mask).unwrap();
+                        let (ids, mask) = match (
+                            IntTensor::new(&[size, max_len], ids),
+                            Tensor::new(&[size, max_len], mask),
+                        ) {
+                            (Ok(i), Ok(m)) => (i, m),
+                            _ => {
+                                log::error!(
+                                    "worker: batch tensor shape mismatch \
+                                     (size={size}, max_len={max_len})"
+                                );
+                                continue;
+                            }
+                        };
                         let t0 = Instant::now();
                         let labels = match executor.classify(&ids, &mask, size) {
                             Ok(l) => l,
@@ -541,20 +560,29 @@ impl Server {
                         };
                         let exec = t0.elapsed();
                         {
-                            let mut m = metrics.lock().unwrap();
+                            let mut m = lock_recover(&metrics);
                             m.record_batch(real, size, exec);
                             for p in &requests {
                                 m.record_done(p.submitted.elapsed());
                             }
                         }
                         for (i, p) in requests.into_iter().enumerate() {
+                            let Some(&label) = labels.get(i) else {
+                                log::error!(
+                                    "worker: executor returned {} labels for {real} \
+                                     requests",
+                                    labels.len()
+                                );
+                                break;
+                            };
                             let _ = p.resp.send(ClassifyResponse {
-                                label: labels[i],
+                                label,
                                 batch_size: size,
                                 latency: p.submitted.elapsed(),
                             });
                         }
                     })
+                    // sq-lint: allow(no-panic-in-serving) — server construction, not the request path: no workers means no server
                     .expect("spawn worker"),
             );
         }
@@ -580,7 +608,7 @@ impl Server {
         match self.ingress.try_push(req) {
             Ok(()) => Ok(rrx),
             Err(PushError::Full) => {
-                self.metrics.lock().unwrap().shed += 1;
+                lock_recover(&self.metrics).shed += 1;
                 Err(Error::Coordinator("overloaded: ingress queue full".into()))
             }
             Err(PushError::Closed) => {
@@ -609,7 +637,7 @@ impl Server {
     }
 
     pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
+        let mut m = lock_recover(&self.metrics).clone();
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
         fold_residency(&mut m, &*self.executor);
         m
@@ -626,8 +654,8 @@ impl Server {
             let _ = w.join();
         }
         let mut m = Arc::try_unwrap(std::mem::take(&mut self.metrics))
-            .map(|m| m.into_inner().unwrap())
-            .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+            .map(into_inner_recover)
+            .unwrap_or_else(|arc| lock_recover(&arc).clone());
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
         fold_residency(&mut m, &*self.executor);
         m
@@ -655,6 +683,7 @@ fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // tests may panic freely; the rule guards the serving path
 mod tests {
     use super::*;
     use crate::util::rng::Rng;

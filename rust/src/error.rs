@@ -20,6 +20,8 @@ pub enum Error {
     Coordinator(String),
     Io(std::io::Error),
     Xla(String),
+    /// `sq-lint` found this many unallowed invariant violations.
+    Lint(usize),
 }
 
 impl fmt::Display for Error {
@@ -36,6 +38,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Lint(n) => write!(f, "sq-lint: {n} unallowed finding(s)"),
         }
     }
 }

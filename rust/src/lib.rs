@@ -22,6 +22,7 @@
 //! The public API is organized by subsystem; see `DESIGN.md` for the
 //! paper → module map and `EXPERIMENTS.md` for reproduced results.
 
+pub mod analysis;
 pub mod autotune;
 pub mod baselines;
 pub mod clustering;

@@ -7,6 +7,7 @@
 //!   table1          regenerate the paper's Table 1
 //!   serve           load-test the serving coordinator
 //!   verify-runtime  cross-check pure-Rust executor vs PJRT executables
+//!   lint            sq-lint the source tree (invariant linter)
 //!   info            print manifest / artifact inventory
 //!
 //! (Hand-rolled arg parsing: the offline registry has no clap.)
@@ -96,6 +97,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "analyze" => cmd_analyze(&flags),
         "serve" => cmd_serve(&flags),
         "verify-runtime" => cmd_verify(&flags),
+        "lint" => cmd_lint(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -125,6 +127,8 @@ fn print_usage() {
            analyze         --ckpt F [--bits 2] [--k 3]   per-tensor split analysis\n\
            serve           --ckpt F --requests N [--workers W]\n\
            verify-runtime  [--ckpt F]\n\
+           lint            [--root rust/src]   machine-check the bit-exactness /\n\
+                           determinism / concurrency contracts (sq-lint)\n\
            info\n\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
@@ -572,6 +576,30 @@ fn cmd_verify(flags: &Flags) -> Result<()> {
         )));
     }
     println!("[verify] OK — executors agree");
+    Ok(())
+}
+
+/// §Static analysis: run `sq-lint` over the source tree. Prints every
+/// unallowed finding and fails (exit 1) when any remain; allowed findings
+/// are counted but never fail the run. CI's `sq-lint` lane is exactly this
+/// command, and `analysis::tests::repo_source_tree_lints_clean` enforces
+/// the same zero-finding state from `cargo test`.
+fn cmd_lint(flags: &Flags) -> Result<()> {
+    let root = PathBuf::from(flags.get("root", "rust/src"));
+    let report = splitquant::analysis::lint_tree(&root)?;
+    for f in report.unallowed() {
+        println!("{f}");
+    }
+    let unallowed = report.unallowed().count();
+    println!(
+        "[lint] {} files, {unallowed} unallowed finding(s), {} allowed",
+        report.files,
+        report.allowed_count()
+    );
+    if unallowed > 0 {
+        return Err(splitquant::Error::Lint(unallowed));
+    }
+    println!("[lint] OK — all contracts hold");
     Ok(())
 }
 

@@ -45,6 +45,12 @@ fn rows_per_task(rows: usize, threads: usize) -> usize {
     rows.div_ceil(threads.max(1) * 4).max(1)
 }
 
+/// Assemble a kernel's output tensor from its freshly built buffer.
+fn out_tensor(shape: &[usize], data: Vec<f32>) -> Tensor {
+    // sq-lint: allow(no-panic-in-serving) — every kernel allocates `data` as the exact product of `shape`, so the shape check cannot fail
+    Tensor::new(shape, data).unwrap()
+}
+
 /// `C = A(m×k) @ B(k×n)` on the worker pool, unconditionally parallel,
 /// under the process-wide kernel choice. Use [`ops::matmul`] for the
 /// size-aware dispatching entry point.
@@ -61,7 +67,7 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
     if m == 0 || n == 0 {
-        return Tensor::new(&[m, n], out).unwrap();
+        return out_tensor(&[m, n], out);
     }
     let pool = global();
     let rows_per = rows_per_task(m, pool.threads());
@@ -81,7 +87,7 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
             }));
         }
         pool.scope(tasks);
-        return Tensor::new(&[m, n], out).unwrap();
+        return out_tensor(&[m, n], out);
     }
     let _ = kind; // scalar fallback when the simd feature is compiled out
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
@@ -91,7 +97,7 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
         tasks.push(Box::new(move || ops::matmul_rows(ad, bd, chunk, rows, k, n)));
     }
     pool.scope(tasks);
-    Tensor::new(&[m, n], out).unwrap()
+    out_tensor(&[m, n], out)
 }
 
 /// `(B, m, k) @ (B, k, n) -> (B, m, n)` on the worker pool, partitioned
@@ -103,7 +109,7 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, k2);
     let mut out = vec![0.0f32; bs * m * n];
     if bs == 0 || m * n == 0 {
-        return Tensor::new(&[bs, m, n], out).unwrap();
+        return out_tensor(&[bs, m, n], out);
     }
     let pool = global();
     let per = bs.div_ceil(pool.threads().max(1) * 2).max(1);
@@ -121,7 +127,7 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
         }));
     }
     pool.scope(tasks);
-    Tensor::new(&[bs, m, n], out).unwrap()
+    out_tensor(&[bs, m, n], out)
 }
 
 /// Fused split-dequant matmul: `y = x @ dq(W)` where `W` lives as int
@@ -202,7 +208,7 @@ pub fn split_matmul_serial_with(
     if m * n > 0 {
         split_matmul_rows(x.data(), codes, cid, &group, &mut out, 0..m, k, n, kind);
     }
-    Tensor::new(&[m, n], out).unwrap()
+    out_tensor(&[m, n], out)
 }
 
 /// Fused split-dequant matmul forced onto the worker pool.
@@ -237,7 +243,7 @@ pub fn split_matmul_pooled_with(
     let group = DequantGroups::new(params);
     let mut out = vec![0.0f32; m * n];
     if m == 0 || n == 0 {
-        return Tensor::new(&[m, n], out).unwrap();
+        return out_tensor(&[m, n], out);
     }
     let pool = global();
     // one chunk per thread (NOT the 4× oversplit of the plain matmul):
@@ -255,7 +261,7 @@ pub fn split_matmul_pooled_with(
         }));
     }
     pool.scope(tasks);
-    Tensor::new(&[m, n], out).unwrap()
+    out_tensor(&[m, n], out)
 }
 
 /// Per-group dequant constants, precomputed once per call: the hot loop
@@ -318,7 +324,7 @@ fn int8_fused(
     let n = wshape[1];
     let mut out = vec![0.0f32; m * n];
     if m * n == 0 {
-        return Some(Tensor::new(&[m, n], out).unwrap());
+        return Some(out_tensor(&[m, n], out));
     }
     let xp = match act {
         Some(p) => *p,
@@ -345,7 +351,7 @@ fn int8_fused(
     } else {
         kernel(&xc, &plane, inv_x, &mut out, 0..m);
     }
-    Some(Tensor::new(&[m, n], out).unwrap())
+    Some(out_tensor(&[m, n], out))
 }
 
 /// Explicit entry to the integer fused matmul — what
@@ -463,7 +469,7 @@ pub fn ocs_expand_acts(
             ie.extend_from_slice(&cid[c * n..(c + 1) * n]);
         }
     }
-    (Tensor::new(&[m, ke], xe).unwrap(), [ke, n], ce, ie)
+    (out_tensor(&[m, ke], xe), [ke, n], ce, ie)
 }
 
 /// Inner fused kernel dispatch for one output row chunk: scalar quad

@@ -18,6 +18,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::{lock_recover, wait_recover};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Queue {
@@ -47,7 +49,7 @@ impl Latch {
         if task_panicked {
             self.panicked.store(true, Ordering::SeqCst);
         }
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_recover(&self.remaining);
         *r -= 1;
         if *r == 0 {
             self.done.notify_all();
@@ -55,9 +57,9 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut r = self.remaining.lock().unwrap();
+        let mut r = lock_recover(&self.remaining);
         while *r > 0 {
-            r = self.done.wait(r).unwrap();
+            r = wait_recover(&self.done, r);
         }
     }
 }
@@ -93,6 +95,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("sq-pool-{wi}"))
                     .spawn(move || worker_loop(&shared))
+                    // sq-lint: allow(no-panic-in-serving) — pool construction, not the request path: if the OS can't spawn a worker thread the process can't serve at all
                     .expect("spawn pool worker")
             })
             .collect();
@@ -112,7 +115,7 @@ impl WorkerPool {
         }
         let latch = Arc::new(Latch::new(tasks.len()));
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_recover(&self.shared.queue);
             for task in tasks {
                 // SAFETY: `scope` does not return until `latch.wait()` has
                 // observed every task complete, so the borrows captured in
@@ -130,6 +133,7 @@ impl WorkerPool {
         self.shared.available.notify_all();
         latch.wait();
         if latch.panicked.load(Ordering::SeqCst) {
+            // sq-lint: allow(no-panic-in-serving) — deliberate re-raise: a task panic must surface on the submitting thread, not vanish in a worker (tests pin this contract)
             panic!("parallel: a pool task panicked");
         }
     }
@@ -137,7 +141,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.shared.queue.lock().unwrap().shutdown = true;
+        lock_recover(&self.shared.queue).shutdown = true;
         self.shared.available.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -148,7 +152,7 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(j) = q.jobs.pop_front() {
                     break j;
@@ -156,7 +160,7 @@ fn worker_loop(shared: &Shared) {
                 if q.shutdown {
                     return;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = wait_recover(&shared.available, q);
             }
         };
         IN_POOL.with(|f| f.set(true));

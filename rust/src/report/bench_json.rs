@@ -115,6 +115,34 @@ mod tests {
     }
 
     #[test]
+    fn merge_write_is_byte_identical_across_reruns() {
+        // the determinism contract on serialized artifacts (sq-lint's
+        // `deterministic-iteration` rule guards the code side): key order
+        // comes from the BTreeMap-backed `Json::Obj`, row order from merge
+        // insertion order — so the same records must produce the same bytes
+        let p1 = std::env::temp_dir().join("sq_bench_json_det_1.json");
+        let p2 = std::env::temp_dir().join("sq_bench_json_det_2.json");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        let rows = vec![
+            BenchRecord::new("m", "s1", "scalar", Duration::from_micros(5), 1000)
+                .with("gflops", 1.25),
+            BenchRecord::new("m", "s1", "simd", Duration::from_micros(2), 1000),
+            BenchRecord::new("serve", "b8", "pool", Duration::from_micros(9), 4096)
+                .with("qps", 800.0),
+        ];
+        merge_write(&p1, &rows).unwrap();
+        merge_write(&p2, &rows).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        assert_eq!(b1, std::fs::read(&p2).unwrap(), "fresh writes differ");
+        // re-merging the same rows into an existing file is a byte-level noop
+        merge_write(&p1, &rows).unwrap();
+        assert_eq!(b1, std::fs::read(&p1).unwrap(), "re-merge changed bytes");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
     fn merge_replaces_by_key_and_appends_new() {
         let path = std::env::temp_dir().join("sq_bench_json_merge.json");
         std::fs::remove_file(&path).ok();

@@ -145,7 +145,16 @@ impl Runtime {
 
 // The underlying PJRT client handles are internally synchronized; the Rust
 // wrapper types just hold opaque pointers.
+
+// SAFETY: a `LoadedExe` owns only the immutable input spec plus an opaque
+// PJRT executable handle; PJRT executables may be invoked from any thread.
 unsafe impl Send for LoadedExe {}
+// SAFETY: shared references only read the immutable spec and call the
+// internally-synchronized PJRT execute entry point.
 unsafe impl Sync for LoadedExe {}
+// SAFETY: the PJRT client handle is internally synchronized and the compile
+// cache sits behind its own `Mutex`; nothing is thread-affine.
 unsafe impl Send for Runtime {}
+// SAFETY: every `&self` method either locks the cache mutex or calls an
+// internally-synchronized PJRT entry point.
 unsafe impl Sync for Runtime {}

@@ -36,6 +36,7 @@ use crate::quant::serialize::{
 use crate::quant::{PackedModel, QTensor};
 use crate::tensor::Tensor;
 use crate::util::io::{read_u32, read_u64, read_u8};
+use crate::util::sync::lock_recover;
 
 const MAGIC: &[u8; 8] = b"SQSH0001";
 
@@ -259,7 +260,8 @@ impl ShardReader {
             .ok_or_else(|| Error::Checkpoint(format!("{:?}: no shard {name:?}", self.path)))?;
         let mut buf = vec![0u8; e.len as usize];
         {
-            let mut f = self.file.lock().unwrap();
+            // sq-lint: allow(lock-across-io) — this mutex exists to serialize seek+read on the one shared file handle; the IO *is* the critical section
+            let mut f = lock_recover(&self.file);
             f.seek(SeekFrom::Start(e.offset))?;
             f.read_exact(&mut buf)?;
         }

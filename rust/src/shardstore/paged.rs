@@ -37,6 +37,7 @@ use crate::tensor::Tensor;
 
 use super::format::{ShardData, ShardKind, ShardReader};
 use super::residency::{ResidencyCounters, ResidencyManager};
+use crate::util::sync::lock_recover;
 
 /// Knobs for [`PagedModel::open`]. The serving coordinator threads
 /// `ServeConfig::residency_budget_bytes` into this.
@@ -87,6 +88,7 @@ impl PagedModel {
 
         let mut order: Vec<String> = Vec::new();
         for name in reader.names() {
+            // sq-lint: allow(no-panic-in-serving) — `names()` iterates the index itself, so the entry is present by construction; also open-time, not the request path
             let e = reader.entry(name).expect("indexed name");
             // the ONE fused-linear predicate, shared with QuantizedBert::new
             if e.kind == ShardKind::Quant
@@ -173,7 +175,7 @@ impl PagedModel {
         match &*self.fetch(name)? {
             ShardData::Fp32(t) => Ok(Arc::clone(t)),
             ShardData::Quant(q) => {
-                let mut cache = self.inner.dequant_pins.lock().unwrap();
+                let mut cache = lock_recover(&self.inner.dequant_pins);
                 if let Some(t) = cache.get(name) {
                     return Ok(Arc::clone(t));
                 }

@@ -29,6 +29,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::format::ShardData;
+use crate::util::sync::lock_recover;
 
 /// Counter snapshot (see [`ResidencyManager::counters`]). The first three
 /// are surfaced as serving metrics
@@ -100,7 +101,7 @@ impl ResidencyManager {
     /// Look up a resident shard, refreshing its recency. `None` means the
     /// caller must fault it in via [`ResidencyManager::admit_fault`].
     pub fn get(&self, name: &str) -> Option<Arc<ShardData>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.clock += 1;
         let clock = g.clock;
         match g.slots.get_mut(name) {
@@ -119,7 +120,7 @@ impl ResidencyManager {
     /// the race, theirs (the bytes just read are dropped, nothing double-
     /// counted as resident).
     pub fn admit_fault(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> Arc<ShardData> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if let Some(slot) = g.slots.get(name) {
             return Arc::clone(&slot.data);
         }
@@ -142,7 +143,7 @@ impl ResidencyManager {
     /// prefetch must never evict demand-fetched shards. Returns whether the
     /// shard was cached (either by this call or already resident).
     pub fn admit_prefetch(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.slots.contains_key(name) {
             return true;
         }
@@ -158,7 +159,7 @@ impl ResidencyManager {
     /// Admit a pinned (never evicted, not budget-governed) shard — the
     /// always-hot set loaded at open.
     pub fn admit_pinned(&self, name: &str, data: Arc<ShardData>, bytes: usize) -> Arc<ShardData> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if let Some(slot) = g.slots.get(name) {
             return Arc::clone(&slot.data);
         }
@@ -170,21 +171,21 @@ impl ResidencyManager {
     /// budget, no eviction). Racy by nature — callers use it to skip the
     /// disk read, `admit_prefetch` re-checks under the lock.
     pub fn fits_without_eviction(&self, bytes: usize) -> bool {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         g.c.resident_bytes + bytes <= self.budget
     }
 
     pub fn is_resident(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().slots.contains_key(name)
+        lock_recover(&self.inner).slots.contains_key(name)
     }
 
     pub fn is_pinned(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().slots.get(name).map(|s| s.pinned).unwrap_or(false)
+        lock_recover(&self.inner).slots.get(name).map(|s| s.pinned).unwrap_or(false)
     }
 
     /// Counter snapshot (cheap clone under the lock).
     pub fn counters(&self) -> ResidencyCounters {
-        self.inner.lock().unwrap().c.clone()
+        lock_recover(&self.inner).c.clone()
     }
 }
 
@@ -226,7 +227,7 @@ fn evict_until_fits(g: &mut Inner, incoming: usize, budget: usize) {
             .min_by_key(|(_, s)| s.last_use)
             .map(|(n, _)| n.clone());
         let Some(victim) = victim else { break };
-        let slot = g.slots.remove(&victim).expect("victim exists");
+        let Some(slot) = g.slots.remove(&victim) else { break };
         g.c.resident_bytes -= slot.bytes;
         g.c.shard_evictions += 1;
     }

@@ -357,6 +357,19 @@ pub fn matmul_rows_i8_requant(
     });
 }
 
+/// Debug-build guard for the documented accumulator headroom bound (module
+/// doc: `|xc| ≤ 255`, `|w| ≤ 128` ⇒ safe for `k < 65_000`). Beyond it a
+/// per-cluster i32 accumulator can wrap and the exactness contract — SIMD
+/// == scalar reference, bit for bit — silently breaks instead of erroring.
+#[inline]
+fn debug_check_i8_headroom(k: usize) {
+    debug_assert!(
+        k < 65_000,
+        "i8 kernel accumulator headroom exceeded: k = {k} ≥ 65_000 \
+         (each step adds up to 255·128 = 32640, overflowing i32)"
+    );
+}
+
 /// Scalar accumulation core, generic over the epilogue (f32 dequant or i8
 /// re-quant) so both public twins share one loop body.
 fn i8_rows_ref_core<T: Copy>(
@@ -366,6 +379,7 @@ fn i8_rows_ref_core<T: Copy>(
     rows: Range<usize>,
     epi: impl Fn(&[i32], &[i32]) -> T,
 ) {
+    debug_check_i8_headroom(w.k);
     let (k, n) = (w.k, w.n);
     let groups = w.inv.len();
     let mut acc = vec![0i32; groups];
@@ -408,6 +422,7 @@ fn i8_rows_simd_core<T: Copy>(
     rows: Range<usize>,
     epi: impl Fn(&[i32], &[i32]) -> T,
 ) {
+    debug_check_i8_headroom(w.k);
     let (k, n) = (w.k, w.n);
     let groups = w.inv.len();
     let panels = n.div_ceil(LANES);
@@ -505,6 +520,22 @@ mod tests {
             assert_eq!(pb.panel(1)[kk * LANES..kk * LANES + 3], bd[kk * n + 8..kk * n + 11]);
             assert_eq!(pb.panel(1)[kk * LANES + 3..(kk + 1) * LANES], [0.0; 5]);
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "accumulator headroom exceeded")]
+    fn i8_headroom_guard_fires_past_the_documented_bound() {
+        // the module doc promises exact i32 accumulation only for
+        // k < 65_000; the debug guard must trip right at the bound instead
+        // of letting the accumulator wrap silently
+        let k = 65_000usize;
+        let codes = vec![0i8; k];
+        let xc = vec![0i16; k];
+        let (zps, inv) = ([0.0f32], [1.0f32]);
+        let plane = I8Plane { codes: &codes, cid: &[], zps: &zps, inv: &inv, k, n: 1 };
+        let mut out = [0.0f32; 1];
+        matmul_rows_i8_ref(&xc, &plane, 1.0, &mut out, 0..1);
     }
 
     fn i8_fixture(

@@ -1,0 +1,85 @@
+//! Poison-recovering lock helpers for the serving path.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked thread into a process-wide
+//! cascade: every later locker panics on the poison flag, which is exactly
+//! the failure mode a serving coordinator must not have (`sq-lint`'s
+//! `no-panic-in-serving` rule bans the pattern). These helpers recover the
+//! guard from a poisoned lock instead.
+//!
+//! Why recovery is sound *here*: every critical section in this crate is a
+//! small state update (queue push/pop, residency table edit, counter bump)
+//! whose invariants hold at every await-free point — a panic mid-section
+//! cannot leave half-updated state that a later reader would misparse.
+//! Subsystems with multi-step invariants must not adopt these helpers
+//! without re-checking that property; the doc comment on each call site's
+//! mutex is the contract.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait` with the same poison recovery as [`lock_recover`].
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// `Condvar::wait_timeout` with the same poison recovery.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Consume a `Mutex`, recovering the value if the lock was poisoned.
+pub fn into_inner_recover<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn into_inner_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(3u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let m = Arc::try_unwrap(m).unwrap();
+        assert_eq!(into_inner_recover(m), 3);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_cleanly() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let (_g, res) = wait_timeout_recover(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}
