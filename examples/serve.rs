@@ -2,8 +2,16 @@
 //! executables, reporting latency percentiles and throughput.
 //!
 //! ```sh
-//! cargo run --release --example serve -- [requests] [workers] [ckpt] [kernel]
+//! cargo run --release --example serve -- [requests] [workers] [ckpt] [kernel] \
+//!     [--trace <path>] [--metrics-json]
 //! ```
+//!
+//! `--trace <path>` enables the process-wide trace recorder
+//! (`splitquant::trace`) and writes a Chrome trace-event JSON file —
+//! load it at `ui.perfetto.dev`. `--metrics-json` prints the
+//! deterministic sorted-key metrics JSON for each mode after serving.
+//! Without compiled PJRT artifacts the demo falls back to the pure-Rust
+//! executor on a small random model, so both flags work anywhere.
 //!
 //! `kernel` picks the micro-kernel family (`scalar` | `simd` | `int8`,
 //! default: `simd` when compiled in) via `ServeConfig::parallel.kernel` —
@@ -47,8 +55,9 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use splitquant::coordinator::{PjrtExecutor, ServeConfig, Server};
+use splitquant::coordinator::{BatchExecutor, PjrtExecutor, RustExecutor, ServeConfig, Server};
 use splitquant::data::{emotion, HashTokenizer};
+use splitquant::model::config::BertConfig;
 use splitquant::model::params::ParamStore;
 use splitquant::parallel::{KernelKind, ParallelConfig};
 use splitquant::report::Table;
@@ -56,7 +65,24 @@ use splitquant::runtime::Runtime;
 use splitquant::util::rng::Rng;
 
 fn main() -> splitquant::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut trace_path: Option<String> = None;
+    let mut metrics_json = false;
+    let mut args: Vec<String> = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        match a.as_str() {
+            "--trace" => {
+                trace_path = Some(argv.next().ok_or_else(|| {
+                    splitquant::Error::Coordinator("--trace needs an output path".into())
+                })?);
+            }
+            "--metrics-json" => metrics_json = true,
+            _ => args.push(a),
+        }
+    }
+    if trace_path.is_some() {
+        splitquant::trace::set_enabled(true);
+    }
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
     let ckpt = args.get(2).cloned().unwrap_or_else(|| "checkpoints/emotion.bin".to_string());
@@ -74,23 +100,44 @@ fn main() -> splitquant::Result<()> {
         kernel.effective()
     );
 
-    let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
-    let cfg = rt.manifest.bert.clone();
-    let store = if Path::new(&ckpt).exists() {
-        println!("[serve] loading checkpoint {ckpt}");
-        ParamStore::load(Path::new(&ckpt))?
+    let (exec, cfg): (Arc<dyn BatchExecutor>, BertConfig) = if Path::new("artifacts").exists()
+    {
+        let rt = Arc::new(Runtime::new(Path::new("artifacts"))?);
+        let cfg = rt.manifest.bert.clone();
+        let store = if Path::new(&ckpt).exists() {
+            println!("[serve] loading checkpoint {ckpt}");
+            ParamStore::load(Path::new(&ckpt))?
+        } else {
+            println!("[serve] no checkpoint at {ckpt}; serving random weights");
+            ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(7))
+        };
+        // compile b1/b8/b32 forward executables up front; PjrtExecutor
+        // stages the parameter literals once per executable — requests
+        // borrow them, so serving N workers never re-materializes weights
+        let t0 = Instant::now();
+        let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32])?);
+        println!("[serve] compiled {} executables in {:?}", rt.compiled_count(), t0.elapsed());
+        (exec, cfg)
     } else {
-        println!("[serve] no checkpoint at {ckpt}; serving random weights");
-        ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(7))
+        // no compiled artifacts: serve the same traffic through the
+        // pure-Rust executor on a small random model, so the demo (and
+        // the CI trace-smoke lane) runs without the Python build step
+        println!("[serve] no artifacts/ directory; pure-Rust executor on random weights");
+        let cfg = BertConfig {
+            vocab_size: 2048,
+            hidden: 32,
+            layers: 2,
+            heads: 2,
+            ffn: 64,
+            max_len: 32,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        };
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut Rng::new(7));
+        let exec = Arc::new(RustExecutor::new(cfg.clone(), store, vec![1, 8, 32])?);
+        (exec, cfg)
     };
     let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
-
-    // compile b1/b8/b32 forward executables up front; PjrtExecutor stages
-    // the parameter literals once per executable — requests borrow them,
-    // so serving N workers never re-materializes the weights
-    let t0 = Instant::now();
-    let exec = Arc::new(PjrtExecutor::new(&rt, &store, &[1, 8, 32])?);
-    println!("[serve] compiled {} executables in {:?}", rt.compiled_count(), t0.elapsed());
 
     let (_, requests_pool) = emotion::load_small(1, 10, 2048);
 
@@ -135,6 +182,9 @@ fn main() -> splitquant::Result<()> {
         }
         let wall = t0.elapsed();
         let m = server.shutdown();
+        if metrics_json {
+            println!("[serve] metrics[{mode}] = {}", m.to_json().to_string());
+        }
         report.row(vec![
             mode.to_string(),
             requests.to_string(),
@@ -149,5 +199,14 @@ fn main() -> splitquant::Result<()> {
     }
     println!("\n{}", report.render());
     println!("(markdown)\n{}", report.render_markdown());
+    if let Some(path) = trace_path {
+        let snap = splitquant::trace::snapshot();
+        splitquant::trace::chrome::write_chrome_trace(Path::new(&path), &snap)?;
+        println!(
+            "[serve] wrote {} trace events ({} dropped) to {path}",
+            snap.total_events(),
+            snap.dropped
+        );
+    }
     Ok(())
 }

@@ -3,8 +3,19 @@
 //! RAM" scenario, scaled down so it runs anywhere in seconds.
 //!
 //! ```sh
-//! cargo run --release --example serve_paged -- [requests] [budget_pct] [kernel]
+//! cargo run --release --example serve_paged -- [requests] [budget_pct] [kernel] \
+//!     [--trace <path>] [--metrics-json] [--bench-json[=<path>]]
 //! ```
+//!
+//! `--trace <path>` enables the process-wide trace recorder
+//! (`splitquant::trace`) and writes a Chrome trace-event JSON file with
+//! the request-lifecycle spans, shard fault/eviction events and kernel
+//! chunk spans of both modes — load it at `ui.perfetto.dev`.
+//! `--metrics-json` prints each mode's deterministic metrics JSON.
+//! `--bench-json` merges each mode's latency-breakdown rows
+//! (`breakdown-total/queue/batch/exec/fault`) into `BENCH_serving.json`
+//! (or the `=`-given path) keyed by `(bench, shape, engine)` — re-running
+//! replaces rows in place, it never duplicates them.
 //!
 //! `kernel` (`scalar` | `simd` | `int8`, default `simd` when compiled in)
 //! picks the micro-kernel family via `ServeConfig::parallel.kernel` — both
@@ -43,7 +54,29 @@ use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConf
 use splitquant::util::rng::Rng;
 
 fn main() -> splitquant::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut trace_path: Option<String> = None;
+    let mut metrics_json = false;
+    let mut bench_json: Option<String> = None;
+    let mut args: Vec<String> = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        if a == "--trace" {
+            trace_path = Some(argv.next().ok_or_else(|| {
+                splitquant::Error::Coordinator("--trace needs an output path".into())
+            })?);
+        } else if a == "--metrics-json" {
+            metrics_json = true;
+        } else if a == "--bench-json" {
+            bench_json = Some("BENCH_serving.json".to_string());
+        } else if let Some(p) = a.strip_prefix("--bench-json=") {
+            bench_json = Some(p.to_string());
+        } else {
+            args.push(a);
+        }
+    }
+    if trace_path.is_some() {
+        splitquant::trace::set_enabled(true);
+    }
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
     let budget_pct: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(35);
     let kernel = match args.get(2) {
@@ -136,6 +169,17 @@ fn main() -> splitquant::Result<()> {
         }
         let wall = t0.elapsed();
         let m = server.shutdown();
+        let mode_label =
+            if paged_mode { format!("paged{budget_pct}") } else { "resident".to_string() };
+        if metrics_json {
+            println!("[serve_paged] metrics[{mode_label}] = {}", m.to_json().to_string());
+        }
+        if let Some(path) = &bench_json {
+            let engine = format!("{:?}", kernel.effective()).to_lowercase();
+            let rows = m.breakdown_records(&mode_label, &engine);
+            splitquant::report::bench_json::merge_write(std::path::Path::new(path), &rows)?;
+            println!("[serve_paged] merged {} breakdown rows into {path}", rows.len());
+        }
         let peak = peek.map(|p| p.counters().peak_resident_bytes).unwrap_or(0);
         table.row(vec![
             if paged_mode { format!("paged {budget_pct}%") } else { "resident".into() },
@@ -156,5 +200,14 @@ fn main() -> splitquant::Result<()> {
     println!("{}", table.render());
     println!("label agreement resident vs paged: {agree}/{requests} (must be total)");
     assert_eq!(agree, requests, "paged serving diverged from resident");
+    if let Some(path) = trace_path {
+        let snap = splitquant::trace::snapshot();
+        splitquant::trace::chrome::write_chrome_trace(std::path::Path::new(&path), &snap)?;
+        println!(
+            "[serve_paged] wrote {} trace events ({} dropped) to {path}",
+            snap.total_events(),
+            snap.dropped
+        );
+    }
     Ok(())
 }

@@ -6,7 +6,7 @@
 //! * [`lexer`] — hand-rolled Rust lexer (no external crates): token stream
 //!   with comments, strings, raw strings, nested block comments and
 //!   `#[cfg(test)]`-region tracking handled faithfully.
-//! * [`rules`] — the rule engine: six repo-specific rules with per-module
+//! * [`rules`] — the rule engine: seven repo-specific rules with per-module
 //!   scoping and a `// sq-lint: allow(<rule>) — <reason>` escape hatch
 //!   (see [`rules::RULES`] for the shipped set).
 //!
@@ -180,6 +180,32 @@ mod tests {
     fn fixture_lock_io_quiet_when_guard_dropped_first() {
         let fs = lint_source("shardstore/x.rs", include_str!("testdata/lock_io_neg.rs"));
         assert!(by_rule(&fs, RULE_LOCK_IO).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_timing_fires_in_loop_bodies_only() {
+        let fs = lint_source("parallel/kernels.rs", include_str!("testdata/no_timing_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_NO_TIMING).len(), 2, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_timing_whole_file_in_tensor_kernels() {
+        let fs = lint_source("tensor/ops.rs", include_str!("testdata/no_timing_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_NO_TIMING).len(), 3, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_timing_quiet_on_annotated_chunk_spans() {
+        let fs = lint_source("parallel/kernels.rs", include_str!("testdata/no_timing_neg.rs"));
+        let hits = by_rule(&fs, RULE_NO_TIMING);
+        assert_eq!(hits.len(), 1, "{fs:?}");
+        assert!(hits.iter().all(|f| f.allowed), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_no_timing_scoped_to_kernel_files() {
+        let fs = lint_source("model/x.rs", include_str!("testdata/no_timing_pos.rs"));
+        assert!(by_rule(&fs, RULE_NO_TIMING).is_empty(), "{fs:?}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | `no-panic-in-serving` | no `unwrap()`/`expect(`/`panic!` (and, under `coordinator/` + `shardstore/`, no `[idx]` indexing) in non-test serving code |
 //! | `safety-comment` | every `unsafe` token carries a `// SAFETY:` comment immediately above (or trailing on the same line) |
 //! | `lock-across-io` | no lock guard held across file IO or pooled dispatch (deadlock/stall heuristic for the shard-fault path) |
+//! | `no-timing-in-kernels` | overhead budget: no `Instant` / `trace::` emission in the micro-kernel files (`tensor/`: whole file; `parallel/kernels.rs`: loop bodies — its dispatch prologue may arm chunk spans) |
 //!
 //! Scoping notes (deliberate, documented here and in ROADMAP):
 //! * `no-panic-in-serving`'s indexing facet covers `coordinator/` and
@@ -22,6 +23,14 @@
 //!   The `unwrap`/`expect`/`panic!` facet still covers `parallel/`.
 //! * `lock-across-io` treats `util::sync::lock_recover` exactly like
 //!   `.lock()` — poison recovery does not change what the guard holds.
+//! * `no-timing-in-kernels` keys on chunk granularity: span guards armed in
+//!   a dispatcher's *prologue* cost one relaxed load per chunk and are
+//!   allowed (with an annotation in `parallel/kernels.rs`, whose task
+//!   closures sit lexically inside the partition loop); a clock read or
+//!   trace emission in an inner loop would run per element and is not.
+//! * `deterministic-iteration` also covers `trace/` (the exporters): the
+//!   Chrome/Prometheus text must be byte-deterministic for a given
+//!   snapshot, so map iteration there must be ordered.
 //!
 //! An allow comment must be a `//` line comment, name a real rule, and
 //! carry a reason after the closing paren; a malformed one is itself a
@@ -36,6 +45,7 @@ pub const RULE_DET_ITER: &str = "deterministic-iteration";
 pub const RULE_NO_PANIC: &str = "no-panic-in-serving";
 pub const RULE_SAFETY: &str = "safety-comment";
 pub const RULE_LOCK_IO: &str = "lock-across-io";
+pub const RULE_NO_TIMING: &str = "no-timing-in-kernels";
 pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
 
 /// `(name, one-line description)` for every shipped rule, in report order.
@@ -46,11 +56,21 @@ pub const RULES: &[(&str, &str)] = &[
     (RULE_NO_PANIC, "unwrap/expect/panic!/[idx] in non-test serving code"),
     (RULE_SAFETY, "unsafe without an immediately-preceding // SAFETY: comment"),
     (RULE_LOCK_IO, "lock guard held across file IO or pooled dispatch"),
+    (RULE_NO_TIMING, "Instant/trace emission inside micro-kernel code (overhead budget)"),
     (RULE_ALLOW_SYNTAX, "malformed or unknown sq-lint allow comment"),
 ];
 
 /// Files under the bit-identity contract (relative to the lint root).
 const FMA_FILES: &[&str] = &["tensor/simd.rs", "tensor/ops.rs", "parallel/kernels.rs"];
+
+/// Micro-kernel files where any `Instant` / `trace::` token is a
+/// `no-timing-in-kernels` finding — these hold only inner loops.
+const TIMING_WHOLE_FILE: &[&str] = &["tensor/simd.rs", "tensor/ops.rs"];
+
+/// Dispatcher files where the rule fires only inside loop bodies: the
+/// prologue may arm chunk-granularity spans, the partition/FMA loops may
+/// not touch the clock.
+const TIMING_LOOPS_ONLY: &[&str] = &["parallel/kernels.rs"];
 
 /// Pool-dispatching kernel entry points (exact identifier match — note
 /// `matmul_rows` and friends are micro-kernels, not dispatchers, and must
@@ -283,7 +303,7 @@ fn rule_nested_dispatch(ctx: &Ctx, out: &mut Vec<Finding>) {
 }
 
 fn rule_det_iter(ctx: &Ctx, out: &mut Vec<Finding>) {
-    if !ctx.in_dir(&["autotune/", "quant/", "report/"]) {
+    if !ctx.in_dir(&["autotune/", "quant/", "report/", "trace/"]) {
         return;
     }
     let toks = ctx.toks();
@@ -558,6 +578,84 @@ fn rule_lock_io(ctx: &Ctx, out: &mut Vec<Finding>) {
     }
 }
 
+/// True when the `for` at `idx` heads a for-loop (a depth-0 `in` appears
+/// before the body `{`), as opposed to `impl Trait for Type` or an HRTB
+/// `for<'a>` binder.
+fn for_loop_header(toks: &[Token], idx: usize) -> bool {
+    let mut depth = 0isize;
+    let mut j = idx + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is_punct("(") || t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+        } else if t.is_ident("in") && depth == 0 {
+            return true;
+        } else if t.is_punct("{") || t.is_punct(";") {
+            return false;
+        }
+        j += 1;
+    }
+    false
+}
+
+fn rule_no_timing(ctx: &Ctx, out: &mut Vec<Finding>) {
+    let whole = TIMING_WHOLE_FILE.contains(&ctx.rel);
+    let loops_only = TIMING_LOOPS_ONLY.contains(&ctx.rel);
+    if !whole && !loops_only {
+        return;
+    }
+    let toks = ctx.toks();
+    // brace stack: which open blocks are loop bodies. `pending` holds the
+    // bracket depth a loop keyword was seen at, so the body `{` is matched
+    // at that same depth (header parens/brackets sit deeper).
+    let mut stack: Vec<bool> = Vec::new();
+    let mut pending: Option<isize> = None;
+    let mut depth = 0isize;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.is_punct("(") || t.is_punct("[") {
+            depth += 1;
+        } else if t.is_punct(")") || t.is_punct("]") {
+            depth -= 1;
+        } else if t.is_punct("{") {
+            stack.push(pending == Some(depth));
+            if pending == Some(depth) {
+                pending = None;
+            }
+        } else if t.is_punct("}") {
+            stack.pop();
+        } else if t.is_punct(";") && pending == Some(depth) {
+            pending = None;
+        } else if t.is_ident("while")
+            || t.is_ident("loop")
+            || (t.is_ident("for") && for_loop_header(toks, i))
+        {
+            pending = Some(depth);
+        }
+        let timing = t.is_ident("Instant")
+            || (t.is_ident("trace")
+                && next_is_punct(toks, i, ":")
+                && toks.get(i + 2).is_some_and(|o| o.is_punct(":")));
+        if !timing || ctx.in_test(i) {
+            continue;
+        }
+        if whole || stack.iter().any(|&l| l) {
+            out.push(ctx.finding(
+                RULE_NO_TIMING,
+                t.line,
+                format!(
+                    "`{}` in micro-kernel code — clock reads and trace emission are \
+                     banned below chunk granularity (overhead budget); hoist the span \
+                     to the dispatch prologue",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
 // ------------------------------------------------------- allow comments --
 
 fn known_rule(name: &str) -> bool {
@@ -652,6 +750,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     rule_no_panic(&ctx, &mut out);
     rule_safety(&ctx, &mut out);
     rule_lock_io(&ctx, &mut out);
+    rule_no_timing(&ctx, &mut out);
     let allows = parse_allows(&ctx, &mut out);
     for f in &mut out {
         if f.rule != RULE_ALLOW_SYNTAX
@@ -674,7 +773,7 @@ mod tests {
 
     #[test]
     fn rules_table_is_consistent() {
-        assert_eq!(RULES.len(), 7);
+        assert_eq!(RULES.len(), 8);
         assert!(known_rule(RULE_NO_FMA));
         assert!(!known_rule("allow-syntax")); // can't allow the meta rule
         assert!(!known_rule("no-such-rule"));

@@ -1,0 +1,23 @@
+//! Negative fixture for `no-timing-in-kernels` under the loops-only scope
+//! (`parallel/kernels.rs`): a prologue span outside any loop is fine, an
+//! annotated chunk span inside the partition loop is allowed, and an
+//! `impl Trait for Type` header must not be mistaken for a for-loop.
+
+pub struct Dispatcher;
+
+pub trait Run {
+    fn run(&self, rows: usize) -> u64;
+}
+
+impl Run for Dispatcher {
+    fn run(&self, rows: usize) -> u64 {
+        let _sp = crate::trace::kernel_span("dispatch", 0, rows as u64);
+        let mut acc = 0u64;
+        for r in 0..rows {
+            // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span, one per task closure
+            let _c = crate::trace::kernel_span("chunk", r as u64, 1);
+            acc += r as u64;
+        }
+        acc
+    }
+}

@@ -1,0 +1,20 @@
+//! Positive fixture for `no-timing-in-kernels`: one clock read in the
+//! dispatch prologue and two trace emissions inside loop bodies. Linted as
+//! `parallel/kernels.rs` (loops-only scope) exactly the two in-loop sites
+//! fire; as `tensor/ops.rs` (whole-file scope) all three fire; under any
+//! other path the rule stays quiet.
+
+pub fn hot_path(rows: usize) -> u64 {
+    let t0 = std::time::Instant::now(); // whole-file facet only
+    let mut acc = 0u64;
+    for r in 0..rows {
+        let _sp = crate::trace::kernel_span("chunk", r as u64, 1);
+        acc += r as u64;
+    }
+    let mut i = 0u64;
+    while i < rows as u64 {
+        crate::trace::count("inner-probe", 1);
+        i += 1;
+    }
+    acc + i + t0.elapsed().as_nanos() as u64
+}

@@ -41,6 +41,7 @@ struct Step {
 /// the table is empty, malformed (bytes/bits not strictly increasing), or
 /// the budget cannot even fit the all-floor assignment.
 pub fn allocate(table: &SensitivityTable, budget_bytes: usize) -> Result<BitPlan> {
+    let _sp = crate::trace::span(crate::trace::Category::Autotune, "allocate");
     if table.layers.is_empty() {
         return Err(Error::Quant("allocate: empty sensitivity table".into()));
     }

@@ -112,6 +112,7 @@ impl QuantPass for AutoTunePass {
     }
 
     fn apply(&self, model: &mut ModelArtifact) -> Result<()> {
+        let _sp = crate::trace::span(crate::trace::Category::Autotune, "apply");
         let groups = layer_groups(&model.eval);
         for name in self.plan.layers.keys() {
             if !groups.iter().any(|(l, _)| l == name) {

@@ -101,6 +101,7 @@ impl BitPlan {
     /// the budget (the deployment-time guard that a mis-paired plan/model
     /// cannot silently blow the size contract).
     pub fn validate_sharded(&self, path: &Path) -> Result<usize> {
+        let _sp = crate::trace::span(crate::trace::Category::Autotune, "validate");
         let reader = ShardReader::open(path)?;
         let mut realized = 0usize;
         for name in reader.names() {

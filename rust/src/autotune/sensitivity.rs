@@ -142,6 +142,7 @@ pub fn sweep(
     batches: &[TextBatch],
     sweep_cfg: &SweepConfig,
 ) -> Result<SensitivityTable> {
+    let _sp = crate::trace::span(crate::trace::Category::Autotune, "sweep");
     if batches.is_empty() {
         return Err(Error::Quant("sensitivity sweep needs at least one calibration batch".into()));
     }

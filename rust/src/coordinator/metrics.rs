@@ -3,14 +3,31 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use crate::util::stats::LatencyStats;
+use crate::report::bench_json::BenchRecord;
+use crate::util::json::{obj, Json};
+use crate::util::stats::LogHistogram;
 
 /// Aggregated serving metrics (guarded by a mutex in the server).
+///
+/// All latency distributions are bounded-memory [`LogHistogram`]s: the
+/// server can run forever without the metrics growing (the unbounded
+/// `Vec<u64>`-backed `LatencyStats` remains available for benches and
+/// observers that want exact percentiles over a finite run).
 #[derive(Debug, Clone)]
 pub struct Metrics {
     pub started: Instant,
     pub completed: usize,
-    pub latency: LatencyStats,
+    /// end-to-end request latency (submit → response)
+    pub latency: LogHistogram,
+    /// time from submit until the batcher formed the request's batch
+    pub queue_us: LogHistogram,
+    /// time from batch formation until the executor started (pad + handoff)
+    pub batch_us: LogHistogram,
+    /// executor classify time attributed to the request's batch
+    pub exec_us: LogHistogram,
+    /// per-request share of shard demand-fault disk time in its batch
+    /// (zero on fully-resident executors)
+    pub fault_us: LogHistogram,
     /// dispatched batches per compiled batch size
     pub batches_by_size: BTreeMap<usize, usize>,
     /// total request slots padded (wasted compute)
@@ -46,7 +63,11 @@ impl Default for Metrics {
         Metrics {
             started: Instant::now(),
             completed: 0,
-            latency: LatencyStats::default(),
+            latency: LogHistogram::default(),
+            queue_us: LogHistogram::default(),
+            batch_us: LogHistogram::default(),
+            exec_us: LogHistogram::default(),
+            fault_us: LogHistogram::default(),
             batches_by_size: BTreeMap::new(),
             padded_slots: 0,
             real_slots: 0,
@@ -73,6 +94,116 @@ impl Metrics {
     pub fn record_done(&mut self, latency: Duration) {
         self.completed += 1;
         self.latency.record(latency);
+    }
+
+    /// Record one completed request with its lifecycle breakdown:
+    /// `total` = submit → response, `queue` = submit → batch formed,
+    /// `batch` = batch formed → executor start, `exec` = executor time for
+    /// the request's batch, `fault` = the request's share of shard
+    /// demand-fault disk time in that batch.
+    pub fn record_request(
+        &mut self,
+        total: Duration,
+        queue: Duration,
+        batch: Duration,
+        exec: Duration,
+        fault: Duration,
+    ) {
+        self.record_done(total);
+        self.queue_us.record(queue);
+        self.batch_us.record(batch);
+        self.exec_us.record(exec);
+        self.fault_us.record(fault);
+    }
+
+    /// The five lifecycle stages as `(name, histogram)` pairs, in fixed
+    /// order (shared by [`Metrics::to_json`] and
+    /// [`Metrics::breakdown_records`]).
+    fn stages(&self) -> [(&'static str, &LogHistogram); 5] {
+        [
+            ("total", &self.latency),
+            ("queue", &self.queue_us),
+            ("batch", &self.batch_us),
+            ("exec", &self.exec_us),
+            ("fault", &self.fault_us),
+        ]
+    }
+
+    /// Deterministic sorted-key JSON view of the counters and stage
+    /// histograms. Wall-clock-dependent figures (`throughput`) are
+    /// excluded so repeated calls over unchanged metrics are identical.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("batcher_polls", Json::from(self.batcher_polls)),
+            ("bytes_paged_in", Json::from(self.bytes_paged_in)),
+            ("completed", Json::from(self.completed)),
+            ("exec_time_us", Json::from(self.exec_time.as_micros() as f64)),
+            ("padded_slots", Json::from(self.padded_slots)),
+            ("plane_decodes", Json::from(self.plane_decodes)),
+            ("plane_reuses", Json::from(self.plane_reuses)),
+            ("real_slots", Json::from(self.real_slots)),
+            ("shard_evictions", Json::from(self.shard_evictions)),
+            ("shard_faults", Json::from(self.shard_faults)),
+            ("shed", Json::from(self.shed)),
+        ];
+        let batches: Vec<(String, Json)> = self
+            .batches_by_size
+            .iter()
+            .map(|(size, n)| (size.to_string(), Json::from(*n)))
+            .collect();
+        pairs.push((
+            "batches_by_size",
+            obj(batches.iter().map(|(k, v)| (k.as_str(), v.clone())).collect()),
+        ));
+        let stages = self.stages();
+        let stage_objs: Vec<(&str, Json)> = stages
+            .iter()
+            .map(|(name, h)| {
+                (
+                    *name,
+                    obj(vec![
+                        ("count", Json::from(h.len())),
+                        ("mean_us", Json::from(h.mean_us())),
+                        ("p50_us", Json::from(h.quantile_us(0.50) as f64)),
+                        ("p95_us", Json::from(h.quantile_us(0.95) as f64)),
+                        ("p99_us", Json::from(h.quantile_us(0.99) as f64)),
+                        ("p999_us", Json::from(h.quantile_us(0.999) as f64)),
+                        ("max_us", Json::from(h.quantile_us(1.0) as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        pairs.push(("stages", obj(stage_objs)));
+        obj(pairs)
+    }
+
+    /// Per-request latency-breakdown rows for `BENCH_serving.json`
+    /// (`bench` = `breakdown-<stage>`, keyed by `(bench, shape, engine)` so
+    /// [`crate::report::bench_json::merge_write`] replaces rows in place —
+    /// re-running a serving bench never duplicates them). Stages with no
+    /// samples are skipped.
+    pub fn breakdown_records(&self, shape: &str, engine: &str) -> Vec<BenchRecord> {
+        let mut rows = Vec::new();
+        for (name, h) in self.stages() {
+            if h.is_empty() {
+                continue;
+            }
+            rows.push(BenchRecord {
+                bench: format!("breakdown-{name}"),
+                shape: shape.to_string(),
+                engine: engine.to_string(),
+                ns_per_iter: h.mean_us() * 1e3,
+                gb_per_s: 0.0,
+                extra: vec![
+                    ("count".to_string(), h.len() as f64),
+                    ("p50_us".to_string(), h.quantile_us(0.50) as f64),
+                    ("p95_us".to_string(), h.quantile_us(0.95) as f64),
+                    ("p99_us".to_string(), h.quantile_us(0.99) as f64),
+                    ("p999_us".to_string(), h.quantile_us(0.999) as f64),
+                ],
+            });
+        }
+        rows
     }
 
     /// Requests per second since start.
@@ -139,5 +270,68 @@ mod tests {
         assert!((m.padding_fraction() - 3.0 / 40.0).abs() < 1e-9);
         assert_eq!(m.batches_by_size[&8], 1);
         assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn record_request_fills_stage_histograms() {
+        let mut m = Metrics::default();
+        m.record_request(
+            Duration::from_millis(10),
+            Duration::from_millis(4),
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            Duration::from_millis(2),
+        );
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.latency.len(), 1);
+        assert_eq!(m.queue_us.len(), 1);
+        assert_eq!(m.fault_us.quantile_us(1.0), 2_000);
+    }
+
+    #[test]
+    fn to_json_is_deterministic_and_sorted() {
+        let mut m = Metrics::default();
+        m.record_batch(5, 8, Duration::from_millis(3));
+        for _ in 0..5 {
+            m.record_request(
+                Duration::from_millis(7),
+                Duration::from_millis(2),
+                Duration::from_millis(1),
+                Duration::from_millis(3),
+                Duration::ZERO,
+            );
+        }
+        let a = m.to_json().to_string();
+        let b = m.to_json().to_string();
+        assert_eq!(a, b, "repeated serialization is byte-identical");
+        // BTreeMap-backed objects serialize with sorted keys
+        let batcher = a.find("\"batcher_polls\"").expect("key present");
+        let shed = a.find("\"shed\"").expect("key present");
+        assert!(batcher < shed, "{a}");
+        let parsed = crate::util::json::Json::parse(&a).expect("valid JSON");
+        assert_eq!(parsed.get("completed").and_then(Json::as_usize).unwrap_or(0), 5);
+        assert!(parsed.get("stages").is_ok(), "{a}");
+    }
+
+    #[test]
+    fn breakdown_records_key_by_stage() {
+        let mut m = Metrics::default();
+        m.record_request(
+            Duration::from_millis(10),
+            Duration::from_millis(4),
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            Duration::ZERO,
+        );
+        let rows = m.breakdown_records("paged35", "simd");
+        let benches: Vec<&str> = rows.iter().map(|r| r.bench.as_str()).collect();
+        assert!(benches.contains(&"breakdown-total"), "{benches:?}");
+        assert!(benches.contains(&"breakdown-queue"), "{benches:?}");
+        assert!(benches.contains(&"breakdown-fault"), "fault stage recorded (zero) {benches:?}");
+        for r in &rows {
+            assert_eq!(r.shape, "paged35");
+            assert_eq!(r.engine, "simd");
+            assert!(r.extra.iter().any(|(k, _)| k == "p99_us"));
+        }
     }
 }

@@ -335,6 +335,9 @@ struct Pending {
 struct WorkBatch {
     requests: Vec<Pending>,
     size: usize,
+    /// When the batcher formed this batch — splits request latency into
+    /// queue time (submit → formed) and batch time (formed → executor).
+    formed: Instant,
 }
 
 struct IngressState {
@@ -482,7 +485,8 @@ impl Server {
                                     let requests: Vec<Pending> =
                                         st.queue.drain(..take).collect();
                                     ingress.not_full.notify_all();
-                                    let dispatch = WorkBatch { requests, size };
+                                    let dispatch =
+                                        WorkBatch { requests, size, formed: Instant::now() };
                                     break dispatch;
                                 }
                                 // nothing dispatchable: sleep until enqueue
@@ -505,6 +509,13 @@ impl Server {
                                 }
                             }
                         };
+                        // emitted after the ingress lock is released
+                        crate::trace::instant(
+                            crate::trace::Category::Batch,
+                            "batch-form",
+                            batch.requests.len() as u64,
+                            batch.size as u64,
+                        );
                         if work_tx.send(batch).is_err() {
                             break;
                         }
@@ -528,9 +539,15 @@ impl Server {
                             let guard = lock_recover(&work_rx);
                             guard.recv()
                         };
-                        let Ok(WorkBatch { requests, size }) = batch else { break };
+                        let Ok(WorkBatch { requests, size, formed }) = batch else { break };
                         let real = requests.len();
                         // pad to the compiled shape with zero-mask rows
+                        let pad_sp = crate::trace::span_args(
+                            crate::trace::Category::Batch,
+                            "pad",
+                            real as u64,
+                            size as u64,
+                        );
                         let mut ids = vec![0i32; size * max_len];
                         let mut mask = vec![0.0f32; size * max_len];
                         for (i, p) in requests.iter().enumerate() {
@@ -550,6 +567,17 @@ impl Server {
                                 continue;
                             }
                         };
+                        drop(pad_sp);
+                        // shard demand-fault time attributed to this batch
+                        // (delta of the executor's residency counter; an
+                        // approximation under concurrent workers)
+                        let fault0 = executor.residency().map(|c| c.fault_ns).unwrap_or(0);
+                        let exec_sp = crate::trace::span_args(
+                            crate::trace::Category::Batch,
+                            "execute",
+                            real as u64,
+                            size as u64,
+                        );
                         let t0 = Instant::now();
                         let labels = match executor.classify(&ids, &mask, size) {
                             Ok(l) => l,
@@ -559,13 +587,33 @@ impl Server {
                             }
                         };
                         let exec = t0.elapsed();
+                        drop(exec_sp);
+                        let fault_ns = executor
+                            .residency()
+                            .map(|c| c.fault_ns)
+                            .unwrap_or(0)
+                            .saturating_sub(fault0);
+                        let fault_each =
+                            Duration::from_nanos(fault_ns / real.max(1) as u64);
                         {
                             let mut m = lock_recover(&metrics);
                             m.record_batch(real, size, exec);
                             for p in &requests {
-                                m.record_done(p.submitted.elapsed());
+                                let total = p.submitted.elapsed();
+                                let queue = formed.saturating_duration_since(p.submitted);
+                                let wait = t0.saturating_duration_since(formed);
+                                m.record_request(total, queue, wait, exec, fault_each);
                             }
                         }
+                        if crate::trace::enabled() {
+                            lifecycle_events(&requests, formed, t0, exec);
+                        }
+                        let resp_sp = crate::trace::span_args(
+                            crate::trace::Category::Batch,
+                            "respond",
+                            real as u64,
+                            size as u64,
+                        );
                         for (i, p) in requests.into_iter().enumerate() {
                             let Some(&label) = labels.get(i) else {
                                 log::error!(
@@ -581,6 +629,7 @@ impl Server {
                                 latency: p.submitted.elapsed(),
                             });
                         }
+                        drop(resp_sp);
                     })
                     // sq-lint: allow(no-panic-in-serving) — server construction, not the request path: no workers means no server
                     .expect("spawn worker"),
@@ -606,9 +655,13 @@ impl Server {
         let (rtx, rrx) = mpsc::channel();
         let req = Pending { ids, mask, submitted: Instant::now(), resp: rtx };
         match self.ingress.try_push(req) {
-            Ok(()) => Ok(rrx),
+            Ok(()) => {
+                crate::trace::instant(crate::trace::Category::Request, "ingress", 0, 0);
+                Ok(rrx)
+            }
             Err(PushError::Full) => {
                 lock_recover(&self.metrics).shed += 1;
+                crate::trace::instant(crate::trace::Category::Request, "shed", 0, 0);
                 Err(Error::Coordinator("overloaded: ingress queue full".into()))
             }
             Err(PushError::Closed) => {
@@ -626,6 +679,7 @@ impl Server {
         self.ingress
             .push(req)
             .map_err(|_| Error::Coordinator("server is shut down".into()))?;
+        crate::trace::instant(crate::trace::Category::Request, "ingress", 0, 0);
         Ok(rrx)
     }
 
@@ -641,6 +695,14 @@ impl Server {
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
         fold_residency(&mut m, &*self.executor);
         m
+    }
+
+    /// Prometheus-style text exposition of the current metrics snapshot
+    /// plus the global trace counters ([`crate::trace::prom`]). Safe to
+    /// call while serving; also printed by the `splitquant trace`
+    /// subcommand.
+    pub fn telemetry_text(&self) -> String {
+        crate::trace::prom::exposition(&self.metrics())
     }
 
     /// Drain and stop all threads.
@@ -665,6 +727,32 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.ingress.close();
+    }
+}
+
+/// Emit the per-request lifecycle slices for one completed batch as trace
+/// `Complete` events (`req-queue` / `req-batch` / `req-exec` / `req-total`),
+/// one set per request, with the request's batch-lane index as the lane so
+/// the Chrome exporter can park each lane on its own track. Only called
+/// when tracing is enabled.
+fn lifecycle_events(requests: &[Pending], formed: Instant, exec_start: Instant, exec: Duration) {
+    use crate::trace::{complete, epoch_ns, now_ns, Category};
+    let formed_ns = epoch_ns(formed);
+    let start_ns = epoch_ns(exec_start);
+    let exec_ns = exec.as_nanos() as u64;
+    for (lane, p) in requests.iter().enumerate() {
+        let lane = lane as u64;
+        let sub = epoch_ns(p.submitted);
+        complete(Category::Request, "req-queue", sub, formed_ns.saturating_sub(sub), lane);
+        complete(
+            Category::Request,
+            "req-batch",
+            formed_ns,
+            start_ns.saturating_sub(formed_ns),
+            lane,
+        );
+        complete(Category::Request, "req-exec", start_ns, exec_ns, lane);
+        complete(Category::Request, "req-total", sub, now_ns().saturating_sub(sub), lane);
     }
 }
 
@@ -774,6 +862,39 @@ mod tests {
             .map(|(_, &c)| c)
             .sum();
         assert!(batched > 0, "expected batched dispatches: {:?}", m.batches_by_size);
+    }
+
+    #[test]
+    fn lifecycle_breakdown_recorded_without_tracing() {
+        // the queue/batch/exec/fault stage histograms and the telemetry
+        // text must populate from plain serving — no tracing required
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                queue_cap: 64,
+                ..ServeConfig::default()
+            },
+        );
+        let rxs: Vec<_> =
+            (0..10).map(|i| server.submit(&format!("breakdown {i}")).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let text = server.telemetry_text();
+        assert!(text.contains("splitquant_requests_completed_total 10"), "{text}");
+        assert!(text.contains("splitquant_request_stage_us{stage=\"queue\""), "{text}");
+        let m = server.shutdown();
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.queue_us.len(), 10);
+        assert_eq!(m.batch_us.len(), 10);
+        assert_eq!(m.exec_us.len(), 10);
+        assert_eq!(m.fault_us.len(), 10);
+        let rows = m.breakdown_records("test", "rust");
+        assert!(rows.iter().any(|r| r.bench == "breakdown-exec"), "{rows:?}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod runtime;
 pub mod shardstore;
 pub mod splitquant;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;
 

@@ -8,6 +8,7 @@
 //!   serve           load-test the serving coordinator
 //!   verify-runtime  cross-check pure-Rust executor vs PJRT executables
 //!   lint            sq-lint the source tree (invariant linter)
+//!   trace           traced self-contained paged serving run (telemetry demo)
 //!   info            print manifest / artifact inventory
 //!
 //! (Hand-rolled arg parsing: the offline registry has no clap.)
@@ -98,6 +99,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&flags),
         "verify-runtime" => cmd_verify(&flags),
         "lint" => cmd_lint(&flags),
+        "trace" => cmd_trace(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -129,6 +131,8 @@ fn print_usage() {
            verify-runtime  [--ckpt F]\n\
            lint            [--root rust/src]   machine-check the bit-exactness /\n\
                            determinism / concurrency contracts (sq-lint)\n\
+           trace           [--requests N] [--out trace.json]   traced paged serving\n\
+                           run: Prometheus text to stdout, Chrome JSON to --out\n\
            info\n\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
@@ -600,6 +604,83 @@ fn cmd_lint(flags: &Flags) -> Result<()> {
         return Err(splitquant::Error::Lint(unallowed));
     }
     println!("[lint] OK — all contracts hold");
+    Ok(())
+}
+
+/// `splitquant trace`: a self-contained traced serving run — quantize a
+/// small random BERT-Tiny, serve it shard-paged under a residency budget
+/// with the trace recorder enabled, print the Prometheus-style telemetry
+/// exposition, and write a Chrome trace-event JSON file (load it at
+/// `ui.perfetto.dev`). Needs no artifacts, checkpoints or network.
+fn cmd_trace(flags: &Flags) -> Result<()> {
+    use splitquant::coordinator::QuantExecutor;
+    use splitquant::model::config::BertConfig;
+    use splitquant::quant::PackedModel;
+    use splitquant::shardstore::{PagedConfig, PagedModel};
+    use splitquant::splitquant::{default_quantizable, quantize_store};
+
+    let requests = flags.usize("requests", 64);
+    let out = PathBuf::from(flags.get("out", "trace.json"));
+    splitquant::trace::set_enabled(true);
+
+    let cfg = BertConfig {
+        vocab_size: 2048,
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ffn: 64,
+        max_len: 32,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(7);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let (_, qm) = quantize_store(&store, &quantizable, &SplitQuantConfig::new(2))?;
+    let pm = PackedModel::assemble(&store, &qm);
+    let shards = std::env::temp_dir().join("sq_trace_cmd.sqsh");
+    pm.save_sharded(&shards)?;
+    let pagable = PagedModel::open(&shards, PagedConfig::default())?.pagable_bytes();
+
+    let serve_cfg = ServeConfig {
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        queue_cap: 1024,
+        parallel: splitquant::parallel::ParallelConfig::default(),
+        // a budget below the pagable payload so the run exercises the
+        // fault / prefetch / eviction events, not just the hit path
+        residency_budget_bytes: Some((pagable * 35 / 100).max(1)),
+    };
+    let exec = Arc::new(QuantExecutor::paged(cfg.clone(), &shards, vec![1, 8], &serve_cfg)?);
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let (_, pool) = emotion::load_small(1, 10, 256);
+    let server = Server::start(exec, tok, serve_cfg);
+    let mut done = 0usize;
+    let mut i = 0usize;
+    while done < requests {
+        let window = 8.min(requests - done);
+        let rxs: Vec<_> = (0..window)
+            .map(|k| server.submit(&pool.texts[(i + k) % pool.len()]))
+            .collect::<Result<Vec<_>>>()?;
+        i += window;
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(60))
+                .map_err(|_| splitquant::Error::Coordinator("trace run timeout".into()))?;
+            done += 1;
+        }
+    }
+    println!("{}", server.telemetry_text());
+    let m = server.shutdown();
+    println!("[trace] {}", m.summary());
+    let snap = splitquant::trace::snapshot();
+    splitquant::trace::chrome::write_chrome_trace(&out, &snap)?;
+    println!(
+        "[trace] wrote {} trace events ({} dropped) to {}",
+        snap.total_events(),
+        snap.dropped,
+        out.display()
+    );
+    std::fs::remove_file(&shards).ok();
     Ok(())
 }
 

@@ -151,6 +151,12 @@ impl PlaneCache {
             if let Some(e) = map.get(name) {
                 if e.shard.upgrade().is_some_and(|s| Arc::ptr_eq(&s, shard)) {
                     self.reuses.fetch_add(1, Ordering::Relaxed);
+                    crate::trace::instant(
+                        crate::trace::Category::Shard,
+                        "plane-reuse",
+                        e.planes.codes.len() as u64,
+                        0,
+                    );
                     return Ok(Arc::clone(&e.planes));
                 }
             }
@@ -158,6 +164,12 @@ impl PlaneCache {
         let (codes, cid) = q.fused_planes()?;
         let planes = Arc::new(Planes { codes, cid });
         self.decodes.fetch_add(1, Ordering::Relaxed);
+        crate::trace::instant(
+            crate::trace::Category::Shard,
+            "plane-decode",
+            planes.codes.len() as u64,
+            planes.cid.len() as u64,
+        );
         let mut map = self.map.lock().unwrap();
         if let Some(e) = map.get(name) {
             // another worker decoded the same shard while we did — keep one

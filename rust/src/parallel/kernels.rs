@@ -81,8 +81,11 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
             let r0 = ci * rows_per;
-            let rows = r0..r0 + chunk.len() / n;
+            let len = chunk.len() / n;
+            let rows = r0..r0 + len;
             tasks.push(Box::new(move || {
+                // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span around the whole task, not inside the micro-kernel inner loops
+                let _sp = crate::trace::kernel_span("matmul-chunk", r0 as u64, len as u64);
                 crate::tensor::simd::matmul_rows_simd(ad, pb, chunk, rows)
             }));
         }
@@ -93,8 +96,13 @@ pub fn matmul_with(a: &Tensor, b: &Tensor, kind: KernelKind) -> Tensor {
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
         let r0 = ci * rows_per;
-        let rows = r0..r0 + chunk.len() / n;
-        tasks.push(Box::new(move || ops::matmul_rows(ad, bd, chunk, rows, k, n)));
+        let len = chunk.len() / n;
+        let rows = r0..r0 + len;
+        tasks.push(Box::new(move || {
+            // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span around the whole task, not inside the micro-kernel inner loops
+            let _sp = crate::trace::kernel_span("matmul-chunk", r0 as u64, len as u64);
+            ops::matmul_rows(ad, bd, chunk, rows, k, n)
+        }));
     }
     pool.scope(tasks);
     out_tensor(&[m, n], out)
@@ -117,7 +125,10 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (ci, chunk) in out.chunks_mut(per * m * n).enumerate() {
         let b0 = ci * per;
+        let nb = chunk.len() / (m * n);
         tasks.push(Box::new(move || {
+            // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span around the whole task, not inside the micro-kernel inner loops
+            let _sp = crate::trace::kernel_span("batch-matmul-chunk", b0 as u64, nb as u64);
             for (bi, o2) in chunk.chunks_mut(m * n).enumerate() {
                 let idx = b0 + bi;
                 let a2 = &ad[idx * m * k..(idx + 1) * m * k];
@@ -255,8 +266,11 @@ pub fn split_matmul_pooled_with(
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
         let r0 = ci * rows_per;
-        let rows = r0..r0 + chunk.len() / n;
+        let len = chunk.len() / n;
+        let rows = r0..r0 + len;
         tasks.push(Box::new(move || {
+            // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span around the whole task, not inside the micro-kernel inner loops
+            let _sp = crate::trace::kernel_span("split-matmul-chunk", r0 as u64, len as u64);
             split_matmul_rows(xd, codes, cid, groups, chunk, rows, k, n, kind);
         }));
     }
@@ -344,8 +358,13 @@ fn int8_fused(
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
             let r0 = ci * rows_per;
-            let rows = r0..r0 + chunk.len() / n;
-            tasks.push(Box::new(move || kernel(xc, plane, inv_x, chunk, rows)));
+            let len = chunk.len() / n;
+            let rows = r0..r0 + len;
+            tasks.push(Box::new(move || {
+                // sq-lint: allow(no-timing-in-kernels) — chunk-granularity span around the whole task, not inside the micro-kernel inner loops
+                let _sp = crate::trace::kernel_span("int8-matmul-chunk", r0 as u64, len as u64);
+                kernel(xc, plane, inv_x, chunk, rows)
+            }));
         }
         pool.scope(tasks);
     } else {

@@ -164,7 +164,13 @@ fn worker_loop(shared: &Shared) {
             }
         };
         IN_POOL.with(|f| f.set(true));
+        // worker-utilization sampling: one relaxed load when tracing is off
+        let t0 = crate::trace::enabled().then(std::time::Instant::now);
         job();
+        if let Some(t0) = t0 {
+            crate::trace::count("pool_tasks", 1);
+            crate::trace::count("pool_busy_ns", t0.elapsed().as_nanos() as u64);
+        }
         IN_POOL.with(|f| f.set(false));
     }
 }

@@ -126,9 +126,39 @@ impl PagedModel {
         if let Some(data) = inner.residency.get(name) {
             return Ok(data);
         }
+        let traced = crate::trace::enabled();
+        let fault_sp = crate::trace::span_args(
+            crate::trace::Category::Shard,
+            if traced { crate::trace::intern(name) } else { "shard-fault" },
+            0,
+            0,
+        );
         let bytes = self.record_bytes(name)?;
+        let t0 = std::time::Instant::now();
         let data = Arc::new(inner.reader.read(name)?);
+        // always on: the serving latency breakdown attributes fault time
+        // whether or not tracing is enabled
+        inner.residency.note_fault_time(t0.elapsed().as_nanos() as u64);
+        let evictions0 = if traced { inner.residency.counters().shard_evictions } else { 0 };
         let data = inner.residency.admit_fault(name, data, bytes);
+        if traced {
+            crate::trace::instant(
+                crate::trace::Category::Shard,
+                "shard-fault",
+                bytes as u64,
+                0,
+            );
+            let evicted = inner.residency.counters().shard_evictions - evictions0;
+            if evicted > 0 {
+                crate::trace::instant(
+                    crate::trace::Category::Shard,
+                    "shard-evict",
+                    evicted as u64,
+                    0,
+                );
+            }
+        }
+        drop(fault_sp);
 
         if let Some(&p) = inner.pos.get(name) {
             for next in inner.order.iter().skip(p + 1).take(inner.prefetch_depth) {
@@ -141,7 +171,14 @@ impl PagedModel {
                 }
                 match inner.reader.read(next) {
                     Ok(d) => {
-                        inner.residency.admit_prefetch(next, Arc::new(d), nb);
+                        if inner.residency.admit_prefetch(next, Arc::new(d), nb) {
+                            crate::trace::instant(
+                                crate::trace::Category::Shard,
+                                "shard-prefetch",
+                                nb as u64,
+                                0,
+                            );
+                        }
                     }
                     Err(e) => {
                         // best-effort: the demand fetch already succeeded;

@@ -52,6 +52,10 @@ pub struct ResidencyCounters {
     pub pinned_bytes: usize,
     /// high-water mark of `resident_bytes`
     pub peak_resident_bytes: usize,
+    /// cumulative wall time (ns) spent in demand-fault disk reads — the
+    /// serving coordinator diffs this around each batch to attribute fault
+    /// time in the per-request latency breakdown
+    pub fault_ns: u64,
 }
 
 struct Slot {
@@ -181,6 +185,14 @@ impl ResidencyManager {
 
     pub fn is_pinned(&self, name: &str) -> bool {
         lock_recover(&self.inner).slots.get(name).map(|s| s.pinned).unwrap_or(false)
+    }
+
+    /// Add `ns` of demand-fault disk-read wall time to
+    /// [`ResidencyCounters::fault_ns`]. Called by the paged reader around
+    /// the actual disk read (always on — the serving latency breakdown
+    /// needs it whether or not tracing is enabled).
+    pub fn note_fault_time(&self, ns: u64) {
+        lock_recover(&self.inner).c.fault_ns += ns;
     }
 
     /// Counter snapshot (cheap clone under the lock).

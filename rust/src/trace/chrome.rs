@@ -1,0 +1,219 @@
+//! Chrome trace-event JSON exporter (loads in `chrome://tracing` and
+//! Perfetto).
+//!
+//! Renders a [`Snapshot`] as the standard `{"traceEvents": [...]}` object
+//! format. Field ordering is deterministic: every event object is a
+//! [`Json::Obj`] (a `BTreeMap`, so keys serialize sorted) and events are
+//! emitted in a fixed traversal order (threads in registration order,
+//! events oldest-first), satisfying the `deterministic-iteration` lint
+//! contract — exporting the same snapshot twice yields byte-identical
+//! output.
+//!
+//! Mapping:
+//!
+//! * `Enter`/`Exit` pairs are stack-matched per thread into `"ph":"X"`
+//!   complete events (an unclosed `Enter` becomes an `X` running to the end
+//!   of the snapshot with `"unfinished": true`; an `Exit` whose `Enter` was
+//!   lost to ring overflow is dropped).
+//! * `Instant` → `"ph":"i"` (thread scope), `Counter` → `"ph":"C"`.
+//! * `Complete` → `"ph":"X"` directly; request-lifecycle slices
+//!   ([`Category::Request`]) are parked on a synthetic per-lane track
+//!   (`tid = 1000 + lane`) so each batch lane renders as its own row.
+
+use std::path::Path;
+
+use super::{Category, Event, EventKind, Snapshot};
+use crate::error::Result;
+use crate::util::json::{obj, Json};
+
+/// Synthetic tid base for per-lane request-lifecycle tracks.
+const LANE_TID_BASE: usize = 1000;
+
+fn us(ns: u64) -> Json {
+    Json::from(ns as f64 / 1000.0)
+}
+
+fn args2(a: u64, b: u64) -> Json {
+    obj(vec![("a", Json::from(a as f64)), ("b", Json::from(b as f64))])
+}
+
+fn base(ev: &Event, ph: &str, tid: usize) -> Vec<(&'static str, Json)> {
+    vec![
+        ("cat", Json::from(ev.cat.as_str())),
+        ("name", Json::from(ev.name)),
+        ("ph", Json::from(ph.to_string())),
+        ("pid", Json::from(1usize)),
+        ("tid", Json::from(tid)),
+        ("ts", us(ev.ts_ns)),
+    ]
+}
+
+/// Render a snapshot as the Chrome trace-event JSON object.
+pub fn chrome_trace(snap: &Snapshot) -> Json {
+    let end_ns = snap
+        .threads
+        .iter()
+        .flat_map(|(_, evs)| evs.iter())
+        .map(|e| e.ts_ns.max(e.ts_ns.saturating_add(e.a)))
+        .max()
+        .unwrap_or(0);
+    let mut events: Vec<Json> = Vec::new();
+    for (tid, (name, evs)) in snap.threads.iter().enumerate() {
+        events.push(obj(vec![
+            ("args", obj(vec![("name", Json::from(name.as_str()))])),
+            ("name", Json::from("thread_name")),
+            ("ph", Json::from("M")),
+            ("pid", Json::from(1usize)),
+            ("tid", Json::from(tid)),
+        ]));
+        let mut open: Vec<&Event> = Vec::new();
+        for ev in evs {
+            match ev.kind {
+                EventKind::Enter => open.push(ev),
+                EventKind::Exit => {
+                    // an Exit with no open Enter lost its opener to ring
+                    // overflow; drop it rather than fabricate a span
+                    if let Some(enter) = open.pop() {
+                        let mut fields = base(enter, "X", tid);
+                        fields.push(("dur", us(ev.ts_ns.saturating_sub(enter.ts_ns))));
+                        fields.push(("args", args2(enter.a, enter.b)));
+                        events.push(obj(fields));
+                    }
+                }
+                EventKind::Instant => {
+                    let mut fields = base(ev, "i", tid);
+                    fields.push(("s", Json::from("t")));
+                    fields.push(("args", args2(ev.a, ev.b)));
+                    events.push(obj(fields));
+                }
+                EventKind::Counter => {
+                    let mut fields = base(ev, "C", tid);
+                    fields.push(("args", obj(vec![("value", Json::from(ev.a as f64))])));
+                    events.push(obj(fields));
+                }
+                EventKind::Complete => {
+                    let lane_tid = if ev.cat == Category::Request {
+                        LANE_TID_BASE + ev.b as usize
+                    } else {
+                        tid
+                    };
+                    let mut fields = base(ev, "X", lane_tid);
+                    fields.push(("dur", us(ev.a)));
+                    fields.push(("args", obj(vec![("lane", Json::from(ev.b as f64))])));
+                    events.push(obj(fields));
+                }
+            }
+        }
+        // spans still open when the snapshot was taken: render them as
+        // running to the end of the trace and mark them unfinished
+        for enter in open {
+            let mut fields = base(enter, "X", tid);
+            fields.push(("dur", us(end_ns.saturating_sub(enter.ts_ns))));
+            fields.push((
+                "args",
+                obj(vec![
+                    ("a", Json::from(enter.a as f64)),
+                    ("b", Json::from(enter.b as f64)),
+                    ("unfinished", Json::from(true)),
+                ]),
+            ));
+            events.push(obj(fields));
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::from("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Render a snapshot as a compact Chrome trace-event JSON string.
+pub fn chrome_trace_string(snap: &Snapshot) -> String {
+    chrome_trace(snap).to_string()
+}
+
+/// Write the Chrome trace JSON for `snap` to `path`.
+pub fn write_chrome_trace(path: &Path, snap: &Snapshot) -> Result<()> {
+    std::fs::write(path, chrome_trace_string(snap))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, cat: Category, name: &'static str, ts: u64, a: u64, b: u64) -> Event {
+        Event { kind, cat, name, ts_ns: ts, a, b }
+    }
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            threads: vec![
+                (
+                    "worker-0".to_string(),
+                    vec![
+                        ev(EventKind::Enter, Category::Batch, "execute", 1_000, 4, 8),
+                        ev(EventKind::Enter, Category::Kernel, "matmul-chunk", 2_000, 0, 16),
+                        ev(EventKind::Exit, Category::Kernel, "matmul-chunk", 5_000, 0, 0),
+                        ev(EventKind::Exit, Category::Batch, "execute", 9_000, 0, 0),
+                        ev(EventKind::Complete, Category::Request, "req-total", 500, 9_000, 2),
+                        ev(EventKind::Instant, Category::Shard, "shard-evict", 9_500, 3, 0),
+                        ev(EventKind::Counter, Category::Kernel, "pool_tasks", 9_600, 7, 0),
+                    ],
+                ),
+                (
+                    "loner".to_string(),
+                    vec![
+                        // orphan Exit (Enter lost to overflow) + unfinished Enter
+                        ev(EventKind::Exit, Category::Batch, "pad", 100, 0, 0),
+                        ev(EventKind::Enter, Category::Autotune, "sweep", 200, 0, 0),
+                    ],
+                ),
+            ],
+            dropped: 1,
+        }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_expected_events() {
+        let s = chrome_trace_string(&sample());
+        let parsed = Json::parse(&s).expect("exporter must emit parseable JSON");
+        let evs = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // 2 metadata + 2 matched X + 1 Complete X + 1 instant + 1 counter
+        // + 1 unfinished X; the orphan Exit is dropped
+        assert_eq!(evs.len(), 8, "{s}");
+        for e in &evs {
+            assert!(e.has("ph") && e.has("pid") && e.has("tid"), "{s}");
+        }
+        // nested span: inner chunk X has ts 2.0us dur 3.0us
+        assert!(s.contains("\"name\":\"matmul-chunk\""), "{s}");
+        assert!(s.contains("\"dur\":3"), "{s}");
+        // request Complete lands on the synthetic lane track
+        assert!(s.contains(&format!("\"tid\":{}", LANE_TID_BASE + 2)), "{s}");
+        // unfinished span is flagged
+        assert!(s.contains("\"unfinished\":true"), "{s}");
+    }
+
+    #[test]
+    fn export_is_byte_deterministic() {
+        let snap = sample();
+        assert_eq!(chrome_trace_string(&snap), chrome_trace_string(&snap));
+    }
+
+    #[test]
+    fn field_order_is_sorted_within_each_event() {
+        let s = chrome_trace_string(&sample());
+        // Obj is a BTreeMap: "args" < "cat" < ... < "ts" in every event
+        let first_event = s.find("\"cat\"").expect("has events");
+        let args = s.find("\"args\"").expect("has args");
+        assert!(args < first_event, "keys serialize sorted: {s}");
+    }
+
+    #[test]
+    fn empty_snapshot_exports_empty_array() {
+        let s = chrome_trace_string(&Snapshot::default());
+        assert_eq!(s, "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[]}");
+    }
+}

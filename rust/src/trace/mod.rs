@@ -1,0 +1,357 @@
+//! §Observability: process-wide tracing and telemetry core.
+//!
+//! Design (see ROADMAP "Observability"):
+//!
+//! * **Per-thread recorders.** Every thread that emits an event lazily
+//!   registers one bounded, lock-free [`ring::Ring`] (drop-oldest on
+//!   overflow, dropped events counted). Writers never block and never
+//!   allocate per event; a global registry only serializes registration
+//!   and draining.
+//! * **Disabled cost.** Every emission entry point loads one relaxed
+//!   [`AtomicBool`] and returns. The disabled path never touches the
+//!   thread-local recorder, so threads that only ever run with tracing off
+//!   register nothing and allocate nothing.
+//! * **Event taxonomy.** [`EventKind`] × [`Category`]: RAII spans
+//!   (`Enter`/`Exit`) for stage timing, `Instant` markers for point events
+//!   (shed, fault, eviction, plane decode/reuse), `Complete` for
+//!   retroactively-timed request-lifecycle slices, and `Counter` for
+//!   monotonic tallies.
+//! * **Consumers.** [`snapshot`] drains all rings into a [`Snapshot`];
+//!   [`chrome`] renders it as Chrome trace-event JSON (Perfetto-loadable,
+//!   deterministic field order) and [`prom`] renders current metrics as a
+//!   Prometheus-style text exposition.
+//!
+//! Timestamps are nanoseconds since a process-local epoch fixed the first
+//! time it is needed ([`now_ns`]); they are comparable within a process
+//! only.
+
+pub mod chrome;
+pub mod prom;
+pub mod ring;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::sync::lock_recover;
+use ring::Ring;
+
+/// Master switch: one relaxed load on every emission entry point.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Capacity (events) used for rings created after the last
+/// [`set_ring_capacity`] call.
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(ring::DEFAULT_CAPACITY);
+
+/// Cumulative count of events lost to ring overflow across all drains.
+static DROPPED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// All registered per-thread rings, in registration order (= exporter tid).
+static REGISTRY: Mutex<Vec<(String, Arc<Ring>)>> = Mutex::new(Vec::new());
+
+/// Monotonic named counters (see [`count`]).
+static COUNTERS: Mutex<BTreeMap<&'static str, u64>> = Mutex::new(BTreeMap::new());
+
+/// Leaked copies of dynamic event names (see [`intern`]).
+static INTERNED: Mutex<Vec<&'static str>> = Mutex::new(Vec::new());
+
+/// Process-local time origin for every `ts_ns` in this module.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// This thread's ring, created on first *enabled* emission.
+    static LOCAL: std::cell::OnceCell<Arc<Ring>> = const { std::cell::OnceCell::new() };
+}
+
+/// What a recorded [`Event`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span opened (`ts_ns` = entry time).
+    Enter,
+    /// Span closed (`ts_ns` = exit time; matches the nearest open `Enter`
+    /// on the same thread).
+    Exit,
+    /// Point-in-time marker.
+    Instant,
+    /// Counter sample (`a` = value).
+    Counter,
+    /// Retroactively-timed slice: `ts_ns` = start, `a` = duration in ns,
+    /// `b` = lane (used for per-request lifecycle rows).
+    Complete,
+}
+
+/// Coarse event taxonomy used for exporter grouping and lint scoping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    /// Request lifecycle (ingress, queue, shed, per-request slices).
+    Request,
+    /// Batch formation and execution stages inside the coordinator.
+    Batch,
+    /// Shard residency traffic: faults, prefetches, evictions, plane cache.
+    Shard,
+    /// Pooled kernel dispatch (chunk granularity only — never inner loops).
+    Kernel,
+    /// Autotune pipeline stages.
+    Autotune,
+}
+
+impl Category {
+    /// Stable lowercase label used by the exporters.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Request => "request",
+            Category::Batch => "batch",
+            Category::Shard => "shard",
+            Category::Kernel => "kernel",
+            Category::Autotune => "autotune",
+        }
+    }
+}
+
+/// One recorded telemetry event. `a`/`b` are kind-specific payloads
+/// (byte counts, batch sizes, durations, lanes — see each emitter).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Subsystem grouping.
+    pub cat: Category,
+    /// Static (or [`intern`]ed) event name.
+    pub name: &'static str,
+    /// Nanoseconds since the process-local epoch.
+    pub ts_ns: u64,
+    /// First payload word (meaning depends on `kind`/emitter).
+    pub a: u64,
+    /// Second payload word.
+    pub b: u64,
+}
+
+/// Everything drained from every registered thread by [`snapshot`].
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// `(thread name, events oldest-first)`, in registration order; the
+    /// index is the exporter thread id.
+    pub threads: Vec<(String, Vec<Event>)>,
+    /// Events lost to ring overflow in *this* drain.
+    pub dropped: u64,
+}
+
+impl Snapshot {
+    /// Total number of events across all threads.
+    pub fn total_events(&self) -> usize {
+        self.threads.iter().map(|(_, evs)| evs.len()).sum()
+    }
+}
+
+/// Is tracing currently enabled? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off process-wide. Spans already open keep their
+/// balance: a span armed while enabled records its exit even if tracing is
+/// disabled before it drops.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = epoch(); // fix the time origin before the first event
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Set the capacity (in events, rounded up to a power of two) for rings
+/// created *after* this call; existing per-thread rings are unaffected.
+pub fn set_ring_capacity(events: usize) {
+    RING_CAPACITY.store(events.max(2), Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-local trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Convert an [`Instant`] to nanoseconds since the trace epoch (saturating
+/// to 0 for instants captured before the epoch was fixed).
+pub fn epoch_ns(i: Instant) -> u64 {
+    i.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+/// Push to this thread's ring, registering it on first use.
+fn record(ev: Event) {
+    LOCAL.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let ring = Arc::new(Ring::with_capacity(RING_CAPACITY.load(Ordering::Relaxed)));
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| "thread".to_string());
+            lock_recover(&REGISTRY).push((name, Arc::clone(&ring)));
+            ring
+        });
+        ring.push(ev);
+    });
+}
+
+/// RAII span guard: records `Enter` on creation (when tracing is enabled)
+/// and the matching `Exit` on drop. Cheap to create when disabled — a
+/// relaxed load, no allocation, no thread-local touch.
+#[must_use = "a span measures the scope it is bound to; binding it to `_` drops it immediately"]
+pub struct Span {
+    armed: bool,
+    cat: Category,
+    name: &'static str,
+}
+
+impl Span {
+    fn open(cat: Category, name: &'static str, a: u64, b: u64) -> Span {
+        let armed = enabled();
+        if armed {
+            record(Event { kind: EventKind::Enter, cat, name, ts_ns: now_ns(), a, b });
+        }
+        Span { armed, cat, name }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            record(Event {
+                kind: EventKind::Exit,
+                cat: self.cat,
+                name: self.name,
+                ts_ns: now_ns(),
+                a: 0,
+                b: 0,
+            });
+        }
+    }
+}
+
+/// Open a span with no payload.
+pub fn span(cat: Category, name: &'static str) -> Span {
+    Span::open(cat, name, 0, 0)
+}
+
+/// Open a span carrying two payload words (recorded on the `Enter` event).
+pub fn span_args(cat: Category, name: &'static str, a: u64, b: u64) -> Span {
+    Span::open(cat, name, a, b)
+}
+
+/// Chunk-granularity kernel span (sugar for [`Category::Kernel`]): `a` is
+/// the chunk's first row, `b` its row count. The `no-timing-in-kernels`
+/// lint rule allows exactly this, at dispatch-chunk scope only.
+pub fn kernel_span(name: &'static str, a: u64, b: u64) -> Span {
+    Span::open(Category::Kernel, name, a, b)
+}
+
+/// Record a point-in-time marker with two payload words.
+pub fn instant(cat: Category, name: &'static str, a: u64, b: u64) {
+    if enabled() {
+        record(Event { kind: EventKind::Instant, cat, name, ts_ns: now_ns(), a, b });
+    }
+}
+
+/// Record a retroactively-timed slice (used for per-request lifecycle
+/// breakdowns where start/end are captured as [`Instant`]s first).
+pub fn complete(cat: Category, name: &'static str, start_ns: u64, dur_ns: u64, lane: u64) {
+    if enabled() {
+        record(Event { kind: EventKind::Complete, cat, name, ts_ns: start_ns, a: dur_ns, b: lane });
+    }
+}
+
+/// Add `delta` to the named monotonic counter (no-op while disabled).
+pub fn count(name: &'static str, delta: u64) {
+    if enabled() {
+        *lock_recover(&COUNTERS).entry(name).or_insert(0) += delta;
+    }
+}
+
+/// Snapshot of all monotonic counters (sorted by name).
+pub fn counters() -> BTreeMap<&'static str, u64> {
+    lock_recover(&COUNTERS).clone()
+}
+
+/// Clear all monotonic counters (test isolation helper).
+pub fn reset_counters() {
+    lock_recover(&COUNTERS).clear();
+}
+
+/// Intern a dynamic string (e.g. a shard name) as a `&'static str` event
+/// name. Leaks one copy per distinct string for the process lifetime; call
+/// only on enabled paths and only for small, bounded name sets.
+pub fn intern(s: &str) -> &'static str {
+    let mut g = lock_recover(&INTERNED);
+    if let Some(&e) = g.iter().find(|e| **e == s) {
+        return e;
+    }
+    let leaked: &'static str = Box::leak(s.to_string().into_boxed_str());
+    g.push(leaked);
+    leaked
+}
+
+/// Cumulative events lost to ring overflow across all drains so far.
+pub fn dropped_total() -> u64 {
+    DROPPED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Drain every registered thread ring into a [`Snapshot`]. Draining
+/// consumes: events appear in exactly one snapshot. Threads keep recording
+/// concurrently; anything pushed during the drain shows up next time.
+pub fn snapshot() -> Snapshot {
+    let reg = lock_recover(&REGISTRY);
+    let mut snap = Snapshot::default();
+    for (name, ring) in reg.iter() {
+        let mut evs = Vec::new();
+        snap.dropped += ring.drain(&mut evs);
+        snap.threads.push((name.clone(), evs));
+    }
+    DROPPED_TOTAL.fetch_add(snap.dropped, Ordering::Relaxed);
+    snap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_labels_are_stable() {
+        assert_eq!(Category::Request.as_str(), "request");
+        assert_eq!(Category::Kernel.as_str(), "kernel");
+        assert_eq!(Category::Autotune.as_str(), "autotune");
+    }
+
+    #[test]
+    fn intern_dedupes_and_returns_stable_refs() {
+        let a = intern("shard-intern-test");
+        let b = intern("shard-intern-test");
+        assert!(std::ptr::eq(a, b), "same string must intern to the same allocation");
+        assert_eq!(a, "shard-intern-test");
+    }
+
+    #[test]
+    fn disabled_span_is_unarmed() {
+        // the process-wide flag is off by default in this test binary; a
+        // span created while disabled must not arm (and so records nothing
+        // on drop even if another test enables tracing concurrently — unit
+        // tests here never enable it)
+        if !enabled() {
+            let sp = span(Category::Batch, "noop");
+            assert!(!sp.armed);
+        }
+    }
+
+    #[test]
+    fn epoch_ns_saturates_before_epoch() {
+        let before = Instant::now();
+        let _ = epoch();
+        assert_eq!(epoch_ns(before), 0);
+        let after = Instant::now();
+        // non-decreasing from the epoch on
+        assert!(epoch_ns(after) <= now_ns());
+    }
+}

@@ -1,0 +1,101 @@
+//! Prometheus-style text exposition of the serving metrics + trace
+//! counters.
+//!
+//! This is a point-in-time snapshot renderer, not an HTTP endpoint: the
+//! coordinator exposes it as `Server::telemetry_text()` and the
+//! `splitquant trace` CLI subcommand prints it after a run. The output
+//! follows the Prometheus text format (`# HELP` / `# TYPE` headers, one
+//! `name{labels} value` sample per line) and is deterministic: metric
+//! families are emitted in a fixed order and every labelled family
+//! iterates a `BTreeMap` (the `deterministic-iteration` contract).
+
+use std::fmt::Write as _;
+
+use crate::coordinator::Metrics;
+use crate::util::stats::LogHistogram;
+
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &str, value: u64) {
+    let _ = writeln!(out, "{name}{labels} {value}");
+}
+
+fn quantiles(out: &mut String, stage: &str, h: &LogHistogram) {
+    for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99"), (0.999, "0.999")] {
+        let labels = format!("{{stage=\"{stage}\",quantile=\"{label}\"}}");
+        sample(out, "splitquant_request_stage_us", &labels, h.quantile_us(q));
+    }
+    let labels = format!("{{stage=\"{stage}\"}}");
+    sample(out, "splitquant_request_stage_count", &labels, h.len() as u64);
+}
+
+/// Render `m` (plus the global trace counters) in the Prometheus text
+/// exposition format. Field order is fixed; repeated calls over unchanged
+/// metrics yield identical output.
+pub fn exposition(m: &Metrics) -> String {
+    let mut out = String::new();
+    let simple: [(&str, &str, u64); 9] = [
+        ("splitquant_requests_completed_total", "requests served", m.completed as u64),
+        ("splitquant_requests_shed_total", "requests shed (queue full)", m.shed as u64),
+        ("splitquant_exec_time_us_total", "executor time, us", m.exec_time.as_micros() as u64),
+        ("splitquant_batcher_polls_total", "idle batcher wake-ups", m.batcher_polls as u64),
+        ("splitquant_shard_faults_total", "shard demand misses", m.shard_faults as u64),
+        ("splitquant_shard_evictions_total", "shards evicted", m.shard_evictions as u64),
+        ("splitquant_bytes_paged_in_total", "bytes paged in", m.bytes_paged_in as u64),
+        ("splitquant_plane_decodes_total", "low-bit plane decodes", m.plane_decodes as u64),
+        ("splitquant_plane_reuses_total", "plane-cache reuses", m.plane_reuses as u64),
+    ];
+    for (name, help, v) in simple {
+        family(&mut out, name, "counter", help);
+        sample(&mut out, name, "", v);
+    }
+    family(&mut out, "splitquant_batches_total", "counter", "batches per compiled size");
+    for (size, n) in &m.batches_by_size {
+        sample(&mut out, "splitquant_batches_total", &format!("{{size=\"{size}\"}}"), *n as u64);
+    }
+    family(&mut out, "splitquant_slots_total", "counter", "request slots (real vs padded)");
+    sample(&mut out, "splitquant_slots_total", "{kind=\"real\"}", m.real_slots as u64);
+    sample(&mut out, "splitquant_slots_total", "{kind=\"padded\"}", m.padded_slots as u64);
+    family(&mut out, "splitquant_request_stage_us", "gauge", "stage latency quantiles, us");
+    quantiles(&mut out, "total", &m.latency);
+    quantiles(&mut out, "queue", &m.queue_us);
+    quantiles(&mut out, "batch", &m.batch_us);
+    quantiles(&mut out, "exec", &m.exec_us);
+    quantiles(&mut out, "fault", &m.fault_us);
+    family(&mut out, "splitquant_trace_counter", "counter", "monotonic trace counters");
+    for (name, v) in super::counters() {
+        sample(&mut out, "splitquant_trace_counter", &format!("{{name=\"{name}\"}}"), v);
+    }
+    family(&mut out, "splitquant_trace_dropped_events_total", "counter", "ring overflow drops");
+    sample(&mut out, "splitquant_trace_dropped_events_total", "", super::dropped_total());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_is_deterministic_and_well_formed() {
+        let mut m = Metrics::default();
+        m.record_batch(5, 8, std::time::Duration::from_millis(3));
+        for _ in 0..5 {
+            m.record_done(std::time::Duration::from_millis(4));
+        }
+        let a = exposition(&m);
+        let b = exposition(&m);
+        assert_eq!(a, b, "fixed field order");
+        assert!(a.contains("splitquant_requests_completed_total 5"), "{a}");
+        assert!(a.contains("splitquant_batches_total{size=\"8\"} 1"), "{a}");
+        assert!(a.contains("splitquant_request_stage_us{stage=\"total\",quantile=\"0.5\"}"), "{a}");
+        for line in a.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("splitquant_"),
+                "stray line: {line}"
+            );
+        }
+    }
+}

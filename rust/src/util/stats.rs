@@ -105,6 +105,163 @@ impl LatencyStats {
     }
 }
 
+/// Sub-bucket resolution of [`LogHistogram`]: each power-of-two octave is
+/// split into `2^SUB_BITS` linear sub-buckets.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Fixed bucket count: values below `SUB` get exact unit buckets; every
+/// octave `[2^m, 2^(m+1))` for `m` in `SUB_BITS..64` gets `SUB` buckets.
+const LOG_BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Bounded-memory log-bucketed latency histogram (HDR-style).
+///
+/// The serving path previously pushed every sample into a growing
+/// `Vec<u64>` ([`LatencyStats`]) for the life of the server; this records
+/// into a *fixed* array of [`LOG_BUCKETS`] counters instead — O(buckets)
+/// memory no matter how many samples arrive — while keeping the exact sum,
+/// min and max so `mean_us` and the extreme quantiles stay exact.
+///
+/// Quantiles are answered with the midpoint of the owning bucket, whose
+/// width is at most `2^-SUB_BITS` of its lower bound, so the relative
+/// error is bounded by `2^-(SUB_BITS + 1)` (≤ 1/32 at the default
+/// resolution). Values below `SUB` are exact. Histograms with the same
+/// resolution merge losslessly ([`LogHistogram::merge`]), which the exact
+/// sort-based [`LatencyStats`] cannot do without concatenating samples.
+///
+/// The method surface mirrors [`LatencyStats`] (`record`, `len`,
+/// `quantile_us`, `mean_us`, `summary`) so the two are drop-in swappable;
+/// benches and observers that want exact percentiles keep using
+/// [`LatencyStats`] / [`percentile`].
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Box<[u64; LOG_BUCKETS]>,
+    total: u64,
+    sum_us: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: Box::new([0; LOG_BUCKETS]),
+            total: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+}
+
+impl LogHistogram {
+    fn bucket(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize;
+        }
+        let m = 63 - v.leading_zeros(); // v in [2^m, 2^(m+1)), m >= SUB_BITS
+        let sub = (v >> (m - SUB_BITS)) as usize & (SUB - 1);
+        SUB + (m - SUB_BITS) as usize * SUB + sub
+    }
+
+    /// Midpoint of bucket `idx` (its maximum absolute error is half the
+    /// bucket width).
+    fn representative(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let m = (idx - SUB) as u32 / SUB as u32 + SUB_BITS;
+        let sub = ((idx - SUB) % SUB) as u64;
+        let width = 1u64 << (m - SUB_BITS);
+        (1u64 << m) + sub * width + width / 2
+    }
+
+    /// Record one latency sample at microsecond resolution.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    /// Record one pre-quantized microsecond value.
+    pub fn record_us(&mut self, us: u64) {
+        self.counts[Self::bucket(us)] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    /// True if nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Number of buckets backing this histogram — constant by construction,
+    /// which is what the O(buckets) memory regression test pins.
+    pub fn bucket_count(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Quantile in microseconds: nearest-rank lookup answered with the
+    /// owning bucket's midpoint (relative error ≤ `2^-(SUB_BITS+1)`);
+    /// `q <= 0` and `q >= 1` return the exact min/max.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min_us;
+        }
+        if q >= 1.0 {
+            return self.max_us;
+        }
+        let rank = (q * (self.total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return Self::representative(idx).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Exact mean in microseconds (the sum is kept exactly).
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.total as f64
+    }
+
+    /// Fold `other` into `self` (losslessly — same fixed bucketing).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// One-line digest in the same shape as [`LatencyStats::summary`].
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+            self.len(),
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.95),
+            self.quantile_us(0.99),
+            self.quantile_us(1.0),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +304,81 @@ mod tests {
         let v = [2.0f32, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&v) - 5.0).abs() < 1e-9);
         assert!((std_dev(&v) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_matches_latency_stats_within_bounded_error() {
+        let mut exact = LatencyStats::default();
+        let mut hist = LogHistogram::default();
+        let mut x = 12345u64; // xorshift — spread samples over 5 decades
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let us = x % 1_000_000;
+            exact.record(std::time::Duration::from_micros(us));
+            hist.record(std::time::Duration::from_micros(us));
+        }
+        assert_eq!(hist.len(), exact.len());
+        assert!((hist.mean_us() - exact.mean_us()).abs() < 1e-9, "sum is exact");
+        assert_eq!(hist.quantile_us(1.0), exact.quantile_us(1.0), "max is exact");
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            let e = exact.quantile_us(q) as f64;
+            let h = hist.quantile_us(q) as f64;
+            // bucket midpoint: relative error bounded by 2^-(SUB_BITS+1),
+            // plus slack for nearest-rank landing one bucket over
+            assert!((h - e).abs() <= e / 16.0 + 1.0, "q={q}: exact {e} vs hist {h}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_small_values_are_exact() {
+        let mut h = LogHistogram::default();
+        for us in [0u64, 1, 2, 3, 15, 16, 17] {
+            h.record_us(us);
+        }
+        assert_eq!(h.quantile_us(0.0), 0);
+        assert_eq!(h.quantile_us(1.0), 17);
+        assert_eq!(h.len(), 7);
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_single_recording() {
+        let mut all = LogHistogram::default();
+        let mut left = LogHistogram::default();
+        let mut right = LogHistogram::default();
+        for i in 0..2_000u64 {
+            let us = i * i % 777_777;
+            all.record_us(us);
+            if i % 2 == 0 {
+                left.record_us(us);
+            } else {
+                right.record_us(us);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.len(), all.len());
+        assert!((left.mean_us() - all.mean_us()).abs() < 1e-9);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(left.quantile_us(q), all.quantile_us(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_memory_is_o_buckets_under_1m_records() {
+        // the regression LatencyStats has: a million samples must not grow
+        // the backing storage — the bucket array is fixed at construction
+        let mut h = LogHistogram::default();
+        let buckets_before = h.bucket_count();
+        let bytes = std::mem::size_of::<LogHistogram>()
+            + buckets_before * std::mem::size_of::<u64>();
+        for i in 0..1_000_000u64 {
+            h.record_us(i % 250_000);
+        }
+        assert_eq!(h.len(), 1_000_000);
+        assert_eq!(h.bucket_count(), buckets_before, "no growth under load");
+        assert!(bytes < 16 * 1024, "fixed footprint stays under 16KiB: {bytes}B");
+        let p50 = h.quantile_us(0.5);
+        assert!((120_000..=130_000).contains(&p50), "{p50}");
     }
 }

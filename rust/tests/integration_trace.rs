@@ -1,0 +1,285 @@
+//! End-to-end tracing & telemetry (the ISSUE-8 acceptance criteria):
+//! spans balance under pooled dispatch, disabled tracing is inert (no
+//! registration, no counters, near-zero cost), ring overflow drops oldest
+//! with honest accounting, and one traced paged serving run produces a
+//! Perfetto-loadable Chrome trace with request-lifecycle spans, shard
+//! fault events and kernel chunk spans, plus latency-breakdown rows that
+//! merge idempotently into a BENCH_serving-style JSON file.
+//!
+//! The trace enable flag, counter table and thread-ring registry are
+//! process-wide, so every test here serializes on one mutex and leaves
+//! tracing disabled (default ring capacity restored) on exit.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use splitquant::coordinator::{QuantExecutor, ServeConfig, Server};
+use splitquant::data::HashTokenizer;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::parallel::{kernels, ParallelConfig};
+use splitquant::quant::PackedModel;
+use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+use splitquant::tensor::Tensor;
+use splitquant::trace::{self, Category, EventKind};
+use splitquant::util::json::Json;
+use splitquant::util::rng::Rng;
+
+/// Serializes every test that flips the process-wide trace state.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// One shared worker-pool config: `configure` is first-caller-wins
+/// process-wide, so every test (and every `Server::start` below) installs
+/// the same values — tiny `serial_flops` forces pooled kernel dispatch
+/// even for this file's deliberately small models.
+fn pool_cfg() -> ParallelConfig {
+    ParallelConfig { threads: 2, serial_flops: 1, ..ParallelConfig::default() }
+}
+
+/// Take the lock, install the pool config and drain stale events left by
+/// other tests' threads, so each test asserts only on its own events.
+fn trace_test_setup() -> std::sync::MutexGuard<'static, ()> {
+    let guard = TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    splitquant::parallel::configure(pool_cfg());
+    trace::set_enabled(false);
+    let _ = trace::snapshot();
+    guard
+}
+
+fn all_events(snap: &trace::Snapshot) -> impl Iterator<Item = &trace::Event> {
+    snap.threads.iter().flat_map(|(_, evs)| evs.iter())
+}
+
+// ------------------------------------------------------- span balance --
+
+#[test]
+fn spans_balance_under_pooled_dispatch() {
+    let _g = trace_test_setup();
+    trace::set_enabled(true);
+
+    // unconditionally pooled matmul: every worker task opens one RAII
+    // chunk span; 64 rows / (2 threads × 4 oversplit) = several chunks
+    let a = Tensor::full(&[64, 48], 0.5);
+    let b = Tensor::full(&[48, 32], -0.25);
+    let c = kernels::matmul(&a, &b);
+    assert_eq!(c.shape(), &[64usize, 32][..]);
+
+    trace::set_enabled(false);
+    let snap = trace::snapshot();
+    let mut chunk_spans = 0usize;
+    for (name, evs) in &snap.threads {
+        let enters = evs.iter().filter(|e| e.kind == EventKind::Enter).count();
+        let exits = evs.iter().filter(|e| e.kind == EventKind::Exit).count();
+        assert_eq!(enters, exits, "unbalanced spans on thread {name:?}: {evs:?}");
+        chunk_spans += evs
+            .iter()
+            .filter(|e| e.kind == EventKind::Enter && e.name == "matmul-chunk")
+            .count();
+    }
+    assert!(chunk_spans >= 2, "pooled matmul produced {chunk_spans} chunk spans");
+    assert!(
+        all_events(&snap).all(|e| e.name != "matmul-chunk" || e.cat == Category::Kernel),
+        "chunk spans must use the Kernel category"
+    );
+}
+
+// --------------------------------------------------- disabled is inert --
+
+#[test]
+fn disabled_tracing_registers_nothing_and_costs_little() {
+    let _g = trace_test_setup();
+    assert!(!trace::enabled());
+
+    // a thread that only ever emits while disabled must never register a
+    // ring (the disabled path may not touch the thread-local recorder)
+    std::thread::Builder::new()
+        .name("inert-probe".to_string())
+        .spawn(|| {
+            for i in 0..1000u64 {
+                let _sp = trace::span(Category::Batch, "inert-span");
+                trace::instant(Category::Shard, "inert-instant", i, 0);
+                trace::count("inert_counter", 1);
+            }
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+
+    let snap = trace::snapshot();
+    assert!(
+        snap.threads.iter().all(|(name, _)| name != "inert-probe"),
+        "disabled emission registered a ring: {:?}",
+        snap.threads.iter().map(|(n, _)| n).collect::<Vec<_>>()
+    );
+    assert!(
+        !trace::counters().contains_key("inert_counter"),
+        "disabled count() reached the counter table"
+    );
+
+    // near-zero overhead: 1M disabled span creations are one relaxed load
+    // each — generous bound so debug builds on loaded CI pass comfortably
+    let t0 = Instant::now();
+    for _ in 0..1_000_000 {
+        let _sp = trace::span(Category::Kernel, "disabled-probe");
+    }
+    let dt = t0.elapsed();
+    assert!(dt < Duration::from_secs(2), "1M disabled spans took {dt:?}");
+}
+
+// ---------------------------------------------------- overflow bounds --
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_drops() {
+    let _g = trace_test_setup();
+    trace::set_enabled(true);
+    trace::set_ring_capacity(64);
+
+    // the probe thread's ring is created on its first emission, at the
+    // reduced capacity; 200 pushes must keep only the newest 64
+    std::thread::Builder::new()
+        .name("overflow-probe".to_string())
+        .spawn(|| {
+            for i in 0..200u64 {
+                trace::instant(Category::Shard, "overflow-ev", i, 0);
+            }
+        })
+        .unwrap()
+        .join()
+        .unwrap();
+    trace::set_ring_capacity(splitquant::trace::ring::DEFAULT_CAPACITY);
+    trace::set_enabled(false);
+
+    let snap = trace::snapshot();
+    let kept: Vec<u64> = snap
+        .threads
+        .iter()
+        .find(|(name, _)| name == "overflow-probe")
+        .map(|(_, evs)| evs.iter().map(|e| e.a).collect())
+        .expect("probe thread registered a ring");
+    assert!(!kept.is_empty() && kept.len() <= 64, "kept {} events", kept.len());
+    // drop-oldest: the survivors are the newest events, oldest-first
+    assert_eq!(*kept.last().unwrap(), 199, "newest event lost: {kept:?}");
+    assert!(kept[0] >= 136, "oldest events survived overflow: {kept:?}");
+    assert!(kept.windows(2).all(|w| w[0] < w[1]), "drain out of order: {kept:?}");
+    assert!(snap.dropped >= 136, "only {} drops accounted", snap.dropped);
+    assert!(trace::dropped_total() >= snap.dropped);
+}
+
+// ------------------------------------------- traced paged serving run --
+
+fn build_paged(tag: &str) -> (BertConfig, PathBuf, usize) {
+    let cfg = BertConfig {
+        vocab_size: 512,
+        hidden: 16,
+        layers: 2,
+        heads: 2,
+        ffn: 32,
+        max_len: 16,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(3);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let (_, qm) = quantize_store(&store, &quantizable, &SplitQuantConfig::new(2)).unwrap();
+    let pm = PackedModel::assemble(&store, &qm);
+    let path = std::env::temp_dir().join(format!("sq_trace_it_{tag}.sqsh"));
+    pm.save_sharded(&path).unwrap();
+    let budget = {
+        use splitquant::shardstore::{PagedConfig, PagedModel};
+        PagedModel::open(&path, PagedConfig::default()).unwrap().pagable_bytes() / 2
+    };
+    (cfg, path, budget)
+}
+
+#[test]
+fn traced_paged_serving_exports_chrome_trace_and_breakdown() {
+    let _g = trace_test_setup();
+    trace::set_enabled(true);
+
+    let (cfg, path, budget) = build_paged("serve");
+    let serve_cfg = ServeConfig {
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        queue_cap: 256,
+        parallel: pool_cfg(),
+        residency_budget_bytes: Some(budget),
+    };
+    let exec =
+        Arc::new(QuantExecutor::paged(cfg.clone(), &path, vec![1, 4], &serve_cfg).unwrap());
+    std::fs::remove_file(&path).ok();
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let server = Server::start(exec, tok, serve_cfg);
+
+    let requests = 24usize;
+    let mut done = 0usize;
+    while done < requests {
+        let window = 8.min(requests - done);
+        let rxs: Vec<_> = (0..window)
+            .map(|k| server.submit(&format!("traced request number {}", done + k)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(60)).expect("request timed out");
+            done += 1;
+        }
+    }
+
+    // Prometheus-style exposition is live while the server runs
+    let text = server.telemetry_text();
+    assert!(text.contains("splitquant_requests_completed_total"), "{text}");
+    assert!(text.contains("splitquant_shard_faults_total"), "{text}");
+    assert!(text.contains("splitquant_request_stage_us"), "{text}");
+
+    let m = server.shutdown();
+    trace::set_enabled(false);
+    assert_eq!(m.completed, requests);
+    assert!(m.shard_faults > 0, "half budget never faulted");
+
+    // -- the trace carries the full event taxonomy of the serving path
+    let snap = trace::snapshot();
+    let has = |pred: &dyn Fn(&trace::Event) -> bool| all_events(&snap).any(|e| pred(e));
+    assert!(
+        has(&|e| e.kind == EventKind::Complete && e.name == "req-total"),
+        "no request-lifecycle slices in the trace"
+    );
+    assert!(
+        has(&|e| e.kind == EventKind::Instant
+            && e.cat == Category::Shard
+            && e.name == "shard-fault"
+            && e.a > 0),
+        "no shard-fault events (with byte counts) in the trace"
+    );
+    assert!(
+        has(&|e| e.kind == EventKind::Enter && e.cat == Category::Kernel),
+        "no kernel chunk spans despite serial_flops=1"
+    );
+
+    // -- Chrome export: Perfetto-loadable JSON, byte-deterministic
+    let json = trace::chrome::chrome_trace_string(&snap);
+    assert_eq!(json, trace::chrome::chrome_trace_string(&snap), "export not deterministic");
+    let parsed = Json::parse(&json).expect("chrome trace must be valid JSON");
+    let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(evs.len() > requests, "only {} trace events", evs.len());
+    assert!(json.contains("\"name\":\"req-total\""), "lifecycle rows missing from export");
+    let out = std::env::temp_dir().join("sq_trace_it_serve.trace.json");
+    trace::chrome::write_chrome_trace(&out, &snap).unwrap();
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), json, "file diverges from string");
+    std::fs::remove_file(&out).ok();
+
+    // -- latency-breakdown rows merge idempotently into the bench JSON
+    let rows = m.breakdown_records("paged-it", "simd");
+    assert!(
+        rows.iter().any(|r| r.bench == "breakdown-total"),
+        "no breakdown-total row: {rows:?}"
+    );
+    let bench_path = std::env::temp_dir().join("sq_trace_it_bench.json");
+    std::fs::remove_file(&bench_path).ok();
+    splitquant::report::bench_json::merge_write(&bench_path, &rows).unwrap();
+    let once = std::fs::read_to_string(&bench_path).unwrap();
+    splitquant::report::bench_json::merge_write(&bench_path, &rows).unwrap();
+    let twice = std::fs::read_to_string(&bench_path).unwrap();
+    assert_eq!(once, twice, "re-merging identical rows changed the file");
+    assert!(once.contains("breakdown-queue"), "{once}");
+    std::fs::remove_file(&bench_path).ok();
+}
