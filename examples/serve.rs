@@ -160,6 +160,7 @@ fn main() -> splitquant::Result<()> {
                 queue_cap: 8192,
                 parallel: ParallelConfig { kernel, ..ParallelConfig::default() },
                 residency_budget_bytes: None,
+                ..ServeConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -176,7 +177,7 @@ fn main() -> splitquant::Result<()> {
             i += window;
             for rx in rxs {
                 rx.recv_timeout(Duration::from_secs(30))
-                    .map_err(|_| splitquant::Error::Coordinator("timeout".into()))?;
+                    .map_err(|_| splitquant::Error::Coordinator("timeout".into()))??;
                 done += 1;
             }
         }

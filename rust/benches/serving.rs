@@ -89,7 +89,7 @@ fn paged_vs_resident() {
                 .collect();
             i += window;
             for rx in rxs {
-                rx.recv_timeout(Duration::from_secs(60)).expect("response");
+                rx.recv_timeout(Duration::from_secs(60)).expect("response").expect("classify");
                 done += 1;
             }
         }
@@ -183,7 +183,9 @@ fn main() {
                     .collect();
                 i += window;
                 for rx in rxs {
-                    rx.recv_timeout(Duration::from_secs(60)).expect("response");
+                    rx.recv_timeout(Duration::from_secs(60))
+                        .expect("response")
+                        .expect("classify");
                     done += 1;
                 }
             }
@@ -251,7 +253,7 @@ fn main() {
         }
         let mut served = 0usize;
         for rx in rxs {
-            if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+            if rx.recv_timeout(Duration::from_secs(60)).is_ok_and(|r| r.is_ok()) {
                 served += 1;
             }
         }

@@ -6,7 +6,7 @@
 //! * [`lexer`] — hand-rolled Rust lexer (no external crates): token stream
 //!   with comments, strings, raw strings, nested block comments and
 //!   `#[cfg(test)]`-region tracking handled faithfully.
-//! * [`rules`] — the rule engine: seven repo-specific rules with per-module
+//! * [`rules`] — the rule engine: eight repo-specific rules with per-module
 //!   scoping and a `// sq-lint: allow(<rule>) — <reason>` escape hatch
 //!   (see [`rules::RULES`] for the shipped set).
 //!
@@ -206,6 +206,26 @@ mod tests {
     fn fixture_no_timing_scoped_to_kernel_files() {
         let fs = lint_source("model/x.rs", include_str!("testdata/no_timing_pos.rs"));
         assert!(by_rule(&fs, RULE_NO_TIMING).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_bounded_retry_fires() {
+        let fs = lint_source("shardstore/x.rs", include_str!("testdata/bounded_retry_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_BOUNDED_RETRY).len(), 2, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_bounded_retry_quiet_on_capped_and_conditional_loops() {
+        let fs = lint_source("shardstore/x.rs", include_str!("testdata/bounded_retry_neg.rs"));
+        assert!(by_rule(&fs, RULE_BOUNDED_RETRY).is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_bounded_retry_scoped_to_serving_dirs() {
+        // the same unbounded loops outside coordinator//shardstore/ are not
+        // this rule's business (kernels and utils spin by design)
+        let fs = lint_source("model/x.rs", include_str!("testdata/bounded_retry_pos.rs"));
+        assert!(by_rule(&fs, RULE_BOUNDED_RETRY).is_empty(), "{fs:?}");
     }
 
     #[test]

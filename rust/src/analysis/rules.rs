@@ -14,6 +14,7 @@
 //! | `safety-comment` | every `unsafe` token carries a `// SAFETY:` comment immediately above (or trailing on the same line) |
 //! | `lock-across-io` | no lock guard held across file IO or pooled dispatch (deadlock/stall heuristic for the shard-fault path) |
 //! | `no-timing-in-kernels` | overhead budget: no `Instant` / `trace::` emission in the micro-kernel files (`tensor/`: whole file; `parallel/kernels.rs`: loop bodies — its dispatch prologue may arm chunk spans) |
+//! | `bounded-retry` | fault-tolerance contract: an unconditional loop in `coordinator/`/`shardstore/` that re-reads or retries must mention an attempt cap — unbounded retry turns one bad shard into a hung request |
 //!
 //! Scoping notes (deliberate, documented here and in ROADMAP):
 //! * `no-panic-in-serving`'s indexing facet covers `coordinator/` and
@@ -46,6 +47,7 @@ pub const RULE_NO_PANIC: &str = "no-panic-in-serving";
 pub const RULE_SAFETY: &str = "safety-comment";
 pub const RULE_LOCK_IO: &str = "lock-across-io";
 pub const RULE_NO_TIMING: &str = "no-timing-in-kernels";
+pub const RULE_BOUNDED_RETRY: &str = "bounded-retry";
 pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
 
 /// `(name, one-line description)` for every shipped rule, in report order.
@@ -57,6 +59,7 @@ pub const RULES: &[(&str, &str)] = &[
     (RULE_SAFETY, "unsafe without an immediately-preceding // SAFETY: comment"),
     (RULE_LOCK_IO, "lock guard held across file IO or pooled dispatch"),
     (RULE_NO_TIMING, "Instant/trace emission inside micro-kernel code (overhead budget)"),
+    (RULE_BOUNDED_RETRY, "unconditional retry loop with no visible attempt cap"),
     (RULE_ALLOW_SYNTAX, "malformed or unknown sq-lint allow comment"),
 ];
 
@@ -104,6 +107,26 @@ const IO_IDENTS: &[&str] = &[
     "rename",
     "fs",
 ];
+
+/// Identifiers that mean "this loop body performs a read that could be a
+/// retry" (`bounded-retry` rule). Exact identifier match — `fetch_add` and
+/// friends lex as single tokens and do not trip `fetch`.
+const RETRY_TRIGGERS: &[&str] = &[
+    "read",
+    "read_raw",
+    "read_exact",
+    "read_verified",
+    "fetch",
+    "retry",
+    "attempt",
+    "reread",
+];
+
+/// Identifiers whose presence in the same loop body signals a visible
+/// attempt bound (`bounded-retry` rule). Heuristic by design: the rule asks
+/// that a retry loop *name* its cap, not that the lint prove termination.
+const RETRY_CAPS: &[&str] =
+    &["max", "max_attempts", "attempts", "cap", "limit", "budget", "tried"];
 
 /// Map-iteration adaptors whose order is the map's internal order.
 const ITER_METHODS: &[&str] = &[
@@ -578,6 +601,59 @@ fn rule_lock_io(ctx: &Ctx, out: &mut Vec<Finding>) {
     }
 }
 
+fn rule_bounded_retry(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !ctx.in_dir(&["coordinator/", "shardstore/"]) {
+        return;
+    }
+    let toks = ctx.toks();
+    for i in 0..toks.len() {
+        if ctx.in_test(i) {
+            continue;
+        }
+        let t = &toks[i];
+        // unconditional loops only: `loop { … }` and `while true { … }`.
+        // A `while cond` / `for` loop has a data-driven exit and is not a
+        // retry-bound concern.
+        let body_open = if t.is_ident("loop") && next_is_punct(toks, i, "{") {
+            i + 1
+        } else if t.is_ident("while")
+            && toks.get(i + 1).is_some_and(|o| o.is_ident("true"))
+            && next_is_punct(toks, i + 1, "{")
+        {
+            i + 2
+        } else {
+            continue;
+        };
+        let close = match_close(toks, body_open, "{", "}");
+        let mut trigger: Option<&Token> = None;
+        let mut capped = false;
+        for o in toks.iter().take(close).skip(body_open + 1) {
+            if o.kind != TokKind::Ident {
+                continue;
+            }
+            if trigger.is_none() && RETRY_TRIGGERS.contains(&o.text.as_str()) {
+                trigger = Some(o);
+            }
+            if RETRY_CAPS.contains(&o.text.as_str()) {
+                capped = true;
+                break;
+            }
+        }
+        if let (Some(tr), false) = (trigger, capped) {
+            out.push(ctx.finding(
+                RULE_BOUNDED_RETRY,
+                t.line,
+                format!(
+                    "unconditional loop re-reads (`{}`, line {}) with no visible attempt \
+                     cap — bound it (RetryPolicy-style max_attempts) or allow-annotate \
+                     the exit that makes it finite",
+                    tr.text, tr.line
+                ),
+            ));
+        }
+    }
+}
+
 /// True when the `for` at `idx` heads a for-loop (a depth-0 `in` appears
 /// before the body `{`), as opposed to `impl Trait for Type` or an HRTB
 /// `for<'a>` binder.
@@ -750,6 +826,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
     rule_no_panic(&ctx, &mut out);
     rule_safety(&ctx, &mut out);
     rule_lock_io(&ctx, &mut out);
+    rule_bounded_retry(&ctx, &mut out);
     rule_no_timing(&ctx, &mut out);
     let allows = parse_allows(&ctx, &mut out);
     for f in &mut out {
@@ -773,8 +850,9 @@ mod tests {
 
     #[test]
     fn rules_table_is_consistent() {
-        assert_eq!(RULES.len(), 8);
+        assert_eq!(RULES.len(), 9);
         assert!(known_rule(RULE_NO_FMA));
+        assert!(known_rule(RULE_BOUNDED_RETRY));
         assert!(!known_rule("allow-syntax")); // can't allow the meta rule
         assert!(!known_rule("no-such-rule"));
     }

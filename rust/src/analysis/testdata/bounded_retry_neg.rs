@@ -1,0 +1,48 @@
+//! Negative fixture: loops `bounded-retry` must stay quiet on — a retry
+//! loop that names its cap, an unconditional loop with no reads in it, a
+//! condition-driven re-read, and a test-region loop.
+
+fn bounded(io: &dyn ShardIo, name: &str) -> Result<Vec<u8>> {
+    let max_attempts = 3;
+    let mut tried = 0;
+    loop {
+        tried += 1;
+        match io.read_raw(name) {
+            Ok(b) => return Ok(b),
+            Err(e) if tried >= max_attempts => return Err(e),
+            Err(_) => {}
+        }
+    }
+}
+
+fn drains_a_queue(q: &mut Vec<u64>) -> u64 {
+    let mut acc = 0;
+    loop {
+        match q.pop() {
+            Some(v) => acc += v,
+            None => return acc,
+        }
+    }
+}
+
+fn condition_driven_reread(io: &dyn ShardIo, name: &str, want: usize) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    while bytes.len() < want {
+        if let Ok(b) = io.read_raw(name) {
+            bytes = b;
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_spin_on_a_read() {
+        loop {
+            if fetch() {
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Positive fixture: unconditional retry loops in serving code that never
+//! name an attempt bound — `bounded-retry` fires on both.
+
+fn keep_reading(io: &dyn ShardIo, name: &str) -> Vec<u8> {
+    loop {
+        if let Ok(bytes) = io.read_raw(name) {
+            return bytes;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
+fn poll_until_present(store: &Store, name: &str) -> Data {
+    while true {
+        if let Some(d) = store.fetch(name) {
+            return d;
+        }
+    }
+}

@@ -56,6 +56,24 @@ pub struct Metrics {
     /// decoded planes were cached ([`crate::model::QuantizedBert`]'s plane
     /// cache) — the paged-matmul fast path
     pub plane_reuses: usize,
+    /// executor panics caught at the batch boundary: the batch's requests
+    /// errored, the worker re-armed, the process survived (graceful
+    /// degradation — see the coordinator's panic-containment contract)
+    pub exec_panics: usize,
+    /// shard reads whose decoded payload failed CRC / parse verification
+    /// (paged executors only — see [`crate::shardstore::fault`])
+    pub integrity_failures: usize,
+    /// shard read attempts beyond the first (bounded by
+    /// `RetryPolicy::max_attempts` per read — see
+    /// [`crate::shardstore::RetryPolicy`])
+    pub io_retries: usize,
+    /// shards quarantined after exhausting their retry budget: requests
+    /// needing them error fast instead of re-reading known-bad data
+    pub shards_quarantined: usize,
+    /// queued requests shed because they outlived `ServeConfig::expire_after`
+    /// before a batch formed (each got an error response; distinct from
+    /// `shed`, which rejects at ingress when the queue is full)
+    pub shed_expired: usize,
 }
 
 impl Default for Metrics {
@@ -79,6 +97,11 @@ impl Default for Metrics {
             bytes_paged_in: 0,
             plane_decodes: 0,
             plane_reuses: 0,
+            exec_panics: 0,
+            integrity_failures: 0,
+            io_retries: 0,
+            shards_quarantined: 0,
+            shed_expired: 0,
         }
     }
 }
@@ -137,14 +160,19 @@ impl Metrics {
             ("batcher_polls", Json::from(self.batcher_polls)),
             ("bytes_paged_in", Json::from(self.bytes_paged_in)),
             ("completed", Json::from(self.completed)),
+            ("exec_panics", Json::from(self.exec_panics)),
             ("exec_time_us", Json::from(self.exec_time.as_micros() as f64)),
+            ("integrity_failures", Json::from(self.integrity_failures)),
+            ("io_retries", Json::from(self.io_retries)),
             ("padded_slots", Json::from(self.padded_slots)),
             ("plane_decodes", Json::from(self.plane_decodes)),
             ("plane_reuses", Json::from(self.plane_reuses)),
             ("real_slots", Json::from(self.real_slots)),
             ("shard_evictions", Json::from(self.shard_evictions)),
             ("shard_faults", Json::from(self.shard_faults)),
+            ("shards_quarantined", Json::from(self.shards_quarantined)),
             ("shed", Json::from(self.shed)),
+            ("shed_expired", Json::from(self.shed_expired)),
         ];
         let batches: Vec<(String, Json)> = self
             .batches_by_size
@@ -239,8 +267,26 @@ impl Metrics {
         } else {
             String::new()
         };
+        let degraded = if self.exec_panics
+            + self.integrity_failures
+            + self.io_retries
+            + self.shards_quarantined
+            + self.shed_expired
+            > 0
+        {
+            format!(
+                " DEGRADED panics={} integrity_failures={} retries={} quarantined={} expired={}",
+                self.exec_panics,
+                self.integrity_failures,
+                self.io_retries,
+                self.shards_quarantined,
+                self.shed_expired
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% polls={} batches={:?}{paging}",
+            "served={} shed={} qps={:.1} latency[{}] pad={:.1}% polls={} batches={:?}{paging}{degraded}",
             self.completed,
             self.shed,
             self.throughput(),
@@ -311,6 +357,23 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&a).expect("valid JSON");
         assert_eq!(parsed.get("completed").and_then(Json::as_usize).unwrap_or(0), 5);
         assert!(parsed.get("stages").is_ok(), "{a}");
+    }
+
+    #[test]
+    fn summary_flags_degradation_only_when_present() {
+        let mut m = Metrics::default();
+        assert!(!m.summary().contains("DEGRADED"), "{}", m.summary());
+        m.exec_panics = 1;
+        m.shards_quarantined = 2;
+        let s = m.summary();
+        assert!(s.contains("DEGRADED"), "{s}");
+        assert!(s.contains("panics=1"), "{s}");
+        assert!(s.contains("quarantined=2"), "{s}");
+        // the degradation counters also appear in the JSON view
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"exec_panics\":1"), "{j}");
+        assert!(j.contains("\"shards_quarantined\":2"), "{j}");
+        assert!(j.contains("\"shed_expired\":0"), "{j}");
     }
 
     #[test]

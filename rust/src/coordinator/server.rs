@@ -247,6 +247,8 @@ impl QuantExecutor {
             shards,
             PagedConfig {
                 residency_budget_bytes: serve.residency_budget_bytes.unwrap_or(usize::MAX),
+                retry: serve.retry.clone(),
+                fault: serve.fault.clone(),
                 ..PagedConfig::default()
             },
         )?;
@@ -301,11 +303,30 @@ pub struct ServeConfig {
     /// `None` ⇒ unbounded — everything stays resident after first fault.
     /// Lets a server hold a model whose packed payload exceeds RAM.
     pub residency_budget_bytes: Option<usize>,
+    /// Bounded retry/backoff around every paged shard read
+    /// ([`crate::shardstore::RetryPolicy`]): transient IO errors and
+    /// checksum mismatches re-read with deterministic backoff; a shard that
+    /// exhausts its attempts is quarantined and its requests error.
+    pub retry: crate::shardstore::RetryPolicy,
+    /// Deterministic shard-fault injection for chaos testing
+    /// ([`crate::shardstore::FaultyIo`]), threaded into
+    /// [`QuantExecutor::paged`]. `None` (the default) installs nothing —
+    /// the fault-free path pays zero overhead.
+    pub fault: Option<crate::shardstore::FaultConfig>,
+    /// Dead-work shedding: a queued request older than this is dropped
+    /// before batch formation — its submitter gets an error immediately
+    /// instead of stale work occupying a batch slot (counted as
+    /// [`Metrics::shed_expired`], distinct from ingress `shed`). Must
+    /// exceed `max_wait` to be meaningful, since the batcher normally
+    /// dispatches the oldest request *at* `max_wait`. `None` disables
+    /// expiry.
+    pub expire_after: Option<Duration>,
 }
 
 impl Default for ServeConfig {
     /// 2ms batching window, 2 serving workers, 1024-deep ingress queue,
-    /// auto kernel threads, unbounded shard residency.
+    /// auto kernel threads, unbounded shard residency, default retry
+    /// policy, no fault injection, no queue expiry.
     fn default() -> Self {
         ServeConfig {
             max_wait: Duration::from_millis(2),
@@ -313,6 +334,9 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             parallel: crate::parallel::ParallelConfig::default(),
             residency_budget_bytes: None,
+            retry: crate::shardstore::RetryPolicy::default(),
+            fault: None,
+            expire_after: None,
         }
     }
 }
@@ -329,7 +353,11 @@ struct Pending {
     ids: Vec<i32>,
     mask: Vec<f32>,
     submitted: Instant,
-    resp: mpsc::Sender<ClassifyResponse>,
+    /// Per-request outcome channel: `Ok` with the classification, or `Err`
+    /// when the request was degraded away (executor panic/failure, shard
+    /// quarantine, queue expiry) — a submitter always hears back, it never
+    /// hangs on a dead request.
+    resp: mpsc::Sender<Result<ClassifyResponse>>,
 }
 
 struct WorkBatch {
@@ -418,6 +446,10 @@ pub struct Server {
     /// never touches the metrics mutex while holding the ingress lock.
     /// Folded into [`Metrics::batcher_polls`] on read.
     polls: Arc<AtomicUsize>,
+    /// Queued requests shed because they outlived `expire_after` before
+    /// batch formation (same lock-free pattern as `polls`). Folded into
+    /// [`Metrics::shed_expired`] on read.
+    expired: Arc<AtomicUsize>,
     /// Kept for metrics reads: shard-paging counters live in the executor's
     /// residency manager and are folded into [`Metrics`] on read.
     executor: Arc<dyn BatchExecutor>,
@@ -446,6 +478,7 @@ impl Server {
         let policy = BatchPolicy::new(executor.batch_sizes(), cfg.max_wait);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let polls = Arc::new(AtomicUsize::new(0));
+        let expired = Arc::new(AtomicUsize::new(0));
         let ingress = Arc::new(IngressQueue::new(cfg.queue_cap));
         // bounded work queue: when all workers are busy the batcher blocks
         // here, the ingress queue fills behind it, and `try_submit` starts
@@ -458,6 +491,8 @@ impl Server {
         let batcher = {
             let ingress = ingress.clone();
             let polls = polls.clone();
+            let expired = expired.clone();
+            let expire_after = cfg.expire_after;
             std::thread::Builder::new()
                 .name("sq-batcher".into())
                 .spawn(move || {
@@ -465,6 +500,34 @@ impl Server {
                         let batch = {
                             let mut st = lock_recover(&ingress.state);
                             loop {
+                                // dead-work shedding, before batch-shape
+                                // selection: a request that outlived its
+                                // expiry would only waste a batch slot —
+                                // fail it now so its submitter stops
+                                // waiting (distinct from ingress `shed`)
+                                if let Some(expiry) = expire_after {
+                                    let before = st.queue.len();
+                                    st.queue.retain(|p| {
+                                        if p.submitted.elapsed() <= expiry {
+                                            return true;
+                                        }
+                                        let _ = p.resp.send(Err(Error::Coordinator(
+                                            "expired in queue before dispatch".into(),
+                                        )));
+                                        false
+                                    });
+                                    let dropped = before - st.queue.len();
+                                    if dropped > 0 {
+                                        expired.fetch_add(dropped, Ordering::Relaxed);
+                                        crate::trace::instant(
+                                            crate::trace::Category::Request,
+                                            "shed-expired",
+                                            dropped as u64,
+                                            0,
+                                        );
+                                        ingress.not_full.notify_all();
+                                    }
+                                }
                                 let pending = st.queue.len();
                                 let decision = if st.open {
                                     let oldest = st
@@ -564,6 +627,7 @@ impl Server {
                                     "worker: batch tensor shape mismatch \
                                      (size={size}, max_len={max_len})"
                                 );
+                                respond_all_err(requests, "batch tensor shape mismatch");
                                 continue;
                             }
                         };
@@ -579,15 +643,41 @@ impl Server {
                             size as u64,
                         );
                         let t0 = Instant::now();
-                        let labels = match executor.classify(&ids, &mask, size) {
-                            Ok(l) => l,
-                            Err(e) => {
+                        // panic containment at the batch boundary: a
+                        // panicking executor (kernel bug, poisoned state)
+                        // degrades this batch's requests to errors and the
+                        // worker re-arms for the next batch — the process
+                        // never dies on a request
+                        let outcome = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                executor.classify(&ids, &mask, size)
+                            }),
+                        );
+                        let exec = t0.elapsed();
+                        drop(exec_sp);
+                        let labels = match outcome {
+                            Ok(Ok(l)) => l,
+                            Ok(Err(e)) => {
                                 log::error!("worker: classify failed: {e}");
+                                respond_all_err(requests, &format!("classify failed: {e}"));
+                                continue;
+                            }
+                            Err(_) => {
+                                log::error!(
+                                    "worker: executor panicked on a batch of {real} \
+                                     request(s); worker re-armed"
+                                );
+                                lock_recover(&metrics).exec_panics += 1;
+                                crate::trace::instant(
+                                    crate::trace::Category::Batch,
+                                    "exec-panic",
+                                    real as u64,
+                                    size as u64,
+                                );
+                                respond_all_err(requests, "executor panicked on this batch");
                                 continue;
                             }
                         };
-                        let exec = t0.elapsed();
-                        drop(exec_sp);
                         let fault_ns = executor
                             .residency()
                             .map(|c| c.fault_ns)
@@ -614,20 +704,25 @@ impl Server {
                             real as u64,
                             size as u64,
                         );
+                        if labels.len() < real {
+                            log::error!(
+                                "worker: executor returned {} labels for {real} requests",
+                                labels.len()
+                            );
+                        }
                         for (i, p) in requests.into_iter().enumerate() {
-                            let Some(&label) = labels.get(i) else {
-                                log::error!(
-                                    "worker: executor returned {} labels for {real} \
-                                     requests",
+                            let resp = match labels.get(i) {
+                                Some(&label) => Ok(ClassifyResponse {
+                                    label,
+                                    batch_size: size,
+                                    latency: p.submitted.elapsed(),
+                                }),
+                                None => Err(Error::Coordinator(format!(
+                                    "executor returned {} labels for {real} requests",
                                     labels.len()
-                                );
-                                break;
+                                ))),
                             };
-                            let _ = p.resp.send(ClassifyResponse {
-                                label,
-                                batch_size: size,
-                                latency: p.submitted.elapsed(),
-                            });
+                            let _ = p.resp.send(resp);
                         }
                         drop(resp_sp);
                     })
@@ -641,6 +736,7 @@ impl Server {
             tokenizer,
             metrics,
             polls,
+            expired,
             executor,
             batcher: Some(batcher),
             workers,
@@ -650,7 +746,9 @@ impl Server {
     /// Non-blocking submit with admission control: rejects immediately when
     /// the ingress queue is at capacity (load shedding; the shed count is
     /// visible in [`Metrics`]). Use under open-loop load (trace replay).
-    pub fn try_submit(&self, text: &str) -> Result<mpsc::Receiver<ClassifyResponse>> {
+    /// The receiver yields `Err` when the request was degraded away
+    /// (executor panic/failure, quarantined shard, queue expiry).
+    pub fn try_submit(&self, text: &str) -> Result<mpsc::Receiver<Result<ClassifyResponse>>> {
         let (ids, mask) = self.tokenizer.encode(text);
         let (rtx, rrx) = mpsc::channel();
         let req = Pending { ids, mask, submitted: Instant::now(), resp: rtx };
@@ -671,8 +769,10 @@ impl Server {
     }
 
     /// Submit a text; returns a receiver for the response. Blocks while the
-    /// ingress queue is full (backpressure).
-    pub fn submit(&self, text: &str) -> Result<mpsc::Receiver<ClassifyResponse>> {
+    /// ingress queue is full (backpressure). The receiver yields `Err` when
+    /// the request was degraded away (executor panic/failure, quarantined
+    /// shard, queue expiry) — it never hangs on a dead request.
+    pub fn submit(&self, text: &str) -> Result<mpsc::Receiver<Result<ClassifyResponse>>> {
         let (ids, mask) = self.tokenizer.encode(text);
         let (rtx, rrx) = mpsc::channel();
         let req = Pending { ids, mask, submitted: Instant::now(), resp: rtx };
@@ -687,12 +787,13 @@ impl Server {
     pub fn classify(&self, text: &str) -> Result<ClassifyResponse> {
         self.submit(text)?
             .recv()
-            .map_err(|_| Error::Coordinator("response channel closed".into()))
+            .map_err(|_| Error::Coordinator("response channel closed".into()))?
     }
 
     pub fn metrics(&self) -> Metrics {
         let mut m = lock_recover(&self.metrics).clone();
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
+        m.shed_expired = self.expired.load(Ordering::Relaxed);
         fold_residency(&mut m, &*self.executor);
         m
     }
@@ -719,6 +820,7 @@ impl Server {
             .map(into_inner_recover)
             .unwrap_or_else(|arc| lock_recover(&arc).clone());
         m.batcher_polls = self.polls.load(Ordering::Relaxed);
+        m.shed_expired = self.expired.load(Ordering::Relaxed);
         fold_residency(&mut m, &*self.executor);
         m
     }
@@ -756,6 +858,15 @@ fn lifecycle_events(requests: &[Pending], formed: Instant, exec_start: Instant, 
     }
 }
 
+/// Degradation path: answer every request of a failed batch with an
+/// [`Error::Coordinator`] response — affected requests error, waiting
+/// submitters never hang, the process never dies.
+fn respond_all_err(requests: Vec<Pending>, msg: &str) {
+    for p in requests {
+        let _ = p.resp.send(Err(Error::Coordinator(msg.to_string())));
+    }
+}
+
 /// Copy the executor's shard-paging and plane-cache counters (if any) into
 /// a metrics snapshot — that state lives in the executor, not the server.
 fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
@@ -763,6 +874,9 @@ fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
         m.shard_faults = c.shard_faults;
         m.shard_evictions = c.shard_evictions;
         m.bytes_paged_in = c.bytes_paged_in;
+        m.integrity_failures = c.integrity_failures;
+        m.io_retries = c.io_retries;
+        m.shards_quarantined = c.shards_quarantined;
     }
     if let Some((decodes, reuses)) = ex.plane_stats() {
         m.plane_decodes = decodes;
@@ -848,7 +962,7 @@ mod tests {
         let rxs: Vec<_> =
             (0..50).map(|i| server.submit(&format!("message number {i}")).unwrap()).collect();
         for rx in rxs {
-            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
             assert!((0..6).contains(&r.label));
         }
         let m = server.shutdown();
@@ -882,7 +996,7 @@ mod tests {
         let rxs: Vec<_> =
             (0..10).map(|i| server.submit(&format!("breakdown {i}")).unwrap()).collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         let text = server.telemetry_text();
         assert!(text.contains("splitquant_requests_completed_total 10"), "{text}");
@@ -976,7 +1090,7 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.completed, 3);
         for rx in rxs {
-            assert!(rx.try_recv().is_ok());
+            assert!(rx.try_recv().expect("response present").is_ok());
         }
     }
 
@@ -1024,7 +1138,7 @@ mod tests {
         let rxs: Vec<_> =
             (0..9).map(|i| server.submit(&format!("padded {i}")).unwrap()).collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         let m = server.shutdown();
         assert_eq!(m.completed, 9);
@@ -1034,5 +1148,88 @@ mod tests {
             "padding overhead too high: executed {executed} for {} real",
             m.real_slots
         );
+    }
+
+    /// Executor that panics on its first `remaining_panics` classify calls,
+    /// then serves label 0 — exercises the worker's panic containment.
+    struct PanickyExecutor {
+        remaining_panics: AtomicUsize,
+        sizes: Vec<usize>,
+    }
+
+    impl BatchExecutor for PanickyExecutor {
+        fn classify(&self, _ids: &IntTensor, _mask: &Tensor, batch: usize) -> Result<Vec<i32>> {
+            if self
+                .remaining_panics
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+                .is_ok()
+            {
+                panic!("injected executor panic");
+            }
+            Ok(vec![0; batch])
+        }
+
+        fn batch_sizes(&self) -> Vec<usize> {
+            self.sizes.clone()
+        }
+    }
+
+    #[test]
+    fn executor_panic_degrades_to_errors_and_the_server_survives() {
+        let ex = Arc::new(PanickyExecutor {
+            remaining_panics: AtomicUsize::new(1),
+            sizes: vec![1, 4, 8],
+        });
+        let tok = HashTokenizer::new(512, 16);
+        let server = Server::start(
+            ex,
+            tok,
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_cap: 64,
+                ..ServeConfig::default()
+            },
+        );
+        // first batch hits the injected panic: its request errors instead
+        // of hanging, and the worker re-arms
+        let err = server.classify("first request").unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        // the very next request is served normally by the same worker
+        let ok = server.classify("second request").unwrap();
+        assert_eq!(ok.label, 0);
+        let m = server.shutdown();
+        assert_eq!(m.exec_panics, 1);
+        assert_eq!(m.completed, 1);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_before_batch_formation() {
+        let (ex, tok) = rust_executor();
+        let server = Server::start(
+            ex,
+            tok,
+            // expiry far below the batching window: every queued request
+            // outlives it before the deadline dispatch can form a batch
+            ServeConfig {
+                max_wait: Duration::from_millis(40),
+                workers: 1,
+                queue_cap: 64,
+                expire_after: Some(Duration::from_millis(5)),
+                ..ServeConfig::default()
+            },
+        );
+        let rxs: Vec<_> =
+            (0..3).map(|i| server.submit(&format!("stale {i}")).unwrap()).collect();
+        for rx in rxs {
+            // the submitter hears back with an error — it does not hang
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            let err = resp.unwrap_err();
+            assert!(format!("{err}").contains("expired"), "{err}");
+        }
+        let m = server.shutdown();
+        assert_eq!(m.shed_expired, 3);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.shed, 0, "queue expiry must not count as ingress shedding");
     }
 }

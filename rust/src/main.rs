@@ -9,6 +9,7 @@
 //!   verify-runtime  cross-check pure-Rust executor vs PJRT executables
 //!   lint            sq-lint the source tree (invariant linter)
 //!   trace           traced self-contained paged serving run (telemetry demo)
+//!   shard-verify    offline shard integrity check (CRC every record)
 //!   info            print manifest / artifact inventory
 //!
 //! (Hand-rolled arg parsing: the offline registry has no clap.)
@@ -100,6 +101,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "verify-runtime" => cmd_verify(&flags),
         "lint" => cmd_lint(&flags),
         "trace" => cmd_trace(&flags),
+        "shard-verify" => cmd_shard_verify(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -133,6 +135,8 @@ fn print_usage() {
                            determinism / concurrency contracts (sq-lint)\n\
            trace           [--requests N] [--out trace.json]   traced paged serving\n\
                            run: Prometheus text to stdout, Chrome JSON to --out\n\
+           shard-verify    --shards F.sqsh [--demo-out F.sqsh]   offline shard\n\
+                           integrity check: CRC-verify and parse every record\n\
            info\n\n\
          common flags: --artifacts DIR (default ./artifacts)"
     );
@@ -537,7 +541,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .collect::<Result<Vec<_>>>()?;
     let mut ok = 0;
     for rx in rxs {
-        if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+        if rx.recv_timeout(Duration::from_secs(60)).is_ok_and(|r| r.is_ok()) {
             ok += 1;
         }
     }
@@ -650,6 +654,7 @@ fn cmd_trace(flags: &Flags) -> Result<()> {
         // a budget below the pagable payload so the run exercises the
         // fault / prefetch / eviction events, not just the hit path
         residency_budget_bytes: Some((pagable * 35 / 100).max(1)),
+        ..ServeConfig::default()
     };
     let exec = Arc::new(QuantExecutor::paged(cfg.clone(), &shards, vec![1, 8], &serve_cfg)?);
     let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
@@ -665,7 +670,7 @@ fn cmd_trace(flags: &Flags) -> Result<()> {
         i += window;
         for rx in rxs {
             rx.recv_timeout(Duration::from_secs(60))
-                .map_err(|_| splitquant::Error::Coordinator("trace run timeout".into()))?;
+                .map_err(|_| splitquant::Error::Coordinator("trace run timeout".into()))??;
             done += 1;
         }
     }
@@ -681,6 +686,63 @@ fn cmd_trace(flags: &Flags) -> Result<()> {
         out.display()
     );
     std::fs::remove_file(&shards).ok();
+    Ok(())
+}
+
+/// `splitquant shard-verify`: offline shard integrity check — open a
+/// `.sqsh` file and fault in **every** record through the CRC-verified
+/// read path (the same [`splitquant::shardstore::ShardReader`] the paged
+/// server uses). A truncated header, header-checksum mismatch or corrupt
+/// record payload surfaces as a clean non-zero exit, never a panic — the
+/// contract the CI `chaos-smoke` lane pins by flipping a byte on disk.
+///
+/// `--demo-out F.sqsh` first writes a small random quantized model as a
+/// v2 sharded file (pure Rust, no artifacts needed) and then verifies it —
+/// the fixture generator for that same CI lane.
+fn cmd_shard_verify(flags: &Flags) -> Result<()> {
+    use splitquant::model::config::BertConfig;
+    use splitquant::quant::PackedModel;
+    use splitquant::shardstore::{ShardData, ShardReader};
+    use splitquant::splitquant::{default_quantizable, quantize_store};
+
+    let path = match flags.0.get("demo-out") {
+        Some(p) => {
+            let cfg = BertConfig {
+                vocab_size: 512,
+                hidden: 16,
+                layers: 2,
+                heads: 2,
+                ffn: 32,
+                max_len: 16,
+                num_classes: 6,
+                ln_eps: 1e-12,
+            };
+            let mut rng = Rng::new(7);
+            let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+            let quantizable = default_quantizable(&store);
+            let (_, qm) = quantize_store(&store, &quantizable, &SplitQuantConfig::new(2))?;
+            let pm = PackedModel::assemble(&store, &qm);
+            pm.save_sharded(Path::new(p))?;
+            println!("[shard-verify] wrote demo shards -> {p}");
+            PathBuf::from(p)
+        }
+        None => PathBuf::from(flags.get("shards", "model.sqsh")),
+    };
+    let reader = ShardReader::open(&path)?;
+    let mut quant = 0usize;
+    let mut fp32 = 0usize;
+    for name in reader.names() {
+        match reader.read(name)? {
+            ShardData::Quant(_) => quant += 1,
+            ShardData::Fp32(_) => fp32 += 1,
+        }
+    }
+    println!(
+        "[shard-verify] {}: {} records ok ({quant} quantized, {fp32} fp32), {} payload",
+        path.display(),
+        quant + fp32,
+        splitquant::report::bytes(reader.payload_bytes())
+    );
     Ok(())
 }
 

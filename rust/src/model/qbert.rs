@@ -668,7 +668,7 @@ mod tests {
         drop(probe);
         let paged = PagedModel::open(
             &path,
-            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1 },
+            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1, ..Default::default() },
         )
         .unwrap();
         let qbert = QuantizedBert::from_paged(cfg.clone(), paged.clone()).unwrap();

@@ -28,7 +28,7 @@ pub mod pool;
 
 use std::sync::OnceLock;
 
-pub use pool::WorkerPool;
+pub use pool::{PoolPanic, WorkerPool};
 
 /// Which micro-kernel family the engine executes.
 ///

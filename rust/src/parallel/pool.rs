@@ -110,16 +110,33 @@ impl WorkerPool {
     /// borrow from the caller's stack: the blocking wait is what makes the
     /// internal lifetime erasure sound. Panics if any task panicked.
     pub fn scope<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if self.try_scope(tasks).is_err() {
+            // sq-lint: allow(no-panic-in-serving) — deliberate re-raise: a task panic must surface on the submitting thread, not vanish in a worker (tests pin this contract)
+            panic!("parallel: a pool task panicked");
+        }
+    }
+
+    /// [`WorkerPool::scope`] for callers that must outlive task panics —
+    /// the serving coordinator's degradation path. All tasks still run to
+    /// completion (the latch waits for every one, panicked or not, so the
+    /// borrow-soundness contract is identical), but a panic comes back as
+    /// `Err` instead of unwinding the submitting thread; the pool itself is
+    /// unharmed and the next scope runs normally.
+    pub fn try_scope<'a>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'a>>,
+    ) -> std::result::Result<(), PoolPanic> {
         if tasks.is_empty() {
-            return;
+            return Ok(());
         }
         let latch = Arc::new(Latch::new(tasks.len()));
         {
             let mut q = lock_recover(&self.shared.queue);
             for task in tasks {
-                // SAFETY: `scope` does not return until `latch.wait()` has
-                // observed every task complete, so the borrows captured in
-                // `task` are live for the whole time the pool can touch it.
+                // SAFETY: `try_scope` does not return until `latch.wait()`
+                // has observed every task complete, so the borrows captured
+                // in `task` are live for the whole time the pool can touch
+                // it.
                 let task: Job = unsafe {
                     std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Job>(task)
                 };
@@ -133,11 +150,26 @@ impl WorkerPool {
         self.shared.available.notify_all();
         latch.wait();
         if latch.panicked.load(Ordering::SeqCst) {
-            // sq-lint: allow(no-panic-in-serving) — deliberate re-raise: a task panic must surface on the submitting thread, not vanish in a worker (tests pin this contract)
-            panic!("parallel: a pool task panicked");
+            Err(PoolPanic)
+        } else {
+            Ok(())
         }
     }
 }
+
+/// At least one task submitted to a [`WorkerPool::try_scope`] panicked. The
+/// panic payload was consumed on the worker; the scope's remaining tasks all
+/// ran to completion before this was returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolPanic;
+
+impl std::fmt::Display for PoolPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a pool task panicked")
+    }
+}
+
+impl std::error::Error for PoolPanic {}
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
@@ -266,5 +298,43 @@ mod tests {
     fn empty_scope_is_a_noop() {
         let pool = WorkerPool::new(1);
         pool.scope(Vec::new());
+        assert!(pool.try_scope(Vec::new()).is_ok());
+    }
+
+    #[test]
+    fn try_scope_reports_panic_without_unwinding() {
+        let pool = WorkerPool::new(2);
+        let survivors = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("boom")),
+            Box::new(|| {
+                survivors.fetch_add(1, Ordering::SeqCst);
+            }),
+            Box::new(|| {
+                survivors.fetch_add(1, Ordering::SeqCst);
+            }),
+        ];
+        assert_eq!(pool.try_scope(tasks), Err(PoolPanic));
+        // sibling tasks of the panicking one still ran to completion
+        assert_eq!(survivors.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn pool_serves_the_next_batch_after_a_poisoned_one() {
+        let pool = WorkerPool::new(2);
+        let poisoned: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("boom")), Box::new(|| {})];
+        assert!(pool.try_scope(poisoned).is_err());
+        // the pool is unharmed: the next scope runs every task
+        let counter = AtomicUsize::new(0);
+        let next: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        assert!(pool.try_scope(next).is_ok());
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 }

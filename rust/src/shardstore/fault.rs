@@ -1,0 +1,529 @@
+//! Deterministic fault injection and bounded retry for the shard IO path.
+//!
+//! Serving survives disks, not the other way round: a flipped bit or a
+//! transient `EIO` on the paged path must degrade one request, never the
+//! process, and every failure mode must be reproducible in a test. This
+//! module provides the three pieces:
+//!
+//! * [`ShardIo`] — the seam all raw shard reads go through.
+//!   [`crate::shardstore::ShardReader`] is the real implementation;
+//!   [`crate::shardstore::PagedModel`] holds a `dyn ShardIo` so a decorator
+//!   can slot in between the reader and the residency layer.
+//! * [`FaultyIo`] — a seeded decorator that injects IO errors, short reads,
+//!   byte corruption and latency stalls on a schedule derived from
+//!   [`crate::util::rng`]. The schedule is a pure function of
+//!   `(seed, shard name, per-shard read number)`, so concurrent worker
+//!   interleavings cannot change which reads fail — the chaos tests replay
+//!   the exact same faults every run. Not constructed at all in production
+//!   (the decorator is only installed when a [`FaultConfig`] is given), so
+//!   the fault-free path pays nothing.
+//! * [`RetryPolicy`] — bounded retry with exponential backoff, the contract
+//!   the paged model applies around every shard read: re-read on checksum
+//!   mismatch or transient error, give up (and quarantine the shard) after
+//!   `max_attempts`. The sleep is injectable, so tests assert the exact
+//!   backoff sequence with a recording clock and zero real sleeping.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::shardstore::format::ShardReader;
+use crate::util::rng::Rng;
+use crate::util::sync::lock_recover;
+
+/// The raw shard-read seam: everything the paged path reads from disk comes
+/// through here as undecoded record bytes (CRC verification and parsing
+/// happen above, in [`ShardReader::decode`], so injected corruption is
+/// caught exactly like real corruption).
+pub trait ShardIo: Send + Sync + std::fmt::Debug {
+    /// Read the raw (undecoded) bytes of shard `name`.
+    fn read_raw(&self, name: &str) -> Result<Vec<u8>>;
+}
+
+impl ShardIo for ShardReader {
+    fn read_raw(&self, name: &str) -> Result<Vec<u8>> {
+        ShardReader::read_raw(self, name)
+    }
+}
+
+/// Shared handles are first-class IO sources: the paged model keeps one
+/// `Arc<ShardReader>` and hands a clone to the decorator.
+impl<T: ShardIo + ?Sized> ShardIo for Arc<T> {
+    fn read_raw(&self, name: &str) -> Result<Vec<u8>> {
+        (**self).read_raw(name)
+    }
+}
+
+/// What [`FaultyIo`] injects and how often. All rates are per-read
+/// probabilities in `[0, 1]`, drawn independently in the fixed order
+/// error → short read → corruption → stall (the first hit wins). The
+/// default injects nothing.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Seed for the deterministic fault schedule.
+    pub seed: u64,
+    /// Probability a read fails outright with an injected IO error.
+    pub error_rate: f64,
+    /// Probability a read returns fewer bytes than the record holds (the
+    /// CRC layer must catch the truncation).
+    pub short_read_rate: f64,
+    /// Probability one byte of the returned record is flipped (the CRC
+    /// layer must catch the corruption).
+    pub corrupt_rate: f64,
+    /// Probability a read stalls for [`FaultConfig::stall`] before
+    /// succeeding (models a slow disk, exercises tail latency — never an
+    /// error).
+    pub stall_rate: f64,
+    /// Injected latency when a stall fires.
+    pub stall: Duration,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            error_rate: 0.0,
+            short_read_rate: 0.0,
+            corrupt_rate: 0.0,
+            stall_rate: 0.0,
+            stall: Duration::from_millis(1),
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Convenience for the serve-example knobs: the same `rate` for each
+    /// failing fault kind (errors, short reads, corruption), no stalls.
+    pub fn uniform(seed: u64, rate: f64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            error_rate: rate,
+            short_read_rate: rate,
+            corrupt_rate: rate,
+            ..FaultConfig::default()
+        }
+    }
+
+    /// Whether this config can ever inject anything.
+    pub fn is_noop(&self) -> bool {
+        self.error_rate <= 0.0
+            && self.short_read_rate <= 0.0
+            && self.corrupt_rate <= 0.0
+            && self.stall_rate <= 0.0
+    }
+}
+
+/// Counts of what a [`FaultyIo`] actually injected — the ground truth the
+/// chaos tests reconcile the serving metrics against
+/// (`integrity_failures == short_reads + corruptions`, and every injected
+/// failure is either retried or ends in a quarantine).
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    io_errors: AtomicU64,
+    short_reads: AtomicU64,
+    corruptions: AtomicU64,
+    stalls: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn io_errors(&self) -> u64 {
+        self.io_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn short_reads(&self) -> u64 {
+        self.short_reads.load(Ordering::Relaxed)
+    }
+
+    pub fn corruptions(&self) -> u64 {
+        self.corruptions.load(Ordering::Relaxed)
+    }
+
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Injected *failures* (stalls succeed, so they are excluded).
+    pub fn injected_failures(&self) -> u64 {
+        self.io_errors() + self.short_reads() + self.corruptions()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    Error,
+    ShortRead,
+    Corrupt,
+    Stall,
+}
+
+/// Seeded fault-injecting [`ShardIo`] decorator. See the module docs for
+/// the determinism contract; see [`FaultConfig`] for the knobs.
+#[derive(Debug)]
+pub struct FaultyIo<I> {
+    inner: I,
+    cfg: FaultConfig,
+    stats: Arc<FaultStats>,
+    /// Per-shard read sequence numbers. The schedule keys on
+    /// `(seed, name, k)` — not on a global call counter — so cross-thread
+    /// interleaving of different shards cannot perturb it.
+    seq: Mutex<HashMap<String, u64>>,
+}
+
+impl<I> FaultyIo<I> {
+    pub fn new(inner: I, cfg: FaultConfig) -> FaultyIo<I> {
+        FaultyIo {
+            inner,
+            cfg,
+            stats: Arc::new(FaultStats::default()),
+            seq: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Handle to the injection counters (shared, updated live).
+    pub fn stats(&self) -> Arc<FaultStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The deterministic per-read RNG: forked from the seed by shard name
+    /// and per-shard read number only.
+    fn rng(&self, name: &str, k: u64) -> Rng {
+        Rng::new(self.cfg.seed ^ name_tag(name)).fork(k)
+    }
+
+    fn decide(&self, rng: &mut Rng) -> Option<Fault> {
+        // fixed draw order keeps the schedule stable when one rate changes
+        if rng.chance(self.cfg.error_rate) {
+            return Some(Fault::Error);
+        }
+        if rng.chance(self.cfg.short_read_rate) {
+            return Some(Fault::ShortRead);
+        }
+        if rng.chance(self.cfg.corrupt_rate) {
+            return Some(Fault::Corrupt);
+        }
+        if rng.chance(self.cfg.stall_rate) {
+            return Some(Fault::Stall);
+        }
+        None
+    }
+}
+
+/// FNV-1a of the shard name — folds the name into the schedule seed.
+fn name_tag(name: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl<I: ShardIo> ShardIo for FaultyIo<I> {
+    fn read_raw(&self, name: &str) -> Result<Vec<u8>> {
+        let k = {
+            let mut seq = lock_recover(&self.seq);
+            let e = seq.entry(name.to_string()).or_insert(0);
+            let k = *e;
+            *e += 1;
+            k
+        };
+        let mut rng = self.rng(name, k);
+        match self.decide(&mut rng) {
+            None => self.inner.read_raw(name),
+            Some(Fault::Error) => {
+                self.stats.io_errors.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Io(std::io::Error::other(format!(
+                    "injected IO error on shard {name:?} (read #{k})"
+                ))))
+            }
+            Some(Fault::ShortRead) => {
+                let mut buf = self.inner.read_raw(name)?;
+                if buf.is_empty() {
+                    return Ok(buf);
+                }
+                self.stats.short_reads.fetch_add(1, Ordering::Relaxed);
+                let keep = rng.below(buf.len());
+                buf.truncate(keep);
+                Ok(buf)
+            }
+            Some(Fault::Corrupt) => {
+                let mut buf = self.inner.read_raw(name)?;
+                if buf.is_empty() {
+                    return Ok(buf);
+                }
+                self.stats.corruptions.fetch_add(1, Ordering::Relaxed);
+                let at = rng.below(buf.len());
+                let bit = rng.below(8) as u8;
+                if let Some(b) = buf.get_mut(at) {
+                    *b ^= 1 << bit;
+                }
+                Ok(buf)
+            }
+            Some(Fault::Stall) => {
+                self.stats.stalls.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.cfg.stall);
+                self.inner.read_raw(name)
+            }
+        }
+    }
+}
+
+/// Bounded retry with exponential backoff — the contract the paged model
+/// applies around shard reads.
+///
+/// Attempt `1` runs immediately; before re-attempt `r` (`2..=max_attempts`)
+/// the caller sleeps [`RetryPolicy::backoff`]`(r - 1)` =
+/// `min(cap, base · 2^(r-2))`. No jitter: the serving stack's determinism
+/// contract extends to its failure handling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts, the first one included. `1` means no retries; `0`
+    /// is treated as `1` (at least one attempt always runs).
+    pub max_attempts: u32,
+    /// Backoff before the first re-attempt.
+    pub base: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    /// 3 attempts, 500µs base, 20ms cap — a transient hiccup costs
+    /// microseconds, a dead shard is declared within ~1 batch window.
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_micros(500),
+            cap: Duration::from_millis(20),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before re-attempt number `retry` (1-based):
+    /// `min(cap, base · 2^(retry-1))`.
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let exp = retry.saturating_sub(1).min(31);
+        self.base.saturating_mul(1u32 << exp).min(self.cap)
+    }
+
+    /// Drive `attempt` (called with the 1-based attempt number) until it
+    /// succeeds or `max_attempts` is exhausted, sleeping the deterministic
+    /// backoff between tries via `sleep`. The sleep is injectable so tests
+    /// run on a recording clock; production passes `std::thread::sleep`.
+    /// A first-try success calls `sleep` zero times.
+    pub fn run<T>(
+        &self,
+        mut sleep: impl FnMut(Duration),
+        mut attempt: impl FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let max = self.max_attempts.max(1);
+        let mut tried = 0u32;
+        // sq-lint: allow(bounded-retry) — this IS the bounded-retry primitive: `tried` counts up to `max` (= max_attempts) and the Err arm below returns when it is reached
+        loop {
+            tried += 1;
+            match attempt(tried) {
+                Ok(v) => return Ok(v),
+                Err(e) if tried >= max => return Err(e),
+                Err(_) => sleep(self.backoff(tried)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An in-memory ShardIo for decorator tests: every name reads the same
+    /// payload.
+    #[derive(Debug)]
+    struct MemIo(Vec<u8>);
+
+    impl ShardIo for MemIo {
+        fn read_raw(&self, _name: &str) -> Result<Vec<u8>> {
+            Ok(self.0.clone())
+        }
+    }
+
+    #[test]
+    fn backoff_sequence_is_exact_and_capped() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(9),
+        };
+        let got: Vec<Duration> = (1..=5).map(|r| p.backoff(r)).collect();
+        let want = [
+            Duration::from_millis(2),
+            Duration::from_millis(4),
+            Duration::from_millis(8),
+            Duration::from_millis(9), // 16ms hits the 9ms cap
+            Duration::from_millis(9),
+        ];
+        assert_eq!(got, want);
+        // enormous retry numbers must not overflow past the cap
+        assert_eq!(p.backoff(1000), Duration::from_millis(9));
+    }
+
+    #[test]
+    fn run_sleeps_exact_backoffs_then_succeeds() {
+        let p = RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(100),
+        };
+        let mut slept: Vec<Duration> = Vec::new();
+        let mut calls = 0u32;
+        let out = p.run(
+            |d| slept.push(d),
+            |k| {
+                calls += 1;
+                assert_eq!(k, calls, "attempt numbering");
+                if k < 3 {
+                    Err(Error::Coordinator("transient".into()))
+                } else {
+                    Ok(k)
+                }
+            },
+        );
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!(calls, 3);
+        assert_eq!(slept, vec![Duration::from_millis(1), Duration::from_millis(2)]);
+    }
+
+    #[test]
+    fn run_zero_sleeps_on_first_try_success() {
+        let p = RetryPolicy::default();
+        let mut sleeps = 0usize;
+        let out = p.run(|_| sleeps += 1, |_| Ok(42));
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(sleeps, 0, "first-try success must not sleep");
+    }
+
+    #[test]
+    fn run_exhausts_at_max_attempts() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(100),
+        };
+        let mut slept: Vec<Duration> = Vec::new();
+        let mut calls = 0u32;
+        let out: Result<()> = p.run(
+            |d| slept.push(d),
+            |_| {
+                calls += 1;
+                Err(Error::Coordinator("still down".into()))
+            },
+        );
+        assert!(out.is_err());
+        assert_eq!(calls, 3, "must stop exactly at max_attempts");
+        // the final failure is not followed by a sleep
+        assert_eq!(slept, vec![Duration::from_millis(1), Duration::from_millis(2)]);
+    }
+
+    #[test]
+    fn zero_max_attempts_still_runs_once() {
+        let p = RetryPolicy { max_attempts: 0, ..RetryPolicy::default() };
+        let mut calls = 0u32;
+        let out: Result<()> = p.run(
+            |_| {},
+            |_| {
+                calls += 1;
+                Err(Error::Coordinator("down".into()))
+            },
+        );
+        assert!(out.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn faulty_io_schedule_is_deterministic() {
+        let cfg = FaultConfig::uniform(42, 0.3);
+        let payload: Vec<u8> = (0u8..64).collect();
+        let run = || {
+            let io = FaultyIo::new(MemIo(payload.clone()), cfg.clone());
+            let mut outcomes = Vec::new();
+            for name in ["a", "b", "c"] {
+                for _ in 0..32 {
+                    outcomes.push(match io.read_raw(name) {
+                        Ok(buf) => format!("ok:{}:{:08x}", buf.len(), crate::util::crc32::crc32(&buf)),
+                        Err(e) => format!("err:{e}"),
+                    });
+                }
+            }
+            let s = io.stats();
+            (outcomes, s.io_errors(), s.short_reads(), s.corruptions())
+        };
+        let (o1, e1, s1, c1) = run();
+        let (o2, e2, s2, c2) = run();
+        assert_eq!(o1, o2, "fault schedule not reproducible");
+        assert_eq!((e1, s1, c1), (e2, s2, c2));
+        assert!(e1 + s1 + c1 > 0, "0.3 rates over 96 reads injected nothing");
+    }
+
+    #[test]
+    fn faulty_io_schedule_survives_interleaving() {
+        // the k-th read of a given shard gets the same outcome no matter
+        // how reads of other shards interleave with it
+        let cfg = FaultConfig::uniform(7, 0.4);
+        let payload: Vec<u8> = (0u8..32).collect();
+        let outcome = |io: &FaultyIo<MemIo>, name: &str| match io.read_raw(name) {
+            Ok(buf) => format!("ok:{buf:?}"),
+            Err(_) => "err".to_string(),
+        };
+        let io1 = FaultyIo::new(MemIo(payload.clone()), cfg.clone());
+        let a_then_b: Vec<String> = {
+            let mut v: Vec<String> = (0..16).map(|_| outcome(&io1, "a")).collect();
+            v.extend((0..16).map(|_| outcome(&io1, "b")));
+            v
+        };
+        let io2 = FaultyIo::new(MemIo(payload), cfg);
+        let interleaved: Vec<String> = {
+            let pairs: Vec<(String, String)> =
+                (0..16).map(|_| (outcome(&io2, "a"), outcome(&io2, "b"))).collect();
+            let mut a: Vec<String> = pairs.iter().map(|(x, _)| x.clone()).collect();
+            a.extend(pairs.into_iter().map(|(_, y)| y));
+            a
+        };
+        assert_eq!(a_then_b, interleaved);
+    }
+
+    #[test]
+    fn noop_config_injects_nothing() {
+        assert!(FaultConfig::default().is_noop());
+        let io = FaultyIo::new(MemIo(vec![1, 2, 3]), FaultConfig::default());
+        for _ in 0..100 {
+            assert_eq!(io.read_raw("x").unwrap(), vec![1, 2, 3]);
+        }
+        assert_eq!(io.stats().injected_failures(), 0);
+        assert_eq!(io.stats().stalls(), 0);
+    }
+
+    #[test]
+    fn corruption_always_changes_the_payload() {
+        let payload: Vec<u8> = (0u8..64).collect();
+        let cfg = FaultConfig { seed: 3, corrupt_rate: 1.0, ..FaultConfig::default() };
+        let io = FaultyIo::new(MemIo(payload.clone()), cfg);
+        for _ in 0..64 {
+            let got = io.read_raw("w").unwrap();
+            assert_eq!(got.len(), payload.len());
+            assert_ne!(got, payload, "corruption fault returned clean bytes");
+        }
+        assert_eq!(io.stats().corruptions(), 64);
+    }
+
+    #[test]
+    fn short_read_always_shortens() {
+        let payload: Vec<u8> = (0u8..64).collect();
+        let cfg = FaultConfig { seed: 5, short_read_rate: 1.0, ..FaultConfig::default() };
+        let io = FaultyIo::new(MemIo(payload.clone()), cfg);
+        for _ in 0..64 {
+            let got = io.read_raw("w").unwrap();
+            assert!(got.len() < payload.len(), "short read returned {} bytes", got.len());
+        }
+        assert_eq!(io.stats().short_reads(), 64);
+    }
+}

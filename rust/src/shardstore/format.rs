@@ -1,7 +1,9 @@
-//! The sharded `SQSH0001` on-disk format: an `SQQM0001` payload re-framed
-//! behind a per-tensor offset index so any single layer's record (packed
-//! codes + cid plane + params, or an FP32 remainder tensor) can be read
-//! with one seek + one read, independently of the rest of the file.
+//! The sharded on-disk formats: an `SQQM0001` payload re-framed behind a
+//! per-tensor offset index so any single layer's record (packed codes + cid
+//! plane + params, or an FP32 remainder tensor) can be read with one seek +
+//! one read, independently of the rest of the file.
+//!
+//! Version 1 (`SQSH0001`, read-compatible):
 //!
 //! ```text
 //! magic "SQSH0001"
@@ -17,6 +19,28 @@
 //!   quantized: shape, layout tag (+axis / +cid plane), params, codes
 //!   fp32:      shape, raw f32 LE payload
 //! ```
+//!
+//! Version 2 (`SQSH0002`, what [`write_sharded`] emits): identical layout
+//! with end-to-end integrity added — a flipped bit on disk must fail a
+//! read, never silently dequantize garbage into logits.
+//!
+//! ```text
+//! magic "SQSH0002"
+//! u8    bits
+//! u32   n_entries
+//! index, per entry:                (as v1, plus:)
+//!   …name kind rank dims offset len
+//!   u32        crc                 (CRC-32/ISO-HDLC of the record bytes)
+//! u32   header_crc                 (CRC-32 of every header byte above,
+//!                                   magic through the last index entry)
+//! records, concatenated:           (byte-identical to v1)
+//! ```
+//!
+//! The header checksum is verified at [`ShardReader::open`]; each record
+//! CRC is verified on **every** read — demand fault and prefetch alike —
+//! before the bytes are parsed ([`ShardReader::decode`]). v1 files still
+//! open and read byte-compatibly, with no CRCs to check
+//! ([`ShardIndexEntry::crc`] is `None`).
 //!
 //! Record encodings are byte-identical to the per-tensor sections of
 //! `SQQM0001` (shared helpers in [`crate::quant::serialize`]); the index is
@@ -35,10 +59,12 @@ use crate::quant::serialize::{
 };
 use crate::quant::{PackedModel, QTensor};
 use crate::tensor::Tensor;
+use crate::util::crc32::{crc32, Hasher};
 use crate::util::io::{read_u32, read_u64, read_u8};
 use crate::util::sync::lock_recover;
 
-const MAGIC: &[u8; 8] = b"SQSH0001";
+const MAGIC_V1: &[u8; 8] = b"SQSH0001";
+const MAGIC_V2: &[u8; 8] = b"SQSH0002";
 
 const KIND_QUANT: u8 = 0;
 const KIND_FP32: u8 = 1;
@@ -84,16 +110,30 @@ pub struct ShardIndexEntry {
     pub shape: Vec<usize>,
     pub offset: u64,
     pub len: u64,
+    /// CRC-32 of the record bytes, verified on every read. `None` for
+    /// version-1 (`SQSH0001`) files, which predate integrity checking.
+    pub crc: Option<u32>,
 }
 
-/// Byte-counting sink: measures a record's encoded length without holding
-/// the bytes, so [`write_sharded`] never buffers a second copy of the
-/// payload (this subsystem exists for models that barely fit in RAM once).
-struct CountingWriter(u64);
+/// Byte-counting + checksumming sink: measures a record's encoded length
+/// and CRC without holding the bytes, so [`write_sharded`] never buffers a
+/// second copy of the payload (this subsystem exists for models that barely
+/// fit in RAM once).
+struct CountingWriter {
+    len: u64,
+    hasher: Hasher,
+}
+
+impl CountingWriter {
+    fn new() -> Self {
+        CountingWriter { len: 0, hasher: Hasher::new() }
+    }
+}
 
 impl Write for CountingWriter {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        self.0 += buf.len() as u64;
+        self.len += buf.len() as u64;
+        self.hasher.update(buf);
         Ok(buf.len())
     }
 
@@ -102,49 +142,73 @@ impl Write for CountingWriter {
     }
 }
 
-/// Write `pm` in the sharded format. Quantized tensors come first (in
-/// `BTreeMap` name order), then the FP32 remainder in its stored order —
-/// the same deterministic layout every save. Two passes: records are
-/// length-counted (not buffered) to lay out the index, then streamed
-/// straight to the file.
+/// Checksumming source: folds every byte it hands out into a running
+/// CRC-32, so [`ShardReader::open`] can verify the v2 header checksum over
+/// exactly the bytes it parsed.
+struct HashingReader<R> {
+    inner: R,
+    hasher: Hasher,
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hasher.update(&buf[..n]);
+        Ok(n)
+    }
+}
+
+/// Write `pm` in the sharded format (version 2, `SQSH0002`). Quantized
+/// tensors come first (in `BTreeMap` name order), then the FP32 remainder
+/// in its stored order — the same deterministic layout every save. Two
+/// passes: records are length-counted and checksummed (not buffered) to lay
+/// out the index, then streamed straight to the file.
 pub fn write_sharded(pm: &PackedModel, path: &Path) -> Result<()> {
-    // pass 1: record lengths only
-    let mut entries: Vec<(&str, u8, &[usize], u64)> = Vec::new();
+    // pass 1: record lengths + CRCs only
+    let mut entries: Vec<(&str, u8, &[usize], u64, u32)> = Vec::new();
     for (name, q) in &pm.qmodel.tensors {
-        let mut n = CountingWriter(0);
+        let mut n = CountingWriter::new();
         write_qtensor_record(&mut n, q)?;
-        entries.push((name.as_str(), KIND_QUANT, q.shape(), n.0));
+        entries.push((name.as_str(), KIND_QUANT, q.shape(), n.len, n.hasher.finish()));
     }
     for (name, t) in &pm.fp32 {
-        let mut n = CountingWriter(0);
+        let mut n = CountingWriter::new();
         write_fp32_record(&mut n, t)?;
-        entries.push((name.as_str(), KIND_FP32, t.shape(), n.0));
+        entries.push((name.as_str(), KIND_FP32, t.shape(), n.len, n.hasher.finish()));
     }
 
-    let mut header_len: u64 = 8 + 1 + 4; // magic + bits + n_entries
-    for (name, _, shape, _) in &entries {
-        header_len += (2 + name.len() + 1 + 1 + 4 * shape.len() + 8 + 8) as u64;
+    // magic + bits + n_entries + index + trailing header CRC
+    let mut header_len: u64 = 8 + 1 + 4 + 4;
+    for (name, _, shape, _, _) in &entries {
+        header_len += (2 + name.len() + 1 + 1 + 4 * shape.len() + 8 + 8 + 4) as u64;
+    }
+
+    // the header is index-sized (small), so buffering it to checksum it is
+    // cheap; the records below still stream without a second copy
+    let mut header: Vec<u8> = Vec::with_capacity(header_len as usize);
+    header.extend_from_slice(MAGIC_V2);
+    header.push(pm.qmodel.bits);
+    header.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    let mut offset = header_len;
+    for (name, kind, shape, len, crc) in &entries {
+        write_str(&mut header, name)?;
+        header.push(*kind);
+        header.push(shape.len() as u8);
+        for &d in *shape {
+            header.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        header.extend_from_slice(&offset.to_le_bytes());
+        header.extend_from_slice(&len.to_le_bytes());
+        header.extend_from_slice(&crc.to_le_bytes());
+        offset += len;
     }
 
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&[pm.qmodel.bits])?;
-    f.write_all(&(entries.len() as u32).to_le_bytes())?;
-    let mut offset = header_len;
-    for (name, kind, shape, len) in &entries {
-        write_str(&mut f, name)?;
-        f.write_all(&[*kind])?;
-        f.write_all(&[shape.len() as u8])?;
-        for &d in *shape {
-            f.write_all(&(d as u32).to_le_bytes())?;
-        }
-        f.write_all(&offset.to_le_bytes())?;
-        f.write_all(&len.to_le_bytes())?;
-        offset += len;
-    }
+    f.write_all(&header)?;
+    f.write_all(&crc32(&header).to_le_bytes())?;
     // pass 2: stream the records
     for q in pm.qmodel.tensors.values() {
         write_qtensor_record(&mut f, q)?;
@@ -160,6 +224,10 @@ pub fn write_sharded(pm: &PackedModel, path: &Path) -> Result<()> {
 /// handle sits behind a `Mutex` so replicas sharing one reader can fault
 /// concurrently (one seek+read at a time; the payloads themselves are
 /// immutable once materialized).
+///
+/// Both format versions open transparently: `SQSH0002` headers are verified
+/// against their checksum here, and every record read is CRC-checked before
+/// parsing; `SQSH0001` files read byte-compatibly without integrity checks.
 #[derive(Debug)]
 pub struct ShardReader {
     file: Mutex<std::fs::File>,
@@ -171,20 +239,25 @@ pub struct ShardReader {
 
 impl ShardReader {
     pub fn open(path: &Path) -> Result<ShardReader> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-        let file_size = f.get_ref().metadata()?.len();
+        let f = std::fs::File::open(path)?;
+        let file_size = f.metadata()?.len();
+        let mut r = HashingReader { inner: std::io::BufReader::new(f), hasher: Hasher::new() };
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        r.read_exact(&mut magic)?;
+        let v2 = if &magic == MAGIC_V2 {
+            true
+        } else if &magic == MAGIC_V1 {
+            false
+        } else {
             return Err(Error::Checkpoint(format!("{path:?}: bad magic {magic:?}")));
-        }
-        let bits = read_u8(&mut f)?;
-        let n = read_u32(&mut f)? as usize;
+        };
+        let bits = read_u8(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
         let mut index = HashMap::with_capacity(n);
         let mut order = Vec::with_capacity(n);
         for _ in 0..n {
-            let name = read_str(&mut f)?;
-            let kind = match read_u8(&mut f)? {
+            let name = read_str(&mut r)?;
+            let kind = match read_u8(&mut r)? {
                 KIND_QUANT => ShardKind::Quant,
                 KIND_FP32 => ShardKind::Fp32,
                 k => {
@@ -193,11 +266,12 @@ impl ShardReader {
                     )))
                 }
             };
-            let rank = read_u8(&mut f)? as usize;
+            let rank = read_u8(&mut r)? as usize;
             let shape: Vec<usize> =
-                (0..rank).map(|_| Ok(read_u32(&mut f)? as usize)).collect::<Result<_>>()?;
-            let offset = read_u64(&mut f)?;
-            let len = read_u64(&mut f)?;
+                (0..rank).map(|_| Ok(read_u32(&mut r)? as usize)).collect::<Result<_>>()?;
+            let offset = read_u64(&mut r)?;
+            let len = read_u64(&mut r)?;
+            let crc = if v2 { Some(read_u32(&mut r)?) } else { None };
             match offset.checked_add(len) {
                 Some(end) if end <= file_size => {}
                 _ => {
@@ -208,14 +282,26 @@ impl ShardReader {
                 }
             }
             if index
-                .insert(name.clone(), ShardIndexEntry { kind, shape, offset, len })
+                .insert(name.clone(), ShardIndexEntry { kind, shape, offset, len, crc })
                 .is_some()
             {
                 return Err(Error::Checkpoint(format!("{path:?}: duplicate entry {name:?}")));
             }
             order.push(name);
         }
-        let file = Mutex::new(f.into_inner());
+        if v2 {
+            // computed over exactly the header bytes parsed above; must be
+            // taken before the stored value passes through the hasher
+            let computed = r.hasher.finish();
+            let stored = read_u32(&mut r)?;
+            if stored != computed {
+                return Err(Error::Checkpoint(format!(
+                    "{path:?}: header checksum mismatch (stored {stored:#010x}, \
+                     computed {computed:#010x}) — corrupt index"
+                )));
+            }
+        }
+        let file = Mutex::new(r.inner.into_inner());
         Ok(ShardReader { file, index, order, bits, path: path.to_path_buf() })
     }
 
@@ -252,8 +338,11 @@ impl ShardReader {
             .sum()
     }
 
-    /// Read and parse one record: one seek + one read, nothing else touched.
-    pub fn read(&self, name: &str) -> Result<ShardData> {
+    /// Read one record's raw (undecoded) bytes: one seek + one read under
+    /// the file lock, nothing else touched. Errors out of here are IO-layer
+    /// failures — the retry policy in [`crate::shardstore::paged`] treats
+    /// them as transient, unlike [`ShardReader::decode`] integrity errors.
+    pub fn read_raw(&self, name: &str) -> Result<Vec<u8>> {
         let e = self
             .index
             .get(name)
@@ -265,7 +354,29 @@ impl ShardReader {
             f.seek(SeekFrom::Start(e.offset))?;
             f.read_exact(&mut buf)?;
         }
-        let mut cursor: &[u8] = &buf;
+        Ok(buf)
+    }
+
+    /// Verify and parse one record's bytes (as returned by
+    /// [`ShardReader::read_raw`]). For v2 entries the CRC-32 is checked
+    /// before any parsing; a mismatch is an integrity error, reported
+    /// without touching the payload further.
+    pub fn decode(&self, name: &str, bytes: &[u8]) -> Result<ShardData> {
+        let e = self
+            .index
+            .get(name)
+            .ok_or_else(|| Error::Checkpoint(format!("{:?}: no shard {name:?}", self.path)))?;
+        if let Some(want) = e.crc {
+            let got = crc32(bytes);
+            if got != want {
+                return Err(Error::Checkpoint(format!(
+                    "{:?}: {name:?} record checksum mismatch (stored {want:#010x}, \
+                     computed {got:#010x}) — corrupt shard",
+                    self.path
+                )));
+            }
+        }
+        let mut cursor: &[u8] = bytes;
         let data = match e.kind {
             ShardKind::Quant => ShardData::Quant(read_qtensor_record(&mut cursor)?),
             ShardKind::Fp32 => ShardData::Fp32(Arc::new(read_fp32_record(&mut cursor)?)),
@@ -279,6 +390,12 @@ impl ShardReader {
         }
         Ok(data)
     }
+
+    /// Read, verify and parse one record — [`ShardReader::read_raw`]
+    /// followed by [`ShardReader::decode`].
+    pub fn read(&self, name: &str) -> Result<ShardData> {
+        self.decode(name, &self.read_raw(name)?)
+    }
 }
 
 #[cfg(test)]
@@ -286,7 +403,11 @@ mod tests {
     use super::*;
     use crate::model::config::BertConfig;
     use crate::model::params::ParamStore;
-    use crate::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+    use crate::quant::{QConfig, QParams};
+    use crate::splitquant::{
+        default_quantizable, quantize_store, QuantizedModel, SplitQuantConfig,
+    };
+    use crate::tensor::packing::Packed;
     use crate::util::rng::Rng;
 
     fn tiny_packed() -> PackedModel {
@@ -307,6 +428,89 @@ mod tests {
         PackedModel::assemble(&store, &qm)
     }
 
+    /// A hand-built model exercising all three `QLayout` variants plus an
+    /// FP32 remainder tensor (mirrors `quant::serialize`'s corpus).
+    fn all_layouts_packed() -> PackedModel {
+        let mut rng = Rng::new(11);
+        let mut tensors = std::collections::BTreeMap::new();
+        let t = Tensor::randn(&[6, 4], 0.0, 1.0, &mut rng);
+        tensors.insert(
+            "per_tensor.weight".to_string(),
+            QTensor::quantize(&t, &QConfig::baseline(8)).unwrap(),
+        );
+        let t = Tensor::randn(&[3, 5], 0.0, 1.0, &mut rng);
+        tensors.insert(
+            "per_channel.weight".to_string(),
+            QTensor::quantize(&t, &QConfig::per_channel(4, 0)).unwrap(),
+        );
+        let values = [0.001f32, 0.002, -0.003, 500.0, 600.0, 700.0];
+        let ids: Vec<u8> = vec![0, 0, 0, 1, 1, 1];
+        let p0 = QParams::from_range(-0.003, 0.002, 4);
+        let p1 = QParams::from_range(0.0, 700.0, 4);
+        let codes: Vec<i8> = values
+            .iter()
+            .zip(&ids)
+            .map(|(&v, &c)| if c == 0 { p0.quantize(v) } else { p1.quantize(v) })
+            .collect();
+        tensors.insert(
+            "split.weight".to_string(),
+            QTensor::from_split(
+                &[6],
+                Packed::pack(&codes, 4).unwrap(),
+                Packed::pack_unsigned(&ids, 2).unwrap(),
+                vec![p0, p1],
+            )
+            .unwrap(),
+        );
+        let fp32 =
+            vec![("remainder.gamma".to_string(), Tensor::randn(&[7], 0.0, 1.0, &mut rng))];
+        let fp32_names = vec!["remainder.gamma".to_string()];
+        PackedModel { qmodel: QuantizedModel { tensors, fp32_names, bits: 4 }, fp32 }
+    }
+
+    /// Version-1 writer, kept test-only so cross-version compatibility can
+    /// be pinned against real `SQSH0001` bytes.
+    fn write_sharded_v1(pm: &PackedModel, path: &Path) -> Result<()> {
+        let mut entries: Vec<(&str, u8, &[usize], u64)> = Vec::new();
+        for (name, q) in &pm.qmodel.tensors {
+            let mut n = CountingWriter::new();
+            write_qtensor_record(&mut n, q)?;
+            entries.push((name.as_str(), KIND_QUANT, q.shape(), n.len));
+        }
+        for (name, t) in &pm.fp32 {
+            let mut n = CountingWriter::new();
+            write_fp32_record(&mut n, t)?;
+            entries.push((name.as_str(), KIND_FP32, t.shape(), n.len));
+        }
+        let mut header_len: u64 = 8 + 1 + 4;
+        for (name, _, shape, _) in &entries {
+            header_len += (2 + name.len() + 1 + 1 + 4 * shape.len() + 8 + 8) as u64;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC_V1)?;
+        f.write_all(&[pm.qmodel.bits])?;
+        f.write_all(&(entries.len() as u32).to_le_bytes())?;
+        let mut offset = header_len;
+        for (name, kind, shape, len) in &entries {
+            write_str(&mut f, name)?;
+            f.write_all(&[*kind])?;
+            f.write_all(&[shape.len() as u8])?;
+            for &d in *shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            f.write_all(&offset.to_le_bytes())?;
+            f.write_all(&len.to_le_bytes())?;
+            offset += len;
+        }
+        for q in pm.qmodel.tensors.values() {
+            write_qtensor_record(&mut f, q)?;
+        }
+        for (_, t) in &pm.fp32 {
+            write_fp32_record(&mut f, t)?;
+        }
+        Ok(())
+    }
+
     #[test]
     fn every_entry_roundtrips() {
         let pm = tiny_packed();
@@ -319,6 +523,7 @@ mod tests {
             let e = r.entry(name).unwrap();
             assert_eq!(e.kind, ShardKind::Quant);
             assert_eq!(e.shape, q.shape());
+            assert!(e.crc.is_some(), "{name}: v2 entry lost its CRC");
             match r.read(name).unwrap() {
                 ShardData::Quant(got) => assert_eq!(got, *q, "{name}"),
                 ShardData::Fp32(_) => panic!("{name}: wrong kind"),
@@ -332,6 +537,164 @@ mod tests {
                 ShardData::Quant(_) => panic!("{name}: wrong kind"),
             }
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_emits_v2_magic() {
+        let pm = tiny_packed();
+        let path = std::env::temp_dir().join("sq_shard_v2magic.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+    }
+
+    #[test]
+    fn save_load_save_byte_identity_v2() {
+        // the v2 writer must be as deterministic as the v1 one: write the
+        // shards, read every record back, reassemble, write again — the two
+        // files must be byte-identical (CRCs and header checksum included)
+        let pm = all_layouts_packed();
+        let p1 = std::env::temp_dir().join("sq_shard_bi_1.sqsh");
+        let p2 = std::env::temp_dir().join("sq_shard_bi_2.sqsh");
+        write_sharded(&pm, &p1).unwrap();
+        let r = ShardReader::open(&p1).unwrap();
+        let mut tensors = std::collections::BTreeMap::new();
+        let mut fp32 = Vec::new();
+        for name in r.names() {
+            match r.read(name).unwrap() {
+                ShardData::Quant(q) => {
+                    tensors.insert(name.clone(), q);
+                }
+                ShardData::Fp32(t) => fp32.push((name.clone(), (*t).clone())),
+            }
+        }
+        let fp32_names = fp32.iter().map(|(n, _)| n.clone()).collect();
+        let reloaded = PackedModel {
+            qmodel: QuantizedModel { tensors, fp32_names, bits: r.bits() },
+            fp32,
+        };
+        drop(r);
+        write_sharded(&reloaded, &p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+        assert_eq!(b1, b2, "v2 save→load→save is not byte-stable");
+    }
+
+    #[test]
+    fn v1_files_still_read_byte_compatibly() {
+        let pm = tiny_packed();
+        let path = std::env::temp_dir().join("sq_shard_v1compat.sqsh");
+        write_sharded_v1(&pm, &path).unwrap();
+        let r = ShardReader::open(&path).unwrap();
+        assert_eq!(r.bits(), pm.qmodel.bits);
+        for (name, q) in &pm.qmodel.tensors {
+            let e = r.entry(name).unwrap();
+            assert!(e.crc.is_none(), "{name}: v1 entry grew a CRC from nowhere");
+            match r.read(name).unwrap() {
+                ShardData::Quant(got) => assert_eq!(got, *q, "{name}"),
+                ShardData::Fp32(_) => panic!("{name}: wrong kind"),
+            }
+        }
+        for (name, t) in &pm.fp32 {
+            match r.read(name).unwrap() {
+                ShardData::Fp32(got) => assert_eq!(got.data(), t.data(), "{name}"),
+                ShardData::Quant(_) => panic!("{name}: wrong kind"),
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cross_version_reads_agree() {
+        // same model through both writers: identical record bytes, only the
+        // index framing differs — every decoded payload must compare equal
+        let pm = all_layouts_packed();
+        let pv1 = std::env::temp_dir().join("sq_shard_x_v1.sqsh");
+        let pv2 = std::env::temp_dir().join("sq_shard_x_v2.sqsh");
+        write_sharded_v1(&pm, &pv1).unwrap();
+        write_sharded(&pm, &pv2).unwrap();
+        let r1 = ShardReader::open(&pv1).unwrap();
+        let r2 = ShardReader::open(&pv2).unwrap();
+        assert_eq!(r1.names(), r2.names());
+        for name in r1.names() {
+            match (r1.read(name).unwrap(), r2.read(name).unwrap()) {
+                (ShardData::Quant(a), ShardData::Quant(b)) => assert_eq!(a, b, "{name}"),
+                (ShardData::Fp32(a), ShardData::Fp32(b)) => {
+                    assert_eq!(a.data(), b.data(), "{name}")
+                }
+                _ => panic!("{name}: kind diverged across versions"),
+            }
+        }
+        std::fs::remove_file(&pv1).ok();
+        std::fs::remove_file(&pv2).ok();
+    }
+
+    #[test]
+    fn payload_corruption_detected_for_every_byte_and_layout() {
+        // flip any single record byte — PerTensor, PerChannel, Split or the
+        // FP32 remainder — and the CRC must fail that record's read while
+        // every untouched record keeps reading cleanly
+        let pm = all_layouts_packed();
+        let path = std::env::temp_dir().join("sq_shard_flip.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let spans: Vec<(String, u64, u64)> = {
+            let r = ShardReader::open(&path).unwrap();
+            r.names()
+                .iter()
+                .map(|n| {
+                    let e = r.entry(n).unwrap();
+                    (n.clone(), e.offset, e.len)
+                })
+                .collect()
+        };
+        for (name, off, len) in &spans {
+            for i in *off..off + len {
+                let mut bytes = clean.clone();
+                bytes[i as usize] ^= 0x01; // single bit: the hardest case
+                std::fs::write(&path, &bytes).unwrap();
+                let r = ShardReader::open(&path).unwrap();
+                let err = r.read(name).unwrap_err();
+                assert!(
+                    err.to_string().contains("checksum mismatch"),
+                    "{name} byte {i}: flip escaped the CRC: {err}"
+                );
+                // the sibling records are untouched and still verify
+                for (other, _, _) in spans.iter().filter(|(o, _, _)| o != name) {
+                    r.read(other).unwrap();
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_corruption_detected_at_open() {
+        // any header byte flip — magic, bits, index fields or the stored
+        // checksum itself — must fail open, not serve a scrambled index
+        let pm = all_layouts_packed();
+        let path = std::env::temp_dir().join("sq_shard_hdrflip.sqsh");
+        write_sharded(&pm, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let header_end = {
+            let r = ShardReader::open(&path).unwrap();
+            r.index.values().map(|e| e.offset).min().unwrap() as usize
+        };
+        for i in 0..header_end {
+            let mut bytes = clean.clone();
+            bytes[i] ^= 0xFF;
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(
+                ShardReader::open(&path).is_err(),
+                "open survived a header flip at byte {i}"
+            );
+        }
+        std::fs::write(&path, &clean).unwrap();
+        ShardReader::open(&path).unwrap();
         std::fs::remove_file(&path).ok();
     }
 

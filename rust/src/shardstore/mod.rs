@@ -28,26 +28,37 @@
 //!                                                    linears, per matmul)
 //! ```
 //!
-//! * [`format`] — the `SQSH0001` on-disk format: the `SQQM0001` record
-//!   encoding re-framed behind a per-tensor offset index (any layer is one
-//!   seek + one read away).
+//! * [`format`] — the on-disk format, current version `SQSH0002`: the
+//!   `SQQM0001` record encoding re-framed behind a per-tensor offset index
+//!   (any layer is one seek + one read away), with a header checksum and a
+//!   per-record CRC-32 verified on every read. Version-1 (`SQSH0001`) files
+//!   still read byte-compatibly.
 //! * [`residency`] — [`ResidencyManager`]: byte budget, LRU eviction,
-//!   pinning, fault/eviction/paged-bytes counters.
+//!   pinning, fault/eviction/paged-bytes counters (now including integrity
+//!   failures, retries and quarantines).
 //! * [`paged`] — [`PagedModel`]: lazy [`ShardData`] materialization with
 //!   sequential prefetch along the qbert execution order; `Arc`-shared
 //!   across replicas so N replicas page through one budget.
+//! * [`fault`] — fault tolerance: the [`ShardIo`] read seam, the seeded
+//!   deterministic [`FaultyIo`] injector, and the bounded [`RetryPolicy`]
+//!   the paged model wraps around every read. A shard whose reads exhaust
+//!   the retry budget is quarantined — its requests error, the process
+//!   never dies.
 //!
 //! Serving integration: `ServeConfig::residency_budget_bytes` +
 //! `QuantExecutor::paged` ([`crate::coordinator`]) put a paged model behind
 //! the batcher, with faults/evictions/paged-bytes surfaced in
 //! [`crate::coordinator::Metrics`]. See `examples/serve_paged.rs` and
 //! `tests/integration_paged.rs` for the end-to-end path (budget ≤ 50 % of
-//! the payload, logits byte-identical to fully-resident).
+//! the payload, logits byte-identical to fully-resident), and
+//! `tests/integration_chaos.rs` for serving under injected faults.
 
+pub mod fault;
 pub mod format;
 pub mod paged;
 pub mod residency;
 
+pub use fault::{FaultConfig, FaultStats, FaultyIo, RetryPolicy, ShardIo};
 pub use format::{write_sharded, ShardData, ShardIndexEntry, ShardKind, ShardReader};
 pub use paged::{PagedConfig, PagedModel};
 pub use residency::{ResidencyCounters, ResidencyManager};

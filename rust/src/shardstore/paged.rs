@@ -28,19 +28,21 @@
 //! bytes — the paged twin of `ParamStore::share`
 //! (`tests/integration_share.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::tensor::Tensor;
 
+use super::fault::{FaultConfig, FaultStats, FaultyIo, RetryPolicy, ShardIo};
 use super::format::{ShardData, ShardKind, ShardReader};
 use super::residency::{ResidencyCounters, ResidencyManager};
 use crate::util::sync::lock_recover;
 
 /// Knobs for [`PagedModel::open`]. The serving coordinator threads
-/// `ServeConfig::residency_budget_bytes` into this.
+/// `ServeConfig::residency_budget_bytes` (and the fault-tolerance knobs)
+/// into this.
 #[derive(Debug, Clone)]
 pub struct PagedConfig {
     /// Byte budget for pagable (unpinned) resident shards, in on-disk
@@ -49,16 +51,38 @@ pub struct PagedConfig {
     /// How many execution-order successors to read ahead after a demand
     /// fault (0 disables prefetch).
     pub prefetch_depth: usize,
+    /// Bounded retry-with-backoff applied around every shard read (demand
+    /// fault and prefetch alike). A read that exhausts its attempts
+    /// quarantines the shard: subsequent fetches fail fast per-request.
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection on the shard IO seam — `None` (the
+    /// default) installs nothing, so the fault-free path pays nothing.
+    pub fault: Option<FaultConfig>,
 }
 
 impl Default for PagedConfig {
     fn default() -> Self {
-        PagedConfig { residency_budget_bytes: usize::MAX, prefetch_depth: 1 }
+        PagedConfig {
+            residency_budget_bytes: usize::MAX,
+            prefetch_depth: 1,
+            retry: RetryPolicy::default(),
+            fault: None,
+        }
     }
 }
 
 struct PagedInner {
-    reader: ShardReader,
+    reader: Arc<ShardReader>,
+    /// every runtime shard read goes through this seam — the reader itself,
+    /// or a [`FaultyIo`] decorator when fault injection is configured
+    io: Arc<dyn ShardIo>,
+    retry: RetryPolicy,
+    /// injection accounting when a [`FaultyIo`] is installed (chaos tests
+    /// reconcile serving metrics against it)
+    fault_stats: Option<Arc<FaultStats>>,
+    /// shards that exhausted their read retries — fetches fail fast instead
+    /// of hammering a bad disk region on every request
+    quarantined: Mutex<HashSet<String>>,
     residency: ResidencyManager,
     /// pagable shard names in qbert execution order
     order: Vec<String>,
@@ -83,7 +107,15 @@ impl PagedModel {
     /// (FP32 remainder + embeddings), and leaves every pagable shard on
     /// disk until first use.
     pub fn open(path: &Path, cfg: PagedConfig) -> Result<PagedModel> {
-        let reader = ShardReader::open(path)?;
+        let reader = Arc::new(ShardReader::open(path)?);
+        let (io, fault_stats): (Arc<dyn ShardIo>, Option<Arc<FaultStats>>) = match &cfg.fault {
+            Some(fc) if !fc.is_noop() => {
+                let faulty = FaultyIo::new(Arc::clone(&reader), fc.clone());
+                let stats = faulty.stats();
+                (Arc::new(faulty), Some(stats))
+            }
+            _ => (Arc::clone(&reader) as Arc<dyn ShardIo>, None),
+        };
         let residency = ResidencyManager::new(cfg.residency_budget_bytes);
 
         let mut order: Vec<String> = Vec::new();
@@ -108,12 +140,60 @@ impl PagedModel {
         Ok(PagedModel {
             inner: Arc::new(PagedInner {
                 reader,
+                io,
+                retry: cfg.retry,
+                fault_stats,
+                quarantined: Mutex::new(HashSet::new()),
                 residency,
                 order,
                 pos,
                 prefetch_depth: cfg.prefetch_depth,
                 dequant_pins: Mutex::new(HashMap::new()),
             }),
+        })
+    }
+
+    /// Read + verify + parse one record through the IO seam under the
+    /// bounded [`RetryPolicy`]: transient IO errors and integrity failures
+    /// (CRC/decode) are re-read with deterministic backoff; exhausting the
+    /// attempts quarantines the shard so later fetches fail fast. Every
+    /// event lands in the residency counters and the trace stream.
+    fn read_verified(&self, name: &str) -> Result<ShardData> {
+        let inner = &*self.inner;
+        if lock_recover(&inner.quarantined).contains(name) {
+            return Err(Error::Checkpoint(format!(
+                "shard {name:?} is quarantined after exhausting read retries"
+            )));
+        }
+        let res = inner.retry.run(std::thread::sleep, |attempt| {
+            if attempt > 1 {
+                inner.residency.note_io_retry();
+                crate::trace::instant(
+                    crate::trace::Category::Shard,
+                    "shard-retry",
+                    attempt as u64,
+                    0,
+                );
+            }
+            let raw = inner.io.read_raw(name)?;
+            inner.reader.decode(name, &raw).inspect_err(|_| {
+                inner.residency.note_integrity_failure();
+                crate::trace::instant(
+                    crate::trace::Category::Shard,
+                    "shard-integrity-fail",
+                    attempt as u64,
+                    0,
+                );
+            })
+        });
+        res.inspect_err(|e| {
+            lock_recover(&inner.quarantined).insert(name.to_string());
+            inner.residency.note_quarantine();
+            crate::trace::instant(crate::trace::Category::Shard, "shard-quarantine", 0, 0);
+            log::error!(
+                "shard {name:?} quarantined after {} read attempt(s): {e}",
+                inner.retry.max_attempts.max(1)
+            );
         })
     }
 
@@ -135,7 +215,7 @@ impl PagedModel {
         );
         let bytes = self.record_bytes(name)?;
         let t0 = std::time::Instant::now();
-        let data = Arc::new(inner.reader.read(name)?);
+        let data = Arc::new(self.read_verified(name)?);
         // always on: the serving latency breakdown attributes fault time
         // whether or not tracing is enabled
         inner.residency.note_fault_time(t0.elapsed().as_nanos() as u64);
@@ -169,7 +249,7 @@ impl PagedModel {
                 if !inner.residency.fits_without_eviction(nb) {
                     break; // no spare budget: prefetch must not evict
                 }
-                match inner.reader.read(next) {
+                match self.read_verified(next) {
                     Ok(d) => {
                         if inner.residency.admit_prefetch(next, Arc::new(d), nb) {
                             crate::trace::instant(
@@ -228,6 +308,24 @@ impl PagedModel {
     /// [`Metrics`]: crate::coordinator::Metrics
     pub fn residency(&self) -> &ResidencyManager {
         &self.inner.residency
+    }
+
+    /// Injection ground truth when fault injection is configured
+    /// ([`PagedConfig::fault`]); `None` on the fault-free path. Chaos tests
+    /// reconcile the serving metrics against these counts.
+    pub fn fault_stats(&self) -> Option<Arc<FaultStats>> {
+        self.inner.fault_stats.as_ref().map(Arc::clone)
+    }
+
+    /// Whether `name` has been quarantined (its reads exhausted the retry
+    /// budget). Quarantined shards fail every fetch fast.
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        lock_recover(&self.inner.quarantined).contains(name)
+    }
+
+    /// The retry contract applied around shard reads.
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.inner.retry
     }
 
     /// Counter snapshot — convenience for executors.
@@ -461,7 +559,7 @@ mod tests {
         drop(probe);
         let paged = PagedModel::open(
             &path,
-            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1 },
+            PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1, ..Default::default() },
         )
         .unwrap();
         for name in paged.pagable().to_vec() {
@@ -493,6 +591,113 @@ mod tests {
         // an independent open does NOT share
         let c = PagedModel::open(&path, PagedConfig::default()).unwrap();
         assert!(!a.shares_residency(&c));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn persistent_corruption_retries_then_quarantines() {
+        let (_, _, path) = shard_file("quarantine", 1);
+        // corrupt one record's payload on disk, permanently
+        let victim = "encoder.0.attn.q.weight";
+        let (off, len) = {
+            let r = ShardReader::open(&path).unwrap();
+            let e = r.entry(victim).unwrap();
+            (e.offset as usize, e.len as usize)
+        };
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off + len / 2] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let retry = RetryPolicy {
+            max_attempts: 3,
+            base: std::time::Duration::ZERO,
+            cap: std::time::Duration::ZERO,
+        };
+        let paged = PagedModel::open(
+            &path,
+            PagedConfig { prefetch_depth: 0, retry, ..Default::default() },
+        )
+        .unwrap();
+        assert!(paged.fetch(victim).is_err(), "corrupt shard must not decode");
+        let c = paged.counters();
+        assert_eq!(c.integrity_failures, 3, "every attempt sees the bad CRC");
+        assert_eq!(c.io_retries, 2, "attempts 2 and 3 are retries");
+        assert_eq!(c.shards_quarantined, 1);
+        assert!(paged.is_quarantined(victim));
+        // second fetch fails fast without touching the disk again
+        let err = paged.fetch(victim).unwrap_err();
+        assert!(format!("{err}").contains("quarantined"), "{err}");
+        let c2 = paged.counters();
+        assert_eq!(c2.integrity_failures, 3);
+        assert_eq!(c2.io_retries, 2);
+        assert_eq!(c2.shards_quarantined, 1);
+        // siblings are unaffected
+        paged.fetch("encoder.0.attn.k.weight").unwrap();
+        assert!(!paged.is_quarantined("encoder.0.attn.k.weight"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn injected_faults_reconcile_with_serving_counters() {
+        let (_, pm, path) = shard_file("chaos", 1);
+        let retry = RetryPolicy {
+            max_attempts: 10,
+            base: std::time::Duration::ZERO,
+            cap: std::time::Duration::ZERO,
+        };
+        let paged = PagedModel::open(
+            &path,
+            PagedConfig {
+                prefetch_depth: 0,
+                retry,
+                fault: Some(FaultConfig::uniform(1234, 0.2)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut quarantined = 0usize;
+        for name in paged.pagable().to_vec() {
+            match paged.fetch(&name) {
+                // a fetch that survives the injection is byte-exact
+                Ok(data) => match &*data {
+                    ShardData::Quant(q) => assert_eq!(*q, pm.qmodel.tensors[&name]),
+                    ShardData::Fp32(_) => panic!("wrong kind"),
+                },
+                Err(_) => {
+                    quarantined += 1;
+                    assert!(paged.is_quarantined(&name));
+                }
+            }
+        }
+        let stats = paged.fault_stats().expect("fault injection configured");
+        let c = paged.counters();
+        assert!(stats.injected_failures() > 0, "0.2 rates injected nothing");
+        assert_eq!(
+            c.integrity_failures as u64,
+            stats.short_reads() + stats.corruptions(),
+            "every short read / corruption must be caught by the CRC layer"
+        );
+        assert_eq!(
+            stats.injected_failures(),
+            (c.io_retries + c.shards_quarantined) as u64,
+            "every injected failure is either retried or exhausts a retry budget"
+        );
+        assert_eq!(c.shards_quarantined, quarantined);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fault_free_path_installs_no_decorator() {
+        let (_, _, path) = shard_file("noopfault", 1);
+        let paged = PagedModel::open(&path, PagedConfig::default()).unwrap();
+        assert!(paged.fault_stats().is_none());
+        // an all-zero FaultConfig is recognized as a no-op too
+        let paged2 = PagedModel::open(
+            &path,
+            PagedConfig { fault: Some(FaultConfig::default()), ..Default::default() },
+        )
+        .unwrap();
+        assert!(paged2.fault_stats().is_none());
         std::fs::remove_file(&path).ok();
     }
 }

@@ -56,6 +56,16 @@ pub struct ResidencyCounters {
     /// serving coordinator diffs this around each batch to attribute fault
     /// time in the per-request latency breakdown
     pub fault_ns: u64,
+    /// shard reads whose payload failed its CRC (or decode) — detected
+    /// corruption, each one retried under the paged model's `RetryPolicy`
+    pub integrity_failures: usize,
+    /// re-read attempts after a failed shard read (transient IO error or
+    /// integrity failure); first-try successes contribute nothing
+    pub io_retries: usize,
+    /// shards whose reads exhausted every retry attempt and were
+    /// quarantined — subsequent fetches fail fast per-request instead of
+    /// hammering a bad disk region
+    pub shards_quarantined: usize,
 }
 
 struct Slot {
@@ -193,6 +203,22 @@ impl ResidencyManager {
     /// needs it whether or not tracing is enabled).
     pub fn note_fault_time(&self, ns: u64) {
         lock_recover(&self.inner).c.fault_ns += ns;
+    }
+
+    /// Count a detected-corruption read (CRC or decode failure). The read
+    /// is retried by the paged model; this counts detections, not losses.
+    pub fn note_integrity_failure(&self) {
+        lock_recover(&self.inner).c.integrity_failures += 1;
+    }
+
+    /// Count one re-read attempt after a failed shard read.
+    pub fn note_io_retry(&self) {
+        lock_recover(&self.inner).c.io_retries += 1;
+    }
+
+    /// Count a shard quarantined after exhausting its retry budget.
+    pub fn note_quarantine(&self) {
+        lock_recover(&self.inner).c.shards_quarantined += 1;
     }
 
     /// Counter snapshot (cheap clone under the lock).

@@ -37,13 +37,38 @@ fn quantiles(out: &mut String, stage: &str, h: &LogHistogram) {
 /// metrics yield identical output.
 pub fn exposition(m: &Metrics) -> String {
     let mut out = String::new();
-    let simple: [(&str, &str, u64); 9] = [
+    let simple: [(&str, &str, u64); 14] = [
         ("splitquant_requests_completed_total", "requests served", m.completed as u64),
         ("splitquant_requests_shed_total", "requests shed (queue full)", m.shed as u64),
+        (
+            "splitquant_requests_shed_expired_total",
+            "queued requests shed on expiry",
+            m.shed_expired as u64,
+        ),
         ("splitquant_exec_time_us_total", "executor time, us", m.exec_time.as_micros() as u64),
+        (
+            "splitquant_exec_panics_total",
+            "executor panics contained at the batch boundary",
+            m.exec_panics as u64,
+        ),
         ("splitquant_batcher_polls_total", "idle batcher wake-ups", m.batcher_polls as u64),
         ("splitquant_shard_faults_total", "shard demand misses", m.shard_faults as u64),
         ("splitquant_shard_evictions_total", "shards evicted", m.shard_evictions as u64),
+        (
+            "splitquant_shard_integrity_failures_total",
+            "shard reads failing CRC/parse verification",
+            m.integrity_failures as u64,
+        ),
+        (
+            "splitquant_shard_io_retries_total",
+            "shard read attempts beyond the first",
+            m.io_retries as u64,
+        ),
+        (
+            "splitquant_shards_quarantined_total",
+            "shards quarantined after retry exhaustion",
+            m.shards_quarantined as u64,
+        ),
         ("splitquant_bytes_paged_in_total", "bytes paged in", m.bytes_paged_in as u64),
         ("splitquant_plane_decodes_total", "low-bit plane decodes", m.plane_decodes as u64),
         ("splitquant_plane_reuses_total", "plane-cache reuses", m.plane_reuses as u64),
@@ -52,6 +77,23 @@ pub fn exposition(m: &Metrics) -> String {
         family(&mut out, name, "counter", help);
         sample(&mut out, name, "", v);
     }
+    // health / readiness gauges: `up` says the process is alive to answer at
+    // all; `degraded` says it is shedding load or quarantining shards — a
+    // scrape-friendly readiness signal that never requires a second endpoint
+    family(&mut out, "splitquant_up", "gauge", "process serving at all (always 1 when scraped)");
+    sample(&mut out, "splitquant_up", "", 1);
+    family(
+        &mut out,
+        "splitquant_degraded",
+        "gauge",
+        "1 when panics were contained or shards are quarantined",
+    );
+    sample(
+        &mut out,
+        "splitquant_degraded",
+        "",
+        u64::from(m.exec_panics + m.shards_quarantined > 0),
+    );
     family(&mut out, "splitquant_batches_total", "counter", "batches per compiled size");
     for (size, n) in &m.batches_by_size {
         sample(&mut out, "splitquant_batches_total", &format!("{{size=\"{size}\"}}"), *n as u64);
@@ -91,11 +133,33 @@ mod tests {
         assert!(a.contains("splitquant_requests_completed_total 5"), "{a}");
         assert!(a.contains("splitquant_batches_total{size=\"8\"} 1"), "{a}");
         assert!(a.contains("splitquant_request_stage_us{stage=\"total\",quantile=\"0.5\"}"), "{a}");
+        assert!(a.contains("splitquant_up 1"), "{a}");
+        assert!(a.contains("splitquant_degraded 0"), "{a}");
         for line in a.lines() {
             assert!(
                 line.starts_with('#') || line.starts_with("splitquant_"),
                 "stray line: {line}"
             );
         }
+    }
+
+    #[test]
+    fn degraded_gauge_tracks_panics_and_quarantines() {
+        let mut m = Metrics::default();
+        m.exec_panics = 1;
+        let a = exposition(&m);
+        assert!(a.contains("splitquant_degraded 1"), "{a}");
+        assert!(a.contains("splitquant_exec_panics_total 1"), "{a}");
+        let mut m = Metrics::default();
+        m.shards_quarantined = 3;
+        m.io_retries = 7;
+        m.integrity_failures = 4;
+        m.shed_expired = 2;
+        let b = exposition(&m);
+        assert!(b.contains("splitquant_degraded 1"), "{b}");
+        assert!(b.contains("splitquant_shards_quarantined_total 3"), "{b}");
+        assert!(b.contains("splitquant_shard_io_retries_total 7"), "{b}");
+        assert!(b.contains("splitquant_shard_integrity_failures_total 4"), "{b}");
+        assert!(b.contains("splitquant_requests_shed_expired_total 2"), "{b}");
     }
 }

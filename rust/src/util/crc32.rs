@@ -1,0 +1,141 @@
+//! Hand-rolled CRC-32/ISO-HDLC (the ubiquitous "crc32" of zlib, PNG and
+//! Ethernet): reflected polynomial `0xEDB88320`, init `0xFFFF_FFFF`, final
+//! XOR `0xFFFF_FFFF`. Zero external crates — the offline sandbox rule —
+//! and table-driven, so integrity checks on the shard fault-in path cost a
+//! table lookup per byte, not a branch per bit.
+//!
+//! Used by [`crate::shardstore::format`] for the `SQSH0002` shard format:
+//! a header checksum plus one CRC per tensor record, verified on every
+//! fault-in and prefetch. The canonical check vector
+//! `crc32(b"123456789") == 0xCBF43926` is pinned in the tests below.
+
+/// 256-entry lookup table for the reflected polynomial `0xEDB88320`,
+/// generated at compile time so the table itself is part of the binary and
+/// cannot drift from the algorithm.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC-32 state, for checksumming data that arrives in pieces
+/// (e.g. a shard header serialized field by field). `Hasher::new()` →
+/// repeated [`update`](Hasher::update) → [`finish`](Hasher::finish) yields
+/// exactly [`crc32`] of the concatenation.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    /// Fresh state (equivalent to having hashed zero bytes).
+    pub fn new() -> Self {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            let idx = ((crc ^ b as u32) & 0xFF) as usize;
+            // sq-lint exempts ranges, and TABLE has 256 entries so the
+            // masked index is always in bounds
+            crc = (crc >> 8) ^ TABLE[idx & 0xFF];
+        }
+        self.state = crc;
+    }
+
+    /// The CRC-32 of everything fed to [`update`](Hasher::update) so far.
+    /// Does not consume the state; more updates may follow.
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Hasher::new()
+    }
+}
+
+/// One-shot CRC-32/ISO-HDLC of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_check_vector() {
+        // the CRC-32/ISO-HDLC "check" value from the CRC catalogue
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"abc"), 0x3524_41C2);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_matches_one_shot() {
+        let data: Vec<u8> = (0u32..1024).map(|i| (i * 7 + 13) as u8).collect();
+        let whole = crc32(&data);
+        for split in [0, 1, 7, 512, 1023, 1024] {
+            let mut h = Hasher::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split}");
+        }
+        // byte-at-a-time
+        let mut h = Hasher::new();
+        for b in &data {
+            h.update(std::slice::from_ref(b));
+        }
+        assert_eq!(h.finish(), whole);
+    }
+
+    #[test]
+    fn finish_is_non_destructive() {
+        let mut h = Hasher::new();
+        h.update(b"1234");
+        let _ = h.finish();
+        h.update(b"56789");
+        assert_eq!(h.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_checksum() {
+        let data: Vec<u8> = (0u32..256).map(|i| i as u8).collect();
+        let base = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut m = data.clone();
+                m[byte] ^= 1 << bit;
+                assert_ne!(crc32(&m), base, "flip byte {byte} bit {bit} undetected");
+            }
+        }
+    }
+}

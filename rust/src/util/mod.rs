@@ -1,6 +1,7 @@
 //! Small self-contained utilities (the offline sandbox has no serde_json /
 //! rand / proptest, so these substrates are built in-crate).
 
+pub mod crc32;
 pub mod fastmath;
 pub mod io;
 pub mod json;

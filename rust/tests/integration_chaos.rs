@@ -1,0 +1,217 @@
+//! Chaos serving (the fault-tolerance acceptance criteria): a paged model
+//! served through the full coordinator while a seeded
+//! [`splitquant::shardstore::FaultyIo`] injects IO errors, short reads and
+//! byte corruption on the shard path. The contract under injection:
+//!
+//! * requests that complete return labels **byte-identical** to a
+//!   fault-free run — corrupted reads are caught by the CRC layer and
+//!   retried, never served;
+//! * requests that cannot complete (a shard exhausted its retry budget and
+//!   was quarantined) get an error response — they never hang and never
+//!   kill the process;
+//! * the residency budget holds throughout;
+//! * the serving counters reconcile exactly with the injector's ground
+//!   truth, and the whole schedule replays identically across runs.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitquant::coordinator::{Metrics, QuantExecutor, ServeConfig, Server};
+use splitquant::data::HashTokenizer;
+use splitquant::model::config::BertConfig;
+use splitquant::model::params::ParamStore;
+use splitquant::quant::PackedModel;
+use splitquant::shardstore::{FaultConfig, PagedConfig, PagedModel, RetryPolicy};
+use splitquant::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
+use splitquant::util::rng::Rng;
+
+fn build(tag: &str) -> (BertConfig, PackedModel, PathBuf) {
+    let cfg = BertConfig {
+        vocab_size: 512,
+        hidden: 16,
+        layers: 2,
+        heads: 2,
+        ffn: 32,
+        max_len: 16,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(3);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let (_, qm) = quantize_store(&store, &quantizable, &SplitQuantConfig::new(2)).unwrap();
+    let pm = PackedModel::assemble(&store, &qm);
+    let path = std::env::temp_dir().join(format!("sq_e2e_chaos_{tag}.sqsh"));
+    pm.save_sharded(&path).unwrap();
+    (cfg, pm, path)
+}
+
+/// A budget below the pagable set so shards keep cycling through disk (and
+/// through the fault injector) for the whole run, not just during warm-up.
+fn half_pagable_budget(path: &Path) -> usize {
+    let probe = PagedModel::open(path, PagedConfig::default()).unwrap();
+    let budget = probe.pagable_bytes() / 2;
+    assert!(budget >= probe.max_shard_bytes(), "budget below the largest shard");
+    budget
+}
+
+/// Injection ground truth snapshot: (io_errors, short_reads, corruptions).
+type Injected = (u64, u64, u64);
+
+/// Serve every text through its own blocking round-trip (single in-flight
+/// request ⇒ the shard read sequence, and with it the fault schedule, is
+/// identical run to run). Returns the per-request outcome (`Some(label)` on
+/// success, `None` when the request was degraded to an error), the final
+/// metrics, and the injector's counters when faults were configured.
+fn serve_all(
+    cfg: &BertConfig,
+    path: &Path,
+    serve_cfg: &ServeConfig,
+    texts: &[String],
+) -> (Vec<Option<i32>>, Metrics, Option<Injected>) {
+    let ex =
+        Arc::new(QuantExecutor::paged(cfg.clone(), path, vec![1, 4, 8], serve_cfg).unwrap());
+    let paged = ex.model().paged().unwrap().clone();
+    let stats = paged.fault_stats();
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let server = Server::start(ex, tok, serve_cfg.clone());
+    let mut out = Vec::with_capacity(texts.len());
+    for t in texts {
+        let rx = server.submit(t).unwrap();
+        // a degraded request must answer with Err — never hang
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("request hung");
+        out.push(resp.ok().map(|r| r.label));
+    }
+    let m = server.shutdown();
+    if let Some(budget) = serve_cfg.residency_budget_bytes {
+        let c = paged.counters();
+        assert!(
+            c.peak_resident_bytes <= budget,
+            "resident bytes {} exceeded the budget {budget}",
+            c.peak_resident_bytes
+        );
+    }
+    let injected = stats.map(|s| (s.io_errors(), s.short_reads(), s.corruptions()));
+    (out, m, injected)
+}
+
+fn serve_cfg(budget: usize) -> ServeConfig {
+    ServeConfig {
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        queue_cap: 64,
+        residency_budget_bytes: Some(budget),
+        // zero backoff: the schedule (not wall clock) is what's under test
+        retry: RetryPolicy {
+            max_attempts: 4,
+            base: Duration::ZERO,
+            cap: Duration::ZERO,
+        },
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn survivors_are_byte_identical_and_counters_reconcile() {
+    let (cfg, _pm, path) = build("main");
+    let budget = half_pagable_budget(&path);
+    let texts: Vec<String> = (0..30).map(|i| format!("chaos request number {i}")).collect();
+
+    let base_cfg = serve_cfg(budget);
+    let (baseline, base_m, base_stats) = serve_all(&cfg, &path, &base_cfg, &texts);
+    assert!(baseline.iter().all(Option::is_some), "fault-free run degraded a request");
+    assert_eq!(base_m.completed, texts.len());
+    assert_eq!(base_m.integrity_failures, 0);
+    assert_eq!(base_m.io_retries, 0);
+    assert_eq!(base_m.shards_quarantined, 0);
+    assert!(base_stats.is_none(), "fault-free run installed an injector");
+
+    let mut total_injected = 0u64;
+    for seed in [11u64, 77, 1234] {
+        let mut faulty_cfg = serve_cfg(budget);
+        faulty_cfg.fault = Some(FaultConfig::uniform(seed, 0.05));
+        let (out, m, stats) = serve_all(&cfg, &path, &faulty_cfg, &texts);
+        let (errors, shorts, corrupts) = stats.expect("injector installed");
+        total_injected += errors + shorts + corrupts;
+
+        // every survivor matches the fault-free label bit for bit
+        for (i, o) in out.iter().enumerate() {
+            if let Some(label) = o {
+                assert_eq!(Some(*label), baseline[i], "seed {seed}: request {i} diverged");
+            }
+        }
+        let degraded = out.iter().filter(|o| o.is_none()).count();
+        assert_eq!(m.completed, texts.len() - degraded, "seed {seed}");
+        if degraded > 0 {
+            // the only way a request degrades here is a quarantined shard
+            assert!(m.shards_quarantined > 0, "seed {seed}: errors without quarantine");
+        }
+        // counter algebra against the injection ground truth: every short
+        // read / corruption fails CRC or parse exactly once, and every
+        // injected failure is either retried or ends a shard's budget
+        assert_eq!(
+            m.integrity_failures as u64,
+            shorts + corrupts,
+            "seed {seed}: integrity failures don't match injected corruption"
+        );
+        assert_eq!(
+            errors + shorts + corrupts,
+            (m.io_retries + m.shards_quarantined) as u64,
+            "seed {seed}: injected failures don't reconcile with retries + quarantines"
+        );
+    }
+    assert!(total_injected > 0, "three seeds injected nothing — rates too low");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn retry_exhaustion_degrades_requests_not_the_process() {
+    let (cfg, _pm, path) = build("exhaust");
+    let texts: Vec<String> = (0..5).map(|i| format!("doomed request {i}")).collect();
+    let mut sc = serve_cfg(half_pagable_budget(&path));
+    sc.retry.max_attempts = 2;
+    // an error rate this high exhausts a 2-attempt budget almost
+    // immediately; the first pagable fetch quarantines and every request
+    // needs that shard, so all of them must error — cleanly
+    sc.fault = Some(FaultConfig { seed: 9, error_rate: 0.9, ..FaultConfig::default() });
+    let ex = Arc::new(QuantExecutor::paged(cfg.clone(), &path, vec![1, 4, 8], &sc).unwrap());
+    let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+    let server = Server::start(ex, tok, sc.clone());
+    for t in &texts {
+        let rx = server.submit(t).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("request hung");
+        assert!(resp.is_err(), "{t}: served through a quarantined shard");
+    }
+    // the server is still alive and says so: readiness reports degradation
+    let text = server.telemetry_text();
+    assert!(text.contains("splitquant_up 1"), "{text}");
+    assert!(text.contains("splitquant_degraded 1"), "{text}");
+    let m = server.shutdown();
+    assert_eq!(m.completed, 0);
+    assert!(m.shards_quarantined >= 1, "no quarantine despite 90% error rate");
+    assert_eq!(m.exec_panics, 0, "degradation must come from quarantine, not panics");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fault_schedule_replays_identically() {
+    let (cfg, _pm, path) = build("replay");
+    let texts: Vec<String> = (0..20).map(|i| format!("replayed request {i}")).collect();
+    let mut sc = serve_cfg(half_pagable_budget(&path));
+    sc.fault = Some(FaultConfig::uniform(42, 0.05));
+
+    let (out_a, m_a, stats_a) = serve_all(&cfg, &path, &sc, &texts);
+    let (out_b, m_b, stats_b) = serve_all(&cfg, &path, &sc, &texts);
+    assert_eq!(out_a, out_b, "per-request outcomes diverged across runs");
+    assert_eq!(stats_a, stats_b, "injection counters diverged across runs");
+    for (name, a, b) in [
+        ("integrity_failures", m_a.integrity_failures, m_b.integrity_failures),
+        ("io_retries", m_a.io_retries, m_b.io_retries),
+        ("shards_quarantined", m_a.shards_quarantined, m_b.shards_quarantined),
+        ("completed", m_a.completed, m_b.completed),
+    ] {
+        assert_eq!(a, b, "{name} diverged across runs");
+    }
+    std::fs::remove_file(&path).ok();
+}

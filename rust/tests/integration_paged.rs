@@ -66,7 +66,7 @@ fn half_budget_forward_is_byte_identical_and_bounded() {
     let resident = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
     let paged = PagedModel::open(
         &path,
-        PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1 },
+        PagedConfig { residency_budget_bytes: budget, prefetch_depth: 1, ..PagedConfig::default() },
     )
     .unwrap();
     let paged_bert = QuantizedBert::from_paged(cfg.clone(), paged.clone()).unwrap();

@@ -85,7 +85,7 @@ fn mixed_request_sizes_serve_correct_labels_on_shared_pool() {
     let rxs: Vec<_> = texts.iter().map(|t| server.submit(t).unwrap()).collect();
     let served: Vec<i32> = rxs
         .into_iter()
-        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().label)
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().label)
         .collect();
     let m = server.shutdown();
     assert_eq!(direct, served, "batched+padded+parallel labels must match direct");

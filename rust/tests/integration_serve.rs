@@ -46,7 +46,7 @@ fn pjrt_serving_end_to_end() {
     let rxs: Vec<_> =
         (0..64).map(|i| server.submit(&pool.texts[i % pool.len()]).unwrap()).collect();
     for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
         assert!((0..cfg.num_classes as i32).contains(&r.label));
     }
     let m = server.shutdown();
@@ -92,7 +92,7 @@ fn served_labels_match_direct_inference() {
     let rxs: Vec<_> = pool.texts.iter().map(|t| server.submit(t).unwrap()).collect();
     let served: Vec<i32> = rxs
         .into_iter()
-        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().label)
+        .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().label)
         .collect();
     server.shutdown();
     assert_eq!(direct, served);

@@ -205,6 +205,7 @@ fn traced_paged_serving_exports_chrome_trace_and_breakdown() {
         queue_cap: 256,
         parallel: pool_cfg(),
         residency_budget_bytes: Some(budget),
+        ..ServeConfig::default()
     };
     let exec =
         Arc::new(QuantExecutor::paged(cfg.clone(), &path, vec![1, 4], &serve_cfg).unwrap());
@@ -220,7 +221,9 @@ fn traced_paged_serving_exports_chrome_trace_and_breakdown() {
             .map(|k| server.submit(&format!("traced request number {}", done + k)).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(60)).expect("request timed out");
+            rx.recv_timeout(Duration::from_secs(60))
+                .expect("request timed out")
+                .expect("request degraded");
             done += 1;
         }
     }
