@@ -3,15 +3,26 @@
 //!
 //! ```sh
 //! cargo run --release --example serve -- [requests] [workers] [ckpt] [kernel] \
-//!     [--trace <path>] [--metrics-json]
+//!     [--trace <path>] [--metrics-json] [--bench-json[=<path>]] \
+//!     [--qhealth] [--shadow-rate <n>]
 //! ```
 //!
 //! `--trace <path>` enables the process-wide trace recorder
 //! (`splitquant::trace`) and writes a Chrome trace-event JSON file —
 //! load it at `ui.perfetto.dev`. `--metrics-json` prints the
 //! deterministic sorted-key metrics JSON for each mode after serving.
+//! `--bench-json` merges each mode's latency-breakdown rows into
+//! `BENCH_serving.json` (or the `=`-given path) keyed by
+//! `(bench, shape, engine)`, replacing rows in place on re-runs.
 //! Without compiled PJRT artifacts the demo falls back to the pure-Rust
-//! executor on a small random model, so both flags work anywhere.
+//! executor on a small random model, so all flags work anywhere.
+//!
+//! `--qhealth` arms the numeric-health switch (`splitquant::qhealth`) and
+//! `--shadow-rate <n>` routes 1-in-n requests through the shadow-sampling
+//! hook; this demo serves FP32 weights, whose executors expose no
+//! quantization signals, so the telemetry printed per mode carries the
+//! always-on `splitquant_quant_drift 0` gauge and no per-layer families —
+//! see `serve_paged` for the quantized path the monitors exist for.
 //!
 //! `kernel` picks the micro-kernel family (`scalar` | `simd` | `int8`,
 //! default: `simd` when compiled in) via `ServeConfig::parallel.kernel` —
@@ -67,6 +78,9 @@ use splitquant::util::rng::Rng;
 fn main() -> splitquant::Result<()> {
     let mut trace_path: Option<String> = None;
     let mut metrics_json = false;
+    let mut bench_json: Option<String> = None;
+    let mut qhealth_on = false;
+    let mut shadow_rate: u64 = 8;
     let mut args: Vec<String> = Vec::new();
     let mut argv = std::env::args().skip(1);
     while let Some(a) = argv.next() {
@@ -77,11 +91,24 @@ fn main() -> splitquant::Result<()> {
                 })?);
             }
             "--metrics-json" => metrics_json = true,
-            _ => args.push(a),
+            "--bench-json" => bench_json = Some("BENCH_serving.json".to_string()),
+            "--qhealth" => qhealth_on = true,
+            "--shadow-rate" => {
+                shadow_rate = argv.next().and_then(|s| s.parse().ok()).ok_or_else(|| {
+                    splitquant::Error::Coordinator("--shadow-rate needs an integer".into())
+                })?;
+            }
+            _ => match a.strip_prefix("--bench-json=") {
+                Some(p) => bench_json = Some(p.to_string()),
+                None => args.push(a),
+            },
         }
     }
     if trace_path.is_some() {
         splitquant::trace::set_enabled(true);
+    }
+    if qhealth_on {
+        splitquant::qhealth::set_enabled(true);
     }
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
@@ -160,6 +187,8 @@ fn main() -> splitquant::Result<()> {
                 queue_cap: 8192,
                 parallel: ParallelConfig { kernel, ..ParallelConfig::default() },
                 residency_budget_bytes: None,
+                shadow: qhealth_on
+                    .then_some(splitquant::qhealth::ShadowConfig { seed: 7, rate: shadow_rate }),
                 ..ServeConfig::default()
             },
         );
@@ -182,9 +211,18 @@ fn main() -> splitquant::Result<()> {
             }
         }
         let wall = t0.elapsed();
+        if qhealth_on {
+            println!("[serve] telemetry[{mode}]:\n{}", server.telemetry_text());
+        }
         let m = server.shutdown();
         if metrics_json {
             println!("[serve] metrics[{mode}] = {}", m.to_json().to_string());
+        }
+        if let Some(path) = &bench_json {
+            let engine = format!("{:?}", kernel.effective()).to_lowercase();
+            let rows = m.breakdown_records(mode, &engine);
+            splitquant::report::bench_json::merge_write(Path::new(path), &rows)?;
+            println!("[serve] merged {} breakdown rows into {path}", rows.len());
         }
         report.row(vec![
             mode.to_string(),

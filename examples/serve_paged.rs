@@ -5,6 +5,7 @@
 //! ```sh
 //! cargo run --release --example serve_paged -- [requests] [budget_pct] [kernel] \
 //!     [--trace <path>] [--metrics-json] [--bench-json[=<path>]] \
+//!     [--qhealth] [--shadow-rate <n>] \
 //!     [--fault-seed <n>] [--fault-rate <p>] [--retry-max <n>]
 //! ```
 //!
@@ -41,6 +42,17 @@
 //! fused kernel on identical planes — logits are byte-identical), while
 //! the metrics show the paging traffic and the bounded working set.
 //!
+//! `--qhealth` arms the numeric-health monitors (`splitquant::qhealth`) on
+//! both modes: activation-drift clip fractions, per-layer cluster
+//! occupancy, outlier-hatch hit rates, and — at 1-in-`--shadow-rate`
+//! requests (seeded, deterministic, default 8; 0 disables) — a shadow
+//! replay through the FP32 reference engine measuring logit KL and top-1
+//! agreement. Each mode prints its Prometheus telemetry (including the
+//! `splitquant_quant_drift` gauge) and the sorted `doctor`-style report;
+//! with `--bench-json` the per-layer `qhealth-<layer>` rows merge into the
+//! same benchmark file. Without the flag the monitors stay disarmed: the
+//! hot path keeps its zero-overhead contract and logits are bit-identical.
+//!
 //! `--fault-rate <p>` (with optional `--fault-seed <n>`, default 1) turns on
 //! deterministic fault injection on the paged mode's shard reads — IO
 //! errors, short reads and bit flips, each at probability `p` per read.
@@ -70,6 +82,8 @@ fn main() -> splitquant::Result<()> {
     let mut fault_seed: u64 = 1;
     let mut fault_rate: f64 = 0.0;
     let mut retry_max: u32 = RetryPolicy::default().max_attempts;
+    let mut qhealth_on = false;
+    let mut shadow_rate: u64 = 8;
     let mut args: Vec<String> = Vec::new();
     let mut argv = std::env::args().skip(1);
     while let Some(a) = argv.next() {
@@ -91,6 +105,12 @@ fn main() -> splitquant::Result<()> {
             })?;
         } else if a == "--metrics-json" {
             metrics_json = true;
+        } else if a == "--qhealth" {
+            qhealth_on = true;
+        } else if a == "--shadow-rate" {
+            shadow_rate = argv.next().and_then(|s| s.parse().ok()).ok_or_else(|| {
+                splitquant::Error::Coordinator("--shadow-rate needs an integer".into())
+            })?;
         } else if a == "--bench-json" {
             bench_json = Some("BENCH_serving.json".to_string());
         } else if let Some(p) = a.strip_prefix("--bench-json=") {
@@ -101,6 +121,9 @@ fn main() -> splitquant::Result<()> {
     }
     if trace_path.is_some() {
         splitquant::trace::set_enabled(true);
+    }
+    if qhealth_on {
+        splitquant::qhealth::set_enabled(true);
     }
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(400);
     let budget_pct: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(35);
@@ -176,17 +199,25 @@ fn main() -> splitquant::Result<()> {
             retry: RetryPolicy { max_attempts: retry_max, ..RetryPolicy::default() },
             fault: (paged_mode && faults_on)
                 .then(|| FaultConfig::uniform(fault_seed, fault_rate)),
+            // deterministic 1-in-N shadow replays through the FP32
+            // reference engine, scheduled per request sequence number
+            shadow: qhealth_on
+                .then_some(splitquant::qhealth::ShadowConfig { seed: 7, rate: shadow_rate }),
             ..ServeConfig::default()
         };
         let (exec, peek) = if paged_mode {
-            let ex = QuantExecutor::paged(cfg.clone(), &shards, vec![1, 8], &serve_cfg)?;
+            let mut ex = QuantExecutor::paged(cfg.clone(), &shards, vec![1, 8], &serve_cfg)?;
+            if qhealth_on {
+                ex.enable_qhealth();
+            }
             let handle = ex.model().paged().cloned();
             (Arc::new(ex), handle)
         } else {
-            (
-                Arc::new(QuantExecutor::resident(cfg.clone(), &store, &qm, vec![1, 8])?),
-                None,
-            )
+            let mut ex = QuantExecutor::resident(cfg.clone(), &store, &qm, vec![1, 8])?;
+            if qhealth_on {
+                ex.enable_qhealth();
+            }
+            (Arc::new(ex), None)
         };
         let server = Server::start(exec, tok.clone(), serve_cfg);
         let t0 = Instant::now();
@@ -212,17 +243,27 @@ fn main() -> splitquant::Result<()> {
             }
         }
         let wall = t0.elapsed();
+        let telemetry = qhealth_on.then(|| server.telemetry_text());
         let m = server.shutdown();
         let mode_label =
             if paged_mode { format!("paged{budget_pct}") } else { "resident".to_string() };
+        if let Some(text) = telemetry {
+            println!("[serve_paged] telemetry[{mode_label}]:\n{text}");
+        }
+        if let Some(q) = &m.qhealth {
+            print!("{}", splitquant::qhealth::render(q));
+        }
         if metrics_json {
             println!("[serve_paged] metrics[{mode_label}] = {}", m.to_json().to_string());
         }
         if let Some(path) = &bench_json {
             let engine = format!("{:?}", kernel.effective()).to_lowercase();
-            let rows = m.breakdown_records(&mode_label, &engine);
+            let mut rows = m.breakdown_records(&mode_label, &engine);
+            if let Some(q) = &m.qhealth {
+                rows.extend(splitquant::qhealth::bench_rows(q, &mode_label, &engine));
+            }
             splitquant::report::bench_json::merge_write(std::path::Path::new(path), &rows)?;
-            println!("[serve_paged] merged {} breakdown rows into {path}", rows.len());
+            println!("[serve_paged] merged {} benchmark rows into {path}", rows.len());
         }
         let peak = peek.map(|p| p.counters().peak_resident_bytes).unwrap_or(0);
         table.row(vec![

@@ -147,6 +147,20 @@ mod tests {
     }
 
     #[test]
+    fn fixture_det_iter_fires_in_qhealth() {
+        // qhealth/ renders byte-deterministic reports, so it sits under the
+        // same ordered-iteration contract as the artifact dirs
+        let fs = lint_source("qhealth/mod.rs", include_str!("testdata/det_iter_qhealth_pos.rs"));
+        assert_eq!(by_rule(&fs, RULE_DET_ITER).len(), 3, "{fs:?}");
+    }
+
+    #[test]
+    fn fixture_det_iter_quiet_on_ordered_qhealth_state() {
+        let fs = lint_source("qhealth/mod.rs", include_str!("testdata/det_iter_qhealth_neg.rs"));
+        assert!(by_rule(&fs, RULE_DET_ITER).is_empty(), "{fs:?}");
+    }
+
+    #[test]
     fn fixture_no_panic_fires() {
         let fs = lint_source("coordinator/x.rs", include_str!("testdata/no_panic_pos.rs"));
         assert_eq!(by_rule(&fs, RULE_NO_PANIC).len(), 4, "{fs:?}");

@@ -9,7 +9,7 @@
 //! |------|----------|
 //! | `no-fma` | bit-identity: no `mul_add`/`fma` in the kernel files — an FMA rounds once where the engines must round per op |
 //! | `no-nested-dispatch` | no pooled kernel entry point called lexically inside a `WorkerPool::scope(...)` argument — nested dispatch would deadlock or silently serialize |
-//! | `deterministic-iteration` | no `HashMap`/`HashSet` iteration in `autotune/`, `quant/`, `report/`, where ordering leaks into serialized `BitPlan`/bench artifacts |
+//! | `deterministic-iteration` | no `HashMap`/`HashSet` iteration in `autotune/`, `quant/`, `report/`, `qhealth/`, where ordering leaks into serialized `BitPlan`/bench artifacts |
 //! | `no-panic-in-serving` | no `unwrap()`/`expect(`/`panic!` (and, under `coordinator/` + `shardstore/`, no `[idx]` indexing) in non-test serving code |
 //! | `safety-comment` | every `unsafe` token carries a `// SAFETY:` comment immediately above (or trailing on the same line) |
 //! | `lock-across-io` | no lock guard held across file IO or pooled dispatch (deadlock/stall heuristic for the shard-fault path) |
@@ -29,9 +29,11 @@
 //!   allowed (with an annotation in `parallel/kernels.rs`, whose task
 //!   closures sit lexically inside the partition loop); a clock read or
 //!   trace emission in an inner loop would run per element and is not.
-//! * `deterministic-iteration` also covers `trace/` (the exporters): the
-//!   Chrome/Prometheus text must be byte-deterministic for a given
-//!   snapshot, so map iteration there must be ordered.
+//! * `deterministic-iteration` also covers `trace/` (the exporters) and
+//!   `qhealth/` (the numeric-health recorder): the Chrome/Prometheus text,
+//!   the `doctor` report and the `qhealth-*` bench rows must all be
+//!   byte-deterministic for a given snapshot, so map iteration there must
+//!   be ordered.
 //!
 //! An allow comment must be a `//` line comment, name a real rule, and
 //! carry a reason after the closing paren; a malformed one is itself a
@@ -54,7 +56,7 @@ pub const RULE_ALLOW_SYNTAX: &str = "allow-syntax";
 pub const RULES: &[(&str, &str)] = &[
     (RULE_NO_FMA, "mul_add/fma banned in kernel files (bit-identity contract)"),
     (RULE_NESTED_DISPATCH, "pooled kernel call inside a WorkerPool scope(...) argument"),
-    (RULE_DET_ITER, "HashMap/HashSet iteration in autotune/, quant/, report/"),
+    (RULE_DET_ITER, "HashMap/HashSet iteration in autotune/, quant/, report/, qhealth/"),
     (RULE_NO_PANIC, "unwrap/expect/panic!/[idx] in non-test serving code"),
     (RULE_SAFETY, "unsafe without an immediately-preceding // SAFETY: comment"),
     (RULE_LOCK_IO, "lock guard held across file IO or pooled dispatch"),
@@ -326,7 +328,7 @@ fn rule_nested_dispatch(ctx: &Ctx, out: &mut Vec<Finding>) {
 }
 
 fn rule_det_iter(ctx: &Ctx, out: &mut Vec<Finding>) {
-    if !ctx.in_dir(&["autotune/", "quant/", "report/", "trace/"]) {
+    if !ctx.in_dir(&["autotune/", "quant/", "report/", "trace/", "qhealth/"]) {
         return;
     }
     let toks = ctx.toks();

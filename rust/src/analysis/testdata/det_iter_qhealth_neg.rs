@@ -1,0 +1,17 @@
+//! Fixture (negative): the shape `qhealth/` actually uses — `BTreeMap`
+//! iteration (sorted, so the report is byte-deterministic) plus `HashMap`
+//! point lookups and size queries that leak no ordering — no findings.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub fn snapshot(sites: &BTreeMap<usize, u64>, cache: &HashMap<String, u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (site, clipped) in sites {
+        out.push(format!("site {site}: clipped={clipped}"));
+    }
+    if let Some(hits) = cache.get("shadow-samples") {
+        out.push(hits.to_string());
+    }
+    out.push(cache.len().to_string());
+    out
+}

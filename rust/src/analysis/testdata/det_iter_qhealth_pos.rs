@@ -1,0 +1,20 @@
+//! Fixture (positive): HashMap iteration in a numeric-health module —
+//! snapshot/report order would depend on hash state, breaking the
+//! byte-deterministic `doctor` report. Three findings: a `for … in`, a
+//! `.keys()`, and a `.drain()`.
+
+use std::collections::HashMap;
+
+pub fn snapshot(sites: &HashMap<usize, u64>) -> Vec<String> {
+    let mut out = Vec::new();
+    for (site, clipped) in sites {
+        out.push(format!("site {site}: clipped={clipped}"));
+    }
+    let layers: Vec<&usize> = sites.keys().collect();
+    out.push(layers.len().to_string());
+    let mut occupancy = HashMap::new();
+    occupancy.insert("encoder.0.attn.q".to_string(), 3u64);
+    let drained: Vec<(String, u64)> = occupancy.drain().collect();
+    out.push(drained.len().to_string());
+    out
+}

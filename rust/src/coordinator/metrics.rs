@@ -74,6 +74,10 @@ pub struct Metrics {
     /// before a batch formed (each got an error response; distinct from
     /// `shed`, which rejects at ingress when the queue is full)
     pub shed_expired: usize,
+    /// numeric-health snapshot folded from the executor
+    /// ([`crate::qhealth`]) — `None` when the executor has no recorder
+    /// installed (monitoring off)
+    pub qhealth: Option<crate::qhealth::QHealthSnapshot>,
 }
 
 impl Default for Metrics {
@@ -102,6 +106,7 @@ impl Default for Metrics {
             io_retries: 0,
             shards_quarantined: 0,
             shed_expired: 0,
+            qhealth: None,
         }
     }
 }
@@ -202,6 +207,27 @@ impl Metrics {
             })
             .collect();
         pairs.push(("stages", obj(stage_objs)));
+        if let Some(q) = &self.qhealth {
+            // summary view; the full per-layer rows go to BENCH_serving.json
+            // and the doctor report ([`crate::qhealth::bench_rows`]/`render`)
+            let clipped: u64 = q.sites.iter().map(|s| s.clipped).sum();
+            let values: u64 = q.sites.iter().map(|s| s.values).sum();
+            let dead: u32 = q.layers.iter().map(|l| l.dead_clusters).sum();
+            pairs.push((
+                "qhealth",
+                obj(vec![
+                    ("act_clipped", Json::from(clipped as f64)),
+                    ("act_values", Json::from(values as f64)),
+                    ("dead_clusters", Json::from(dead as usize)),
+                    ("drift_alarm", Json::from(q.drift_alarmed())),
+                    ("layers", Json::from(q.layers.len())),
+                    ("shadow_kl_max_micro_nats", Json::from(q.shadow.kl_max_micro_nats as f64)),
+                    ("shadow_samples", Json::from(q.shadow.samples as f64)),
+                    ("shadow_top1_agree", Json::from(q.shadow.top1_agree as f64)),
+                    ("sites", Json::from(q.sites.len())),
+                ]),
+            ));
+        }
         obj(pairs)
     }
 

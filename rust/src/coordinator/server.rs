@@ -11,7 +11,7 @@
 //! regression-tested to stay near zero.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -51,6 +51,18 @@ pub trait BatchExecutor: Send + Sync {
     /// executor never decodes planes at matmul time. Folded into
     /// [`Metrics`] on read alongside the residency counters.
     fn plane_stats(&self) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Numeric-health shadow probe ([`crate::qhealth`]): re-run one served
+    /// row through the executor's reference path and record fidelity. The
+    /// server calls this *after* the batch's responses are sent — never on
+    /// the hot path. Default: no-op (executors without a health story).
+    fn shadow_sample(&self, _ids: &IntTensor, _mask: &Tensor) {}
+
+    /// Numeric-health snapshot, when this executor records one. Folded
+    /// into [`Metrics::qhealth`] on metrics reads. Default: `None`.
+    fn qhealth(&self) -> Option<crate::qhealth::QHealthSnapshot> {
         None
     }
 }
@@ -265,6 +277,13 @@ impl QuantExecutor {
     pub fn model(&self) -> &QuantizedBert {
         &self.model
     }
+
+    /// Install a numeric-health recorder on the underlying model and
+    /// return a handle to it (call before `Server::start`; recording also
+    /// needs the process-wide [`crate::qhealth::set_enabled`] switch on).
+    pub fn enable_qhealth(&mut self) -> Arc<crate::qhealth::Recorder> {
+        self.model.enable_qhealth()
+    }
 }
 
 impl BatchExecutor for QuantExecutor {
@@ -282,6 +301,17 @@ impl BatchExecutor for QuantExecutor {
 
     fn plane_stats(&self) -> Option<(usize, usize)> {
         self.model.paged().map(|_| self.model.plane_stats())
+    }
+
+    fn shadow_sample(&self, ids: &IntTensor, mask: &Tensor) {
+        // a failed shadow fault is telemetry lost, not a request lost
+        if let Err(e) = self.model.shadow_sample(ids, mask) {
+            log::debug!("shadow sample skipped: {e}");
+        }
+    }
+
+    fn qhealth(&self) -> Option<crate::qhealth::QHealthSnapshot> {
+        self.model.qhealth_snapshot()
     }
 }
 
@@ -321,6 +351,14 @@ pub struct ServeConfig {
     /// dispatches the oldest request *at* `max_wait`. `None` disables
     /// expiry.
     pub expire_after: Option<Duration>,
+    /// Deterministic 1-in-N shadow-fidelity sampling
+    /// ([`crate::qhealth::ShadowConfig`]): sampled requests re-run through
+    /// the executor's reference path *after* their batch has responded
+    /// (via [`BatchExecutor::shadow_sample`]). Replayable — whether a
+    /// request is sampled is a pure function of the schedule seed and its
+    /// server-assigned sequence number. `None` (the default) samples
+    /// nothing and costs nothing.
+    pub shadow: Option<crate::qhealth::ShadowConfig>,
 }
 
 impl Default for ServeConfig {
@@ -337,6 +375,7 @@ impl Default for ServeConfig {
             retry: crate::shardstore::RetryPolicy::default(),
             fault: None,
             expire_after: None,
+            shadow: None,
         }
     }
 }
@@ -353,6 +392,9 @@ struct Pending {
     ids: Vec<i32>,
     mask: Vec<f32>,
     submitted: Instant,
+    /// Server-assigned submission sequence number — the replayable key the
+    /// shadow-sampling schedule ([`ServeConfig::shadow`]) fires on.
+    seq: u64,
     /// Per-request outcome channel: `Ok` with the classification, or `Err`
     /// when the request was degraded away (executor panic/failure, shard
     /// quarantine, queue expiry) — a submitter always hears back, it never
@@ -453,6 +495,9 @@ pub struct Server {
     /// Kept for metrics reads: shard-paging counters live in the executor's
     /// residency manager and are folded into [`Metrics`] on read.
     executor: Arc<dyn BatchExecutor>,
+    /// Monotonic submission counter — assigns each request the replayable
+    /// sequence number the shadow-sampling schedule keys on.
+    seq: AtomicU64,
     batcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -594,6 +639,7 @@ impl Server {
             let work_rx = work_rx.clone();
             let executor = executor.clone();
             let metrics = metrics.clone();
+            let shadow = cfg.shadow;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sq-worker-{wi}"))
@@ -710,6 +756,18 @@ impl Server {
                                 labels.len()
                             );
                         }
+                        // decide shadow rows before the requests are
+                        // consumed by the respond loop: the schedule keys
+                        // on each request's submission sequence number
+                        let shadow_rows: Vec<usize> = match shadow {
+                            Some(sc) => requests
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, p)| sc.fires(p.seq))
+                                .map(|(i, _)| i)
+                                .collect(),
+                            None => Vec::new(),
+                        };
                         for (i, p) in requests.into_iter().enumerate() {
                             let resp = match labels.get(i) {
                                 Some(&label) => Ok(ClassifyResponse {
@@ -725,6 +783,36 @@ impl Server {
                             let _ = p.resp.send(resp);
                         }
                         drop(resp_sp);
+                        // shadow-fidelity probes run strictly after the
+                        // batch's responses went out — sampled rows re-run
+                        // as singletons on the executor's reference path,
+                        // so hot-batch latency never carries shadow cost.
+                        // Same panic containment as classify: a panicking
+                        // probe loses telemetry, never the worker.
+                        for &i in &shadow_rows {
+                            let (Some(rid), Some(rmk)) = (
+                                ids.data().get(i * max_len..(i + 1) * max_len),
+                                mask.data().get(i * max_len..(i + 1) * max_len),
+                            ) else {
+                                continue;
+                            };
+                            if let (Ok(sid), Ok(smk)) = (
+                                IntTensor::new(&[1, max_len], rid.to_vec()),
+                                Tensor::new(&[1, max_len], rmk.to_vec()),
+                            ) {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        executor.shadow_sample(&sid, &smk);
+                                    }),
+                                );
+                                crate::trace::instant(
+                                    crate::trace::Category::Request,
+                                    "shadow-sample",
+                                    i as u64,
+                                    size as u64,
+                                );
+                            }
+                        }
                     })
                     // sq-lint: allow(no-panic-in-serving) — server construction, not the request path: no workers means no server
                     .expect("spawn worker"),
@@ -738,6 +826,7 @@ impl Server {
             polls,
             expired,
             executor,
+            seq: AtomicU64::new(0),
             batcher: Some(batcher),
             workers,
         }
@@ -751,7 +840,8 @@ impl Server {
     pub fn try_submit(&self, text: &str) -> Result<mpsc::Receiver<Result<ClassifyResponse>>> {
         let (ids, mask) = self.tokenizer.encode(text);
         let (rtx, rrx) = mpsc::channel();
-        let req = Pending { ids, mask, submitted: Instant::now(), resp: rtx };
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let req = Pending { ids, mask, submitted: Instant::now(), seq, resp: rtx };
         match self.ingress.try_push(req) {
             Ok(()) => {
                 crate::trace::instant(crate::trace::Category::Request, "ingress", 0, 0);
@@ -775,7 +865,8 @@ impl Server {
     pub fn submit(&self, text: &str) -> Result<mpsc::Receiver<Result<ClassifyResponse>>> {
         let (ids, mask) = self.tokenizer.encode(text);
         let (rtx, rrx) = mpsc::channel();
-        let req = Pending { ids, mask, submitted: Instant::now(), resp: rtx };
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let req = Pending { ids, mask, submitted: Instant::now(), seq, resp: rtx };
         self.ingress
             .push(req)
             .map_err(|_| Error::Coordinator("server is shut down".into()))?;
@@ -882,6 +973,7 @@ fn fold_residency(m: &mut Metrics, ex: &dyn BatchExecutor) {
         m.plane_decodes = decodes;
         m.plane_reuses = reuses;
     }
+    m.qhealth = ex.qhealth();
 }
 
 #[cfg(test)]
@@ -976,6 +1068,67 @@ mod tests {
             .map(|(_, &c)| c)
             .sum();
         assert!(batched > 0, "expected batched dispatches: {:?}", m.batches_by_size);
+    }
+
+    #[test]
+    fn shadow_sampling_and_qhealth_fold_into_metrics() {
+        let _g = crate::qhealth::test_guard();
+        let cfg = BertConfig {
+            vocab_size: 512,
+            hidden: 16,
+            layers: 1,
+            heads: 2,
+            ffn: 32,
+            max_len: 16,
+            num_classes: 6,
+            ln_eps: 1e-12,
+        };
+        let mut rng = Rng::new(0);
+        let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+        let q = crate::splitquant::default_quantizable(&store);
+        let (_, qm) = crate::splitquant::quantize_store(
+            &store,
+            &q,
+            &crate::splitquant::SplitQuantConfig::new(4),
+        )
+        .unwrap();
+        let tok = HashTokenizer::new(cfg.vocab_size, cfg.max_len);
+        let mut ex = QuantExecutor::resident(cfg, &store, &qm, vec![1, 4, 8]).unwrap();
+        ex.enable_qhealth();
+        crate::qhealth::set_enabled(true);
+        let server = Server::start(
+            Arc::new(ex),
+            tok,
+            ServeConfig {
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                queue_cap: 64,
+                // rate 1: every request shadow-sampled, so the expected
+                // sample count is exact no matter how batches formed
+                shadow: Some(crate::qhealth::ShadowConfig { seed: 7, rate: 1 }),
+                ..ServeConfig::default()
+            },
+        );
+        let rxs: Vec<_> = (0..12)
+            .map(|i| server.submit(&format!("health check {i}")).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        }
+        let text = server.telemetry_text();
+        let m = server.shutdown();
+        crate::qhealth::set_enabled(false);
+        let qh = m.qhealth.expect("executor recorder must fold into metrics");
+        assert!(!qh.layers.is_empty(), "no dispatch telemetry recorded");
+        assert!(!qh.sites.is_empty(), "no act-site telemetry recorded");
+        assert_eq!(qh.shadow.samples, 12, "rate-1 schedule samples every request");
+        // serving never deploys a calibrated range here, so drift can't alarm
+        assert!(!qh.drift_alarmed());
+        assert!(text.contains("splitquant_quant_drift"), "{text}");
+        assert!(text.contains("splitquant_qhealth_shadow_samples_total"), "{text}");
+        // metrics JSON carries the qhealth summary object
+        let json = m.to_json().to_string();
+        assert!(json.contains("\"qhealth\""), "{json}");
     }
 
     #[test]

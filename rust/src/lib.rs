@@ -32,6 +32,7 @@ pub mod error;
 pub mod eval;
 pub mod model;
 pub mod parallel;
+pub mod qhealth;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -9,6 +9,7 @@
 //!   verify-runtime  cross-check pure-Rust executor vs PJRT executables
 //!   lint            sq-lint the source tree (invariant linter)
 //!   trace           traced self-contained paged serving run (telemetry demo)
+//!   doctor          self-contained quantization numeric-health report
 //!   shard-verify    offline shard integrity check (CRC every record)
 //!   info            print manifest / artifact inventory
 //!
@@ -101,6 +102,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "verify-runtime" => cmd_verify(&flags),
         "lint" => cmd_lint(&flags),
         "trace" => cmd_trace(&flags),
+        "doctor" => cmd_doctor(&flags),
         "shard-verify" => cmd_shard_verify(&flags),
         "info" => cmd_info(&flags),
         "help" | "--help" | "-h" => {
@@ -135,6 +137,9 @@ fn print_usage() {
                            determinism / concurrency contracts (sq-lint)\n\
            trace           [--requests N] [--out trace.json]   traced paged serving\n\
                            run: Prometheus text to stdout, Chrome JSON to --out\n\
+           doctor          [--requests N] [--shadow-rate N] [--seed S] [--bits B]\n\
+                           self-contained numeric-health report (drift, cluster\n\
+                           occupancy, shadow fidelity); see `doctor --help`\n\
            shard-verify    --shards F.sqsh [--demo-out F.sqsh]   offline shard\n\
                            integrity check: CRC-verify and parse every record\n\
            info\n\n\
@@ -686,6 +691,94 @@ fn cmd_trace(flags: &Flags) -> Result<()> {
         out.display()
     );
     std::fs::remove_file(&shards).ok();
+    Ok(())
+}
+
+/// `splitquant doctor`: self-contained quantization numeric-health report.
+/// Quantizes a small random BERT-Tiny, serves `--requests` seeded forwards
+/// through the integer engine with the qhealth recorder armed, routes a
+/// deterministic 1-in-`--shadow-rate` subset through the FP32 shadow
+/// reference path, and prints the sorted per-site / per-layer report
+/// ([`splitquant::qhealth::render`]). Needs no artifacts, checkpoints or
+/// network, and is byte-deterministic for a fixed seed: two runs with the
+/// same flags print identical bytes (the CI `qhealth-smoke` lane diffs
+/// them).
+fn cmd_doctor(flags: &Flags) -> Result<()> {
+    use splitquant::model::config::BertConfig;
+    use splitquant::model::QuantizedBert;
+    use splitquant::parallel::KernelKind;
+    use splitquant::qhealth::ShadowConfig;
+    use splitquant::quant::QParams;
+    use splitquant::splitquant::{default_quantizable, quantize_store, ActQuantParams};
+    use splitquant::tensor::{IntTensor, Tensor};
+
+    if flags.0.contains_key("help") {
+        println!(
+            "splitquant doctor — quantization numeric-health report\n\n\
+             Runs a seeded, self-contained serving drill (random BERT-Tiny,\n\
+             SplitQuant weights, integer engine) with the numeric-health\n\
+             recorder armed and prints the per-site drift, per-layer cluster\n\
+             occupancy / outlier-hatch, and shadow-fidelity report.\n\n\
+             flags:\n\
+               --requests N     forwards to run (default 48)\n\
+               --shadow-rate N  route 1-in-N requests through the FP32\n\
+                                shadow reference path (0 = never, default 8)\n\
+               --seed S         RNG + shadow-schedule seed (default 7)\n\
+               --bits B         SplitQuant weight width (default 4)\n\n\
+             Output is byte-deterministic for fixed flags."
+        );
+        return Ok(());
+    }
+
+    let requests = flags.usize("requests", 48);
+    let shadow_rate = flags.u64("shadow-rate", 8);
+    let seed = flags.u64("seed", 7);
+    let bits = flags.usize("bits", 4) as u8;
+
+    let cfg = BertConfig {
+        vocab_size: 2048,
+        hidden: 32,
+        layers: 2,
+        heads: 2,
+        ffn: 64,
+        max_len: 32,
+        num_classes: 6,
+        ln_eps: 1e-12,
+    };
+    let mut rng = Rng::new(seed);
+    let store = ParamStore::init_bert(&cfg.param_order(), &mut rng);
+    let quantizable = default_quantizable(&store);
+    let (_, qm) = quantize_store(&store, &quantizable, &SplitQuantConfig::new(bits))?;
+    let mut model = QuantizedBert::new(cfg.clone(), &store, &qm)?;
+    model.set_kernel(KernelKind::Int8);
+    let p = QParams::from_range(-3.0, 3.0, 8);
+    model.set_act_params(ActQuantParams {
+        per_site: vec![[p, p, p]; cfg.act_sites().len()],
+        bits: 8,
+    });
+    model.set_act_ocs_ratio(3.0);
+    let rec = model.enable_qhealth();
+    splitquant::qhealth::set_enabled(true);
+
+    let shadow = ShadowConfig { seed, rate: shadow_rate };
+    let mut shadowed = 0u64;
+    for seq in 0..requests as u64 {
+        let ids: Vec<i32> = (0..cfg.max_len).map(|_| rng.below(cfg.vocab_size) as i32).collect();
+        let ids = IntTensor::new(&[1, cfg.max_len], ids)?;
+        let mask = Tensor::new(&[1, cfg.max_len], vec![1.0; cfg.max_len])?;
+        model.forward(&ids, &mask)?;
+        if shadow.fires(seq) {
+            model.shadow_sample(&ids, &mask)?;
+            shadowed += 1;
+        }
+    }
+    let snap = rec.snapshot();
+    splitquant::qhealth::set_enabled(false);
+    print!("{}", splitquant::qhealth::render(&snap));
+    println!(
+        "[doctor] requests={requests} shadowed={shadowed} shadow-rate={shadow_rate} \
+         seed={seed} bits=INT{bits}"
+    );
     Ok(())
 }
 

@@ -233,6 +233,21 @@ pub struct QuantizedBert {
     /// columns whose max |activation| exceeds `ratio ×` the mean column max
     /// are split before integer quantization. `None` = off (the default).
     act_ocs_ratio: Option<f32>,
+    /// Numeric-health recorder ([`crate::qhealth`]). `None` (the default)
+    /// keeps the forward path untouched: every observation site guards on
+    /// [`crate::qhealth::enabled`] (one relaxed atomic load) and then on
+    /// this `Option` — no locks, no allocations, logits bit-identical.
+    qhealth: Option<Arc<crate::qhealth::Recorder>>,
+}
+
+/// Per-forward execution mode: which kernel override drives the fused
+/// linears, and whether numeric-health observation sites fire. The shadow
+/// path re-runs a request with `observe: false` (so fidelity probes don't
+/// double-count drift) and `kernel: None` (the f32 reference engine).
+#[derive(Debug, Clone, Copy)]
+struct ExecMode {
+    kernel: Option<KernelKind>,
+    observe: bool,
 }
 
 impl QuantizedBert {
@@ -260,6 +275,7 @@ impl QuantizedBert {
             act_params: None,
             int8_reference: false,
             act_ocs_ratio: None,
+            qhealth: None,
         })
     }
 
@@ -302,6 +318,7 @@ impl QuantizedBert {
             act_params: None,
             int8_reference: false,
             act_ocs_ratio: None,
+            qhealth: None,
         })
     }
 
@@ -333,6 +350,21 @@ impl QuantizedBert {
         self.act_ocs_ratio = Some(ratio);
     }
 
+    /// Install (or fetch) this executor's numeric-health recorder
+    /// ([`crate::qhealth::Recorder`]) and return a handle to it. Recording
+    /// additionally requires the process-wide [`crate::qhealth::enabled`]
+    /// switch — installing a recorder alone changes nothing on the forward
+    /// path beyond the `Option` guard.
+    pub fn enable_qhealth(&mut self) -> Arc<crate::qhealth::Recorder> {
+        self.qhealth.get_or_insert_with(Arc::default).clone()
+    }
+
+    /// Snapshot of this executor's numeric-health state, when a recorder
+    /// is installed.
+    pub fn qhealth_snapshot(&self) -> Option<crate::qhealth::QHealthSnapshot> {
+        self.qhealth.as_ref().map(|r| r.snapshot())
+    }
+
     /// Calibrated per-tensor params for activation site `site`, when
     /// deployed. Chunk slot 0 carries the per-tensor value (the
     /// `ActQuantizePass` artifact stores `[p, p, p]`).
@@ -340,20 +372,34 @@ impl QuantizedBert {
         self.act_params.as_ref().and_then(|a| a.per_site.get(site)).map(|s| &s[0])
     }
 
-    /// One fused quantized-weight matmul under this executor's engine
-    /// selection — the single dispatch point both backends (resident and
-    /// paged) route through, so engine behavior can never differ between
-    /// them.
+    /// One fused quantized-weight matmul under `mode`'s engine selection —
+    /// the single dispatch point both backends (resident and paged) route
+    /// through, so engine behavior can never differ between them. `name`
+    /// keys the dispatch-prologue health telemetry (cluster occupancy, OCS
+    /// hatch activity) per layer; the micro-kernels themselves are never
+    /// touched.
+    #[allow(clippy::too_many_arguments)]
     fn fused_matmul(
         &self,
+        name: &str,
         x: &Tensor,
         wshape: &[usize],
         codes: &[i8],
         cid: &[u8],
         params: &[QParams],
         act: Option<&QParams>,
+        mode: ExecMode,
     ) -> Tensor {
-        let Some(kind) = self.kernel else {
+        if mode.observe && crate::qhealth::enabled() {
+            if let Some(rec) = &self.qhealth {
+                // dispatch prologue: per-tensor layouts have no cid plane
+                // and therefore no occupancy story to tell
+                if !cid.is_empty() {
+                    rec.record_dispatch(name, kernels::cluster_occupancy(cid));
+                }
+            }
+        }
+        let Some(kind) = mode.kernel else {
             // no override: the process-wide engine (`ServeConfig.parallel`)
             return kernels::split_matmul(x, wshape, codes, cid, params);
         };
@@ -362,6 +408,11 @@ impl QuantizedBert {
         }
         if let Some(ratio) = self.act_ocs_ratio {
             let outliers = kernels::act_outlier_columns(x, ratio);
+            if mode.observe && crate::qhealth::enabled() {
+                if let Some(rec) = &self.qhealth {
+                    rec.record_ocs(name, x.shape()[1] as u64, outliers.len() as u64);
+                }
+            }
             if !outliers.is_empty() {
                 let (xe, we, ce, ie) =
                     kernels::ocs_expand_acts(x, wshape, codes, cid, &outliers);
@@ -379,11 +430,11 @@ impl QuantizedBert {
         }
     }
 
-    /// Plain FP32 matmul under this executor's engine selection. `Int8` has
-    /// no integer form for f32×f32 operands — it rides the f32 engines on
+    /// Plain FP32 matmul under `mode`'s engine selection. `Int8` has no
+    /// integer form for f32×f32 operands — it rides the f32 engines on
     /// this path ([`ops::matmul_with`] maps it to the f32x8 family).
-    fn plain_matmul(&self, x: &Tensor, w: &Tensor) -> Tensor {
-        match self.kernel {
+    fn plain_matmul(&self, x: &Tensor, w: &Tensor, mode: ExecMode) -> Tensor {
+        match mode.kernel {
             Some(kind) => ops::matmul_with(x, w, kind),
             None => ops::matmul(x, w),
         }
@@ -393,13 +444,26 @@ impl QuantizedBert {
     /// unsupported layout — surfaced as a `classify` error, never a panic
     /// in a serving worker. `act` is the calibrated activation-range param
     /// for this linear's *input* site (Int8 engine only; `None` = dynamic).
-    fn linear(&self, name: &str, x: &Tensor, act: Option<&QParams>) -> Result<Tensor> {
+    fn linear(
+        &self,
+        name: &str,
+        x: &Tensor,
+        act: Option<&QParams>,
+        mode: ExecMode,
+    ) -> Result<Tensor> {
         let mut y = match &self.linears {
             Linears::Resident(qlinears) => match qlinears.get(name) {
-                Some(ql) => {
-                    self.fused_matmul(x, ql.q.shape(), &ql.codes, &ql.cid, ql.q.params(), act)
-                }
-                None => self.plain_matmul(x, self.fp32.get(name)?),
+                Some(ql) => self.fused_matmul(
+                    name,
+                    x,
+                    ql.q.shape(),
+                    &ql.codes,
+                    &ql.cid,
+                    ql.q.params(),
+                    act,
+                    mode,
+                ),
+                None => self.plain_matmul(x, self.fp32.get(name)?, mode),
             },
             Linears::Paged { model, planes } => {
                 if model.is_pagable(name) {
@@ -419,9 +483,9 @@ impl QuantizedBert {
                     // logits stay byte-identical to the resident path; the
                     // plane cache only skips re-decoding them
                     let p = planes.get(name, &shard, q)?;
-                    self.fused_matmul(x, q.shape(), &p.codes, &p.cid, q.params(), act)
+                    self.fused_matmul(name, x, q.shape(), &p.codes, &p.cid, q.params(), act, mode)
                 } else {
-                    self.plain_matmul(x, self.fp32.get(name)?)
+                    self.plain_matmul(x, self.fp32.get(name)?, mode)
                 }
             }
         };
@@ -434,9 +498,30 @@ impl QuantizedBert {
         Ok(y)
     }
 
+    /// Activation-drift observation at a calibrated act site: observed
+    /// min/max and clip count of `x` against the site's deployed dequant
+    /// range, at layer-boundary granularity. Guarded by the relaxed
+    /// [`crate::qhealth::enabled`] load and the recorder `Option` — with
+    /// either off this is a no-op with zero allocations.
+    fn observe_act(&self, mode: ExecMode, site: usize, x: &Tensor) {
+        if !mode.observe || !crate::qhealth::enabled() {
+            return;
+        }
+        let Some(rec) = &self.qhealth else { return };
+        let calibrated = self.act_for(site).map(|p| p.dequant_range());
+        rec.record_act(site, calibrated, x.data());
+    }
+
     /// logits f32[B, C] — same math as `BertModel::forward`, quantized hot
     /// path. `Err` only on the paged backend (failed shard fault).
     pub fn forward(&self, ids: &IntTensor, mask: &Tensor) -> Result<Tensor> {
+        self.forward_impl(ids, mask, ExecMode { kernel: self.kernel, observe: true })
+    }
+
+    /// The forward body, parameterized by [`ExecMode`] so the shadow path
+    /// can re-run a request on the f32 reference engine without mutating
+    /// the executor (and without re-observing drift).
+    fn forward_impl(&self, ids: &IntTensor, mask: &Tensor, mode: ExecMode) -> Result<Tensor> {
         let cfg = &self.cfg;
         let p = &self.fp32;
         let (b, l) = (ids.shape()[0], ids.shape()[1]);
@@ -478,12 +563,15 @@ impl QuantizedBert {
         for i in 0..cfg.layers {
             let pre = format!("encoder.{i}");
             let xin = self.act_for(3 * i);
-            let q = self.linear(&format!("{pre}.attn.q.weight"), &x, xin)?;
-            let k = self.linear(&format!("{pre}.attn.k.weight"), &x, xin)?;
-            let v = self.linear(&format!("{pre}.attn.v.weight"), &x, xin)?;
+            // one drift observation per site per dispatch: q/k/v share the
+            // same input tensor and site, so record it once
+            self.observe_act(mode, 3 * i, &x);
+            let q = self.linear(&format!("{pre}.attn.q.weight"), &x, xin, mode)?;
+            let k = self.linear(&format!("{pre}.attn.k.weight"), &x, xin, mode)?;
+            let v = self.linear(&format!("{pre}.attn.v.weight"), &x, xin, mode)?;
 
             let ctx = super::bert::attention_ctx(&q, &k, &v, mask, b, l, h, a, hd, scale);
-            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx, None)?;
+            let attn = self.linear(&format!("{pre}.attn.out.weight"), &ctx, None, mode)?;
             let mut res = x.clone();
             res.add_assign(&attn);
             x = ops::layer_norm(
@@ -493,15 +581,19 @@ impl QuantizedBert {
                 cfg.ln_eps,
             );
 
+            self.observe_act(mode, 3 * i + 1, &x);
             let mid = ops::gelu(&self.linear(
                 &format!("{pre}.ffn.in.weight"),
                 &x,
                 self.act_for(3 * i + 1),
+                mode,
             )?);
+            self.observe_act(mode, 3 * i + 2, &mid);
             let mut ff = self.linear(
                 &format!("{pre}.ffn.out.weight"),
                 &mid,
                 self.act_for(3 * i + 2),
+                mode,
             )?;
             ff.add_assign(&x);
             x = ops::layer_norm(
@@ -517,13 +609,47 @@ impl QuantizedBert {
             cls.data_mut()[bi * h..(bi + 1) * h]
                 .copy_from_slice(&x.data()[bi * l * h..bi * l * h + h]);
         }
-        let pooled =
-            ops::tanh(&self.linear("pooler.weight", &cls, self.act_for(3 * cfg.layers))?);
-        self.linear("classifier.weight", &pooled, self.act_for(3 * cfg.layers + 1))
+        self.observe_act(mode, 3 * cfg.layers, &cls);
+        let pooled = ops::tanh(&self.linear(
+            "pooler.weight",
+            &cls,
+            self.act_for(3 * cfg.layers),
+            mode,
+        )?);
+        self.observe_act(mode, 3 * cfg.layers + 1, &pooled);
+        self.linear("classifier.weight", &pooled, self.act_for(3 * cfg.layers + 1), mode)
     }
 
     pub fn predict(&self, ids: &IntTensor, mask: &Tensor) -> Result<Vec<i32>> {
         Ok(argmax_rows(&self.forward(ids, mask)?))
+    }
+
+    /// Shadow-fidelity probe ([`crate::qhealth`]): re-run `ids`/`mask`
+    /// through this executor's configured engine *and* through the f32
+    /// reference engine (no kernel override — the same fused-dequant math
+    /// the accuracy protocol trusts), then record per-row logit-KL and
+    /// top-1 agreement. Neither pass fires drift observations, so shadow
+    /// probes never double-count the health signals of the request they
+    /// mirror. A no-op unless a recorder is installed and
+    /// [`crate::qhealth::enabled`] is on; the server calls this *after*
+    /// responding to the hot batch.
+    pub fn shadow_sample(&self, ids: &IntTensor, mask: &Tensor) -> Result<()> {
+        if !crate::qhealth::enabled() {
+            return Ok(());
+        }
+        let Some(rec) = &self.qhealth else { return Ok(()) };
+        let served =
+            self.forward_impl(ids, mask, ExecMode { kernel: self.kernel, observe: false })?;
+        let reference = self.forward_impl(ids, mask, ExecMode { kernel: None, observe: false })?;
+        let (rows, classes) = served.as_2d();
+        let s_top = argmax_rows(&served);
+        let r_top = argmax_rows(&reference);
+        for r in 0..rows {
+            let s = &served.data()[r * classes..(r + 1) * classes];
+            let f = &reference.data()[r * classes..(r + 1) * classes];
+            rec.record_shadow(crate::qhealth::logit_kl(f, s), s_top[r] == r_top[r]);
+        }
+        Ok(())
     }
 
     /// Resident weight bytes of the quantized linears (deployment memory).
@@ -585,6 +711,7 @@ impl QuantizedBert {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::observer;
     use crate::splitquant::{default_quantizable, quantize_store, SplitQuantConfig};
     use crate::util::rng::Rng;
 
@@ -862,5 +989,181 @@ mod tests {
         let gap =
             reference.forward(&ids, &mask).max_abs_diff(&fused.forward(&ids, &mask).unwrap());
         assert!(gap < 1e-3, "{gap}");
+    }
+
+    /// An Int8 executor with calibrated act params and the OCS hatch — the
+    /// configuration that exercises every qhealth recording site.
+    fn int8_setup(
+        cfg: &BertConfig,
+        store: &ParamStore,
+        qm: &QuantizedModel,
+        range: (f32, f32),
+    ) -> QuantizedBert {
+        let p = crate::quant::QParams::from_range(range.0, range.1, 8);
+        let act = ActQuantParams { per_site: vec![[p, p, p]; cfg.act_sites().len()], bits: 8 };
+        let mut m = QuantizedBert::new(cfg.clone(), store, qm).unwrap();
+        m.set_kernel(KernelKind::Int8);
+        m.set_act_params(act);
+        m.set_act_ocs_ratio(3.0);
+        m
+    }
+
+    #[test]
+    fn qhealth_observation_keeps_logits_bit_identical() {
+        // acceptance: with monitoring fully on, served logits are
+        // bit-identical to the unmonitored executor; with the master
+        // switch back off, an installed recorder stays silent
+        let _g = crate::qhealth::test_guard();
+        let (cfg, store, qm) = setup(4);
+        let (ids, mask) = batch(&cfg, 3, 4);
+        let plain = int8_setup(&cfg, &store, &qm, (-2.0, 2.0));
+        let mut observed = int8_setup(&cfg, &store, &qm, (-2.0, 2.0));
+        observed.enable_qhealth();
+
+        crate::qhealth::set_enabled(true);
+        let b = observed.forward(&ids, &mask).unwrap();
+        observed.shadow_sample(&ids, &mask).unwrap();
+        crate::qhealth::set_enabled(false);
+        let a = plain.forward(&ids, &mask).unwrap();
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "qhealth observation changed logits");
+        }
+
+        let snap = observed.qhealth_snapshot().unwrap();
+        assert!(!snap.sites.is_empty(), "no drift sites recorded");
+        assert!(!snap.layers.is_empty(), "no dispatch telemetry recorded");
+        assert_eq!(snap.shadow.samples, 3, "one shadow row per batch row");
+        assert!(plain.qhealth_snapshot().is_none());
+
+        // switch off again: the same executor records nothing further
+        let before = observed.qhealth_snapshot().unwrap();
+        observed.forward(&ids, &mask).unwrap();
+        observed.shadow_sample(&ids, &mask).unwrap();
+        let after = observed.qhealth_snapshot().unwrap();
+        assert_eq!(before, after, "disabled switch must silence recording");
+    }
+
+    #[test]
+    fn qhealth_reconciles_exactly_with_offline_recomputation() {
+        let _g = crate::qhealth::test_guard();
+        let (cfg, store, qm) = setup(4);
+        // deliberately tight range: real clipping traffic to reconcile
+        let range = (-1.5, 1.5);
+        let mut m = int8_setup(&cfg, &store, &qm, range);
+        let rec = m.enable_qhealth();
+        const RUNS: u64 = 3;
+        const B: usize = 2;
+        crate::qhealth::set_enabled(true);
+        for r in 0..RUNS {
+            let (ids, mask) = batch(&cfg, B, 10 + r);
+            m.forward(&ids, &mask).unwrap();
+            m.shadow_sample(&ids, &mask).unwrap();
+        }
+        crate::qhealth::set_enabled(false);
+        let snap = rec.snapshot();
+
+        // (a) cluster occupancy: ground truth recomputed from the resident
+        // cid planes — each fused linear dispatches once per forward
+        let Linears::Resident(qlinears) = &m.linears else {
+            panic!("QuantizedBert::new builds the resident backend")
+        };
+        let split: Vec<&String> =
+            qlinears.iter().filter(|(_, ql)| !ql.cid.is_empty()).map(|(n, _)| n).collect();
+        assert_eq!(
+            snap.layers.iter().map(|l| &l.layer).collect::<Vec<_>>(),
+            split,
+            "every split-layout linear appears exactly once, sorted"
+        );
+        for ls in &snap.layers {
+            let one = kernels::cluster_occupancy(&qlinears[&ls.layer].cid);
+            assert_eq!(ls.dispatches, RUNS, "{}", ls.layer);
+            for c in 0..3 {
+                assert_eq!(ls.occupancy[c], one[c] * RUNS, "{} cluster {c}", ls.layer);
+            }
+            assert_eq!(ls.ocs_calls, RUNS, "{}: one OCS evaluation per dispatch", ls.layer);
+        }
+
+        // (b) site-0 drift: offline recompute of embeddings.out (token +
+        // position embedding, LayerNorm) and its clip stats vs the range
+        let p32 = m.fp32_params();
+        let (mut want_clipped, mut want_lo, mut want_hi) = (0u64, f32::INFINITY, f32::NEG_INFINITY);
+        let deployed = crate::quant::QParams::from_range(range.0, range.1, 8).dequant_range();
+        for r in 0..RUNS {
+            let (ids, _) = batch(&cfg, B, 10 + r);
+            let (h, l) = (cfg.hidden, cfg.max_len);
+            let mut x = ops::embedding(p32.get("embeddings.token").unwrap(), &ids);
+            let pos = p32.get("embeddings.position").unwrap();
+            let xd = x.data_mut();
+            for bi in 0..B {
+                for li in 0..l {
+                    let row = &mut xd[(bi * l + li) * h..(bi * l + li + 1) * h];
+                    for (v, &pv) in row.iter_mut().zip(pos.row(li)) {
+                        *v += pv;
+                    }
+                }
+            }
+            let x0 = ops::layer_norm(
+                &x.reshape(&[B * l, h]).unwrap(),
+                p32.get("embeddings.ln.gamma").unwrap(),
+                p32.get("embeddings.ln.beta").unwrap(),
+                cfg.ln_eps,
+            );
+            let (c, lo, hi) = observer::clip_stats(x0.data(), deployed.0, deployed.1);
+            want_clipped += c;
+            want_lo = want_lo.min(lo);
+            want_hi = want_hi.max(hi);
+        }
+        let site0 = &snap.sites[0];
+        assert_eq!(site0.site, 0);
+        assert_eq!(site0.batches, RUNS);
+        assert_eq!(site0.values, (RUNS as usize * B * cfg.max_len * cfg.hidden) as u64);
+        assert_eq!(site0.clipped, want_clipped, "clip count must reconcile exactly");
+        assert!(want_clipped > 0, "range too loose to exercise clipping");
+        let (got_lo, got_hi) = site0.observed.unwrap();
+        assert_eq!(got_lo.to_bits(), want_lo.to_bits());
+        assert_eq!(got_hi.to_bits(), want_hi.to_bits());
+        assert_eq!(site0.calibrated, Some(deployed));
+
+        // (c) shadow fidelity: offline recompute of served-vs-reference
+        // logit KL and top-1 agreement over the same seeded batches
+        let served_m = int8_setup(&cfg, &store, &qm, range);
+        let reference_m = QuantizedBert::new(cfg.clone(), &store, &qm).unwrap();
+        let (mut want_samples, mut want_agree, mut want_max_un) = (0u64, 0u64, 0u64);
+        for r in 0..RUNS {
+            let (ids, mask) = batch(&cfg, B, 10 + r);
+            let s = served_m.forward(&ids, &mask).unwrap();
+            let f = reference_m.forward(&ids, &mask).unwrap();
+            let (st, ft) = (argmax_rows(&s), argmax_rows(&f));
+            let classes = cfg.num_classes;
+            for row in 0..B {
+                let kl = crate::qhealth::logit_kl(
+                    &f.data()[row * classes..(row + 1) * classes],
+                    &s.data()[row * classes..(row + 1) * classes],
+                );
+                want_samples += 1;
+                want_agree += u64::from(st[row] == ft[row]);
+                want_max_un = want_max_un.max((kl.max(0.0) * 1e6).round() as u64);
+            }
+        }
+        assert_eq!(snap.shadow.samples, want_samples);
+        assert_eq!(snap.shadow.top1_agree, want_agree);
+        assert_eq!(snap.shadow.kl_max_micro_nats, want_max_un);
+
+        // (d) replay determinism: a fresh executor over the same seeded
+        // run renders a byte-identical health report
+        let mut replay = int8_setup(&cfg, &store, &qm, range);
+        let rec2 = replay.enable_qhealth();
+        crate::qhealth::set_enabled(true);
+        for r in 0..RUNS {
+            let (ids, mask) = batch(&cfg, B, 10 + r);
+            replay.forward(&ids, &mask).unwrap();
+            replay.shadow_sample(&ids, &mask).unwrap();
+        }
+        crate::qhealth::set_enabled(false);
+        assert_eq!(
+            crate::qhealth::render(&snap),
+            crate::qhealth::render(&rec2.snapshot()),
+            "replay must render byte-identically"
+        );
     }
 }

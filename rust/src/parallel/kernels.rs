@@ -491,6 +491,25 @@ pub fn ocs_expand_acts(
     (out_tensor(&[m, ke], xe), [ke, n], ce, ie)
 }
 
+/// Per-cluster code counts of a weight's cluster-id plane: how many codes
+/// land in the lower / middle / upper SplitQuant cluster. A **dispatch
+/// prologue** helper for the numeric-health layer ([`crate::qhealth`]) —
+/// one pass over the cid plane outside the micro-kernel loops, so the
+/// bit-exact kernels themselves stay untouched. Ids other than 0/1/2
+/// (impossible for well-formed planes) are ignored. An all-zero entry in
+/// the result marks a *dead cluster*: one of the three split ranges
+/// carries no codes, wasting the accuracy SplitQuant's split allocation
+/// paid for.
+pub fn cluster_occupancy(cid: &[u8]) -> [u64; 3] {
+    let mut occ = [0u64; 3];
+    for &c in cid {
+        if let Some(slot) = occ.get_mut(c as usize) {
+            *slot += 1;
+        }
+    }
+    occ
+}
+
 /// Inner fused kernel dispatch for one output row chunk: scalar quad
 /// kernel or the f32x8 tile kernel, chosen per call. Both share the exact
 /// tiling (`tile_k × tile_n`, `tile_k` a multiple of 4) and per-element
@@ -1243,5 +1262,23 @@ mod tests {
         let par = matmul(&a, &b);
         let ser = ops::matmul_serial(&a, &b);
         assert_eq!(par.data(), ser.data(), "row partition must be bit-exact");
+    }
+
+    #[test]
+    fn cluster_occupancy_counts_and_flags_dead_clusters() {
+        assert_eq!(cluster_occupancy(&[]), [0, 0, 0]);
+        assert_eq!(cluster_occupancy(&[1, 1, 1, 1]), [0, 4, 0]);
+        assert_eq!(cluster_occupancy(&[0, 1, 2, 1, 2, 2]), [1, 2, 3]);
+        // out-of-range ids (malformed plane) are ignored, not a panic
+        assert_eq!(cluster_occupancy(&[0, 7, 2]), [1, 0, 1]);
+        // matches a brute-force recount on a pseudo-random plane
+        let mut rng = Rng::new(11);
+        let plane: Vec<u8> = (0..999).map(|_| rng.below(3) as u8).collect();
+        let occ = cluster_occupancy(&plane);
+        for c in 0..3u8 {
+            let n = plane.iter().filter(|&&v| v == c).count() as u64;
+            assert_eq!(occ[c as usize], n, "cluster {c}");
+        }
+        assert_eq!(occ.iter().sum::<u64>(), 999);
     }
 }

@@ -1,0 +1,723 @@
+//! §Numeric health: quantization-quality monitoring for the serving path.
+//!
+//! PR 8's tracing answers *how long* a request took; this module answers
+//! *how healthy its quantized math was*. Four signal families, all
+//! collected at dispatch/epilogue granularity (never inside micro-kernel
+//! loops — the `no-timing-in-kernels` pattern):
+//!
+//! * **Activation drift** ([`Recorder::record_act`]): per act-site observed
+//!   min/max and clip fraction against the calibrated
+//!   `ModelArtifact.act_params` range, a log-bucketed drift histogram
+//!   (per-mille range overshoot), and an EWMA clip-fraction alarm that
+//!   flips the `splitquant_quant_drift` gauge — calibration-time ranges go
+//!   stale under real traffic, and this is the online detector.
+//! * **Cluster occupancy** ([`Recorder::record_dispatch`]): per-layer
+//!   lower/middle/upper cluster code counts
+//!   ([`crate::parallel::kernels::cluster_occupancy`]) and dead-cluster
+//!   detection.
+//! * **Outlier-hatch telemetry** ([`Recorder::record_ocs`]):
+//!   `act_outlier_columns` / `ocs_expand_acts` hit rates and expansion
+//!   ratios per layer.
+//! * **Shadow fidelity** ([`Recorder::record_shadow`] via
+//!   [`crate::model::QuantizedBert::shadow_sample`]): 1-in-N served
+//!   requests deterministically re-run through the FP32 reference engine
+//!   off the hot batch ([`ShadowConfig`] — seeded and replayable like
+//!   `FaultyIo`'s schedule), recording logit-KL and top-1 agreement.
+//!
+//! **Disabled cost.** Every emission site is guarded by [`enabled`] — one
+//! relaxed atomic load, the same contract as [`crate::trace::enabled`].
+//! With the switch off nothing locks, nothing allocates, and served logits
+//! are bit-identical (regression-tested in `model::qbert`).
+//!
+//! **Determinism.** All aggregate state lives in `BTreeMap`s and every
+//! rendered artifact ([`render`], [`bench_rows`]) iterates them in sorted
+//! order — `splitquant doctor` output is byte-deterministic for a given
+//! seed (the `deterministic-iteration` lint rule covers this module).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::report::bench_json::BenchRecord;
+use crate::util::stats::LogHistogram;
+use crate::util::sync::lock_recover;
+
+/// Master switch: one relaxed load on every emission entry point.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is numeric-health monitoring enabled? One relaxed atomic load — the
+/// entire cost of every recording site while off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn numeric-health monitoring on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// EWMA smoothing factor for the per-site clip-fraction alarm.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// EWMA clip fraction above which a site's drift alarm latches: more than
+/// 5 % of activation values landing outside the calibrated range is no
+/// longer quantization noise, it is distribution drift.
+const CLIP_ALARM: f64 = 0.05;
+
+/// Deterministic 1-in-N shadow-sampling schedule, seeded and replayable
+/// (the [`crate::shardstore::FaultyIo`] idiom): whether request `seq` is
+/// shadow-sampled is a pure function of `(seed, seq)`, so a replay run
+/// with the same seed samples exactly the same requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShadowConfig {
+    /// Schedule seed (replays reproduce the same sample set).
+    pub seed: u64,
+    /// Sample 1-in-`rate` requests; `0` disables sampling entirely.
+    pub rate: u64,
+}
+
+impl ShadowConfig {
+    /// splitmix64 finalizer — the standard invertible avalanche mix.
+    fn mix(mut z: u64) -> u64 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Should request number `seq` be shadow-sampled? Pure in
+    /// `(self.seed, seq)`; over many requests the hit rate converges to
+    /// `1/rate`.
+    pub fn fires(&self, seq: u64) -> bool {
+        if self.rate == 0 {
+            return false;
+        }
+        if self.rate == 1 {
+            return true;
+        }
+        Self::mix(self.seed ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15)) % self.rate == 0
+    }
+}
+
+/// Per-activation-site drift state (keyed by the `BertConfig::act_sites`
+/// index the executor consults at that linear's input).
+#[derive(Debug, Default)]
+struct SiteHealth {
+    calibrated: Option<(f32, f32)>,
+    observed_lo: f32,
+    observed_hi: f32,
+    values: u64,
+    clipped: u64,
+    batches: u64,
+    /// Per-dispatch range overshoot in per-mille of the calibrated width.
+    drift_pm: LogHistogram,
+    ewma_clip: f64,
+    alarm: bool,
+}
+
+/// Per-layer dispatch telemetry: cluster occupancy + OCS hatch activity.
+#[derive(Debug, Default)]
+struct LayerHealth {
+    occupancy: [u64; 3],
+    dispatches: u64,
+    ocs_calls: u64,
+    ocs_hits: u64,
+    outlier_cols: u64,
+    total_cols: u64,
+}
+
+/// Shadow-fidelity aggregates (quantized engine vs FP32 reference).
+#[derive(Debug, Default)]
+struct ShadowStats {
+    samples: u64,
+    top1_agree: u64,
+    /// logit-KL per sampled row, in micro-nats (log-bucketed).
+    kl_micro_nats: LogHistogram,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    sites: BTreeMap<usize, SiteHealth>,
+    layers: BTreeMap<String, LayerHealth>,
+    shadow: ShadowStats,
+}
+
+/// Thread-safe numeric-health accumulator, owned by the executor
+/// ([`crate::model::QuantizedBert`] holds one behind an `Arc`) and read by
+/// the server on metrics folds. Recording sites must check [`enabled`]
+/// before calling in — the recorder itself always accepts.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// Record one activation-site observation: `values` is the tensor
+    /// feeding a fused linear whose input maps to act site `site`;
+    /// `calibrated` is that site's deployed dequant range (`None` when no
+    /// activation params are deployed — observed min/max still accumulate,
+    /// clip/drift need a range to compare against).
+    pub fn record_act(&self, site: usize, calibrated: Option<(f32, f32)>, values: &[f32]) {
+        if values.is_empty() {
+            return;
+        }
+        let (clipped, lo, hi) = match calibrated {
+            Some((clo, chi)) => crate::quant::observer::clip_stats(values, clo, chi),
+            None => {
+                let (lo, hi) = crate::util::stats::min_max(values);
+                (0, lo, hi)
+            }
+        };
+        let mut g = lock_recover(&self.inner);
+        let s = g.sites.entry(site).or_insert_with(|| SiteHealth {
+            observed_lo: f32::INFINITY,
+            observed_hi: f32::NEG_INFINITY,
+            ..SiteHealth::default()
+        });
+        s.calibrated = calibrated.or(s.calibrated);
+        s.observed_lo = s.observed_lo.min(lo);
+        s.observed_hi = s.observed_hi.max(hi);
+        s.values += values.len() as u64;
+        s.clipped += clipped;
+        s.batches += 1;
+        if let Some((clo, chi)) = calibrated {
+            let width = (chi - clo).max(f32::MIN_POSITIVE) as f64;
+            let over = (hi - chi).max(0.0) as f64 + (clo - lo).max(0.0) as f64;
+            s.drift_pm.record_us((over / width * 1000.0).round() as u64);
+            let clip_frac = clipped as f64 / values.len() as f64;
+            s.ewma_clip = EWMA_ALPHA * clip_frac + (1.0 - EWMA_ALPHA) * s.ewma_clip;
+            if s.ewma_clip > CLIP_ALARM {
+                s.alarm = true; // latches until the recorder is replaced
+            }
+        }
+    }
+
+    /// Record one fused-linear dispatch for `layer`: `occ` is the weight's
+    /// per-cluster code count ([`crate::parallel::kernels::cluster_occupancy`]).
+    pub fn record_dispatch(&self, layer: &str, occ: [u64; 3]) {
+        let mut g = lock_recover(&self.inner);
+        let l = g.layers.entry(layer.to_string()).or_default();
+        for (acc, n) in l.occupancy.iter_mut().zip(occ) {
+            *acc += n;
+        }
+        l.dispatches += 1;
+    }
+
+    /// Record one OCS escape-hatch evaluation for `layer`: the activation
+    /// had `total_cols` columns, of which `outlier_cols` exceeded the
+    /// outlier ratio (a *hit* — the expanded matmul ran — when nonzero).
+    pub fn record_ocs(&self, layer: &str, total_cols: u64, outlier_cols: u64) {
+        let mut g = lock_recover(&self.inner);
+        let l = g.layers.entry(layer.to_string()).or_default();
+        l.ocs_calls += 1;
+        l.ocs_hits += u64::from(outlier_cols > 0);
+        l.outlier_cols += outlier_cols;
+        l.total_cols += total_cols;
+    }
+
+    /// Record one shadow-sampled row: `kl_nats` = logit-KL(reference ‖
+    /// served), `top1_agree` = both engines picked the same class.
+    pub fn record_shadow(&self, kl_nats: f64, top1_agree: bool) {
+        let mut g = lock_recover(&self.inner);
+        g.shadow.samples += 1;
+        g.shadow.top1_agree += u64::from(top1_agree);
+        g.shadow.kl_micro_nats.record_us((kl_nats.max(0.0) * 1e6).round() as u64);
+    }
+
+    /// Point-in-time copy of everything recorded so far, pre-sorted (the
+    /// `BTreeMap` order) so every consumer renders deterministically.
+    pub fn snapshot(&self) -> QHealthSnapshot {
+        let g = lock_recover(&self.inner);
+        QHealthSnapshot {
+            sites: g
+                .sites
+                .iter()
+                .map(|(&site, s)| SiteSnapshot {
+                    site,
+                    calibrated: s.calibrated,
+                    observed: (s.values > 0).then_some((s.observed_lo, s.observed_hi)),
+                    values: s.values,
+                    clipped: s.clipped,
+                    batches: s.batches,
+                    ewma_clip: s.ewma_clip,
+                    alarm: s.alarm,
+                    drift_p50_permille: s.drift_pm.quantile_us(0.5),
+                    drift_max_permille: s.drift_pm.quantile_us(1.0),
+                })
+                .collect(),
+            layers: g
+                .layers
+                .iter()
+                .map(|(name, l)| LayerSnapshot {
+                    layer: name.clone(),
+                    occupancy: l.occupancy,
+                    dead_clusters: l.occupancy.iter().filter(|&&n| n == 0).count() as u32,
+                    dispatches: l.dispatches,
+                    ocs_calls: l.ocs_calls,
+                    ocs_hits: l.ocs_hits,
+                    outlier_cols: l.outlier_cols,
+                    total_cols: l.total_cols,
+                })
+                .collect(),
+            shadow: ShadowSnapshot {
+                samples: g.shadow.samples,
+                top1_agree: g.shadow.top1_agree,
+                kl_mean_micro_nats: g.shadow.kl_micro_nats.mean_us(),
+                kl_p50_micro_nats: g.shadow.kl_micro_nats.quantile_us(0.5),
+                kl_max_micro_nats: g.shadow.kl_micro_nats.quantile_us(1.0),
+            },
+        }
+    }
+}
+
+/// One activation site's drift summary (see [`Recorder::record_act`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSnapshot {
+    /// `BertConfig::act_sites` index.
+    pub site: usize,
+    /// Deployed calibration range (dequant range of the site's `QParams`).
+    pub calibrated: Option<(f32, f32)>,
+    /// Observed activation min/max across all dispatches, when any.
+    pub observed: Option<(f32, f32)>,
+    /// Total activation values observed.
+    pub values: u64,
+    /// Values outside the calibrated range.
+    pub clipped: u64,
+    /// Dispatches observed.
+    pub batches: u64,
+    /// EWMA of the per-dispatch clip fraction.
+    pub ewma_clip: f64,
+    /// Latched drift alarm (EWMA clip fraction exceeded the threshold).
+    pub alarm: bool,
+    /// Median per-dispatch range overshoot, per-mille of calibrated width.
+    pub drift_p50_permille: u64,
+    /// Maximum per-dispatch range overshoot, per-mille.
+    pub drift_max_permille: u64,
+}
+
+impl SiteSnapshot {
+    /// Fraction of observed values outside the calibrated range.
+    pub fn clip_fraction(&self) -> f64 {
+        if self.values == 0 {
+            0.0
+        } else {
+            self.clipped as f64 / self.values as f64
+        }
+    }
+}
+
+/// One layer's cluster-occupancy and OCS-hatch summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerSnapshot {
+    /// Parameter name of the fused linear.
+    pub layer: String,
+    /// Cumulative lower/middle/upper cluster code counts across dispatches.
+    pub occupancy: [u64; 3],
+    /// Clusters with zero occupancy — a dead cluster wastes one of the
+    /// three split ranges (SplitQuant's accuracy premise is that all three
+    /// carry signal).
+    pub dead_clusters: u32,
+    /// Fused-linear dispatches recorded for this layer.
+    pub dispatches: u64,
+    /// OCS escape-hatch evaluations.
+    pub ocs_calls: u64,
+    /// Evaluations that found outlier columns (the expanded matmul ran).
+    pub ocs_hits: u64,
+    /// Total outlier columns across evaluations.
+    pub outlier_cols: u64,
+    /// Total activation columns across evaluations.
+    pub total_cols: u64,
+}
+
+impl LayerSnapshot {
+    /// Mean activation-width expansion ratio of the OCS hatch
+    /// (`1.0` = never expanded).
+    pub fn expansion_ratio(&self) -> f64 {
+        if self.total_cols == 0 {
+            1.0
+        } else {
+            (self.total_cols + self.outlier_cols) as f64 / self.total_cols as f64
+        }
+    }
+}
+
+/// Shadow-fidelity summary (quantized engine vs FP32 reference).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ShadowSnapshot {
+    /// Rows shadow-sampled.
+    pub samples: u64,
+    /// Rows where both engines picked the same top-1 class.
+    pub top1_agree: u64,
+    /// Mean logit-KL(reference ‖ served), micro-nats.
+    pub kl_mean_micro_nats: f64,
+    /// Median logit-KL, micro-nats.
+    pub kl_p50_micro_nats: u64,
+    /// Max logit-KL, micro-nats.
+    pub kl_max_micro_nats: u64,
+}
+
+impl ShadowSnapshot {
+    /// Top-1 agreement rate over sampled rows (`1.0` when nothing sampled).
+    pub fn agree_rate(&self) -> f64 {
+        if self.samples == 0 {
+            1.0
+        } else {
+            self.top1_agree as f64 / self.samples as f64
+        }
+    }
+}
+
+/// Everything [`Recorder::snapshot`] captures, pre-sorted for
+/// deterministic rendering. Embedded in serving
+/// [`crate::coordinator::Metrics`] as an `Option`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QHealthSnapshot {
+    /// Per-activation-site drift summaries, sorted by site index.
+    pub sites: Vec<SiteSnapshot>,
+    /// Per-layer dispatch summaries, sorted by layer name.
+    pub layers: Vec<LayerSnapshot>,
+    /// Shadow-fidelity summary.
+    pub shadow: ShadowSnapshot,
+}
+
+impl QHealthSnapshot {
+    /// True when any site's drift alarm has latched — the
+    /// `splitquant_quant_drift` gauge, folded into `splitquant_degraded`.
+    pub fn drift_alarmed(&self) -> bool {
+        self.sites.iter().any(|s| s.alarm)
+    }
+
+    /// True when nothing was recorded at all.
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty() && self.layers.is_empty() && self.shadow.samples == 0
+    }
+}
+
+/// KL divergence between the softmax distributions of two logit rows,
+/// `KL(softmax(reference) ‖ softmax(served))`, in nats. Computed in f64
+/// with max-subtraction for stability; non-finite inputs and length
+/// mismatches return `f64::INFINITY` (maximally suspicious, never a
+/// panic on the serving path).
+pub fn logit_kl(reference: &[f32], served: &[f32]) -> f64 {
+    if reference.is_empty()
+        || reference.len() != served.len()
+        || reference.iter().chain(served).any(|v| !v.is_finite())
+    {
+        return f64::INFINITY;
+    }
+    let softmax = |row: &[f32]| -> Vec<f64> {
+        let max = row.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v as f64));
+        let exps: Vec<f64> = row.iter().map(|&v| (v as f64 - max).exp()).collect();
+        let sum: f64 = exps.iter().sum();
+        exps.iter().map(|e| (e / sum).max(1e-300)).collect()
+    };
+    let p = softmax(reference);
+    let q = softmax(served);
+    p.iter().zip(&q).map(|(pi, qi)| pi * (pi / qi).ln()).sum::<f64>().max(0.0)
+}
+
+/// `qhealth-<layer>` rows (plus one `qhealth-shadow` row when sampling
+/// ran) for `BENCH_serving.json`: keyed by `(bench, shape, engine)` so
+/// [`crate::report::bench_json::merge_write`] replaces them idempotently.
+pub fn bench_rows(snap: &QHealthSnapshot, shape: &str, engine: &str) -> Vec<BenchRecord> {
+    let mut rows = Vec::new();
+    for l in &snap.layers {
+        rows.push(BenchRecord {
+            bench: format!("qhealth-{}", l.layer),
+            shape: shape.to_string(),
+            engine: engine.to_string(),
+            ns_per_iter: 0.0,
+            gb_per_s: 0.0,
+            extra: vec![
+                ("occupancy_lower".to_string(), l.occupancy[0] as f64),
+                ("occupancy_middle".to_string(), l.occupancy[1] as f64),
+                ("occupancy_upper".to_string(), l.occupancy[2] as f64),
+                ("dead_clusters".to_string(), l.dead_clusters as f64),
+                ("dispatches".to_string(), l.dispatches as f64),
+                ("ocs_calls".to_string(), l.ocs_calls as f64),
+                ("ocs_hits".to_string(), l.ocs_hits as f64),
+                ("expansion_ratio".to_string(), l.expansion_ratio()),
+            ],
+        });
+    }
+    if snap.shadow.samples > 0 {
+        rows.push(BenchRecord {
+            bench: "qhealth-shadow".to_string(),
+            shape: shape.to_string(),
+            engine: engine.to_string(),
+            ns_per_iter: 0.0,
+            gb_per_s: 0.0,
+            extra: vec![
+                ("samples".to_string(), snap.shadow.samples as f64),
+                ("top1_agree".to_string(), snap.shadow.top1_agree as f64),
+                ("agree_rate".to_string(), snap.shadow.agree_rate()),
+                ("kl_mean_micro_nats".to_string(), snap.shadow.kl_mean_micro_nats),
+                ("kl_p50_micro_nats".to_string(), snap.shadow.kl_p50_micro_nats as f64),
+                ("kl_max_micro_nats".to_string(), snap.shadow.kl_max_micro_nats as f64),
+            ],
+        });
+    }
+    rows
+}
+
+/// Render a snapshot as the sorted per-layer health report printed by
+/// `splitquant doctor`. Byte-deterministic: sites ascend numerically,
+/// layers ascend lexicographically, floats print at fixed precision.
+pub fn render(snap: &QHealthSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("qhealth report\n");
+    let _ = writeln!(
+        out,
+        "sites={} layers={} drift_alarm={}",
+        snap.sites.len(),
+        snap.layers.len(),
+        if snap.drift_alarmed() { "yes" } else { "no" }
+    );
+    for s in &snap.sites {
+        let cal = match s.calibrated {
+            Some((lo, hi)) => format!("[{lo:.4},{hi:.4}]"),
+            None => "none".to_string(),
+        };
+        let obs = match s.observed {
+            Some((lo, hi)) => format!("[{lo:.4},{hi:.4}]"),
+            None => "none".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "site {:>3}: calibrated={cal} observed={obs} clip={:.4} ewma_clip={:.4} \
+             drift_p50={}pm drift_max={}pm batches={} alarm={}",
+            s.site,
+            s.clip_fraction(),
+            s.ewma_clip,
+            s.drift_p50_permille,
+            s.drift_max_permille,
+            s.batches,
+            if s.alarm { "YES" } else { "no" },
+        );
+    }
+    for l in &snap.layers {
+        let _ = writeln!(
+            out,
+            "layer {}: occupancy=[{},{},{}] dead={} dispatches={} ocs={}/{} \
+             outlier_cols={}/{} expansion={:.4}",
+            l.layer,
+            l.occupancy[0],
+            l.occupancy[1],
+            l.occupancy[2],
+            l.dead_clusters,
+            l.dispatches,
+            l.ocs_hits,
+            l.ocs_calls,
+            l.outlier_cols,
+            l.total_cols,
+            l.expansion_ratio(),
+        );
+    }
+    let sh = &snap.shadow;
+    let _ = writeln!(
+        out,
+        "shadow: samples={} top1_agree={} agree_rate={:.4} kl_mean={:.1}un \
+         kl_p50={}un kl_max={}un",
+        sh.samples,
+        sh.top1_agree,
+        sh.agree_rate(),
+        sh.kl_mean_micro_nats,
+        sh.kl_p50_micro_nats,
+        sh.kl_max_micro_nats,
+    );
+    out
+}
+
+/// Serializes unit tests (across modules of this crate's test binary)
+/// that flip the process-global [`set_enabled`] switch, so concurrent
+/// tests can't observe each other's toggles.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    lock_recover(&LOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_switch_defaults_off_and_toggles() {
+        let _g = test_guard();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn shadow_schedule_is_deterministic_and_near_rate() {
+        let sc = ShadowConfig { seed: 42, rate: 8 };
+        let a: Vec<bool> = (0..10_000).map(|s| sc.fires(s)).collect();
+        let b: Vec<bool> = (0..10_000).map(|s| sc.fires(s)).collect();
+        assert_eq!(a, b, "replay with the same seed must sample the same set");
+        let hits = a.iter().filter(|&&x| x).count();
+        // 1-in-8 over 10k draws: a loose 3σ-ish band around 1250
+        assert!((900..1600).contains(&hits), "hit rate off: {hits}/10000");
+        // a different seed samples a different set
+        let other = ShadowConfig { seed: 43, rate: 8 };
+        let c: Vec<bool> = (0..10_000).map(|s| other.fires(s)).collect();
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn shadow_rate_edges() {
+        let off = ShadowConfig { seed: 7, rate: 0 };
+        assert!((0..100).all(|s| !off.fires(s)), "rate 0 disables sampling");
+        let always = ShadowConfig { seed: 7, rate: 1 };
+        assert!((0..100).all(|s| always.fires(s)), "rate 1 samples everything");
+    }
+
+    #[test]
+    fn act_recording_accumulates_and_alarms() {
+        let rec = Recorder::default();
+        // calibrated [-1, 1]; values straddling it → half clipped
+        rec.record_act(0, Some((-1.0, 1.0)), &[0.0, 0.5, 2.0, -3.0]);
+        let snap = rec.snapshot();
+        assert_eq!(snap.sites.len(), 1);
+        let s = &snap.sites[0];
+        assert_eq!(s.site, 0);
+        assert_eq!(s.values, 4);
+        assert_eq!(s.clipped, 2);
+        assert!((s.clip_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(s.observed, Some((-3.0, 2.0)));
+        // overshoot = (2-1) + (-1 - -3) = 3 over width 2 → 1500 pm
+        assert_eq!(s.drift_max_permille, 1500);
+        assert!(!snap.sites.is_empty());
+        // keep clipping: the EWMA crosses the alarm threshold and latches
+        for _ in 0..16 {
+            rec.record_act(0, Some((-1.0, 1.0)), &[2.0, 2.0]);
+        }
+        let snap = rec.snapshot();
+        assert!(snap.sites[0].alarm, "sustained clipping must latch the alarm");
+        assert!(snap.drift_alarmed());
+        // in-range traffic does not alarm
+        let calm = Recorder::default();
+        for _ in 0..100 {
+            calm.record_act(1, Some((-1.0, 1.0)), &[0.1, -0.2, 0.9]);
+        }
+        let snap = calm.snapshot();
+        assert!(!snap.sites[0].alarm);
+        assert_eq!(snap.sites[0].clipped, 0);
+        assert_eq!(snap.sites[0].drift_max_permille, 0);
+    }
+
+    #[test]
+    fn uncalibrated_sites_observe_without_clipping() {
+        let rec = Recorder::default();
+        rec.record_act(3, None, &[-2.0, 5.0]);
+        let snap = rec.snapshot();
+        let s = &snap.sites[0];
+        assert_eq!(s.calibrated, None);
+        assert_eq!(s.observed, Some((-2.0, 5.0)));
+        assert_eq!(s.clipped, 0);
+        assert!(!s.alarm);
+    }
+
+    #[test]
+    fn dispatch_and_ocs_telemetry_accumulate() {
+        let rec = Recorder::default();
+        rec.record_dispatch("encoder.0.attn.q.weight", [10, 80, 10]);
+        rec.record_dispatch("encoder.0.attn.q.weight", [10, 80, 10]);
+        rec.record_dispatch("pooler.weight", [0, 100, 0]);
+        rec.record_ocs("encoder.0.attn.q.weight", 16, 0);
+        rec.record_ocs("encoder.0.attn.q.weight", 16, 2);
+        let snap = rec.snapshot();
+        assert_eq!(snap.layers.len(), 2);
+        // sorted by name: encoder.* before pooler.*
+        let e = &snap.layers[0];
+        assert_eq!(e.layer, "encoder.0.attn.q.weight");
+        assert_eq!(e.occupancy, [20, 160, 20]);
+        assert_eq!(e.dead_clusters, 0);
+        assert_eq!(e.dispatches, 2);
+        assert_eq!(e.ocs_calls, 2);
+        assert_eq!(e.ocs_hits, 1);
+        assert_eq!(e.outlier_cols, 2);
+        assert_eq!(e.total_cols, 32);
+        assert!((e.expansion_ratio() - 34.0 / 32.0).abs() < 1e-12);
+        let p = &snap.layers[1];
+        assert_eq!(p.layer, "pooler.weight");
+        assert_eq!(p.dead_clusters, 2, "lower and upper clusters are dead");
+    }
+
+    #[test]
+    fn shadow_stats_accumulate() {
+        let rec = Recorder::default();
+        rec.record_shadow(0.001, true);
+        rec.record_shadow(0.003, false);
+        let snap = rec.snapshot();
+        assert_eq!(snap.shadow.samples, 2);
+        assert_eq!(snap.shadow.top1_agree, 1);
+        assert!((snap.shadow.agree_rate() - 0.5).abs() < 1e-12);
+        assert!((snap.shadow.kl_mean_micro_nats - 2000.0).abs() < 1.0);
+        assert_eq!(snap.shadow.kl_max_micro_nats, 3000);
+    }
+
+    #[test]
+    fn logit_kl_properties() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert_eq!(logit_kl(&a, &a), 0.0, "identical rows have zero divergence");
+        // shifting logits by a constant leaves softmax (and KL) unchanged
+        let b = [11.0f32, 12.0, 13.0];
+        assert!(logit_kl(&a, &b) < 1e-12);
+        let c = [3.0f32, 2.0, 1.0];
+        assert!(logit_kl(&a, &c) > 0.1, "reversed preference must diverge");
+        assert_eq!(logit_kl(&a, &[1.0, 2.0]), f64::INFINITY);
+        assert_eq!(logit_kl(&a, &[1.0, f32::NAN, 3.0]), f64::INFINITY);
+        assert_eq!(logit_kl(&[], &[]), f64::INFINITY);
+    }
+
+    #[test]
+    fn render_is_byte_deterministic_and_sorted() {
+        let rec = Recorder::default();
+        rec.record_act(4, Some((-2.0, 2.0)), &[0.5, -0.25]);
+        rec.record_act(0, Some((-1.0, 1.0)), &[1.5]);
+        rec.record_dispatch("pooler.weight", [1, 2, 3]);
+        rec.record_dispatch("classifier.weight", [4, 5, 6]);
+        rec.record_shadow(0.002, true);
+        let a = render(&rec.snapshot());
+        let b = render(&rec.snapshot());
+        assert_eq!(a, b, "repeated renders over unchanged state are identical");
+        let site0 = a.find("site   0").expect("site 0 line");
+        let site4 = a.find("site   4").expect("site 4 line");
+        assert!(site0 < site4, "sites ascend numerically:\n{a}");
+        let cls = a.find("layer classifier.weight").expect("classifier line");
+        let pool = a.find("layer pooler.weight").expect("pooler line");
+        assert!(cls < pool, "layers ascend lexicographically:\n{a}");
+        assert!(a.contains("shadow: samples=1 top1_agree=1"), "{a}");
+    }
+
+    #[test]
+    fn bench_rows_key_per_layer_and_shadow() {
+        let rec = Recorder::default();
+        rec.record_dispatch("encoder.0.ffn.in.weight", [5, 5, 5]);
+        rec.record_shadow(0.001, true);
+        let rows = bench_rows(&rec.snapshot(), "tiny", "int8");
+        let benches: Vec<&str> = rows.iter().map(|r| r.bench.as_str()).collect();
+        assert!(benches.contains(&"qhealth-encoder.0.ffn.in.weight"), "{benches:?}");
+        assert!(benches.contains(&"qhealth-shadow"), "{benches:?}");
+        for r in &rows {
+            assert_eq!(r.shape, "tiny");
+            assert_eq!(r.engine, "int8");
+        }
+        // no shadow samples → no shadow row
+        let quiet = Recorder::default();
+        quiet.record_dispatch("pooler.weight", [1, 1, 1]);
+        let rows = bench_rows(&quiet.snapshot(), "tiny", "int8");
+        assert!(rows.iter().all(|r| r.bench != "qhealth-shadow"), "{rows:?}");
+    }
+
+    #[test]
+    fn empty_snapshot_is_empty() {
+        let snap = Recorder::default().snapshot();
+        assert!(snap.is_empty());
+        assert!(!snap.drift_alarmed());
+        assert_eq!(snap.shadow.agree_rate(), 1.0);
+        assert!(bench_rows(&snap, "s", "e").is_empty());
+    }
+}

@@ -96,6 +96,30 @@ impl Observer {
     }
 }
 
+/// Online drift probe for a deployed range: `(clipped, min, max)` of
+/// `values` against the calibrated `[lo, hi]` — `clipped` counts values a
+/// [`QParams::quantize`] built on that range would saturate (strictly
+/// outside it; NaNs count as clipped, since they quantize meaninglessly).
+/// One fused pass, used by [`crate::qhealth`] at dispatch granularity and
+/// by its ground-truth reconciliation tests.
+pub fn clip_stats(values: &[f32], lo: f32, hi: f32) -> (u64, f32, f32) {
+    let mut clipped = 0u64;
+    let mut omin = f32::INFINITY;
+    let mut omax = f32::NEG_INFINITY;
+    for &v in values {
+        if v.is_nan() {
+            clipped += 1;
+            continue;
+        }
+        omin = omin.min(v);
+        omax = omax.max(v);
+        if v < lo || v > hi {
+            clipped += 1;
+        }
+    }
+    (clipped, omin, omax)
+}
+
 /// TensorRT-style entropy calibration on |values| (symmetric clip search).
 ///
 /// For each candidate clip `c` (a histogram-bin edge), the reference
@@ -304,5 +328,25 @@ mod tests {
         let v: Vec<f32> = (0..1000).map(|_| rng.f32() * 5.0 + 1.0).collect();
         let (lo, _hi) = Observer::Entropy { bins: 256 }.range(&v, 8).unwrap();
         assert!(lo >= 0.99, "lo={lo}");
+    }
+
+    #[test]
+    fn clip_stats_counts_saturating_values() {
+        let (c, lo, hi) = clip_stats(&[0.0, 0.5, -0.5, 1.0, -1.0], -1.0, 1.0);
+        assert_eq!(c, 0, "range endpoints are representable, not clipped");
+        assert_eq!((lo, hi), (-1.0, 1.0));
+        let (c, lo, hi) = clip_stats(&[2.0, -3.0, 0.1], -1.0, 1.0);
+        assert_eq!(c, 2);
+        assert_eq!((lo, hi), (-3.0, 2.0));
+        // NaN clips without poisoning the observed min/max
+        let (c, lo, hi) = clip_stats(&[f32::NAN, 0.5], -1.0, 1.0);
+        assert_eq!(c, 1);
+        assert_eq!((lo, hi), (0.5, 0.5));
+        // agrees with a per-value QParams saturation oracle
+        let mut rng = Rng::new(9);
+        let v: Vec<f32> = (0..500).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let (c, _, _) = clip_stats(&v, -1.0, 1.0);
+        let oracle = v.iter().filter(|&&x| x < -1.0 || x > 1.0).count() as u64;
+        assert_eq!(c, oracle);
     }
 }

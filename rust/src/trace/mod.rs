@@ -166,6 +166,13 @@ pub fn set_ring_capacity(events: usize) {
     RING_CAPACITY.store(events.max(2), Ordering::Relaxed);
 }
 
+/// Capacity (in events) that rings created *now* would receive. Exposed so
+/// the Prometheus exposition can pair [`dropped_total`] with the ring size
+/// the drops were measured against.
+pub fn ring_capacity() -> usize {
+    RING_CAPACITY.load(Ordering::Relaxed)
+}
+
 fn epoch() -> Instant {
     *EPOCH.get_or_init(Instant::now)
 }

@@ -86,13 +86,14 @@ pub fn exposition(m: &Metrics) -> String {
         &mut out,
         "splitquant_degraded",
         "gauge",
-        "1 when panics were contained or shards are quarantined",
+        "1 when panics were contained, shards are quarantined, or quantization drift alarmed",
     );
+    let drift_alarm = m.qhealth.as_ref().is_some_and(|q| q.drift_alarmed());
     sample(
         &mut out,
         "splitquant_degraded",
         "",
-        u64::from(m.exec_panics + m.shards_quarantined > 0),
+        u64::from(m.exec_panics + m.shards_quarantined > 0 || drift_alarm),
     );
     family(&mut out, "splitquant_batches_total", "counter", "batches per compiled size");
     for (size, n) in &m.batches_by_size {
@@ -113,6 +114,131 @@ pub fn exposition(m: &Metrics) -> String {
     }
     family(&mut out, "splitquant_trace_dropped_events_total", "counter", "ring overflow drops");
     sample(&mut out, "splitquant_trace_dropped_events_total", "", super::dropped_total());
+    family(
+        &mut out,
+        "splitquant_trace_ring_capacity_events",
+        "gauge",
+        "per-thread trace ring capacity (events) for rings created now",
+    );
+    sample(&mut out, "splitquant_trace_ring_capacity_events", "", super::ring_capacity() as u64);
+    // Numeric-health families. `splitquant_quant_drift` is emitted even when
+    // qhealth never ran (value 0) so alert rules can reference it
+    // unconditionally; the per-site/per-layer detail families appear only
+    // when a snapshot was folded into the metrics.
+    family(
+        &mut out,
+        "splitquant_quant_drift",
+        "gauge",
+        "1 when any activation site's EWMA clip fraction alarmed",
+    );
+    sample(&mut out, "splitquant_quant_drift", "", u64::from(drift_alarm));
+    if let Some(q) = &m.qhealth {
+        family(
+            &mut out,
+            "splitquant_qhealth_act_values_total",
+            "counter",
+            "activation scalars observed per site",
+        );
+        for s in &q.sites {
+            let labels = format!("{{site=\"{}\"}}", s.site);
+            sample(&mut out, "splitquant_qhealth_act_values_total", &labels, s.values);
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_act_clipped_total",
+            "counter",
+            "activation scalars outside the calibrated range per site",
+        );
+        for s in &q.sites {
+            let labels = format!("{{site=\"{}\"}}", s.site);
+            sample(&mut out, "splitquant_qhealth_act_clipped_total", &labels, s.clipped);
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_drift_permille",
+            "gauge",
+            "range overshoot vs calibrated width, per-mille quantiles per site",
+        );
+        for s in &q.sites {
+            for (v, label) in [(s.drift_p50_permille, "0.5"), (s.drift_max_permille, "1")] {
+                let labels = format!("{{site=\"{}\",quantile=\"{label}\"}}", s.site);
+                sample(&mut out, "splitquant_qhealth_drift_permille", &labels, v);
+            }
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_cluster_occupancy_total",
+            "counter",
+            "weight rows dispatched per split cluster",
+        );
+        for l in &q.layers {
+            for (c, name) in ["lower", "middle", "upper"].iter().enumerate() {
+                let labels = format!("{{layer=\"{}\",cluster=\"{name}\"}}", l.layer);
+                let v = l.occupancy.get(c).copied().unwrap_or(0);
+                sample(&mut out, "splitquant_qhealth_cluster_occupancy_total", &labels, v);
+            }
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_dead_clusters",
+            "gauge",
+            "split clusters with zero occupancy per layer",
+        );
+        for l in &q.layers {
+            let labels = format!("{{layer=\"{}\"}}", l.layer);
+            let dead = u64::from(l.dead_clusters);
+            sample(&mut out, "splitquant_qhealth_dead_clusters", &labels, dead);
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_ocs_total",
+            "counter",
+            "outlier-hatch decisions per layer (calls vs batches with hits)",
+        );
+        for l in &q.layers {
+            for (v, kind) in [(l.ocs_calls, "calls"), (l.ocs_hits, "hits")] {
+                let labels = format!("{{layer=\"{}\",kind=\"{kind}\"}}", l.layer);
+                sample(&mut out, "splitquant_qhealth_ocs_total", &labels, v);
+            }
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_outlier_columns_total",
+            "counter",
+            "activation columns flagged outlier vs columns inspected per layer",
+        );
+        for l in &q.layers {
+            for (v, kind) in [(l.outlier_cols, "outlier"), (l.total_cols, "total")] {
+                let labels = format!("{{layer=\"{}\",kind=\"{kind}\"}}", l.layer);
+                sample(&mut out, "splitquant_qhealth_outlier_columns_total", &labels, v);
+            }
+        }
+        family(
+            &mut out,
+            "splitquant_qhealth_shadow_samples_total",
+            "counter",
+            "requests replayed through the FP32 shadow reference path",
+        );
+        sample(&mut out, "splitquant_qhealth_shadow_samples_total", "", q.shadow.samples);
+        family(
+            &mut out,
+            "splitquant_qhealth_shadow_top1_agree_total",
+            "counter",
+            "shadow samples whose served top-1 matched the reference",
+        );
+        sample(&mut out, "splitquant_qhealth_shadow_top1_agree_total", "", q.shadow.top1_agree);
+        family(
+            &mut out,
+            "splitquant_qhealth_shadow_kl_micro_nats",
+            "gauge",
+            "served-vs-reference logit KL divergence, micro-nat quantiles",
+        );
+        let sh = &q.shadow;
+        for (v, label) in [(sh.kl_p50_micro_nats, "0.5"), (sh.kl_max_micro_nats, "1")] {
+            let labels = format!("{{quantile=\"{label}\"}}");
+            sample(&mut out, "splitquant_qhealth_shadow_kl_micro_nats", &labels, v);
+        }
+    }
     out
 }
 
@@ -161,5 +287,92 @@ mod tests {
         assert!(b.contains("splitquant_shard_io_retries_total 7"), "{b}");
         assert!(b.contains("splitquant_shard_integrity_failures_total 4"), "{b}");
         assert!(b.contains("splitquant_requests_shed_expired_total 2"), "{b}");
+    }
+
+    #[test]
+    fn drift_gauge_and_ring_capacity_always_emitted() {
+        let m = Metrics::default();
+        let a = exposition(&m);
+        assert!(a.contains("splitquant_quant_drift 0"), "{a}");
+        assert!(a.contains("splitquant_trace_ring_capacity_events"), "{a}");
+        assert!(!a.contains("splitquant_qhealth_shadow_samples_total"), "{a}");
+        assert!(!a.contains("splitquant_qhealth_act_values_total"), "{a}");
+    }
+
+    #[test]
+    fn qhealth_families_expose_snapshot_and_flip_degraded() {
+        let mut m = Metrics::default();
+        m.qhealth = Some(crate::qhealth::QHealthSnapshot {
+            sites: vec![crate::qhealth::SiteSnapshot {
+                site: 0,
+                calibrated: Some((-1.0, 1.0)),
+                observed: Some((-1.5, 1.2)),
+                values: 100,
+                clipped: 7,
+                batches: 2,
+                ewma_clip: 0.07,
+                alarm: true,
+                drift_p50_permille: 100,
+                drift_max_permille: 350,
+            }],
+            layers: vec![crate::qhealth::LayerSnapshot {
+                layer: "encoder.0.attn.q".into(),
+                occupancy: [3, 0, 5],
+                dead_clusters: 1,
+                dispatches: 2,
+                ocs_calls: 2,
+                ocs_hits: 1,
+                outlier_cols: 4,
+                total_cols: 64,
+            }],
+            shadow: crate::qhealth::ShadowSnapshot {
+                samples: 8,
+                top1_agree: 7,
+                kl_mean_micro_nats: 12.5,
+                kl_p50_micro_nats: 9,
+                kl_max_micro_nats: 40,
+            },
+        });
+        let b = exposition(&m);
+        assert_eq!(b, exposition(&m), "fixed field order");
+        assert!(b.contains("splitquant_quant_drift 1"), "{b}");
+        assert!(b.contains("splitquant_degraded 1"), "alarm must feed degraded: {b}");
+        assert!(b.contains("splitquant_qhealth_act_values_total{site=\"0\"} 100"), "{b}");
+        assert!(b.contains("splitquant_qhealth_act_clipped_total{site=\"0\"} 7"), "{b}");
+        assert!(
+            b.contains("splitquant_qhealth_drift_permille{site=\"0\",quantile=\"1\"} 350"),
+            "{b}"
+        );
+        assert!(
+            b.contains(
+                "splitquant_qhealth_cluster_occupancy_total\
+                 {layer=\"encoder.0.attn.q\",cluster=\"middle\"} 0"
+            ),
+            "{b}"
+        );
+        assert!(
+            b.contains("splitquant_qhealth_dead_clusters{layer=\"encoder.0.attn.q\"} 1"),
+            "{b}"
+        );
+        assert!(
+            b.contains("splitquant_qhealth_ocs_total{layer=\"encoder.0.attn.q\",kind=\"hits\"} 1"),
+            "{b}"
+        );
+        assert!(
+            b.contains(
+                "splitquant_qhealth_outlier_columns_total\
+                 {layer=\"encoder.0.attn.q\",kind=\"outlier\"} 4"
+            ),
+            "{b}"
+        );
+        assert!(b.contains("splitquant_qhealth_shadow_samples_total 8"), "{b}");
+        assert!(b.contains("splitquant_qhealth_shadow_top1_agree_total 7"), "{b}");
+        assert!(b.contains("splitquant_qhealth_shadow_kl_micro_nats{quantile=\"1\"} 40"), "{b}");
+        for line in b.lines() {
+            assert!(
+                line.starts_with('#') || line.starts_with("splitquant_"),
+                "stray line: {line}"
+            );
+        }
     }
 }

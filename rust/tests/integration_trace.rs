@@ -286,3 +286,68 @@ fn traced_paged_serving_exports_chrome_trace_and_breakdown() {
     assert!(once.contains("breakdown-queue"), "{once}");
     std::fs::remove_file(&bench_path).ok();
 }
+
+// ------------------------------- panic containment → unfinished span --
+
+/// A batch that panics mid-span (its RAII guard lost to the unwind, so no
+/// Exit event reaches the ring) must still export cleanly: the server
+/// contains the panic at its `catch_unwind` batch boundary, and the Chrome
+/// exporter renders the dangling Enter as a complete slice running to the
+/// end of the snapshot, flagged `"unfinished": true` — visible evidence of
+/// where the crash interrupted the timeline instead of a corrupt or
+/// unbalanced export.
+#[test]
+fn panicking_batch_exports_unfinished_span() {
+    let _g = trace_test_setup();
+    trace::set_enabled(true);
+
+    struct PanicExecutor;
+    impl splitquant::coordinator::BatchExecutor for PanicExecutor {
+        fn classify(
+            &self,
+            _ids: &splitquant::tensor::IntTensor,
+            _mask: &Tensor,
+            _batch_size: usize,
+        ) -> splitquant::Result<Vec<i32>> {
+            // forget the guard so the unwind cannot record the Exit — the
+            // shape of a real crash, where the span never closes
+            std::mem::forget(trace::span(Category::Batch, "doomed-batch"));
+            panic!("injected batch panic");
+        }
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+    }
+
+    let tok = HashTokenizer::new(512, 16);
+    let server = Server::start(
+        Arc::new(PanicExecutor),
+        tok,
+        ServeConfig {
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_cap: 16,
+            parallel: pool_cfg(),
+            ..ServeConfig::default()
+        },
+    );
+    let rx = server.submit("this batch will panic").unwrap();
+    // a contained panic answers with a clean error (or at worst drops the
+    // responder) — it must never answer with a classification
+    let resp = rx.recv_timeout(Duration::from_secs(30));
+    assert!(!matches!(resp, Ok(Ok(_))), "panicking executor cannot classify");
+    let m = server.shutdown();
+    trace::set_enabled(false);
+    assert!(m.exec_panics >= 1, "panic was not contained/counted");
+
+    let snap = trace::snapshot();
+    assert!(
+        all_events(&snap).any(|e| e.kind == EventKind::Enter && e.name == "doomed-batch"),
+        "the doomed span's Enter never reached the ring"
+    );
+    let json = trace::chrome::chrome_trace_string(&snap);
+    let parsed = Json::parse(&json).expect("chrome trace must stay valid JSON after a panic");
+    assert!(parsed.get("traceEvents").and_then(Json::as_arr).is_ok(), "{json}");
+    assert!(json.contains("\"name\":\"doomed-batch\""), "{json}");
+    assert!(json.contains("\"unfinished\":true"), "{json}");
+}
